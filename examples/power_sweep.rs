@@ -1,0 +1,48 @@
+//! E8 — power operating-point sweep: continuous vs duty-cycled power
+//! across frame rates for both classifiers, reproducing the paper's
+//! 21.8 mW → 4.6 mW power-optimization story and locating the duty-cycle
+//! crossover.
+//!
+//! Run: `cargo run --release --example power_sweep`
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::model::weights::load_tbw;
+use tinbinn::power::PowerModel;
+use tinbinn::runtime::artifacts_dir;
+use tinbinn::soc::Board;
+
+fn main() -> tinbinn::Result<()> {
+    let dir = artifacts_dir();
+    let model = PowerModel::default();
+
+    for task in ["1cat", "10cat"] {
+        let np = load_tbw(dir.join(format!("weights_{task}.tbw")), task)?;
+        let compiled = compile(&np, InputMode::Direct)?;
+        let mut board = Board::new(&compiled);
+        let img = vec![128u8; 3072];
+        let (_, report) = board.infer(&compiled, &img)?;
+
+        let b = model.continuous(&report);
+        let max_fps = 1000.0 / report.ms();
+        println!("== {task}: {:.1} ms/frame -> max {max_fps:.1} fps ==", report.ms());
+        println!(
+            "  continuous: {:.1} mW  [static {:.2} | clock {:.1} | scratchpad {:.2} | datapath {:.2} | dma {:.2} | camera {:.1}]",
+            b.total_mw(), b.static_mw, b.clock_mw, b.scratchpad_mw, b.datapath_mw, b.dma_mw, b.camera_mw
+        );
+        if task == "1cat" {
+            println!("  paper anchors: 21.8 mW continuous, 4.6 mW @1 fps");
+        }
+        println!("  duty-cycled sweep:");
+        for fps in [0.2, 0.5, 1.0, 2.0, 5.0, 10.0] {
+            let p = model.duty_cycled(&report, fps);
+            let bar = "#".repeat((p * 2.0) as usize);
+            println!("    {fps:>5.1} fps  {p:>6.2} mW  {bar}");
+        }
+        let crossover = (0..10_000)
+            .map(|i| i as f64 / 100.0)
+            .find(|&fps| model.duty_cycled(&report, fps) >= b.total_mw() * 0.99)
+            .unwrap_or(max_fps);
+        println!("  duty cycling stops paying at ~{crossover:.1} fps\n");
+    }
+    Ok(())
+}

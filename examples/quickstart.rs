@@ -1,0 +1,49 @@
+//! Quickstart: load trained weights, classify one image three ways —
+//! golden model, cycle-accurate overlay simulator, and the AOT-compiled
+//! XLA artifact via PJRT — and show they agree bit-exactly.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::data::tbd::load_tbd;
+use tinbinn::model::weights::load_tbw;
+use tinbinn::nn::layers::{classify, forward};
+use tinbinn::runtime::{artifacts_dir, ModelRuntime};
+use tinbinn::soc::Board;
+
+fn main() -> tinbinn::Result<()> {
+    let dir = artifacts_dir();
+    let task = "1cat";
+    let np = load_tbw(dir.join("weights_1cat.tbw"), task)?;
+    let ds = load_tbd(dir.join("data_1cat_test.tbd"))?;
+    let img = ds.image(0);
+    println!("TinBiNN quickstart — {} ({} MACs)", np.net.name, np.net.op_count());
+
+    // 1. golden fixed-point model
+    let golden = forward(&np, img)?;
+    println!("golden scores:  {golden:?}  -> class {}", classify(&golden));
+
+    // 2. cycle-accurate overlay simulation
+    let compiled = compile(&np, InputMode::Direct)?;
+    let mut board = Board::new(&compiled);
+    let (sim, report) = board.infer(&compiled, img)?;
+    println!(
+        "overlay scores: {sim:?}  -> class {}   ({:.1} ms simulated @24 MHz)",
+        classify(&sim),
+        report.ms()
+    );
+    assert_eq!(golden, sim, "overlay must be bit-exact");
+
+    // 3. AOT XLA artifact on PJRT (the python-compiled model, no python)
+    match ModelRuntime::load(&dir, task, 1) {
+        Ok(rt) => {
+            let pjrt = rt.infer_one(img)?;
+            println!("pjrt scores:    {pjrt:?}  -> class {}", classify(&pjrt));
+            assert_eq!(golden, pjrt, "PJRT artifact must be bit-exact");
+        }
+        Err(e) => println!("(pjrt skipped: {e})"),
+    }
+
+    println!("label: {}  — all paths agree", ds.labels[0]);
+    Ok(())
+}

@@ -1,0 +1,116 @@
+"""AOT bridge: lower the fixed-point inference graph to HLO *text* for the
+Rust PJRT runtime (rust/src/runtime/).
+
+HLO text — NOT ``lowered.compile()`` / serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6
+crate binds) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example.
+
+Weights are baked into the module as constants (python is the compile
+path; a weight update is a ``make artifacts`` re-run).  One module per
+(task, batch) variant so the L3 dynamic batcher can route to the best
+executable:
+
+  artifacts/model_{task}_b{1,4,8}.hlo.txt     task in {10cat, 1cat}
+
+Usage (from python/): python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+BATCHES = (1, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-reassigning path).
+
+    `as_hlo_text(True)` = print_large_constants: without it the printer
+    elides the baked weight tensors as `{...}`, which XLA's text parser
+    silently re-materializes as ZEROS — the artifact would classify
+    everything as bias-only. (Found the hard way; keep the flag.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_variant(fixed: M.FixedParams, batch: int, use_pallas: bool) -> str:
+    """Lower a batched fixed-point forward to HLO text.
+
+    The Pallas kernels (interpret=True) lower to plain HLO ops, so the
+    same module the kernels define is what the Rust runtime executes.
+    """
+    def fwd(images):  # [batch, 32, 32, 3] i32 (u8 range) -> [batch, ncat] i32
+        # i32 input: the rust `xla` crate (0.1.6) has no u8 literal
+        # constructor; pixel values are 0..255 regardless.
+        return jax.vmap(lambda im: M.forward_fixed(fixed, im, use_pallas=use_pallas))(images)
+
+    spec = jax.ShapeDtypeStruct((batch, 32, 32, 3), jnp.int32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def build_all(out_dir: str, tasks=("10cat", "1cat")) -> dict:
+    """Emit artifacts.
+
+    Serving variants (model_{task}_b{N}.hlo.txt) are lowered through the
+    plain-jnp path: on the CPU PJRT backend the interpret-mode Pallas
+    grid becomes a sequential while-loop that XLA cannot fuse or
+    parallelize (measured 8-40x slower, anti-scaling with batch — see
+    EXPERIMENTS.md §Perf-L2). The Pallas kernels remain the TPU-shaped
+    compute definition and ARE part of the shipped chain via the
+    model_{task}_b1_pallas.hlo.txt artifact, which the rust runtime
+    cross-checks bit-exactly against the serving variant.
+    """
+    meta = {"variants": []}
+    for task in tasks:
+        wpath = os.path.join(out_dir, f"weights_{task}.tbw")
+        fixed = M.load_tbw(wpath)
+        ncat = fixed.bias[-1].shape[0]
+        for b in BATCHES:
+            text = lower_variant(fixed, b, use_pallas=False)
+            path = os.path.join(out_dir, f"model_{task}_b{b}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            meta["variants"].append(
+                {"task": task, "batch": b, "ncat": int(ncat),
+                 "path": os.path.basename(path), "hlo_bytes": len(text)}
+            )
+            print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+        # pallas-lowered parity artifact (b1)
+        text = lower_variant(fixed, 1, use_pallas=True)
+        path = os.path.join(out_dir, f"model_{task}_b1_pallas.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["variants"].append(
+            {"task": task, "batch": 1, "ncat": int(ncat), "pallas": True,
+             "path": os.path.basename(path), "hlo_bytes": len(text)}
+        )
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+    with open(os.path.join(out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--tasks", default="10cat,1cat")
+    args = ap.parse_args()
+    build_all(args.out, tuple(args.tasks.split(",")))
+
+
+if __name__ == "__main__":
+    main()

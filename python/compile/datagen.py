@@ -1,0 +1,239 @@
+"""Synthetic dataset generator (stand-in for CIFAR-10 + CIFAR-100 'people'
+and the proprietary 175k face database — see DESIGN.md substitution table).
+
+Two tasks:
+  * ``10cat`` — ten procedurally distinct 32x32 RGB classes modelled on the
+    modified CIFAR-10 of the paper: classes 0..9 with class 4 ('deer')
+    replaced by a 'person' silhouette class, as the paper did.
+  * ``1cat``  — face vs non-face, modelled on the paper's 1-category
+    detector trained on a face database.
+
+Images are u8 HWC.  Generation is deterministic (numpy PCG64 with fixed
+seeds) and written as TBD1 containers consumed by both python and
+rust/src/data/.
+
+TBD1 layout (little-endian):
+  magic 'TBD1', u32 n, u16 h, u16 w, u16 c, u16 n_classes,
+  then n records of (u8 label, h*w*c u8 pixels, HWC order).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+H = W = 32
+C = 3
+
+CLASS_NAMES_10 = [
+    "airplane", "automobile", "bird", "cat", "person",  # 4: deer -> person
+    "dog", "frog", "horse", "ship", "truck",
+]
+CLASS_NAMES_1 = ["face"]
+
+
+def _grid(rng):
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32)
+    return yy, xx
+
+
+def _base(rng, lo=30, hi=110):
+    """Noisy background."""
+    base = rng.integers(lo, hi, size=3)
+    img = np.ones((H, W, C), np.float32) * base
+    img += rng.normal(0, 12, (H, W, C))
+    return img
+
+
+def _blob(img, cy, cx, ry, rx, color):
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32)
+    mask = ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 <= 1.0
+    img[mask] = 0.25 * img[mask] + 0.75 * np.asarray(color, np.float32)
+
+
+def _rect(img, y0, y1, x0, x1, color):
+    y0, y1 = max(0, int(y0)), min(H, int(y1))
+    x0, x1 = max(0, int(x0)), min(W, int(x1))
+    img[y0:y1, x0:x1] = 0.25 * img[y0:y1, x0:x1] + 0.75 * np.asarray(color, np.float32)
+
+
+def _stripes(img, period, angle_deg, color, duty=0.5):
+    yy, xx = np.mgrid[0:H, 0:W].astype(np.float32)
+    a = np.deg2rad(angle_deg)
+    t = yy * np.sin(a) + xx * np.cos(a)
+    mask = (t % period) < duty * period
+    img[mask] = 0.35 * img[mask] + 0.65 * np.asarray(color, np.float32)
+
+
+def person_image(rng) -> np.ndarray:
+    """Head + torso + legs silhouette with jitter — the 'person' class."""
+    img = _base(rng)
+    skin = rng.integers(150, 220, 3)
+    shirt = rng.integers(60, 200, 3)
+    cy = 8 + rng.integers(-2, 3)
+    cx = 16 + rng.integers(-4, 5)
+    r = 3 + rng.integers(0, 2)
+    _blob(img, cy, cx, r, r, skin)                       # head
+    _rect(img, cy + r, cy + r + 10, cx - 4, cx + 4, shirt)  # torso
+    leg = rng.integers(30, 90, 3)
+    _rect(img, cy + r + 10, cy + r + 17, cx - 3, cx - 1, leg)
+    _rect(img, cy + r + 10, cy + r + 17, cx + 1, cx + 3, leg)
+    return img
+
+
+def face_image(rng) -> np.ndarray:
+    """Frontal 'face': skin ellipse, two eyes, mouth bar."""
+    img = _base(rng)
+    skin = np.array([190, 150, 120]) + rng.integers(-25, 25, 3)
+    cy = 16 + rng.integers(-3, 4)
+    cx = 16 + rng.integers(-3, 4)
+    ry = 10 + rng.integers(-2, 3)
+    rx = 8 + rng.integers(-2, 3)
+    _blob(img, cy, cx, ry, rx, skin)
+    eye = rng.integers(10, 60, 3)
+    _blob(img, cy - ry * 0.3, cx - rx * 0.45, 1.5, 1.5, eye)
+    _blob(img, cy - ry * 0.3, cx + rx * 0.45, 1.5, 1.5, eye)
+    _rect(img, cy + ry * 0.4, cy + ry * 0.4 + 2, cx - 3, cx + 3, eye)
+    return img
+
+
+def _nonface_image(rng) -> np.ndarray:
+    """Hard negatives: textures, blobs with wrong structure, stripes."""
+    kind = rng.integers(0, 4)
+    img = _base(rng, 20, 160)
+    if kind == 0:
+        _stripes(img, 3 + rng.integers(0, 6), rng.integers(0, 180), rng.integers(0, 255, 3))
+    elif kind == 1:
+        for _ in range(rng.integers(2, 6)):
+            _blob(img, rng.integers(4, 28), rng.integers(4, 28),
+                  rng.integers(2, 8), rng.integers(2, 8), rng.integers(0, 255, 3))
+    elif kind == 2:
+        _rect(img, rng.integers(0, 16), rng.integers(16, 32),
+              rng.integers(0, 16), rng.integers(16, 32), rng.integers(0, 255, 3))
+    # kind 3: plain noisy background
+    return img
+
+
+def class_image_10(label: int, rng) -> np.ndarray:
+    """Procedural CIFAR-like classes; each has a distinct, learnable motif."""
+    if label == 4:
+        return person_image(rng)
+    img = _base(rng)
+    if label == 0:   # airplane: horizontal fuselage + wings, sky-ish bg
+        img[:, :] = np.array([120, 150, 200]) + np.random.default_rng(int(rng.integers(1 << 31))).normal(0, 8, (H, W, C))
+        body = rng.integers(170, 230, 3)
+        cy = 16 + rng.integers(-3, 4)
+        _rect(img, cy - 1, cy + 2, 4, 28, body)
+        _rect(img, cy - 6, cy + 7, 14, 18, body)
+    elif label == 1:  # automobile: box + two wheel blobs
+        body = rng.integers(100, 255, 3)
+        _rect(img, 14, 24, 4, 28, body)
+        _blob(img, 24, 9, 3, 3, (20, 20, 20))
+        _blob(img, 24, 23, 3, 3, (20, 20, 20))
+    elif label == 2:  # bird: small blob + wing stripes
+        _blob(img, 14 + rng.integers(-3, 4), 16 + rng.integers(-3, 4), 4, 6, rng.integers(120, 255, 3))
+        _stripes(img, 9, 30, rng.integers(80, 180, 3), duty=0.25)
+    elif label == 3:  # cat: two ear triangles approximated by small rects over a head blob
+        headc = rng.integers(90, 200, 3)
+        _blob(img, 18, 16, 7, 7, headc)
+        _rect(img, 8, 13, 10, 13, headc)
+        _rect(img, 8, 13, 19, 22, headc)
+    elif label == 5:  # dog: elongated body blob + head blob
+        bodyc = rng.integers(80, 180, 3)
+        _blob(img, 20, 14, 5, 9, bodyc)
+        _blob(img, 13, 24, 4, 4, bodyc)
+    elif label == 6:  # frog: green wide blob
+        green = np.array([60, 180, 60]) + rng.integers(-30, 30, 3)
+        _blob(img, 20, 16, 5, 10, green)
+        _blob(img, 14, 10, 2, 2, (230, 230, 230))
+        _blob(img, 14, 22, 2, 2, (230, 230, 230))
+    elif label == 7:  # horse: body + neck diagonal + legs
+        bodyc = rng.integers(70, 160, 3)
+        _blob(img, 18, 16, 4, 8, bodyc)
+        _rect(img, 8, 18, 22, 25, bodyc)
+        for x in (10, 14, 18, 22):
+            _rect(img, 22, 29, x, x + 2, bodyc)
+    elif label == 8:  # ship: hull trapezoid + mast on blue bg
+        img[:, :] = np.array([40, 80, 170]) + np.random.default_rng(int(rng.integers(1 << 31))).normal(0, 8, (H, W, C))
+        hull = rng.integers(120, 220, 3)
+        _rect(img, 20, 26, 6, 26, hull)
+        _rect(img, 8, 20, 15, 17, hull)
+    elif label == 9:  # truck: big box + cab + wheels
+        body = rng.integers(100, 255, 3)
+        _rect(img, 10, 22, 4, 22, body)
+        _rect(img, 14, 22, 22, 28, body)
+        _blob(img, 23, 8, 3, 3, (15, 15, 15))
+        _blob(img, 23, 24, 3, 3, (15, 15, 15))
+    return img
+
+
+def gen_10cat(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, H, W, C), np.uint8)
+    labels = np.zeros((n,), np.uint8)
+    for i in range(n):
+        label = int(rng.integers(0, 10))
+        img = class_image_10(label, rng)
+        imgs[i] = np.clip(img, 0, 255).astype(np.uint8)
+        labels[i] = label
+    return imgs, labels, 10
+
+
+def gen_1cat(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    imgs = np.zeros((n, H, W, C), np.uint8)
+    labels = np.zeros((n,), np.uint8)
+    for i in range(n):
+        label = int(rng.integers(0, 2))
+        img = face_image(rng) if label else _nonface_image(rng)
+        imgs[i] = np.clip(img, 0, 255).astype(np.uint8)
+        labels[i] = label
+    return imgs, labels, 2
+
+
+def save_tbd(path: str, imgs: np.ndarray, labels: np.ndarray, n_classes: int) -> None:
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        f.write(b"TBD1")
+        f.write(struct.pack("<IHHHH", n, h, w, c, n_classes))
+        for i in range(n):
+            f.write(struct.pack("<B", int(labels[i])))
+            f.write(imgs[i].tobytes())
+
+
+def load_tbd(path: str):
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != b"TBD1":
+        raise ValueError("bad magic")
+    n, h, w, c, ncls = struct.unpack_from("<IHHHH", buf, 4)
+    off = 16
+    imgs = np.zeros((n, h, w, c), np.uint8)
+    labels = np.zeros((n,), np.uint8)
+    rec = 1 + h * w * c
+    for i in range(n):
+        labels[i] = buf[off]
+        imgs[i] = np.frombuffer(buf, np.uint8, h * w * c, off + 1).reshape(h, w, c)
+        off += rec
+    return imgs, labels, ncls
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train", type=int, default=4000)
+    ap.add_argument("--test", type=int, default=1000)
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    for task, gen in (("10cat", gen_10cat), ("1cat", gen_1cat)):
+        tr_i, tr_l, ncls = gen(args.train, args.seed)
+        te_i, te_l, _ = gen(args.test, args.seed + 1)
+        save_tbd(f"{args.out}/data_{task}_train.tbd", tr_i, tr_l, ncls)
+        save_tbd(f"{args.out}/data_{task}_test.tbd", te_i, te_l, ncls)
+        print(f"{task}: {args.train} train / {args.test} test -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""L1 Pallas kernels: the TinBiNN binarized-CNN datapath, re-tiled for TPU.
+
+The paper's Fig. 2 accelerator streams 8 activation bytes per cycle down an
+image column through two overlapping 3x3 convolutions whose 1-bit weights
+select add/subtract.  The TPU adaptation (DESIGN.md #Hardware-Adaptation)
+keeps the insight -- binary weights turn convolution into sign-controlled
+accumulation -- and expresses it as an MXU GEMM over +-1 with the
+HBM->VMEM schedule in BlockSpec instead of the FPGA's column walker:
+
+  * ``binary_matmul``   u8-activation x 1b-weight GEMM, i32 accumulation.
+                        Weights arrive bit-packed (u32 words, LSB-first,
+                        bit=1 -> +1, bit=0 -> -1) and are expanded to +-1
+                        inside the kernel -- the analogue of the FPGA's
+                        weight-bit add/sub mux.
+  * ``quant_act``       the paper's 32b->8b activation custom instruction:
+                        per-channel i32 bias, round-half-up arithmetic
+                        shift, clamp to u8.
+  * ``accum4``          the paper's quad-16b->32b SIMD add custom
+                        instruction (partial-sum widening every 16 maps).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is the compile-path contract
+(bit-exact vs ``ref.py`` and the Rust golden model).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes for the MXU-shaped GEMM.  Our networks have M = H*W <= 1024,
+# K = 9*Cin <= 1152, N = Cout <= 256, so a (128, K) x (K, 128) tile keeps
+# the weight block resident in VMEM across the whole M walk (the reuse the
+# FPGA got from its two overlapping convolutions).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def unpack_words(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Expand u32 packed words [N, KW] -> +-1 i32 matrix [N, k].
+
+    Bit j of word i is weight index ``i*32 + j`` (LSB-first); bit 1 -> +1,
+    bit 0 -> -1.  One shift/mask per lane on the VPU -- the TPU analogue
+    of the FPGA conditional-negate mux.
+    """
+    n, kw = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bits = bits.reshape(n, kw * 32)[:, :k].astype(jnp.int32)
+    return 2 * bits - 1
+
+
+def _binary_matmul_kernel(x_ref, w_ref, o_ref, *, k: int):
+    """One (BLOCK_M, BLOCK_N) output tile: expand weight bits, MXU GEMM."""
+    x = x_ref[...].astype(jnp.int32)          # [bm, K]  u8 activations
+    w_pm1 = unpack_words(w_ref[...], k)        # [bn, K]  +-1 weights
+    # i32 accumulation on the MXU; subsumes the quad-16b->32b widening of
+    # the FPGA pipeline (see accum4 for the contract-level instruction).
+    o_ref[...] = jax.lax.dot_general(
+        x,
+        w_pm1,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def binary_matmul(x: jnp.ndarray, w_packed: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Binarized GEMM: ``y[m, n] = sum_k x[m, k] * (2*bit(w, n, k) - 1)``.
+
+    Args:
+      x: u8/i32 activations ``[M, K]`` (values 0..255).
+      w_packed: u32 bit-packed weights ``[N, ceil(K/32)]``.
+      interpret: Pallas interpret mode (required on CPU PJRT).
+
+    Returns:
+      i32 ``[M, N]`` accumulator, bit-exact vs ``ref.binary_matmul_ref``.
+    """
+    m, k = x.shape
+    n, kw = w_packed.shape
+    if kw * 32 < k:
+        raise ValueError(f"w_packed holds {kw * 32} bits < K={k}")
+
+    mp, np_ = _ceil_to(m, BLOCK_M), _ceil_to(n, BLOCK_N)
+    x_pad = jnp.zeros((mp, k), jnp.int32).at[:m].set(x.astype(jnp.int32))
+    w_pad = jnp.zeros((np_, kw), jnp.uint32).at[:n].set(w_packed)
+
+    out = pl.pallas_call(
+        functools.partial(_binary_matmul_kernel, k=k),
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_N, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(x_pad, w_pad)
+    return out[:m, :n]
+
+
+def _quant_act_kernel(acc_ref, bias_ref, o_ref, *, shift: int):
+    """The 32b->8b activation instruction: bias, round-half-up shift, clamp."""
+    acc = acc_ref[...] + bias_ref[...]
+    if shift > 0:
+        acc = jnp.right_shift(acc + (1 << (shift - 1)), shift)
+    o_ref[...] = jnp.clip(acc, 0, 255)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "interpret"))
+def quant_act(acc: jnp.ndarray, bias: jnp.ndarray, shift: int, interpret: bool = True) -> jnp.ndarray:
+    """Requantize i32 accumulators to u8 activations.
+
+    ``y = clamp((acc + bias + 2^(shift-1)) >> shift, 0, 255)`` with an
+    arithmetic shift (round-half-up toward +inf for negatives), matching
+    the RTL model and the Rust golden implementation bit-exactly.
+
+    Args:
+      acc: i32 ``[M, N]`` accumulators.
+      bias: i32 ``[N]`` per-channel bias.
+      shift: static per-layer right shift (0..31).
+
+    Returns:
+      i32 ``[M, N]`` with values in 0..255 (u8 range).
+    """
+    m, n = acc.shape
+    mp, np_ = _ceil_to(m, 8), _ceil_to(n, 128)
+    acc_pad = jnp.zeros((mp, np_), jnp.int32).at[:m, :n].set(acc)
+    bias_pad = jnp.zeros((1, np_), jnp.int32).at[0, :n].set(bias)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_act_kernel, shift=shift),
+        grid=(mp // 8,),
+        in_specs=[
+            pl.BlockSpec((8, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((8, np_), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=interpret,
+    )(acc_pad, bias_pad)
+    return out[:m, :n]
+
+
+def _accum4_kernel(p_ref, o_ref):
+    """Quad-16b->32b SIMD add: widen 4 i16 partial sums into one i32 each."""
+    p = p_ref[...].astype(jnp.int32)  # [4, bn] i16 partials
+    o_ref[...] = jnp.sum(p, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def accum4(partials: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """The paper's quad-16b->32b SIMD add custom instruction.
+
+    Args:
+      partials: i16 ``[4, N]`` -- four 16-bit partial convolution sums
+        (one per group of <=16 input maps).
+
+    Returns:
+      i32 ``[N]``: the widened total.
+    """
+    four, n = partials.shape
+    if four != 4:
+        raise ValueError("accum4 takes exactly 4 partial-sum lanes")
+    np_ = _ceil_to(n, 128)
+    p_pad = jnp.zeros((4, np_), jnp.int16).at[:, :n].set(partials)
+    out = pl.pallas_call(
+        _accum4_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((4, np_), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, np_), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), jnp.int32),
+        interpret=interpret,
+    )(p_pad)
+    return out[0, :n]

@@ -1,0 +1,135 @@
+"""Pure-jnp/numpy oracles for the L1 kernels and the fixed-point layer chain.
+
+These are the CORE correctness signal: every Pallas kernel must match its
+oracle bit-exactly (integer arithmetic, no tolerance), and the Rust golden
+model (rust/src/nn/) implements exactly the same contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def pack_bits(w_pm1: np.ndarray) -> np.ndarray:
+    """Pack a +-1 matrix [N, K] into u32 words [N, ceil(K/32)], LSB-first.
+
+    bit 1 -> +1, bit 0 -> -1 (the TBW1 on-flash convention).
+    """
+    w_pm1 = np.asarray(w_pm1)
+    n, k = w_pm1.shape
+    kw = (k + 31) // 32
+    bits = (w_pm1 > 0).astype(np.uint32)
+    padded = np.zeros((n, kw * 32), np.uint32)
+    padded[:, :k] = bits
+    words = np.zeros((n, kw), np.uint32)
+    for j in range(32):
+        words |= padded[:, j::32] << np.uint32(j)
+    return words
+
+
+def unpack_bits(words: np.ndarray, k: int) -> np.ndarray:
+    """Inverse of pack_bits: u32 [N, KW] -> +-1 i32 [N, k]."""
+    words = np.asarray(words, np.uint32)
+    n, kw = words.shape
+    bits = np.zeros((n, kw * 32), np.int32)
+    for j in range(32):
+        bits[:, j::32] = ((words >> np.uint32(j)) & 1).astype(np.int32)
+    return 2 * bits[:, :k] - 1
+
+
+def binary_matmul_ref(x: np.ndarray, w_packed: np.ndarray) -> np.ndarray:
+    """i32 reference GEMM: y[m,n] = sum_k x[m,k] * (+-1)."""
+    k = np.asarray(x).shape[1]
+    w = unpack_bits(w_packed, k)
+    return (np.asarray(x, np.int64) @ w.T.astype(np.int64)).astype(np.int32)
+
+
+def quant_act_ref(acc: np.ndarray, bias: np.ndarray, shift: int) -> np.ndarray:
+    """32b->8b activation: bias add, round-half-up arithmetic shift, clamp."""
+    acc = np.asarray(acc, np.int64) + np.asarray(bias, np.int64)[None, :]
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    return np.clip(acc, 0, 255).astype(np.int32)
+
+
+def accum4_ref(partials: np.ndarray) -> np.ndarray:
+    """Quad 16b->32b widening add."""
+    return np.sum(np.asarray(partials, np.int16).astype(np.int32), axis=0)
+
+
+def im2col_ref(x_hwc: np.ndarray) -> np.ndarray:
+    """3x3 'same' zero-padded patches, k = (ky*3 + kx)*C + c ordering.
+
+    Matches model.im2col3x3 and the Rust golden layout exactly.
+    """
+    h, w, c = x_hwc.shape
+    xp = np.zeros((h + 2, w + 2, c), np.int64)
+    xp[1 : h + 1, 1 : w + 1] = x_hwc
+    cols = np.zeros((h * w, 9 * c), np.int32)
+    for ky in range(3):
+        for kx in range(3):
+            patch = xp[ky : ky + h, kx : kx + w, :].reshape(h * w, c)
+            p = ky * 3 + kx
+            cols[:, p * c : (p + 1) * c] = patch
+    return cols
+
+
+def conv3x3_binary_ref(x_hwc: np.ndarray, w_packed: np.ndarray) -> np.ndarray:
+    """Direct (non-GEMM) binarized 3x3 convolution oracle.
+
+    Independent of the im2col path: walks the window explicitly so a bug
+    in im2col ordering cannot hide in both implementations.
+    Returns i32 [H, W, Cout].
+    """
+    h, w, c = np.asarray(x_hwc).shape
+    cout = np.asarray(w_packed).shape[0]
+    wts = unpack_bits(w_packed, 9 * c)  # [Cout, 9*C], k=(ky*3+kx)*C+c
+    out = np.zeros((h, w, cout), np.int64)
+    xp = np.zeros((h + 2, w + 2, c), np.int64)
+    xp[1 : h + 1, 1 : w + 1] = x_hwc
+    for ky in range(3):
+        for kx in range(3):
+            p = ky * 3 + kx
+            wk = wts[:, p * c : (p + 1) * c].astype(np.int64)  # [Cout, C]
+            patch = xp[ky : ky + h, kx : kx + w, :]  # [H, W, C]
+            out += patch @ wk.T
+    return out.astype(np.int32)
+
+
+def maxpool2_ref(x_hwc: np.ndarray) -> np.ndarray:
+    """2x2 stride-2 max pooling (H, W even)."""
+    h, w, c = np.asarray(x_hwc).shape
+    x = np.asarray(x_hwc).reshape(h // 2, 2, w // 2, 2, c)
+    return x.max(axis=(1, 3))
+
+
+def grouped_i16_accumulate_ref(x: np.ndarray, w_packed: np.ndarray, group: int = 16):
+    """The paper's exact numeric pipeline: i16 partial sums per ``group``
+    input columns (wrapping on overflow, as the hardware would), widened
+    to i32 via the quad add.
+
+    Returns (total_i32 [M, N], overflowed: bool); ``overflowed`` reports
+    whether any i16 partial wrapped.  The trained nets must keep this
+    False (paper: identical 13.6% error in fixed point), which is what
+    makes plain i32 accumulation bit-equal to the hardware pipeline.
+    """
+    x = np.asarray(x)
+    m, k = x.shape
+    n = np.asarray(w_packed).shape[0]
+    w = unpack_bits(w_packed, k).astype(np.int64)
+    xs = x.astype(np.int64)
+    total = np.zeros((m, n), np.int64)
+    overflowed = False
+    for g0 in range(0, k, group):
+        part = xs[:, g0 : g0 + group] @ w[:, g0 : g0 + group].T
+        if np.any(part > 32767) or np.any(part < -32768):
+            overflowed = True
+        part16 = part.astype(np.int16).astype(np.int64)  # wrap like hw
+        total += part16
+    return total.astype(np.int32), overflowed
+
+
+def as_np(x) -> np.ndarray:
+    """jnp/np -> np, for test comparisons."""
+    return np.asarray(jnp.asarray(x))

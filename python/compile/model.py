@@ -1,0 +1,450 @@
+"""L2: the TinBiNN networks in JAX — float (training) and fixed (hardware)
+semantics, both built on the L1 Pallas kernels.
+
+Network zoo (paper §I):
+
+  * ``BINARYCONNECT_ORIG``  (2x128C3)-MP2-(2x256C3)-MP2-(2x512C3)-MP2-
+                            (2x1024FC)-10SVM — the BinaryConnect baseline,
+                            used for op counting (E1); too large to train
+                            in this environment's budget.
+  * ``REDUCED_10CAT``       (2x48C3)-MP2-(2x96C3)-MP2-(2x128C3)-MP2-
+                            (2x256FC)-10SVM — the paper's 89%-fewer-ops
+                            10-category person detector (Fig. 3).
+  * ``TINY_1CAT``           the further-reduced 1-category detector. The
+                            paper does not publish its exact shape; we use
+                            (2x16C3)-MP2-(2x32C3)-MP2-(2x48C3)-MP2-64FC-
+                            1SVM, which lands at ~8x fewer ops than
+                            REDUCED_10CAT (paper's runtime ratio: 6.7x).
+
+Fixed-point contract (DESIGN.md): u8 activations, ±1 weights, i32
+accumulators, per-channel i32 bias, per-layer power-of-two requant shift,
+round-half-up, clamp to 0..255; SVM head emits raw i32 scores.
+
+The float semantics mirror the fixed pipeline exactly up to rounding:
+``y = clip((conv_pm1(x) + b) * 2^-s, 0, 255)`` so that float-vs-fixed
+error parity (paper: 13.6% == 13.6%) is a structural property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import binary_conv as kern
+from compile.kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Layer IR
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Conv3x3:
+    """3x3 'same' binarized convolution + bias + requant (ReLU via clamp)."""
+    cout: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxPool2:
+    """2x2 stride-2 max pooling."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    """Fully connected binarized layer + bias + requant."""
+    nout: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Svm:
+    """L2-SVM output head: binarized matmul + bias, raw i32 scores."""
+    nout: int
+
+
+Layer = object
+
+BINARYCONNECT_ORIG: Tuple[Layer, ...] = (
+    Conv3x3(128), Conv3x3(128), MaxPool2(),
+    Conv3x3(256), Conv3x3(256), MaxPool2(),
+    Conv3x3(512), Conv3x3(512), MaxPool2(),
+    Dense(1024), Dense(1024), Svm(10),
+)
+
+REDUCED_10CAT: Tuple[Layer, ...] = (
+    Conv3x3(48), Conv3x3(48), MaxPool2(),
+    Conv3x3(96), Conv3x3(96), MaxPool2(),
+    Conv3x3(128), Conv3x3(128), MaxPool2(),
+    Dense(256), Dense(256), Svm(10),
+)
+
+TINY_1CAT: Tuple[Layer, ...] = (
+    Conv3x3(16), Conv3x3(16), MaxPool2(),
+    Conv3x3(32), Conv3x3(32), MaxPool2(),
+    Conv3x3(48), Conv3x3(48), MaxPool2(),
+    Dense(64), Svm(1),
+)
+
+NETS = {
+    "binaryconnect": BINARYCONNECT_ORIG,
+    "10cat": REDUCED_10CAT,
+    "1cat": TINY_1CAT,
+}
+
+INPUT_HWC = (32, 32, 3)
+
+
+def weighted_shapes(layers: Sequence[Layer], input_hwc=INPUT_HWC) -> List[Tuple[str, int, int]]:
+    """Per weighted layer: (kind, k_in, n_out) where k_in is the GEMM K.
+
+    Conv K = 9*cin (k index = (ky*3+kx)*cin + c); Dense/Svm K = flattened
+    HWC feature count.
+    """
+    h, w, c = input_hwc
+    out = []
+    for ly in layers:
+        if isinstance(ly, Conv3x3):
+            out.append(("conv", 9 * c, ly.cout))
+            c = ly.cout
+        elif isinstance(ly, MaxPool2):
+            h, w = h // 2, w // 2
+        elif isinstance(ly, Dense):
+            out.append(("dense", h * w * c, ly.nout))
+            h, w, c = 1, 1, ly.nout
+        elif isinstance(ly, Svm):
+            out.append(("svm", h * w * c, ly.nout))
+            h, w, c = 1, 1, ly.nout
+        else:
+            raise TypeError(ly)
+    return out
+
+
+def op_count(layers: Sequence[Layer], input_hwc=INPUT_HWC) -> int:
+    """Multiply-accumulate count for one inference (E1's metric)."""
+    h, w, c = input_hwc
+    macs = 0
+    for ly in layers:
+        if isinstance(ly, Conv3x3):
+            macs += h * w * ly.cout * 9 * c
+            c = ly.cout
+        elif isinstance(ly, MaxPool2):
+            h, w = h // 2, w // 2
+        elif isinstance(ly, (Dense, Svm)):
+            n = ly.nout
+            macs += h * w * c * n
+            h, w, c = 1, 1, n
+    return macs
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FixedParams:
+    """Exported hardware parameters for one network.
+
+    For each weighted layer i:
+      w_packed[i]: u32 [nout, ceil(K/32)] bit-packed ±1 weights
+      bias[i]:     i32 [nout]
+      shift[i]:    int (0 for the SVM head)
+    """
+    layers: Tuple[Layer, ...]
+    w_packed: List[np.ndarray]
+    bias: List[np.ndarray]
+    shift: List[int]
+
+    def weight_bits(self) -> int:
+        return sum(int(np.prod(w.shape)) * 32 for w in self.w_packed)
+
+
+def init_float_params(layers: Sequence[Layer], seed: int = 0):
+    """Real-valued master weights in [-1, 1] (BinaryConnect) + float biases."""
+    key = jax.random.PRNGKey(seed)
+    shapes = weighted_shapes(layers)
+    params = []
+    for kind, k_in, n_out in shapes:
+        key, kw, kb = jax.random.split(key, 3)
+        # Glorot-ish scale, clipped into the BinaryConnect master range.
+        w = jax.random.uniform(kw, (n_out, k_in), jnp.float32, -0.7, 0.7)
+        b = jnp.zeros((n_out,), jnp.float32)
+        params.append({"w": w, "b": b})
+    return params
+
+
+# --------------------------------------------------------------------------
+# Shared geometry
+# --------------------------------------------------------------------------
+
+def im2col3x3(x_hwc: jnp.ndarray) -> jnp.ndarray:
+    """3x3 'same' zero-pad patches, k = (ky*3+kx)*C + c (matches ref/golden)."""
+    h, w, c = x_hwc.shape
+    xp = jnp.pad(x_hwc, ((1, 1), (1, 1), (0, 0)))
+    cols = [
+        xp[ky : ky + h, kx : kx + w, :].reshape(h * w, c)
+        for ky in range(3)
+        for kx in range(3)
+    ]
+    return jnp.concatenate(cols, axis=1)  # [H*W, 9*C]
+
+
+def maxpool2(x_hwc: jnp.ndarray) -> jnp.ndarray:
+    h, w, c = x_hwc.shape
+    return x_hwc.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+# --------------------------------------------------------------------------
+# Fixed-point forward (hardware semantics, L1 kernels)
+# --------------------------------------------------------------------------
+
+def forward_fixed(params: FixedParams, image_u8: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Bit-exact hardware forward: u8 image [32,32,3] -> i32 scores [ncat].
+
+    ``use_pallas=False`` routes the GEMMs through plain jnp (same math) —
+    used to cross-check the kernels inside jit and to keep the AOT HLO
+    module compact where the interpret-mode scaffolding adds no value.
+    """
+    def gemm(x_i32, w_words):
+        if use_pallas:
+            return kern.binary_matmul(x_i32, w_words)
+        wk = kern.unpack_words(w_words, x_i32.shape[1])
+        return jax.lax.dot_general(
+            x_i32.astype(jnp.int32), wk,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    def quant(acc, bias, shift):
+        if use_pallas:
+            return kern.quant_act(acc, bias, shift)
+        a = acc + bias[None, :]
+        if shift > 0:
+            a = jnp.right_shift(a + (1 << (shift - 1)), shift)
+        return jnp.clip(a, 0, 255)
+
+    h, w, c = INPUT_HWC
+    x = image_u8.astype(jnp.int32).reshape(h, w, c)
+    wi = 0
+    for ly in params.layers:
+        if isinstance(ly, Conv3x3):
+            cols = im2col3x3(x)  # [H*W, 9*C] i32
+            acc = gemm(cols, jnp.asarray(params.w_packed[wi]))
+            act = quant(acc, jnp.asarray(params.bias[wi]), params.shift[wi])
+            x = act.reshape(x.shape[0], x.shape[1], ly.cout)
+            wi += 1
+        elif isinstance(ly, MaxPool2):
+            x = maxpool2(x)
+        elif isinstance(ly, Dense):
+            flat = x.reshape(1, -1)  # HWC flatten
+            acc = gemm(flat, jnp.asarray(params.w_packed[wi]))
+            act = quant(acc, jnp.asarray(params.bias[wi]), params.shift[wi])
+            x = act.reshape(1, 1, ly.nout)
+            wi += 1
+        elif isinstance(ly, Svm):
+            flat = x.reshape(1, -1)
+            acc = gemm(flat, jnp.asarray(params.w_packed[wi]))
+            scores = acc[0] + jnp.asarray(params.bias[wi])
+            return scores  # raw i32
+    raise ValueError("network has no Svm head")
+
+
+# --------------------------------------------------------------------------
+# Float forward (training semantics — mirrors fixed up to rounding)
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def binarize(w):
+    """sign(w) in {-1,+1}; straight-through estimator, gated on |w|<=1."""
+    return jnp.where(w >= 0, 1.0, -1.0)
+
+
+def _binarize_fwd(w):
+    return binarize(w), w
+
+
+def _binarize_bwd(w, g):
+    return (g * (jnp.abs(w) <= 1.0).astype(g.dtype),)
+
+
+binarize.defvjp(_binarize_fwd, _binarize_bwd)
+
+
+def forward_float(float_params, shifts: Sequence[int], layers: Sequence[Layer], image_f32: jnp.ndarray) -> jnp.ndarray:
+    """Float forward with binarized weights: image [32,32,3] (0..255) -> scores.
+
+    Structurally identical to forward_fixed: same ±1 weights, same biases,
+    same 2^-s scaling and 0..255 clipping — only the rounding differs.
+    """
+    x = image_f32.reshape(INPUT_HWC)
+    wi = 0
+    for ly in layers:
+        p = None
+        if isinstance(ly, (Conv3x3, Dense, Svm)):
+            p = float_params[wi]
+        if isinstance(ly, Conv3x3):
+            cols = im2col3x3(x)  # [H*W, 9*C] f32
+            wb = binarize(p["w"])  # [cout, 9*C]
+            acc = cols @ wb.T + p["b"][None, :]
+            act = jnp.clip(acc * (2.0 ** -shifts[wi]), 0.0, 255.0)
+            x = act.reshape(x.shape[0], x.shape[1], ly.cout)
+            wi += 1
+        elif isinstance(ly, MaxPool2):
+            x = maxpool2(x)
+        elif isinstance(ly, Dense):
+            flat = x.reshape(1, -1)
+            wb = binarize(p["w"])
+            acc = flat @ wb.T + p["b"][None, :]
+            act = jnp.clip(acc * (2.0 ** -shifts[wi]), 0.0, 255.0)
+            x = act.reshape(1, 1, ly.nout)
+            wi += 1
+        elif isinstance(ly, Svm):
+            flat = x.reshape(1, -1)
+            wb = binarize(p["w"])
+            return (flat @ wb.T + p["b"][None, :])[0]
+    raise ValueError("network has no Svm head")
+
+
+forward_float_batch = jax.vmap(forward_float, in_axes=(None, None, None, 0))
+
+
+# --------------------------------------------------------------------------
+# Export: float master params -> FixedParams
+# --------------------------------------------------------------------------
+
+def export_fixed(float_params, shifts: Sequence[int], layers: Sequence[Layer]) -> FixedParams:
+    """Binarize master weights, pack bits, round biases to i32."""
+    w_packed, bias = [], []
+    for p in float_params:
+        w_pm1 = np.where(np.asarray(p["w"]) >= 0, 1, -1).astype(np.int32)
+        w_packed.append(ref.pack_bits(w_pm1))
+        bias.append(np.round(np.asarray(p["b"])).astype(np.int32))
+    sh = list(shifts)
+    sh[-1] = 0  # SVM head: raw scores
+    return FixedParams(tuple(layers), w_packed, bias, sh)
+
+
+def calibrate_shifts(float_params, layers: Sequence[Layer], images_f32: np.ndarray, percentile: float = 99.5) -> List[int]:
+    """Choose per-layer power-of-two requant shifts from activation stats.
+
+    Runs the float forward layer by layer with shift=0 upstream-quantized
+    inputs, picking s = max(0, ceil(log2(p / 255))) where p is the
+    ``percentile`` of the pre-requant accumulator magnitude — the
+    calibration step the paper folds into its fixed-point conversion.
+    """
+    shapes = weighted_shapes(layers)
+    shifts = [0] * len(shapes)
+    # Iterate: shifts upstream affect stats downstream; two sweeps settle.
+    for _ in range(2):
+        wi = 0
+        x = jnp.asarray(images_f32).reshape(-1, *INPUT_HWC)
+        for ly in layers:
+            if isinstance(ly, Conv3x3):
+                p = float_params[wi]
+                wb = binarize(p["w"])
+                cols = jax.vmap(im2col3x3)(x)
+                acc = cols @ wb.T + p["b"][None, None, :]
+                pv = float(jnp.percentile(jnp.abs(acc), percentile))
+                shifts[wi] = max(0, int(np.ceil(np.log2(max(pv, 1.0) / 255.0))))
+                act = jnp.clip(acc * (2.0 ** -shifts[wi]), 0.0, 255.0)
+                x = act.reshape(x.shape[0], x.shape[1], x.shape[2], ly.cout)
+                wi += 1
+            elif isinstance(ly, MaxPool2):
+                n, h, w, c = x.shape
+                x = x.reshape(n, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+            elif isinstance(ly, Dense):
+                p = float_params[wi]
+                wb = binarize(p["w"])
+                flat = x.reshape(x.shape[0], -1)
+                acc = flat @ wb.T + p["b"][None, :]
+                pv = float(jnp.percentile(jnp.abs(acc), percentile))
+                shifts[wi] = max(0, int(np.ceil(np.log2(max(pv, 1.0) / 255.0))))
+                act = jnp.clip(acc * (2.0 ** -shifts[wi]), 0.0, 255.0)
+                x = act.reshape(x.shape[0], 1, 1, ly.nout)
+                wi += 1
+            elif isinstance(ly, Svm):
+                shifts[wi] = 0
+                wi += 1
+    return shifts
+
+
+# --------------------------------------------------------------------------
+# TBW1 serialization (shared with rust/src/model/weights.rs)
+# --------------------------------------------------------------------------
+
+_KIND = {"conv": 0, "maxpool": 1, "dense": 2, "svm": 3}
+
+
+def save_tbw(path: str, params: FixedParams) -> None:
+    """Write the TBW1 weight container.
+
+    Layout (little-endian):
+      magic 'TBW1', u16 h, u16 w, u16 c, u16 n_layers
+      per layer:
+        u8 kind (0 conv3x3, 1 maxpool2, 2 dense, 3 svm)
+        conv3x3: u16 cin u16 cout u8 shift, i32 bias[cout],
+                 u32 words[cout * ceil(9*cin/32)]
+        maxpool2: (no payload)
+        dense/svm: u16 nin u16 nout u8 shift, i32 bias[nout],
+                 u32 words[nout * ceil(nin/32)]  (svm shift is 0)
+    """
+    h, w, c = INPUT_HWC
+    out = bytearray()
+    out += b"TBW1"
+    out += struct.pack("<HHHH", h, w, c, len(params.layers))
+    wi = 0
+    cin = c
+    fh, fw = h, w
+    for ly in params.layers:
+        if isinstance(ly, Conv3x3):
+            out += struct.pack("<BHHB", 0, cin, ly.cout, params.shift[wi])
+            out += params.bias[wi].astype("<i4").tobytes()
+            out += params.w_packed[wi].astype("<u4").tobytes()
+            cin = ly.cout
+            wi += 1
+        elif isinstance(ly, MaxPool2):
+            out += struct.pack("<B", 1)
+            fh, fw = fh // 2, fw // 2
+        elif isinstance(ly, (Dense, Svm)):
+            kind = 2 if isinstance(ly, Dense) else 3
+            nin = fh * fw * cin
+            out += struct.pack("<BHHB", kind, nin, ly.nout,
+                               params.shift[wi] if kind == 2 else 0)
+            out += params.bias[wi].astype("<i4").tobytes()
+            out += params.w_packed[wi].astype("<u4").tobytes()
+            fh, fw, cin = 1, 1, ly.nout
+            wi += 1
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def load_tbw(path: str) -> FixedParams:
+    """Read a TBW1 container back into FixedParams (round-trip tested)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    if buf[:4] != b"TBW1":
+        raise ValueError("bad magic")
+    h, w, c, n_layers = struct.unpack_from("<HHHH", buf, 4)
+    off = 12
+    layers: List[Layer] = []
+    w_packed, bias, shift = [], [], []
+    for _ in range(n_layers):
+        kind = buf[off]
+        off += 1
+        if kind == 1:
+            layers.append(MaxPool2())
+            continue
+        a, b_, s = struct.unpack_from("<HHB", buf, off)
+        off += 5
+        nb = b_
+        bias.append(np.frombuffer(buf, "<i4", nb, off).copy())
+        off += 4 * nb
+        k = 9 * a if kind == 0 else a
+        kw = (k + 31) // 32
+        w_packed.append(np.frombuffer(buf, "<u4", b_ * kw, off).reshape(b_, kw).copy())
+        off += 4 * b_ * kw
+        shift.append(int(s))
+        layers.append({0: Conv3x3, 2: Dense, 3: Svm}[kind](b_))
+    return FixedParams(tuple(layers), w_packed, bias, shift)

@@ -1,0 +1,73 @@
+"""Dataset substrate: determinism, format round-trip, class structure."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import datagen
+
+
+def test_gen_10cat_deterministic():
+    a_i, a_l, _ = datagen.gen_10cat(32, seed=99)
+    b_i, b_l, _ = datagen.gen_10cat(32, seed=99)
+    np.testing.assert_array_equal(a_i, b_i)
+    np.testing.assert_array_equal(a_l, b_l)
+
+
+def test_gen_10cat_shapes_and_labels():
+    imgs, labels, ncls = datagen.gen_10cat(100, seed=0)
+    assert imgs.shape == (100, 32, 32, 3) and imgs.dtype == np.uint8
+    assert ncls == 10
+    assert labels.min() >= 0 and labels.max() <= 9
+    # all ten classes appear in 100 draws with overwhelming probability
+    assert len(np.unique(labels)) == 10
+
+
+def test_gen_1cat_balanced_binary():
+    imgs, labels, ncls = datagen.gen_1cat(200, seed=1)
+    assert ncls == 2
+    frac = labels.mean()
+    assert 0.35 <= frac <= 0.65
+
+
+def test_classes_are_visually_distinct():
+    """Mean images of different classes differ substantially — the synthetic
+    classes must be separable for training to stand in for CIFAR."""
+    imgs, labels, _ = datagen.gen_10cat(400, seed=5)
+    means = np.stack([imgs[labels == c].mean(axis=0) for c in range(10)])
+    for a in range(10):
+        for b in range(a + 1, 10):
+            d = np.abs(means[a] - means[b]).mean()
+            assert d > 2.0, f"classes {a},{b} look identical (d={d:.2f})"
+
+
+def test_tbd_roundtrip():
+    imgs, labels, ncls = datagen.gen_1cat(17, seed=3)
+    path = tempfile.mktemp(suffix=".tbd")
+    try:
+        datagen.save_tbd(path, imgs, labels, ncls)
+        i2, l2, n2 = datagen.load_tbd(path)
+        np.testing.assert_array_equal(imgs, i2)
+        np.testing.assert_array_equal(labels, l2)
+        assert n2 == ncls
+    finally:
+        os.remove(path)
+
+
+def test_tbd_rejects_bad_magic():
+    path = tempfile.mktemp(suffix=".tbd")
+    with open(path, "wb") as f:
+        f.write(b"XXXX" + b"\x00" * 16)
+    try:
+        with pytest.raises(ValueError):
+            datagen.load_tbd(path)
+    finally:
+        os.remove(path)
+
+
+def test_person_class_is_index_4():
+    """The paper replaced 'deer' (CIFAR index 4) with 'person'."""
+    assert datagen.CLASS_NAMES_10[4] == "person"
+    assert len(datagen.CLASS_NAMES_10) == 10

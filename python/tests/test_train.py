@@ -1,0 +1,61 @@
+"""Trainer: STE gradient shape, loss behaviour, one real training step."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import train as T
+
+
+def test_binarize_values():
+    w = jnp.asarray([-2.0, -0.1, 0.0, 0.1, 2.0])
+    out = np.asarray(M.binarize(w))
+    np.testing.assert_array_equal(out, [-1, -1, 1, 1, 1])
+
+
+def test_binarize_ste_gates_large_weights():
+    """d binarize / dw == 1 for |w|<=1 else 0 (straight-through estimator)."""
+    g = jax.grad(lambda w: jnp.sum(M.binarize(w) * jnp.asarray([1.0, 1.0, 1.0])))(
+        jnp.asarray([0.5, -1.5, 1.0])
+    )
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 0.0, 1.0])
+
+
+def test_svm_loss_margins():
+    # perfect 10-cat scores (>=256 margin) -> ~0 loss
+    labels = jnp.asarray([2], jnp.int32)
+    good = -512.0 * jnp.ones((1, 10))
+    good = good.at[0, 2].set(512.0)
+    assert float(T.svm_loss(good, labels, 10)) == 0.0
+    bad = -good
+    assert float(T.svm_loss(bad, labels, 10)) > 1.0
+
+
+def test_svm_loss_binary_head():
+    labels = jnp.asarray([1, 0], jnp.int32)
+    scores = jnp.asarray([[512.0], [-512.0]])
+    assert float(T.svm_loss(scores, labels, 2)) == 0.0
+    assert float(T.svm_loss(-scores, labels, 2)) > 1.0
+
+
+def test_clip_params_clips():
+    p = [{"w": jnp.asarray([-3.0, 0.2, 3.0]), "b": jnp.asarray([9.0])}]
+    out = T.clip_params(p)
+    np.testing.assert_allclose(np.asarray(out[0]["w"]), [-1.0, 0.2, 1.0], rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out[0]["b"]), [9.0])  # bias unclipped
+
+
+def test_one_training_run_improves(tmp_path):
+    """Two tiny epochs on 1-cat must beat chance on held-out data and
+    produce a loadable TBW artifact."""
+    res = T.train(
+        task="1cat", epochs=2, lr=3e-3, batch=25, seed=7,
+        n_train=200, n_test=100, out_dir=str(tmp_path),
+        eval_fixed_n=40, log=lambda *a: None,
+    )
+    assert res["float_test_err"] < 0.45  # chance = 0.5
+    fixed = M.load_tbw(res["weights"])
+    assert fixed.bias[-1].shape[0] == 1
+    # fixed-point error tracks float error (the paper's parity claim)
+    assert abs(res["fixed_test_err_subset"] - res["float_test_err"]) < 0.15

@@ -1,0 +1,39 @@
+"""ZCA whitening ablation support (paper: dropping ZCA raised error from
+11.8% to 13.6% but is required for the u8 hardware input path)."""
+
+import numpy as np
+
+from compile import datagen
+from compile import train as T
+
+
+def test_zca_whitens_covariance():
+    imgs, _, _ = datagen.gen_1cat(200, seed=0)
+    x = imgs.astype(np.float32)
+    w = T.zca_fit(x, eps=1e-1)
+    xw = T.zca_apply(w, x).reshape(len(x), -1)
+    cov = (xw.T @ xw) / len(xw)
+    d = np.diag(cov)
+    # diagonal pulled toward uniform, off-diagonal suppressed
+    off = cov - np.diag(d)
+    assert np.abs(off).mean() < d.mean() * 0.2
+
+
+def test_zca_preserves_shape_and_is_float():
+    imgs, _, _ = datagen.gen_1cat(50, seed=1)
+    x = imgs.astype(np.float32)
+    w = T.zca_fit(x)
+    out = T.zca_apply(w, x)
+    assert out.shape == x.shape
+    assert out.dtype == np.float32
+    # whitened data is mean-centred: NOT u8 pixels -> incompatible with
+    # the hardware input path, which is why the paper dropped it
+    assert out.min() < 0
+
+
+def test_zca_is_deterministic():
+    imgs, _, _ = datagen.gen_1cat(64, seed=2)
+    x = imgs.astype(np.float32)
+    w1 = T.zca_fit(x)
+    w2 = T.zca_fit(x)
+    np.testing.assert_allclose(w1, w2)

@@ -1,0 +1,42 @@
+//! Bench E7 — the paper's desktop baseline: 6.4 ms (10-cat) and 2.0 ms
+//! (1-cat) per frame on a 4 GHz i7-4790k with Python/Lasagne. Here: the
+//! AOT-compiled XLA artifact executed from Rust via PJRT-CPU, including
+//! the batched variants the coordinator's dynamic batcher routes to.
+
+use tinbinn::report::bench;
+use tinbinn::runtime::{artifacts_dir, ModelRuntime, BATCHES};
+
+fn main() {
+    println!("== tab_desktop: AOT XLA on PJRT-CPU (paper i7: 10cat 6.4 ms / 1cat 2.0 ms) ==");
+    let dir = artifacts_dir();
+    for (task, ncat, paper_ms) in [("10cat", 10usize, 6.4), ("1cat", 1, 2.0)] {
+        let rt = match ModelRuntime::load(&dir, task, ncat) {
+            Ok(rt) => rt,
+            Err(e) => {
+                println!("  ({task}: {e})");
+                continue;
+            }
+        };
+        let img = vec![128u8; 3072];
+        let r = bench::run(&format!("pjrt_{task}_single"), 3, 15, || {
+            rt.infer_one(&img).unwrap();
+        });
+        println!(
+            "{task}: {:.2} ms/frame (paper i7/Lasagne {paper_ms} ms) — same decade, different CPU+stack",
+            r.mean_ms()
+        );
+        for b in BATCHES {
+            let imgs: Vec<Vec<u8>> = (0..b).map(|_| img.clone()).collect();
+            let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+            let rb = bench::bench(&format!("pjrt_{task}_b{b}"), 2, 10, || {
+                rt.infer_batch(&refs).unwrap();
+            });
+            println!(
+                "   b{b}: {:>8.2} ms/batch = {:>6.2} ms/frame ({:>5.0} fps)",
+                rb.mean_ms(),
+                rb.mean_ms() / b as f64,
+                1e3 / (rb.mean_ms() / b as f64)
+            );
+        }
+    }
+}

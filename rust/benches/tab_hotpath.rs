@@ -1,0 +1,97 @@
+//! Hot-path microbenchmarks — the §Perf optimization targets of each
+//! layer's inner loop:
+//!   * conv-strip op execution (the simulator's dominant cost),
+//!   * golden conv layer (cross-check oracle speed),
+//!   * ISS retirement rate (scalar-baseline measurement speed),
+//!   * dense DotSel op,
+//!   * full-schedule execution overhead (ops/s through the sequencer).
+
+use tinbinn::accel::ConvStrip;
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::isa::asm::Asm;
+use tinbinn::isa::cpu::{Cpu, FlatMem};
+use tinbinn::lve::{Lve, VectorOp};
+use tinbinn::model::weights::random_params;
+use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
+use tinbinn::nn::layers::{conv3x3_binary, Tensor3};
+use tinbinn::report::bench;
+use tinbinn::soc::Board;
+use tinbinn::util::Rng64;
+
+fn main() {
+    println!("== tab_hotpath: per-layer inner-loop microbenchmarks ==");
+
+    // L3a: conv strip through the LVE (the simulator's hot op)
+    {
+        let mut lve = Lve::new();
+        let mut rng = Rng64::new(1);
+        let plane: Vec<u8> = (0..34 * 34).map(|_| rng.next_u8()).collect();
+        lve.sp.write_bytes(0, &plane);
+        let op = VectorOp::Conv3x3Strip {
+            strip: ConvStrip { src: 35, src_stride: 34, dst: 8192, dst_stride: 32, h: 32, w: 32, x0: 0 },
+            weights: 0x1AB,
+        };
+        let r = bench::run("lve_conv_strip_32x4", 10, 200, || {
+            lve.execute(&op).unwrap();
+        });
+        let macs = 4.0 * 32.0 * 9.0;
+        println!("   -> {:.0} M MAC/s functional", macs / r.mean_s / 1e6);
+    }
+
+    // L3b: one full 48ch conv layer on the golden model
+    {
+        let mut rng = Rng64::new(2);
+        let img: Vec<u8> = (0..32 * 32 * 48).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(32, 32, 48, &img);
+        let np = random_params(&reduced_10cat(), 3);
+        let p = &np.params[1]; // 48 -> 48 conv
+        let r = bench::run("golden_conv_48to48_32x32", 1, 10, || {
+            std::hint::black_box(conv3x3_binary(&x, p));
+        });
+        let macs = 32.0 * 32.0 * 48.0 * 9.0 * 48.0;
+        println!("   -> {:.0} M MAC/s golden", macs / r.mean_s / 1e6);
+    }
+
+    // L3c: ISS retirement rate
+    {
+        let mut a = Asm::new();
+        a.li(5, 0);
+        a.li(6, 5_000_00);
+        a.label("loop");
+        a.addi(5, 5, 1);
+        a.addi(6, 6, -1);
+        a.bne(6, 0, "loop");
+        a.halt();
+        let bytes = a.encode();
+        let r = bench::run("iss_tight_loop_1.5M_instrs", 1, 10, || {
+            let mut mem = FlatMem::new(4096);
+            mem.load(0, &bytes);
+            let mut cpu = Cpu::new();
+            cpu.run(&mut mem, 10_000_000).unwrap();
+        });
+        println!("   -> {:.0} M instrs/s ISS", 1.5e6 / r.mean_s / 1e6);
+    }
+
+    // L3d: dense DotSel
+    {
+        let mut lve = Lve::new();
+        let op = VectorOp::DotSel { dst: 65536, acts: 0, wbits: 8192, n: 2048 };
+        let r = bench::run("lve_dotsel_k2048", 10, 200, || {
+            lve.execute(&op).unwrap();
+        });
+        println!("   -> {:.0} M MAC/s functional", 2048.0 / r.mean_s / 1e6);
+    }
+
+    // L3e: whole tiny-net schedule (op-dispatch overhead)
+    {
+        let np = random_params(&tiny_1cat(), 4);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let nops = compiled.schedule.n_vector_ops() as f64;
+        let mut board = Board::new(&compiled);
+        let img = vec![99u8; 3072];
+        let r = bench::run("schedule_1cat_full", 2, 20, || {
+            board.infer(&compiled, &img).unwrap();
+        });
+        println!("   -> {:.2} M vector-ops/s through the sequencer", nops / r.mean_s / 1e6);
+    }
+}

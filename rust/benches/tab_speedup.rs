@@ -1,0 +1,51 @@
+//! Bench E5 — the paper's speedup claims: the CNN accelerator improves
+//! conv-layer runtime 73x, LVE improves dense layers 8x, overall 71x
+//! over scalar ORCA. Scalar rates are MEASURED by running real RV32IM
+//! loops on the ISS; overlay times come from the cycle-accurate
+//! schedule execution.
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::isa::baseline::{measure_conv, measure_dense, measure_rates, scalar_net_cycles};
+use tinbinn::model::weights::load_tbw;
+use tinbinn::report::bench;
+use tinbinn::runtime::artifacts_dir;
+use tinbinn::soc::Board;
+
+fn main() {
+    println!("== tab_speedup: accelerator vs scalar RV32IM (paper: 73x conv / 8x dense / 71x overall) ==");
+    // ISS measurement itself, timed
+    bench::run("iss_measure_dense_k2048", 1, 5, || {
+        measure_dense(2048, 11).unwrap();
+    });
+    bench::run("iss_measure_conv_cin32", 1, 5, || {
+        measure_conv(32, 12).unwrap();
+    });
+
+    let rates = measure_rates().unwrap();
+    println!(
+        "scalar rates: conv {:.1} cyc/MAC, dense {:.1} cyc/MAC",
+        rates.conv_cycles_per_mac, rates.dense_cycles_per_mac
+    );
+
+    let dir = artifacts_dir();
+    for task in ["10cat", "1cat"] {
+        let Ok(np) = load_tbw(dir.join(format!("weights_{task}.tbw")), task) else {
+            println!("  ({task}: run `make artifacts` first)");
+            continue;
+        };
+        let (sc_conv, sc_dense, sc_misc) = scalar_net_cycles(&np.net, &rates);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        let img = vec![128u8; 3072];
+        let (_, r) = board.infer(&compiled, &img).unwrap();
+        let ov_conv: u64 = r.per_layer.iter().filter(|l| l.name == "conv3x3").map(|l| l.cycles).sum();
+        let ov_dense: u64 =
+            r.per_layer.iter().filter(|l| l.name == "dense" || l.name == "svm").map(|l| l.cycles).sum();
+        println!(
+            "{task}: conv {:>5.0}x (paper 73x) | dense {:>4.1}x (paper 8x) | overall {:>5.0}x (paper 71x)",
+            sc_conv as f64 / ov_conv.max(1) as f64,
+            sc_dense as f64 / ov_dense.max(1) as f64,
+            (sc_conv + sc_dense + sc_misc) as f64 / r.total_cycles as f64,
+        );
+    }
+}

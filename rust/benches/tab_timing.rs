@@ -1,0 +1,37 @@
+//! Bench E3/E4 — the paper's §II runtime table: 10-cat 1,315 ms and
+//! 1-cat 195 ms on the MDP @24 MHz. Reports the simulated on-device
+//! runtime (the reproduction target) and the simulator's own wall-clock
+//! throughput (the L3 hot path being optimized).
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::model::weights::load_tbw;
+use tinbinn::report::bench;
+use tinbinn::runtime::artifacts_dir;
+use tinbinn::soc::Board;
+
+fn main() {
+    let dir = artifacts_dir();
+    println!("== tab_timing: overlay runtime (paper: 10cat 1,315 ms / 1cat 195 ms) ==");
+    for (task, paper_ms) in [("10cat", 1315.0), ("1cat", 195.0)] {
+        let Ok(np) = load_tbw(dir.join(format!("weights_{task}.tbw")), task) else {
+            println!("  ({task}: run `make artifacts` first)");
+            continue;
+        };
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        let img = vec![128u8; 3072];
+        let (_, report) = board.infer(&compiled, &img).unwrap();
+        println!(
+            "{task}: simulated {:>7.1} ms @24 MHz   paper {paper_ms:>6.0} ms   ratio {:.2}x   ({:.2} MAC/cyc)",
+            report.ms(),
+            paper_ms / report.ms(),
+            report.macs_per_cycle()
+        );
+        // simulator wall-clock (L3 perf target: >=50M simulated cycles/s)
+        let r = bench::run(&format!("simulate_{task}_frame"), 1, 5, || {
+            board.infer(&compiled, &img).unwrap();
+        });
+        let sim_rate = report.total_cycles as f64 / r.mean_s / 1e6;
+        println!("   simulator speed: {sim_rate:.0} M simulated cycles/s\n");
+    }
+}

@@ -1,0 +1,270 @@
+//! S3: the binarized-CNN conv accelerator (paper Fig. 2).
+//!
+//! The unit computes **two overlapping 3x3 convolutions in parallel** with
+//! 1-bit weights (add/subtract mux) over 8-bit activations. Input is
+//! fetched down a column strip, 8 consecutive bytes per cycle as two 32b
+//! operands; **two passes** over the strip cover output byte offsets
+//! (0,1) then (2,3), after which the strip advances 4 bytes and keeps
+//! 32-bit alignment.
+//!
+//! ## Functional semantics (one instruction call)
+//!
+//! For one input plane `cin` (u8, zero-bordered, row stride `sw`), one
+//! 9-bit weight pattern (k = ky*3+kx, bit 1 = +1), and a strip of up to 4
+//! output columns `x0..x0+3`: compute the 3x3 'same' convolution for all
+//! `h` output rows and **accumulate** the i16 results into the layer's
+//! i16 partial-sum plane. Partial sums wrap at 16 bits exactly like the
+//! RTL — the trained nets must keep them in range (nn::grouped audits).
+//!
+//! ## Cycle model (`conv_strip_cycles`)
+//!
+//! Conservative no-line-buffer reading of Fig. 2 (see DESIGN.md
+//! §Cycle-model for the derivation and the optimistic variant):
+//!
+//! * 2 passes over the strip; each pass streams h rows; a row costs
+//!   [`ROW_CYCLES`] CPU cycles (two 32b act reads = the full read-port
+//!   budget, so the i16 accumulate read-modify-write is interleaved),
+//! * [`crate::lve::timing::COST`].conv_fill pipeline-fill cycles per pass,
+//! * one extra accumulate sub-pass per call charged at 2 cycles per
+//!   output row (i16 RMW through the write port).
+
+use crate::lve::scratchpad::Scratchpad;
+use crate::lve::timing::COST;
+
+/// Cycles per streamed row per pass (port-budget bound, see module doc).
+pub const ROW_CYCLES: u64 = 2;
+
+/// Per-call accumulate sub-pass cycles per output row.
+pub const ACC_ROW_CYCLES: u64 = 2;
+
+/// Outputs per (pass, row): the two parallel convolutions.
+pub const OUTPUTS_PER_PASS_ROW: u64 = 2;
+
+/// The conv unit: weight register + per-call functional model.
+pub struct ConvUnit {
+    /// 9-bit weight pattern, bit k = ky*3+kx, 1 = +1, 0 = -1.
+    pub weights: u16,
+}
+
+/// Parameters of one conv-strip instruction call.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvStrip {
+    /// Input plane base (points at interior pixel (0,0) of the bordered
+    /// plane; the border row/col live at negative offsets).
+    pub src: usize,
+    /// Input plane row stride in bytes (interior width + 2 for borders).
+    pub src_stride: usize,
+    /// i16 accumulator plane base (row-major, interior only).
+    pub dst: usize,
+    /// Accumulator row stride in elements (= interior width).
+    pub dst_stride: usize,
+    /// Interior height (output rows).
+    pub h: usize,
+    /// Interior width (for clipping the strip).
+    pub w: usize,
+    /// First output column of the strip (multiple of 4 by convention).
+    pub x0: usize,
+}
+
+impl ConvUnit {
+    pub fn new() -> Self {
+        ConvUnit { weights: 0 }
+    }
+
+    /// Load the 9-bit weight pattern (part of instruction issue).
+    pub fn set_weights(&mut self, bits9: u16) {
+        self.weights = bits9 & 0x1FF;
+    }
+
+    #[inline]
+    fn wsign(&self, k: usize) -> i32 {
+        if (self.weights >> k) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Execute one strip call. Returns (cycles, bytes_read, bytes_written,
+    /// macs). The source plane is zero-bordered so window reads never go
+    /// out of interior bounds.
+    ///
+    /// Hot path of the whole simulator (one 10-cat frame = ~132k calls):
+    /// signs are hoisted out of the pixel loop and window rows are read
+    /// through slices — see EXPERIMENTS.md §Perf-L3.
+    pub fn conv_strip(&self, sp: &mut Scratchpad, p: &ConvStrip) -> (u64, u64, u64, u64) {
+        let cols = p.w.saturating_sub(p.x0).min(4);
+        let mut sign = [0i32; 9];
+        for (k, s) in sign.iter_mut().enumerate() {
+            *s = self.wsign(k);
+        }
+        let stride = p.src_stride;
+        // top-left of the window for output (0, x0): one row and one
+        // column into the border ring
+        let win_base = p.src - stride - 1 + p.x0;
+        for y in 0..p.h {
+            let row0 = win_base + y * stride;
+            for dx in 0..cols {
+                let r0 = sp.read_bytes(row0 + dx, 3);
+                let r1 = sp.read_bytes(row0 + stride + dx, 3);
+                let r2 = sp.read_bytes(row0 + 2 * stride + dx, 3);
+                let acc = r0[0] as i32 * sign[0]
+                    + r0[1] as i32 * sign[1]
+                    + r0[2] as i32 * sign[2]
+                    + r1[0] as i32 * sign[3]
+                    + r1[1] as i32 * sign[4]
+                    + r1[2] as i32 * sign[5]
+                    + r2[0] as i32 * sign[6]
+                    + r2[1] as i32 * sign[7]
+                    + r2[2] as i32 * sign[8];
+                let daddr = p.dst + (y * p.dst_stride + p.x0 + dx) * 2;
+                let cur = sp.read_i16(daddr);
+                // wrap exactly like 16-bit hardware
+                sp.write_i16(daddr, cur.wrapping_add(acc as i16));
+            }
+        }
+
+        let h = p.h as u64;
+        let passes = 2u64;
+        let cycles = passes * (h * ROW_CYCLES + COST.conv_fill) + h * ACC_ROW_CYCLES;
+        // traffic: acts re-streamed per pass (8B/row), acc RMW 4B+4B/row
+        let bytes_read = passes * h * 8 + h * 4;
+        let bytes_written = h * 4;
+        let macs = (cols as u64) * h * 9;
+        (cycles, bytes_read, bytes_written, macs)
+    }
+}
+
+impl Default for ConvUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cycle cost of one strip call without executing it (scheduler planning).
+pub fn conv_strip_cycles(h: usize) -> u64 {
+    let h = h as u64;
+    2 * (h * ROW_CYCLES + COST.conv_fill) + h * ACC_ROW_CYCLES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference: scalar 3x3 conv on a bordered plane.
+    fn conv_ref(plane: &[u8], stride: usize, h: usize, w: usize, bits9: u16) -> Vec<i16> {
+        let mut out = vec![0i16; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0i32;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let yy = y + ky; // bordered: interior (0,0) at (1,1)
+                        let xx = x + kx;
+                        let sign = if (bits9 >> (ky * 3 + kx)) & 1 == 1 { 1 } else { -1 };
+                        acc += plane[yy * stride + xx] as i32 * sign;
+                    }
+                }
+                out[y * w + x] = acc as i16;
+            }
+        }
+        out
+    }
+
+    fn run_plane(h: usize, w: usize, bits9: u16, seed: u64) {
+        use crate::util::Rng64;
+        let mut rng = Rng64::new(seed);
+        let stride = w + 2;
+        // bordered plane in scratchpad at 0; interior origin at (1,1)
+        let mut sp = Scratchpad::new(64 * 1024);
+        let mut plane = vec![0u8; (h + 2) * stride];
+        for y in 0..h {
+            for x in 0..w {
+                plane[(y + 1) * stride + (x + 1)] = rng.next_u8();
+            }
+        }
+        sp.write_bytes(0, &plane);
+        let dst = 32 * 1024;
+        let mut unit = ConvUnit::new();
+        unit.set_weights(bits9);
+        for x0 in (0..w).step_by(4) {
+            let p = ConvStrip {
+                src: stride + 1, // interior (0,0)
+                src_stride: stride,
+                dst,
+                dst_stride: w,
+                h,
+                w,
+                x0,
+            };
+            unit.conv_strip(&mut sp, &p);
+        }
+        let want = conv_ref(&plane, stride, h, w, bits9);
+        for i in 0..h * w {
+            assert_eq!(sp.read_i16(dst + 2 * i), want[i], "pixel {i}");
+        }
+    }
+
+    #[test]
+    fn strip_conv_matches_reference() {
+        run_plane(8, 8, 0b1_1111_1111, 1);
+        run_plane(6, 10, 0b0_1010_0101, 2);
+        run_plane(5, 7, 0, 3); // all -1, non-multiple-of-4 width
+    }
+
+    #[test]
+    fn accumulates_across_calls() {
+        let mut sp = Scratchpad::new(4096);
+        // 2x2 interior all ones, stride 4
+        let stride = 4;
+        let mut plane = vec![0u8; 4 * stride];
+        for y in 0..2 {
+            for x in 0..2 {
+                plane[(y + 1) * stride + x + 1] = 1;
+            }
+        }
+        sp.write_bytes(0, &plane);
+        let mut unit = ConvUnit::new();
+        unit.set_weights(0x1FF); // all +1
+        let p = ConvStrip { src: stride + 1, src_stride: stride, dst: 256, dst_stride: 2, h: 2, w: 2, x0: 0 };
+        unit.conv_strip(&mut sp, &p);
+        let first = sp.read_i16(256);
+        unit.conv_strip(&mut sp, &p);
+        assert_eq!(sp.read_i16(256), 2 * first);
+        assert_eq!(first, 4); // corner of all-ones 2x2: 4 taps
+    }
+
+    #[test]
+    fn i16_wrapping_matches_hardware() {
+        let mut sp = Scratchpad::new(4096);
+        let stride = 3;
+        // 1x1 interior = 255
+        let mut plane = vec![0u8; 3 * stride];
+        plane[stride + 1] = 255;
+        sp.write_bytes(0, &plane);
+        let mut unit = ConvUnit::new();
+        unit.set_weights(0x1FF);
+        let p = ConvStrip { src: stride + 1, src_stride: stride, dst: 128, dst_stride: 1, h: 1, w: 1, x0: 0 };
+        // 129 calls of +255 = 32895 > i16::MAX -> wraps
+        for _ in 0..129 {
+            unit.conv_strip(&mut sp, &p);
+        }
+        assert_eq!(sp.read_i16(128), (129i32 * 255) as i16);
+        assert!(sp.read_i16(128) < 0); // wrapped
+    }
+
+    #[test]
+    fn cycle_model_shape() {
+        // h=32: 2*(64+4) + 64 = 200 cycles for up to 4*32*9=1152 MACs
+        assert_eq!(conv_strip_cycles(32), 200);
+        let (cyc, br, bw, macs) = {
+            let mut sp = Scratchpad::new(16 * 1024);
+            let unit = ConvUnit::new();
+            let p = ConvStrip { src: 35, src_stride: 34, dst: 8192, dst_stride: 32, h: 32, w: 32, x0: 0 };
+            unit.conv_strip(&mut sp, &p)
+        };
+        assert_eq!(cyc, 200);
+        assert_eq!(macs, 1152);
+        assert!(br > 0 && bw > 0);
+    }
+}

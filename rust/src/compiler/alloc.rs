@@ -1,0 +1,220 @@
+//! Scratchpad memory planning under the 128 kB budget.
+//!
+//! Fixed region plan (all layers share it):
+//!
+//! ```text
+//! [ PING activation planes | PONG activation planes | ACC16 | ACC32 |
+//!   WSTAGE (double-buffered weight staging) | FLAT (dense input vector) |
+//!   SCORES | IMG (camera RGBA landing zone) ]
+//! ```
+//!
+//! Activation planes are planar and zero-bordered: a (h, w) interior is
+//! stored as (h+2) x (w+2) bytes; conv window reads never leave the
+//! plane. PING holds even-layer inputs, PONG odd-layer inputs.
+
+use crate::model::zoo::{Layer, Net};
+use crate::util::TinError;
+use crate::Result;
+
+/// A named scratchpad region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub base: usize,
+    pub size: usize,
+}
+
+impl Region {
+    pub fn end(&self) -> usize {
+        self.base + self.size
+    }
+}
+
+/// The complete memory plan for one network.
+#[derive(Clone, Debug)]
+pub struct LayoutPlan {
+    pub ping: Region,
+    pub pong: Region,
+    pub acc16: Region,
+    pub acc32: Region,
+    /// Weight staging, split in two halves for double buffering.
+    pub wstage: Region,
+    pub flat: Region,
+    pub scores: Region,
+    pub img: Region,
+    pub total: usize,
+}
+
+/// Bordered plane bytes for an (h, w) interior.
+pub fn plane_bytes(h: usize, w: usize) -> usize {
+    (h + 2) * (w + 2)
+}
+
+/// Dense/SVM rows staged per DMA group (smaller than the conv group: FC
+/// rows are long, and the dense path is DMA-bandwidth friendly anyway).
+pub const DENSE_STAGE_ROWS: usize = 8;
+
+/// Max weight-staging bytes per DMA group across all layers.
+fn stage_bytes(net: &Net, conv_group: usize) -> usize {
+    let geom = net.weighted_geometry();
+    let mut gi = 0;
+    let mut max = 0usize;
+    for ly in &net.layers {
+        match *ly {
+            Layer::Conv3x3 { cout } => {
+                let (_, _, c) = geom[gi];
+                gi += 1;
+                let kw = (9 * c + 31) / 32;
+                max = max.max(conv_group.min(cout) * kw * 4);
+            }
+            Layer::MaxPool2 => {}
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                let (h, w, c) = geom[gi];
+                gi += 1;
+                let kw = (h * w * c + 31) / 32;
+                max = max.max(DENSE_STAGE_ROWS.min(nout) * kw * 4);
+            }
+        }
+    }
+    max
+}
+
+/// Build the plan; errors if the network cannot fit the scratchpad.
+pub fn plan(net: &Net, capacity: usize, wgroup: usize) -> Result<LayoutPlan> {
+    let (mut h, mut w, mut c) = net.input_hwc;
+    // activation footprint entering each layer, alternating ping/pong
+    let mut ping_max = c * plane_bytes(h, w);
+    let mut pong_max = 0usize;
+    let mut acc_hw_max = h * w;
+    let mut flat_max = 0usize;
+    let mut scores_max = 4usize;
+    let mut side = 0; // 0 = next output goes to pong
+    for ly in &net.layers {
+        match *ly {
+            Layer::Conv3x3 { cout } => {
+                acc_hw_max = acc_hw_max.max(h * w);
+                c = cout;
+                let bytes = c * plane_bytes(h, w);
+                if side == 0 {
+                    pong_max = pong_max.max(bytes);
+                } else {
+                    ping_max = ping_max.max(bytes);
+                }
+                side ^= 1;
+            }
+            Layer::MaxPool2 => {
+                h /= 2;
+                w /= 2;
+                let bytes = c * plane_bytes(h, w);
+                if side == 0 {
+                    pong_max = pong_max.max(bytes);
+                } else {
+                    ping_max = ping_max.max(bytes);
+                }
+                side ^= 1;
+            }
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                flat_max = flat_max.max(h * w * c + nout);
+                scores_max = scores_max.max(4 * nout + 4 * nout);
+                h = 1;
+                w = 1;
+                c = nout;
+            }
+        }
+    }
+
+    let wstage_half = stage_bytes(net, wgroup);
+    let img_bytes = 40 * 30 * 4; // camera RGBA landing zone
+
+    let mut base = 0usize;
+    let mut take = |size: usize| -> Region {
+        let r = Region { base, size: (size + 3) & !3 };
+        base = r.end();
+        r
+    };
+    let ping = take(ping_max);
+    // IMG aliases the head of PONG: the landing zone is only live during
+    // the input stage, before the first conv's output Splat clears PONG.
+    let pong = take(pong_max.max(img_bytes));
+    let img = Region { base: pong.base, size: img_bytes };
+    let acc16 = take(2 * acc_hw_max);
+    let acc32 = take(4 * acc_hw_max);
+    let wstage = take(2 * wstage_half);
+    let flat = take(flat_max.max(16));
+    let scores = take(scores_max.max(64));
+    let total = base;
+
+    if total > capacity {
+        return Err(TinError::Config(format!(
+            "net {} needs {total} B of scratchpad, capacity {capacity} B \
+             (ping {} pong {} acc16 {} acc32 {} wstage {} flat {} img {})",
+            net.name, ping.size, pong.size, acc16.size, acc32.size, wstage.size, flat.size, img.size,
+        )));
+    }
+    Ok(LayoutPlan { ping, pong, acc16, acc32, wstage, flat, scores, img, total })
+}
+
+/// Interior origins + stride for the planes of a layer stored in `region`.
+pub fn plane_origins(region: Region, n_planes: usize, h: usize, w: usize) -> (Vec<usize>, usize) {
+    let stride = w + 2;
+    let pb = plane_bytes(h, w);
+    let origins = (0..n_planes)
+        .map(|i| region.base + i * pb + stride + 1)
+        .collect();
+    (origins, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+
+    #[test]
+    fn both_nets_fit_128k() {
+        for net in [reduced_10cat(), tiny_1cat()] {
+            let p = plan(&net, 128 * 1024, 16).unwrap();
+            assert!(p.total <= 128 * 1024, "{}: {}", net.name, p.total);
+        }
+    }
+
+    #[test]
+    fn tencat_is_tight() {
+        // The 10-cat net must genuinely stress the scratchpad (the paper's
+        // design pressure): over 75% utilization.
+        let p = plan(&reduced_10cat(), 128 * 1024, 16).unwrap();
+        assert!(p.total > 96 * 1024, "utilization too low: {}", p.total);
+    }
+
+    #[test]
+    fn img_aliases_pong_head() {
+        let p = plan(&reduced_10cat(), 128 * 1024, 16).unwrap();
+        assert_eq!(p.img.base, p.pong.base);
+        assert!(p.img.size <= p.pong.size);
+    }
+
+    #[test]
+    fn regions_do_not_overlap() {
+        // (img deliberately aliases pong — excluded)
+        let p = plan(&reduced_10cat(), 128 * 1024, 16).unwrap();
+        let regs = [p.ping, p.pong, p.acc16, p.acc32, p.wstage, p.flat, p.scores];
+        for i in 0..regs.len() {
+            for j in i + 1..regs.len() {
+                let (a, b) = (regs[i], regs[j]);
+                assert!(a.end() <= b.base || b.end() <= a.base, "{a:?} overlaps {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn too_small_capacity_rejected() {
+        assert!(plan(&reduced_10cat(), 64 * 1024, 16).is_err());
+    }
+
+    #[test]
+    fn plane_origin_math() {
+        let r = Region { base: 100, size: 1000 };
+        let (orig, stride) = plane_origins(r, 2, 4, 4);
+        assert_eq!(stride, 6);
+        assert_eq!(orig[0], 100 + 6 + 1);
+        assert_eq!(orig[1], 100 + 36 + 7);
+    }
+}

@@ -1,0 +1,396 @@
+//! Network → overlay schedule lowering.
+
+use super::alloc::{plan, plane_bytes, plane_origins, LayoutPlan};
+use super::schedule::{Schedule, Step};
+use crate::accel::ConvStrip;
+use crate::lve::{Lve, VectorOp};
+use crate::model::zoo::Layer;
+use crate::model::{LayerParams, NetParams};
+use crate::soc::dma::DmaRequest;
+use crate::Result;
+
+/// How the input image reaches the scratchpad.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputMode {
+    /// Camera path (Fig. 1): 40x30 RGBA pixels in the IMG region; the
+    /// schedule de-interleaves and centre-crops 32x32 (top/bottom rows
+    /// fall into the black padding, as on the real MDP).
+    Camera,
+    /// Direct path: a 32x32x3 HWC image in the IMG region (dataset
+    /// evaluation — bit-exact vs the golden model).
+    Direct,
+}
+
+/// Scalar-core cycles to unpack one (cout, cin) 9-bit conv pattern.
+const WUNPACK_CYCLES: u64 = 16;
+/// Output channels staged per weight-DMA group.
+const COUT_GROUP: usize = 16;
+/// Input maps accumulated per i16 group (paper: every 16 input maps).
+const CIN_GROUP: usize = 16;
+
+/// A fully lowered network.
+pub struct CompiledNet {
+    pub schedule: Schedule,
+    /// Flash image holding all packed weights, layer blocks in order.
+    pub flash_image: Vec<u8>,
+    pub layout: LayoutPlan,
+    /// Scratchpad address of the i32 SVM scores.
+    pub scores_addr: usize,
+    /// Scratchpad address of the IMG landing zone.
+    pub img_addr: usize,
+    pub input_mode: InputMode,
+    pub ncat: usize,
+}
+
+/// Extract the 9-bit ±1 pattern for (cout row n, input channel c).
+fn bits9(p: &LayerParams, n: usize, cin: usize, c: usize) -> u16 {
+    let mut bits = 0u16;
+    for tap in 0..9 {
+        if p.weight(n, tap * cin + c) > 0 {
+            bits |= 1 << tap;
+        }
+    }
+    bits
+}
+
+/// Build the flash image; returns per-weighted-layer byte offsets.
+fn build_flash(np: &NetParams) -> (Vec<u8>, Vec<usize>) {
+    let mut image = Vec::new();
+    let mut offsets = Vec::new();
+    for p in &np.params {
+        offsets.push(image.len());
+        for w in &p.words {
+            image.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    (image, offsets)
+}
+
+/// Compile a network for the overlay.
+pub fn compile(np: &NetParams, input_mode: InputMode) -> Result<CompiledNet> {
+    let layout = plan(&np.net, Lve::SCRATCHPAD_BYTES, COUT_GROUP)?;
+    let (flash_image, flash_offsets) = build_flash(np);
+    let mut s = Schedule::default();
+
+    let (ih, iw, ic) = np.net.input_hwc;
+    // input planes live in PING
+    let (in_origins, in_stride) = plane_origins(layout.ping, ic, ih, iw);
+
+    // ---- input stage: de-interleave IMG into bordered planes ----------
+    s.push(Step::LayerMark { index: 0, name: "input" });
+    // zero the full input-plane region (borders + crop padding)
+    s.vec(VectorOp::Splat { dst: layout.ping.base, n: ic * plane_bytes(ih, iw), value: 0 });
+    match input_mode {
+        InputMode::Camera => {
+            // 40x30 RGBA; centre 32 cols at x0=4; rows: 30 real rows centred
+            // vertically -> image rows -1 and 30 land in the black padding.
+            for (c, origin) in in_origins.iter().enumerate() {
+                for y in 0..ih {
+                    let sy = y as isize - 1;
+                    if sy < 0 || sy >= 30 {
+                        continue;
+                    }
+                    s.vec(VectorOp::CopyStrided {
+                        dst: origin + y * in_stride,
+                        ds: 1,
+                        src: layout.img.base + ((sy as usize) * 40 + 4) * 4 + c,
+                        ss: 4,
+                        n: iw,
+                    });
+                }
+            }
+        }
+        InputMode::Direct => {
+            // 32x32x3 HWC bytes in IMG
+            for (c, origin) in in_origins.iter().enumerate() {
+                for y in 0..ih {
+                    s.vec(VectorOp::CopyStrided {
+                        dst: origin + y * in_stride,
+                        ds: 1,
+                        src: layout.img.base + (y * iw) * ic + c,
+                        ss: ic,
+                        n: iw,
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- layer loop ----------------------------------------------------
+    let (mut h, mut w, mut c) = np.net.input_hwc;
+    let mut cur_origins = in_origins;
+    let mut cur_stride = in_stride;
+    let mut side = 0usize; // 0: current in PING, next out to PONG
+    let mut wi = 0usize;
+    let mut flat_len = 0usize; // current dense vector length (0 = spatial)
+    let mut flat_addr = layout.flat.base;
+    let mut ncat = 0usize;
+
+    for (li, ly) in np.net.layers.iter().enumerate() {
+        match *ly {
+            Layer::Conv3x3 { cout } => {
+                let p = &np.params[wi];
+                s.push(Step::LayerMark { index: li + 1, name: "conv3x3" });
+                let out_region = if side == 0 { layout.pong } else { layout.ping };
+                let (out_origins, out_stride) = plane_origins(out_region, cout, h, w);
+                // zero output planes (borders must be black for next conv)
+                s.vec(VectorOp::Splat { dst: out_region.base, n: cout * plane_bytes(h, w), value: 0 });
+
+                let kw_bytes = p.kw() * 4;
+                let half = layout.wstage.size / 2;
+                let n_groups = (cout + COUT_GROUP - 1) / COUT_GROUP;
+                // prefetch group 0
+                s.push(Step::Dma(DmaRequest {
+                    flash_offset: flash_offsets[wi],
+                    dst: layout.wstage.base,
+                    len: COUT_GROUP.min(cout) * kw_bytes,
+                }));
+                for g in 0..n_groups {
+                    s.push(Step::DmaBarrier);
+                    if g + 1 < n_groups {
+                        let n0 = (g + 1) * COUT_GROUP;
+                        let rows = (cout - n0).min(COUT_GROUP);
+                        s.push(Step::Dma(DmaRequest {
+                            flash_offset: flash_offsets[wi] + n0 * kw_bytes,
+                            dst: layout.wstage.base + ((g + 1) % 2) * half,
+                            len: rows * kw_bytes,
+                        }));
+                    }
+                    let n0 = g * COUT_GROUP;
+                    for n in n0..(n0 + COUT_GROUP).min(cout) {
+                        // zero accumulators for this output channel
+                        s.vec(VectorOp::Splat { dst: layout.acc32.base, n: 4 * h * w, value: 0 });
+                        s.vec(VectorOp::Splat { dst: layout.acc16.base, n: 2 * h * w, value: 0 });
+                        let mut cin0 = 0;
+                        while cin0 < c {
+                            let cin1 = (cin0 + CIN_GROUP).min(c);
+                            for ci in cin0..cin1 {
+                                s.push(Step::Overhead { cycles: WUNPACK_CYCLES, what: "wunpack" });
+                                let wbits = bits9(p, n, c, ci);
+                                let mut x0 = 0;
+                                while x0 < w {
+                                    s.vec(VectorOp::Conv3x3Strip {
+                                        strip: ConvStrip {
+                                            src: cur_origins[ci],
+                                            src_stride: cur_stride,
+                                            dst: layout.acc16.base,
+                                            dst_stride: w,
+                                            h,
+                                            w,
+                                            x0,
+                                        },
+                                        weights: wbits,
+                                    });
+                                    x0 += 4;
+                                }
+                            }
+                            // widen the 16-map group into 32b sums (quad add)
+                            s.vec(VectorOp::WidenAccI16 {
+                                dst: layout.acc32.base,
+                                src: layout.acc16.base,
+                                n: h * w,
+                            });
+                            cin0 = cin1;
+                            if cin0 < c {
+                                s.vec(VectorOp::Splat { dst: layout.acc16.base, n: 2 * h * w, value: 0 });
+                            }
+                        }
+                        // 32b -> 8b activation into the bordered out plane
+                        s.vec(VectorOp::ActQuant2D {
+                            src: layout.acc32.base,
+                            dst: out_origins[n],
+                            rows: h,
+                            row_len: w,
+                            src_stride: w,
+                            dst_stride: out_stride,
+                            bias: p.bias[n],
+                            shift: p.shift,
+                        });
+                    }
+                }
+                cur_origins = out_origins;
+                cur_stride = out_stride;
+                c = cout;
+                side ^= 1;
+                wi += 1;
+            }
+            Layer::MaxPool2 => {
+                s.push(Step::LayerMark { index: li + 1, name: "maxpool2" });
+                let (oh, ow) = (h / 2, w / 2);
+                let out_region = if side == 0 { layout.pong } else { layout.ping };
+                let (out_origins, out_stride) = plane_origins(out_region, c, oh, ow);
+                s.vec(VectorOp::Splat { dst: out_region.base, n: c * plane_bytes(oh, ow), value: 0 });
+                let tmp1 = layout.acc16.base;
+                let tmp2 = layout.acc16.base + ow;
+                for ch in 0..c {
+                    for y in 0..oh {
+                        let r0 = cur_origins[ch] + (2 * y) * cur_stride;
+                        let r1 = cur_origins[ch] + (2 * y + 1) * cur_stride;
+                        s.vec(VectorOp::MaxU8Strided { dst: tmp1, ds: 1, a: r0, sa: 2, b: r0 + 1, sb: 2, n: ow });
+                        s.vec(VectorOp::MaxU8Strided { dst: tmp2, ds: 1, a: r1, sa: 2, b: r1 + 1, sb: 2, n: ow });
+                        s.vec(VectorOp::MaxU8Strided {
+                            dst: out_origins[ch] + y * out_stride,
+                            ds: 1,
+                            a: tmp1,
+                            sa: 1,
+                            b: tmp2,
+                            sb: 1,
+                            n: ow,
+                        });
+                    }
+                }
+                cur_origins = out_origins;
+                cur_stride = out_stride;
+                h = oh;
+                w = ow;
+                side ^= 1;
+            }
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                let is_svm = matches!(ly, Layer::Svm { .. });
+                let p = &np.params[wi];
+                s.push(Step::LayerMark { index: li + 1, name: if is_svm { "svm" } else { "dense" } });
+
+                // flatten planar -> HWC vector on first dense layer
+                let in_vec = if flat_len == 0 {
+                    for ch in 0..c {
+                        for y in 0..h {
+                            s.vec(VectorOp::CopyStrided {
+                                dst: layout.flat.base + (y * w) * c + ch,
+                                ds: c,
+                                src: cur_origins[ch] + y * cur_stride,
+                                ss: 1,
+                                n: w,
+                            });
+                        }
+                    }
+                    flat_len = h * w * c;
+                    flat_addr = layout.flat.base;
+                    layout.flat.base
+                } else {
+                    flat_addr
+                };
+                assert_eq!(p.k_in, flat_len, "dense K mismatch in lowering");
+
+                let kw_bytes = p.kw() * 4;
+                let half = layout.wstage.size / 2;
+                let group = COUT_GROUP.min((half / kw_bytes).max(1));
+                let n_groups = (nout + group - 1) / group;
+                let out_u8 = layout.flat.base + flat_len; // next dense input
+                s.push(Step::Dma(DmaRequest {
+                    flash_offset: flash_offsets[wi],
+                    dst: layout.wstage.base,
+                    len: group.min(nout) * kw_bytes,
+                }));
+                for g in 0..n_groups {
+                    s.push(Step::DmaBarrier);
+                    if g + 1 < n_groups {
+                        let n0 = (g + 1) * group;
+                        let rows = (nout - n0).min(group);
+                        s.push(Step::Dma(DmaRequest {
+                            flash_offset: flash_offsets[wi] + n0 * kw_bytes,
+                            dst: layout.wstage.base + ((g + 1) % 2) * half,
+                            len: rows * kw_bytes,
+                        }));
+                    }
+                    let n0 = g * group;
+                    let stage = layout.wstage.base + (g % 2) * half;
+                    for n in n0..(n0 + group).min(nout) {
+                        let score = layout.scores.base + 4 * n;
+                        s.vec(VectorOp::DotSel {
+                            dst: score,
+                            acts: in_vec,
+                            wbits: stage + (n - n0) * kw_bytes,
+                            n: flat_len,
+                        });
+                        if is_svm {
+                            s.vec(VectorOp::AddScalarI32 { addr: score, value: p.bias[n] });
+                        } else {
+                            s.vec(VectorOp::QuantScalarI32 {
+                                src: score,
+                                dst: out_u8 + n,
+                                bias: p.bias[n],
+                                shift: p.shift,
+                            });
+                        }
+                    }
+                }
+                if is_svm {
+                    ncat = nout;
+                } else {
+                    flat_addr = out_u8;
+                    flat_len = nout;
+                }
+                h = 1;
+                w = 1;
+                c = nout;
+                wi += 1;
+            }
+        }
+    }
+
+    Ok(CompiledNet {
+        schedule: s,
+        flash_image,
+        layout: layout.clone(),
+        scores_addr: layout.scores.base,
+        img_addr: layout.img.base,
+        input_mode,
+        ncat,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::random_params;
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+
+    #[test]
+    fn compiles_both_nets() {
+        for net in [tiny_1cat(), reduced_10cat()] {
+            let np = random_params(&net, 5);
+            let c = compile(&np, InputMode::Direct).unwrap();
+            assert!(c.schedule.n_vector_ops() > 100);
+            assert_eq!(c.ncat, net.n_categories());
+            assert_eq!(c.flash_image.len(), np.weight_bytes());
+        }
+    }
+
+    #[test]
+    fn flash_offsets_cover_all_layers() {
+        let np = random_params(&tiny_1cat(), 1);
+        let (img, offs) = build_flash(&np);
+        assert_eq!(offs.len(), np.params.len());
+        assert_eq!(img.len(), np.weight_bytes());
+        // offsets strictly increasing
+        for i in 1..offs.len() {
+            assert!(offs[i] > offs[i - 1]);
+        }
+    }
+
+    #[test]
+    fn bits9_matches_weight_accessor() {
+        let np = random_params(&tiny_1cat(), 9);
+        let p = &np.params[1]; // 16->16 conv
+        let cin = 16;
+        for n in [0usize, 5, 15] {
+            for c in [0usize, 7, 15] {
+                let b = bits9(p, n, cin, c);
+                for tap in 0..9 {
+                    let want = p.weight(n, tap * cin + c);
+                    let got = if (b >> tap) & 1 == 1 { 1 } else { -1 };
+                    assert_eq!(got, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn camera_and_direct_modes_differ() {
+        let np = random_params(&tiny_1cat(), 2);
+        let a = compile(&np, InputMode::Direct).unwrap();
+        let b = compile(&np, InputMode::Camera).unwrap();
+        // camera mode skips two padded rows -> fewer copy ops
+        assert!(a.schedule.n_vector_ops() > b.schedule.n_vector_ops());
+    }
+}

@@ -1,0 +1,20 @@
+//! S7: the overlay compiler — lowers a [`crate::model::NetParams`] onto
+//! the TinBiNN overlay: scratchpad allocation under the 128 kB budget,
+//! flash image layout, and a [`Schedule`] of LVE vector ops + DMA
+//! transfers + scalar-core overheads that the [`crate::soc`] board
+//! executes cycle-accurately.
+//!
+//! The lowering follows the firmware structure the paper describes:
+//! planar (de-interleaved) zero-bordered activation planes, conv strips
+//! of 4 output columns through the Fig. 2 unit accumulating i16 partial
+//! sums per ≤16-input-map group, quad-add widening into i32, the 32b→8b
+//! activation instruction, and double-buffered weight DMA from SPI flash.
+
+pub mod alloc;
+pub mod lower;
+pub mod schedule;
+pub mod verify;
+
+pub use alloc::{LayoutPlan, Region};
+pub use lower::{compile, CompiledNet};
+pub use schedule::{RunReport, Schedule, Step};

@@ -1,0 +1,193 @@
+//! Schedule representation + the board executor.
+
+use crate::lve::{Lve, VectorOp};
+use crate::soc::dma::{Dma, DmaRequest};
+use crate::soc::flash::SpiFlash;
+use crate::soc::cycles_to_ms;
+use crate::lve::timing::COST;
+use crate::Result;
+
+/// One step of a compiled overlay program.
+#[derive(Clone, Debug)]
+pub enum Step {
+    /// Issue an LVE vector op (costs COST.issue + body).
+    Vec(VectorOp),
+    /// Scalar-core work (address computation, weight unpack, requant of a
+    /// handful of values) charged in CPU cycles.
+    Overhead { cycles: u64, what: &'static str },
+    /// Start a background flash→scratchpad DMA transfer.
+    Dma(DmaRequest),
+    /// Wait for all outstanding DMA.
+    DmaBarrier,
+    /// Layer boundary marker (reporting).
+    LayerMark { index: usize, name: &'static str },
+}
+
+/// A compiled overlay program.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub steps: Vec<Step>,
+}
+
+impl Schedule {
+    pub fn push(&mut self, s: Step) {
+        self.steps.push(s);
+    }
+
+    pub fn vec(&mut self, op: VectorOp) {
+        self.steps.push(Step::Vec(op));
+    }
+
+    pub fn n_vector_ops(&self) -> usize {
+        self.steps.iter().filter(|s| matches!(s, Step::Vec(_))).count()
+    }
+}
+
+/// Per-layer execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct LayerStats {
+    pub name: &'static str,
+    pub cycles: u64,
+    pub macs: u64,
+    pub vector_ops: u64,
+    pub dma_stall_cycles: u64,
+}
+
+/// Result of running a schedule on the board.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub total_cycles: u64,
+    pub per_layer: Vec<LayerStats>,
+    pub dma_bytes: u64,
+    pub lve_bytes_read: u64,
+    pub lve_bytes_written: u64,
+    pub macs: u64,
+}
+
+impl RunReport {
+    pub fn ms(&self) -> f64 {
+        cycles_to_ms(self.total_cycles)
+    }
+
+    /// Effective MACs per CPU cycle (efficiency headline).
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Execute a schedule against an LVE + DMA + flash, with the two-timeline
+/// overlap model (CPU/LVE serial; DMA concurrent; barriers join).
+pub fn run(
+    lve: &mut Lve,
+    dma: &mut Dma,
+    flash: &SpiFlash,
+    schedule: &Schedule,
+    start_cycle: u64,
+) -> Result<RunReport> {
+    let mut now = start_cycle;
+    let mut report = RunReport::default();
+    let mut cur = LayerStats { name: "prologue", ..Default::default() };
+    let macs0 = lve.stats.macs;
+    let br0 = lve.stats.bytes_read;
+    let bw0 = lve.stats.bytes_written;
+    let mut layer_mac_base = lve.stats.macs;
+
+    for step in &schedule.steps {
+        match step {
+            Step::Vec(op) => {
+                let body = lve.execute(op)?;
+                now += COST.issue + body;
+                cur.vector_ops += 1;
+            }
+            Step::Overhead { cycles, .. } => {
+                now += cycles;
+            }
+            Step::Dma(req) => {
+                dma.issue(now, flash, &mut lve.sp, req);
+                now += 2; // descriptor write
+            }
+            Step::DmaBarrier => {
+                let done = dma.done_at();
+                if done > now {
+                    cur.dma_stall_cycles += done - now;
+                    now = done;
+                }
+            }
+            Step::LayerMark { name, .. } => {
+                cur.macs = lve.stats.macs - layer_mac_base;
+                layer_mac_base = lve.stats.macs;
+                let prev_total: u64 = report.per_layer.iter().map(|l| l.cycles).sum();
+                cur.cycles = now - start_cycle - prev_total;
+                report.per_layer.push(std::mem::take(&mut cur));
+                cur.name = name;
+            }
+        }
+    }
+    // close the final layer
+    cur.macs = lve.stats.macs - layer_mac_base;
+    let prev_total: u64 = report.per_layer.iter().map(|l| l.cycles).sum();
+    cur.cycles = now - start_cycle - prev_total;
+    if cur.cycles > 0 || cur.vector_ops > 0 {
+        report.per_layer.push(cur);
+    }
+
+    report.total_cycles = now - start_cycle;
+    report.dma_bytes = dma.bytes_moved;
+    report.macs = lve.stats.macs - macs0;
+    report.lve_bytes_read = lve.stats.bytes_read - br0;
+    report.lve_bytes_written = lve.stats.bytes_written - bw0;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_hides_dma_behind_compute() {
+        let mut lve = Lve::new();
+        let mut dma = Dma::new();
+        let flash = SpiFlash::new(vec![0xAB; 4096]);
+        let mut s = Schedule::default();
+        // start a 1000-byte DMA (512+12 cycles), then do > that much compute
+        s.push(Step::Dma(DmaRequest { flash_offset: 0, dst: 0x8000, len: 1000 }));
+        s.vec(VectorOp::Splat { dst: 0, n: 4096, value: 0 }); // 1024 cycles
+        s.push(Step::DmaBarrier);
+        let r = run(&mut lve, &mut dma, &flash, &s, 0).unwrap();
+        let stalls: u64 = r.per_layer.iter().map(|l| l.dma_stall_cycles).sum();
+        assert_eq!(stalls, 0, "DMA should be fully hidden");
+        assert_eq!(lve.sp.read_u8(0x8000), 0xAB);
+    }
+
+    #[test]
+    fn barrier_waits_when_dma_longer() {
+        let mut lve = Lve::new();
+        let mut dma = Dma::new();
+        let flash = SpiFlash::new(vec![0; 65536]);
+        let mut s = Schedule::default();
+        s.push(Step::Dma(DmaRequest { flash_offset: 0, dst: 0x8000, len: 60_000 }));
+        s.push(Step::DmaBarrier);
+        let r = run(&mut lve, &mut dma, &flash, &s, 0).unwrap();
+        let stalls: u64 = r.per_layer.iter().map(|l| l.dma_stall_cycles).sum();
+        assert!(stalls > 20_000);
+        assert!(r.total_cycles >= 30_000);
+    }
+
+    #[test]
+    fn layer_marks_partition_cycles() {
+        let mut lve = Lve::new();
+        let mut dma = Dma::new();
+        let flash = SpiFlash::new(vec![0; 16]);
+        let mut s = Schedule::default();
+        s.push(Step::LayerMark { index: 0, name: "a" });
+        s.push(Step::Overhead { cycles: 100, what: "x" });
+        s.push(Step::LayerMark { index: 1, name: "b" });
+        s.push(Step::Overhead { cycles: 200, what: "y" });
+        let r = run(&mut lve, &mut dma, &flash, &s, 0).unwrap();
+        assert_eq!(r.total_cycles, 300);
+        let a = r.per_layer.iter().find(|l| l.name == "a").unwrap();
+        let b = r.per_layer.iter().find(|l| l.name == "b").unwrap();
+        assert_eq!(a.cycles, 100);
+        assert_eq!(b.cycles, 200);
+    }
+}

@@ -1,0 +1,213 @@
+//! Schedule verifier — static checker for compiler invariants:
+//! every step's address range must fall inside the regions the layout
+//! plan assigned, DMA destinations must match staging areas, and flash
+//! reads must stay inside the image. Lowering bugs die here rather than
+//! as silent scratchpad corruption.
+
+use super::alloc::LayoutPlan;
+use super::lower::CompiledNet;
+use super::schedule::Step;
+use crate::lve::VectorOp;
+use crate::util::TinError;
+use crate::Result;
+
+/// An address range touched by an op.
+#[derive(Clone, Copy, Debug)]
+struct Range {
+    start: usize,
+    len: usize,
+}
+
+impl Range {
+    fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+fn in_any(plan: &LayoutPlan, r: Range) -> bool {
+    if r.len == 0 {
+        return true;
+    }
+    // any planned region (incl. img aliasing pong)
+    let regions = [
+        plan.ping, plan.pong, plan.acc16, plan.acc32, plan.wstage, plan.flat, plan.scores,
+    ];
+    regions
+        .iter()
+        .any(|reg| r.start >= reg.base && r.end() <= reg.base + reg.size)
+}
+
+fn op_ranges(op: &VectorOp) -> Vec<Range> {
+    match *op {
+        VectorOp::Splat { dst, n, .. } => vec![Range { start: dst, len: n }],
+        VectorOp::Copy { dst, src, n } => {
+            vec![Range { start: dst, len: n }, Range { start: src, len: n }]
+        }
+        VectorOp::CopyStrided { dst, ds, src, ss, n } => vec![
+            Range { start: dst, len: if n == 0 { 0 } else { (n - 1) * ds + 1 } },
+            Range { start: src, len: if n == 0 { 0 } else { (n - 1) * ss + 1 } },
+        ],
+        VectorOp::QuantScalarI32 { src, dst, .. } => {
+            vec![Range { start: src, len: 4 }, Range { start: dst, len: 1 }]
+        }
+        VectorOp::AddU8Sat { dst, a, b, n } => vec![
+            Range { start: dst, len: n },
+            Range { start: a, len: n },
+            Range { start: b, len: n },
+        ],
+        VectorOp::AddI16 { dst, a, b, n } => vec![
+            Range { start: dst, len: 2 * n },
+            Range { start: a, len: 2 * n },
+            Range { start: b, len: 2 * n },
+        ],
+        VectorOp::MaxU8Strided { dst, ds, a, sa, b, sb, n } => vec![
+            Range { start: dst, len: if n == 0 { 0 } else { (n - 1) * ds + 1 } },
+            Range { start: a, len: if n == 0 { 0 } else { (n - 1) * sa + 1 } },
+            Range { start: b, len: if n == 0 { 0 } else { (n - 1) * sb + 1 } },
+        ],
+        VectorOp::WidenAccI16 { dst, src, n } => vec![
+            Range { start: dst, len: 4 * n },
+            Range { start: src, len: 2 * n },
+        ],
+        VectorOp::ActQuant2D { src, dst, rows, row_len, src_stride, dst_stride, .. } => vec![
+            Range {
+                start: src,
+                len: if rows == 0 { 0 } else { 4 * ((rows - 1) * src_stride + row_len) },
+            },
+            Range {
+                start: dst,
+                len: if rows == 0 { 0 } else { (rows - 1) * dst_stride + row_len },
+            },
+        ],
+        VectorOp::Conv3x3Strip { strip, .. } => {
+            // source window includes the border ring
+            let src_lo = strip.src - strip.src_stride - 1;
+            let src_len = (strip.h + 2) * strip.src_stride;
+            vec![
+                Range { start: src_lo, len: src_len },
+                Range { start: strip.dst, len: 2 * strip.h * strip.dst_stride },
+            ]
+        }
+        VectorOp::DotSel { dst, acts, wbits, n } => vec![
+            Range { start: dst, len: 4 },
+            Range { start: acts, len: n },
+            Range { start: wbits, len: (n + 7) / 8 },
+        ],
+        VectorOp::AddScalarI32 { addr, .. } => vec![Range { start: addr, len: 4 }],
+    }
+}
+
+/// Verify a compiled network. Returns step counts per kind on success.
+pub fn verify(compiled: &CompiledNet) -> Result<(usize, usize)> {
+    let plan = &compiled.layout;
+    let mut vec_ops = 0;
+    let mut dmas = 0;
+    for (i, step) in compiled.schedule.steps.iter().enumerate() {
+        match step {
+            Step::Vec(op) => {
+                vec_ops += 1;
+                for r in op_ranges(op) {
+                    if r.end() > crate::lve::Lve::SCRATCHPAD_BYTES {
+                        return Err(TinError::Config(format!(
+                            "step {i}: {op:?} exceeds scratchpad ({:#x})",
+                            r.end()
+                        )));
+                    }
+                    if !in_any(plan, r) {
+                        return Err(TinError::Config(format!(
+                            "step {i}: {op:?} touches {:#x}+{} outside planned regions",
+                            r.start, r.len
+                        )));
+                    }
+                }
+            }
+            Step::Dma(req) => {
+                dmas += 1;
+                if req.flash_offset + req.len > compiled.flash_image.len() {
+                    return Err(TinError::Config(format!(
+                        "step {i}: DMA reads past flash image end"
+                    )));
+                }
+                let dst = Range { start: req.dst, len: req.len };
+                if !(dst.start >= plan.wstage.base && dst.end() <= plan.wstage.base + plan.wstage.size) {
+                    return Err(TinError::Config(format!(
+                        "step {i}: DMA destination {:#x}+{} outside weight staging",
+                        req.dst, req.len
+                    )));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok((vec_ops, dmas))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lower::{compile, InputMode};
+    use crate::model::weights::random_params;
+    use crate::model::zoo::{reduced_10cat, tiny_1cat, Layer, Net};
+
+    #[test]
+    fn shipped_nets_verify() {
+        for net in [tiny_1cat(), reduced_10cat()] {
+            let np = random_params(&net, 1);
+            for mode in [InputMode::Direct, InputMode::Camera] {
+                let c = compile(&np, mode).unwrap();
+                let (vec_ops, dmas) = verify(&c).unwrap();
+                assert!(vec_ops > 100);
+                assert!(dmas > 0);
+            }
+        }
+    }
+
+    /// Property: random valid layer stacks lower to verifiable schedules
+    /// AND the overlay execution matches the golden model bit-exactly.
+    #[test]
+    fn prop_random_nets_verify_and_match_golden() {
+        crate::testkit::check(8, |rng| {
+            // random small net: 1-2 conv blocks + optional dense + svm
+            let mut layers = Vec::new();
+            let mut hw = 32usize;
+            let nblocks = 1 + rng.below(2) as usize;
+            for _ in 0..nblocks {
+                layers.push(Layer::Conv3x3 { cout: 4 + 4 * rng.below(4) as usize });
+                if rng.below(2) == 1 {
+                    layers.push(Layer::Conv3x3 { cout: 4 + 4 * rng.below(4) as usize });
+                }
+                layers.push(Layer::MaxPool2);
+                hw /= 2;
+            }
+            let _ = hw;
+            if rng.below(2) == 1 {
+                layers.push(Layer::Dense { nout: 8 + 8 * rng.below(4) as usize });
+            }
+            layers.push(Layer::Svm { nout: 1 + rng.below(10) as usize });
+            let net = Net { name: "rand".into(), input_hwc: (32, 32, 3), layers };
+            let np = random_params(&net, rng.next_u64());
+
+            let compiled = compile(&np, InputMode::Direct).unwrap();
+            verify(&compiled).unwrap();
+
+            let mut board = crate::soc::Board::new(&compiled);
+            let img: Vec<u8> = (0..3072).map(|_| rng.next_u8()).collect();
+            let golden = crate::nn::layers::forward(&np, &img).unwrap();
+            let (scores, _) = board.infer(&compiled, &img).unwrap();
+            assert_eq!(scores, golden, "random net {:?} diverged", np.net.layers);
+        });
+    }
+
+    #[test]
+    fn corrupted_schedule_rejected() {
+        let np = random_params(&tiny_1cat(), 2);
+        let mut c = compile(&np, InputMode::Direct).unwrap();
+        // point a vector op far outside any region
+        c.schedule.steps.push(Step::Vec(crate::lve::VectorOp::Splat {
+            dst: crate::lve::Lve::SCRATCHPAD_BYTES - 1,
+            n: 64,
+            value: 0,
+        }));
+        assert!(verify(&c).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Inference backends behind a common trait: the overlay simulator
+//! (embedded mode) and the PJRT executables (desktop mode).
+
+use crate::compiler::lower::CompiledNet;
+use crate::soc::Board;
+use crate::Result;
+
+/// Something that can classify batches of 32x32x3 u8 images.
+pub trait Backend {
+    /// One score vector per image.
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>>;
+    fn name(&self) -> &'static str;
+    /// Largest batch the backend accepts at once.
+    fn max_batch(&self) -> usize;
+}
+
+/// The overlay simulator: strictly one frame at a time (the real MDP has
+/// one camera and one scratchpad image slot).
+pub struct OverlayBackend {
+    pub board: Board,
+    pub compiled: CompiledNet,
+    /// Simulated cycles consumed so far (for power/throughput reports).
+    pub sim_cycles: u64,
+}
+
+impl OverlayBackend {
+    pub fn new(compiled: CompiledNet) -> Self {
+        let board = Board::new(&compiled);
+        OverlayBackend { board, compiled, sim_cycles: 0 }
+    }
+}
+
+impl Backend for OverlayBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let (scores, report) = self.board.infer(&self.compiled, img)?;
+            self.sim_cycles += report.total_cycles;
+            out.push(scores);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "overlay-sim"
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+}
+
+/// PJRT desktop backend (wraps runtime::ModelRuntime).
+pub struct PjrtBackend {
+    pub rt: crate::runtime::ModelRuntime,
+}
+
+impl Backend for PjrtBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        self.rt.infer_batch(images)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+
+    fn max_batch(&self) -> usize {
+        *crate::runtime::BATCHES.last().unwrap()
+    }
+}
+
+/// A trivial backend for coordinator tests: returns the image checksum
+/// as the score, with a configurable per-image latency in microseconds.
+pub struct MockBackend {
+    pub per_image_us: u64,
+    pub calls: u64,
+    pub seen: u64,
+}
+
+impl MockBackend {
+    pub fn new(per_image_us: u64) -> Self {
+        MockBackend { per_image_us, calls: 0, seen: 0 }
+    }
+}
+
+impl Backend for MockBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        self.calls += 1;
+        self.seen += images.len() as u64;
+        Ok(images
+            .iter()
+            .map(|img| vec![img.iter().map(|&b| b as i32).sum::<i32>()])
+            .collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lower::{compile, InputMode};
+    use crate::model::weights::random_params;
+    use crate::model::zoo::tiny_1cat;
+
+    #[test]
+    fn overlay_backend_counts_cycles() {
+        let np = random_params(&tiny_1cat(), 8);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut be = OverlayBackend::new(compiled);
+        let img = vec![7u8; 3072];
+        let out = be.infer_batch(&[&img, &img]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], out[1]);
+        assert!(be.sim_cycles > 0);
+    }
+
+    #[test]
+    fn mock_backend_sums() {
+        let mut be = MockBackend::new(10);
+        let img = vec![1u8; 4];
+        let out = be.infer_batch(&[&img]).unwrap();
+        assert_eq!(out[0][0], 4);
+        assert_eq!(be.calls, 1);
+    }
+}

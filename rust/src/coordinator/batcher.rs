@@ -1,0 +1,207 @@
+//! Dynamic request batcher (vLLM-router-style, sized for this system):
+//! requests accumulate until the batch fills or the oldest request has
+//! waited `max_wait_us`; a bounded queue applies backpressure upstream.
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest batch to dispatch (must match a compiled variant).
+    pub max_batch: usize,
+    /// Dispatch a partial batch once the oldest request waited this long.
+    pub max_wait_us: u64,
+    /// Queue capacity; pushes beyond it are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait_us: 2_000, queue_cap: 64 }
+    }
+}
+
+/// A queued request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub enqueue_us: u64,
+    pub image: Vec<u8>,
+}
+
+/// Pure batching state machine (time injected — deterministic tests).
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: std::collections::VecDeque<Request>,
+    /// Requests rejected due to a full queue.
+    pub rejected: u64,
+    /// Total accepted.
+    pub accepted: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: Default::default(), rejected: 0, accepted: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Try to enqueue; false = backpressure (caller drops or retries).
+    pub fn push(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.policy.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        self.accepted += 1;
+        self.queue.push_back(req);
+        true
+    }
+
+    /// Dispatch decision at time `now_us`. Returns a batch in FIFO order
+    /// when the policy fires.
+    pub fn poll(&mut self, now_us: u64) -> Option<Vec<Request>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now_us.saturating_sub(self.queue.front().unwrap().enqueue_us);
+        if self.queue.len() >= self.policy.max_batch || oldest_wait >= self.policy.max_wait_us {
+            let n = self.queue.len().min(self.policy.max_batch);
+            return Some(self.queue.drain(..n).collect());
+        }
+        None
+    }
+
+    /// Drain everything (shutdown).
+    pub fn flush(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: u64) -> Request {
+        Request { id, enqueue_us: t, image: vec![] }
+    }
+
+    #[test]
+    fn dispatches_full_batch_immediately() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_us: 1000, queue_cap: 16 });
+        for i in 0..4 {
+            assert!(b.push(req(i, 0)));
+        }
+        let batch = b.poll(1).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn waits_for_more_until_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_us: 1000, queue_cap: 16 });
+        b.push(req(0, 100));
+        assert!(b.poll(500).is_none()); // only 400us waited
+        let batch = b.poll(1100).unwrap(); // 1000us reached
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..8 {
+            b.push(req(i, i));
+        }
+        let batch = b.poll(10).unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backpressure_rejects_beyond_cap() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_us: 1000, queue_cap: 2 });
+        assert!(b.push(req(0, 0)));
+        assert!(b.push(req(1, 0)));
+        assert!(!b.push(req(2, 0)));
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.accepted, 2);
+    }
+
+    // ---- property tests (in-tree harness) -------------------------------
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        crate::testkit::check(100, |rng| {
+            let policy = BatchPolicy {
+                max_batch: 1 + rng.below(8) as usize,
+                max_wait_us: rng.below(5000) as u64,
+                queue_cap: 4 + rng.below(60) as usize,
+            };
+            let mut b = Batcher::new(policy);
+            let mut now = 0u64;
+            let mut sent = Vec::new();
+            let mut got = Vec::new();
+            let n = 1 + rng.below(200);
+            for i in 0..n as u64 {
+                now += rng.below(300) as u64;
+                if b.push(req(i, now)) {
+                    sent.push(i);
+                }
+                if let Some(batch) = b.poll(now) {
+                    got.extend(batch.iter().map(|r| r.id));
+                }
+            }
+            got.extend(b.flush().iter().map(|r| r.id));
+            assert_eq!(got, sent, "accepted requests must come out exactly once, in order");
+        });
+    }
+
+    #[test]
+    fn prop_batch_never_exceeds_max() {
+        crate::testkit::check(100, |rng| {
+            let max_batch = 1 + rng.below(8) as usize;
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch,
+                max_wait_us: rng.below(2000) as u64,
+                queue_cap: 64,
+            });
+            let mut now = 0u64;
+            for i in 0..150u64 {
+                now += rng.below(100) as u64;
+                b.push(req(i, now));
+                if let Some(batch) = b.poll(now) {
+                    assert!(batch.len() <= max_batch);
+                    assert!(!batch.is_empty());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_queue_bounded() {
+        crate::testkit::check(50, |rng| {
+            let cap = 1 + rng.below(30) as usize;
+            let mut b = Batcher::new(BatchPolicy { max_batch: 64, max_wait_us: u64::MAX, queue_cap: cap });
+            for i in 0..200u64 {
+                b.push(req(i, 0));
+                assert!(b.len() <= cap, "queue exceeded its bound");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_wait_bound_respected() {
+        // once poll() is called at/after deadline, the oldest request is
+        // always dispatched
+        crate::testkit::check(50, |rng| {
+            let wait = 1 + rng.below(1000) as u64;
+            let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait_us: wait, queue_cap: 100 });
+            let t0 = rng.below(10_000) as u64;
+            b.push(req(1, t0));
+            assert!(b.poll(t0 + wait).is_some());
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Latency histograms + throughput meters for the pipeline.
+
+/// Log-bucketed latency histogram (microseconds, 1us .. ~17min).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) us
+    buckets: [u64; 30],
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: [0; 30], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Throughput meter over an injected clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Meter {
+    pub events: u64,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl Meter {
+    pub fn record(&mut self, now_us: u64, n: u64) {
+        if self.events == 0 {
+            self.start_us = now_us;
+        }
+        self.events += n;
+        self.end_us = self.end_us.max(now_us);
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let span = self.end_us.saturating_sub(self.start_us);
+        if span == 0 {
+            return 0.0;
+        }
+        self.events as f64 * 1e6 / span as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for us in [10u64, 20, 30, 1000, 2000, 100_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count, 6);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us, 100_000);
+    }
+
+    #[test]
+    fn histogram_zero_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn meter_rate() {
+        let mut m = Meter::default();
+        m.record(0, 1);
+        m.record(1_000_000, 99);
+        assert!((m.per_second() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn prop_quantile_bounds_contain_samples() {
+        crate::testkit::check(50, |rng| {
+            let mut h = Histogram::new();
+            let mut max = 0u64;
+            for _ in 0..100 {
+                let v = 1 + rng.below(1_000_000) as u64;
+                h.record(v);
+                max = max.max(v);
+            }
+            // p100 bucket bound >= max sample (bucket upper bound)
+            assert!(h.quantile_us(1.0) >= max || h.quantile_us(1.0) == h.max_us);
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! S11: the frame-pipeline coordinator — the L3 "product" around the
+//! overlay: frame sources, dynamic batching, inference backends,
+//! backpressure, and latency/throughput metrics.
+//!
+//! Two deployment shapes, matching the paper's two §II comparisons:
+//!
+//! * **Embedded**: camera frames → preprocessing → the overlay
+//!   simulator, one frame at a time (the MDP person detector).
+//! * **Desktop**: request stream → dynamic batcher → AOT-compiled XLA
+//!   executables via PJRT (the i7 baseline re-cast as a serving path
+//!   with b1/b4/b8 variants).
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+
+pub use backend::{Backend, OverlayBackend};
+pub use batcher::{Batcher, BatchPolicy};
+pub use metrics::{Histogram, Meter};
+pub use pipeline::{run_stream, Frame, PipelineReport, StreamConfig};

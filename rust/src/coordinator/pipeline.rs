@@ -1,0 +1,333 @@
+//! The frame pipeline: arrival stream → batcher → backend → metrics.
+//!
+//! Deterministic discrete-event loop: frame arrivals follow a configured
+//! inter-arrival time; the backend's service time advances the clock.
+//! This keeps coordinator behaviour (batching, backpressure, tail
+//! latency) exactly reproducible — and a threaded front-end
+//! ([`serve_threaded`]) exercises the same components under real
+//! concurrency.
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, Batcher, Request};
+use super::metrics::{Histogram, Meter};
+use crate::Result;
+
+/// One input frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub id: u64,
+    pub image: Vec<u8>,
+    pub label: Option<u8>,
+}
+
+/// Stream parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Frame inter-arrival time (us).
+    pub interarrival_us: u64,
+    /// Backend service time per dispatched batch (us) — for simulated
+    /// backends; 0 = measure wall-clock instead.
+    pub service_us_per_image: u64,
+    pub policy: BatchPolicy,
+}
+
+/// Aggregated pipeline results.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub completed: u64,
+    pub rejected: u64,
+    pub correct: u64,
+    pub labelled: u64,
+    pub latency: Option<HistogramSummary>,
+    pub throughput_per_s: f64,
+    pub batches: u64,
+    pub mean_batch: f64,
+}
+
+/// Extracted histogram numbers (kept small for reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistogramSummary {
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl From<&Histogram> for HistogramSummary {
+    fn from(h: &Histogram) -> Self {
+        HistogramSummary {
+            mean_us: h.mean_us(),
+            p50_us: h.quantile_us(0.5),
+            p99_us: h.quantile_us(0.99),
+            max_us: h.max_us,
+        }
+    }
+}
+
+/// Argmax / threshold classification shared by all reporting paths.
+pub fn classify(scores: &[i32]) -> usize {
+    crate::nn::layers::classify(scores)
+}
+
+/// Run a frame stream through the batcher + backend (discrete-event).
+pub fn run_stream<B: Backend>(
+    frames: impl IntoIterator<Item = Frame>,
+    backend: &mut B,
+    cfg: &StreamConfig,
+) -> Result<PipelineReport> {
+    let mut batcher = Batcher::new(cfg.policy);
+    let mut now_us = 0u64;
+    let mut latency = Histogram::new();
+    let mut meter = Meter::default();
+    let mut report = PipelineReport::default();
+    let mut batch_sizes = 0u64;
+
+    let dispatch = |now_us: &mut u64,
+                        backend: &mut B,
+                        batch: Vec<Request>,
+                        latency: &mut Histogram,
+                        meter: &mut Meter,
+                        report: &mut PipelineReport,
+                        batch_sizes: &mut u64,
+                        labels: &std::collections::HashMap<u64, u8>|
+     -> Result<()> {
+        let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let t0 = std::time::Instant::now();
+        let scores = backend.infer_batch(&imgs)?;
+        let service = if cfg.service_us_per_image > 0 {
+            cfg.service_us_per_image * batch.len() as u64
+        } else {
+            t0.elapsed().as_micros() as u64
+        };
+        *now_us += service;
+        for (req, s) in batch.iter().zip(&scores) {
+            latency.record(now_us.saturating_sub(req.enqueue_us));
+            report.completed += 1;
+            if let Some(&want) = labels.get(&req.id) {
+                report.labelled += 1;
+                if classify(s) == want as usize {
+                    report.correct += 1;
+                }
+            }
+        }
+        meter.record(*now_us, batch.len() as u64);
+        report.batches += 1;
+        *batch_sizes += batch.len() as u64;
+        Ok(())
+    };
+
+    let mut labels = std::collections::HashMap::new();
+    for frame in frames {
+        now_us += cfg.interarrival_us;
+        if let Some(l) = frame.label {
+            labels.insert(frame.id, l);
+        }
+        let accepted = batcher.push(Request { id: frame.id, enqueue_us: now_us, image: frame.image });
+        if !accepted {
+            report.rejected += 1;
+        }
+        while let Some(batch) = batcher.poll(now_us) {
+            dispatch(&mut now_us, backend, batch, &mut latency, &mut meter, &mut report, &mut batch_sizes, &labels)?;
+        }
+    }
+    // drain
+    let rest = batcher.flush();
+    for chunk in rest.chunks(backend.max_batch().max(1)) {
+        dispatch(&mut now_us, backend, chunk.to_vec(), &mut latency, &mut meter, &mut report, &mut batch_sizes, &labels)?;
+    }
+
+    report.rejected += batcher.rejected;
+    report.latency = Some(HistogramSummary::from(&latency));
+    report.throughput_per_s = meter.per_second();
+    report.mean_batch = if report.batches > 0 {
+        batch_sizes as f64 / report.batches as f64
+    } else {
+        0.0
+    };
+    Ok(report)
+}
+
+/// Threaded serving front-end: a producer thread feeds a bounded channel
+/// (real backpressure), a consumer drains into the batcher + backend.
+/// Returns the same report shape as [`run_stream`].
+pub fn serve_threaded<B: Backend>(
+    frames: Vec<Frame>,
+    mut backend: B,
+    policy: BatchPolicy,
+) -> Result<(PipelineReport, B)> {
+    use std::sync::mpsc::sync_channel;
+    let (tx, rx) = sync_channel::<Frame>(policy.queue_cap);
+    let producer = std::thread::spawn(move || {
+        for f in frames {
+            if tx.send(f).is_err() {
+                break;
+            }
+        }
+    });
+
+    let mut batcher = Batcher::new(policy);
+    let mut latency = Histogram::new();
+    let mut report = PipelineReport::default();
+    let mut batch_sizes = 0u64;
+    let t_start = std::time::Instant::now();
+    let now_us = |t: std::time::Instant| t.elapsed().as_micros() as u64;
+
+    let handle_batch = |batch: Vec<Request>, backend: &mut B, latency: &mut Histogram, report: &mut PipelineReport, batch_sizes: &mut u64| -> Result<()> {
+        let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let scores = backend.infer_batch(&imgs)?;
+        let t = now_us(t_start);
+        for (req, _s) in batch.iter().zip(&scores) {
+            latency.record(t.saturating_sub(req.enqueue_us));
+            report.completed += 1;
+        }
+        report.batches += 1;
+        *batch_sizes += batch.len() as u64;
+        Ok(())
+    };
+
+    loop {
+        match rx.recv_timeout(std::time::Duration::from_millis(5)) {
+            Ok(frame) => {
+                let t = now_us(t_start);
+                if !batcher.push(Request { id: frame.id, enqueue_us: t, image: frame.image }) {
+                    report.rejected += 1;
+                }
+                while let Some(batch) = batcher.poll(now_us(t_start)) {
+                    handle_batch(batch, &mut backend, &mut latency, &mut report, &mut batch_sizes)?;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                while let Some(batch) = batcher.poll(now_us(t_start)) {
+                    handle_batch(batch, &mut backend, &mut latency, &mut report, &mut batch_sizes)?;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for chunk in batcher.flush().chunks(backend.max_batch().max(1)) {
+        handle_batch(chunk.to_vec(), &mut backend, &mut latency, &mut report, &mut batch_sizes)?;
+    }
+    producer.join().ok();
+
+    let wall = t_start.elapsed().as_secs_f64();
+    report.throughput_per_s = report.completed as f64 / wall.max(1e-9);
+    report.latency = Some(HistogramSummary::from(&latency));
+    report.mean_batch = if report.batches > 0 {
+        batch_sizes as f64 / report.batches as f64
+    } else {
+        0.0
+    };
+    Ok((report, backend))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+
+    fn frames(n: u64) -> Vec<Frame> {
+        (0..n)
+            .map(|id| Frame { id, image: vec![(id % 251) as u8; 16], label: None })
+            .collect()
+    }
+
+    #[test]
+    fn stream_completes_all_frames() {
+        let mut be = MockBackend::new(0);
+        let cfg = StreamConfig {
+            interarrival_us: 100,
+            service_us_per_image: 50,
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 500, queue_cap: 64 },
+        };
+        let r = run_stream(frames(100), &mut be, &cfg).unwrap();
+        assert_eq!(r.completed + r.rejected, 100);
+        assert_eq!(r.completed, be.seen);
+        assert!(r.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn fast_arrivals_produce_bigger_batches() {
+        let cfg_slow = StreamConfig {
+            interarrival_us: 10_000,
+            service_us_per_image: 10,
+            policy: BatchPolicy { max_batch: 8, max_wait_us: 100, queue_cap: 64 },
+        };
+        let cfg_fast = StreamConfig { interarrival_us: 1, ..cfg_slow };
+        let mut be1 = MockBackend::new(0);
+        let r_slow = run_stream(frames(200), &mut be1, &cfg_slow).unwrap();
+        let mut be2 = MockBackend::new(0);
+        let r_fast = run_stream(frames(200), &mut be2, &cfg_fast).unwrap();
+        assert!(
+            r_fast.mean_batch > r_slow.mean_batch,
+            "fast {} vs slow {}",
+            r_fast.mean_batch,
+            r_slow.mean_batch
+        );
+    }
+
+    #[test]
+    fn overload_rejects_but_never_loses() {
+        let mut be = MockBackend::new(0);
+        let cfg = StreamConfig {
+            interarrival_us: 1,
+            service_us_per_image: 10_000,
+            policy: BatchPolicy { max_batch: 2, max_wait_us: 10, queue_cap: 4 },
+        };
+        let r = run_stream(frames(50), &mut be, &cfg).unwrap();
+        assert_eq!(r.completed + r.rejected, 50);
+        assert_eq!(r.completed, be.seen);
+    }
+
+    #[test]
+    fn accuracy_accounting() {
+        // MockBackend score = byte sum; classify: score>0 -> class 1
+        let mut be = MockBackend::new(0);
+        let fr = vec![
+            Frame { id: 0, image: vec![1; 4], label: Some(1) },
+            Frame { id: 1, image: vec![0; 4], label: Some(0) },
+            Frame { id: 2, image: vec![2; 4], label: Some(0) }, // wrong
+        ];
+        let cfg = StreamConfig {
+            interarrival_us: 10,
+            service_us_per_image: 1,
+            policy: BatchPolicy::default(),
+        };
+        let r = run_stream(fr, &mut be, &cfg).unwrap();
+        assert_eq!(r.labelled, 3);
+        assert_eq!(r.correct, 2);
+    }
+
+    #[test]
+    fn threaded_serving_completes() {
+        let be = MockBackend::new(0);
+        let (r, be) = serve_threaded(
+            frames(64),
+            be,
+            BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 16 },
+        )
+        .unwrap();
+        assert_eq!(r.completed + r.rejected, 64);
+        assert_eq!(r.completed, be.seen);
+        assert!(r.latency.unwrap().p99_us > 0);
+    }
+
+    #[test]
+    fn prop_stream_conservation() {
+        crate::testkit::check(30, |rng| {
+            let mut be = MockBackend::new(0);
+            let cfg = StreamConfig {
+                interarrival_us: 1 + rng.below(1000) as u64,
+                service_us_per_image: rng.below(2000) as u64,
+                policy: BatchPolicy {
+                    max_batch: 1 + rng.below(8) as usize,
+                    max_wait_us: rng.below(3000) as u64,
+                    queue_cap: 1 + rng.below(32) as usize,
+                },
+            };
+            let n = 1 + rng.below(100) as u64;
+            let r = run_stream(frames(n), &mut be, &cfg).unwrap();
+            assert_eq!(r.completed + r.rejected, n);
+            assert_eq!(r.completed, be.seen);
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! S12: dataset + image substrate — TBD1 container IO (shared with
+//! python/compile/datagen.py) and RGB565 camera pixel operations.
+
+pub mod rgb565;
+pub mod tbd;
+
+pub use rgb565::{downscale_rgb565, pack_rgb565, unpack_rgb565};
+pub use tbd::{load_tbd, Dataset};

@@ -1,0 +1,147 @@
+//! RGB565 pixel operations for the camera path (Fig. 1): the MDP's VGA
+//! camera emits 640x480 RGB565; gateware downscales 16x to 40x30 and
+//! DMA-writes RGBA pixels into the scratchpad.
+
+/// Pack 8-bit RGB into RGB565 (the camera wire format).
+#[inline]
+pub fn pack_rgb565(r: u8, g: u8, b: u8) -> u16 {
+    (((r as u16) >> 3) << 11) | (((g as u16) >> 2) << 5) | ((b as u16) >> 3)
+}
+
+/// Unpack RGB565 to 8-bit RGB, replicating high bits into the low bits
+/// (standard 5/6-bit expansion, matches typical camera ISPs).
+#[inline]
+pub fn unpack_rgb565(px: u16) -> (u8, u8, u8) {
+    let r5 = ((px >> 11) & 0x1F) as u8;
+    let g6 = ((px >> 5) & 0x3F) as u8;
+    let b5 = (px & 0x1F) as u8;
+    ((r5 << 3) | (r5 >> 2), (g6 << 2) | (g6 >> 4), (b5 << 3) | (b5 >> 2))
+}
+
+/// 16x box downscale of a 640x480 RGB565 frame to 40x30 RGBA bytes
+/// (R,G,B,A=255), the hardware downscaler of Fig. 1. Output is row-major
+/// 40x30, 4 bytes per pixel (32b-aligned DMA writes, as the paper says).
+pub fn downscale_rgb565(frame: &[u16], src_w: usize, src_h: usize, factor: usize) -> Vec<u8> {
+    assert_eq!(frame.len(), src_w * src_h);
+    assert!(src_w % factor == 0 && src_h % factor == 0);
+    let dw = src_w / factor;
+    let dh = src_h / factor;
+    let mut out = vec![0u8; dw * dh * 4];
+    for y in 0..dh {
+        for x in 0..dw {
+            let (mut rs, mut gs, mut bs) = (0u32, 0u32, 0u32);
+            for yy in 0..factor {
+                for xx in 0..factor {
+                    let (r, g, b) = unpack_rgb565(frame[(y * factor + yy) * src_w + x * factor + xx]);
+                    rs += r as u32;
+                    gs += g as u32;
+                    bs += b as u32;
+                }
+            }
+            let n = (factor * factor) as u32;
+            let o = (y * dw + x) * 4;
+            out[o] = (rs / n) as u8;
+            out[o + 1] = (gs / n) as u8;
+            out[o + 2] = (bs / n) as u8;
+            out[o + 3] = 255;
+        }
+    }
+    out
+}
+
+/// De-interleave RGBA pixels into `c` planes padded to (ph, pw) with black
+/// — the software step the paper describes (40x30 -> three 40x34-padded
+/// colour planes; we pad rows bottom-only like the firmware).
+pub fn deinterleave_pad(rgba: &[u8], w: usize, h: usize, ph: usize, pw: usize) -> Vec<Vec<u8>> {
+    assert!(ph >= h && pw >= w);
+    let mut planes = vec![vec![0u8; ph * pw]; 3];
+    for y in 0..h {
+        for x in 0..w {
+            let o = (y * w + x) * 4;
+            for (ci, plane) in planes.iter_mut().enumerate() {
+                plane[y * pw + x] = rgba[o + ci];
+            }
+        }
+    }
+    planes
+}
+
+/// Centre-crop planar data to (ch, cw) and interleave to HWC — produces
+/// the 32x32x3 network input from the padded 34x40 planes.
+pub fn center_crop_hwc(planes: &[Vec<u8>], ph: usize, pw: usize, ch: usize, cw: usize) -> Vec<u8> {
+    let y0 = (ph - ch) / 2;
+    let x0 = (pw - cw) / 2;
+    let mut out = vec![0u8; ch * cw * planes.len()];
+    for y in 0..ch {
+        for x in 0..cw {
+            for (ci, plane) in planes.iter().enumerate() {
+                out[(y * cw + x) * planes.len() + ci] = plane[(y0 + y) * pw + (x0 + x)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip_high_bits() {
+        for (r, g, b) in [(0u8, 0u8, 0u8), (255, 255, 255), (128, 64, 200)] {
+            let (r2, g2, b2) = unpack_rgb565(pack_rgb565(r, g, b));
+            assert!((r as i32 - r2 as i32).abs() <= 8);
+            assert!((g as i32 - g2 as i32).abs() <= 4);
+            assert!((b as i32 - b2 as i32).abs() <= 8);
+        }
+    }
+
+    #[test]
+    fn white_stays_white() {
+        assert_eq!(unpack_rgb565(pack_rgb565(255, 255, 255)), (255, 255, 255));
+        assert_eq!(unpack_rgb565(pack_rgb565(0, 0, 0)), (0, 0, 0));
+    }
+
+    #[test]
+    fn downscale_averages_blocks() {
+        // 32x32 frame, left half white right half black, factor 16 -> 2x2
+        let mut frame = vec![0u16; 32 * 32];
+        for y in 0..32 {
+            for x in 0..16 {
+                frame[y * 32 + x] = pack_rgb565(255, 255, 255);
+            }
+        }
+        let out = downscale_rgb565(&frame, 32, 32, 16);
+        assert_eq!(out.len(), 2 * 2 * 4);
+        assert_eq!(out[0], 255); // left pixel R
+        assert_eq!(out[4], 0); // right pixel R
+        assert_eq!(out[3], 255); // alpha
+    }
+
+    #[test]
+    fn vga_geometry() {
+        let frame = vec![pack_rgb565(10, 20, 30); 640 * 480];
+        let out = downscale_rgb565(&frame, 640, 480, 16);
+        assert_eq!(out.len(), 40 * 30 * 4);
+    }
+
+    #[test]
+    fn deinterleave_and_crop() {
+        // 4x2 RGBA with distinct channels
+        let w = 4;
+        let h = 2;
+        let mut rgba = vec![0u8; w * h * 4];
+        for i in 0..w * h {
+            rgba[i * 4] = 10 + i as u8; // R
+            rgba[i * 4 + 1] = 100 + i as u8; // G
+            rgba[i * 4 + 2] = 200 + i as u8; // B
+        }
+        let planes = deinterleave_pad(&rgba, w, h, 4, 6);
+        assert_eq!(planes.len(), 3);
+        assert_eq!(planes[0][0], 10);
+        assert_eq!(planes[1][1], 101);
+        assert_eq!(planes[0][4], 0); // padded area black
+        let hwc = center_crop_hwc(&planes, 4, 6, 2, 2);
+        assert_eq!(hwc.len(), 2 * 2 * 3);
+    }
+}

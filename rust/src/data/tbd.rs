@@ -1,0 +1,111 @@
+//! TBD1 dataset container (little-endian), written by datagen.py:
+//! magic 'TBD1', u32 n, u16 h, u16 w, u16 c, u16 n_classes,
+//! then n records of (u8 label, h*w*c u8 HWC pixels).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::util::TinError;
+use crate::Result;
+
+/// An in-memory labelled image set.
+pub struct Dataset {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub n_classes: usize,
+    pub labels: Vec<u8>,
+    /// Concatenated HWC images, record-major.
+    pub pixels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Pixels of image i (HWC).
+    pub fn image(&self, i: usize) -> &[u8] {
+        let sz = self.h * self.w * self.c;
+        &self.pixels[i * sz..(i + 1) * sz]
+    }
+}
+
+/// Load a TBD1 container.
+pub fn load_tbd(path: impl AsRef<Path>) -> Result<Dataset> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .map_err(|e| TinError::Io(format!("open {}: {e}", path.as_ref().display())))?;
+    let mut hdr = [0u8; 16];
+    f.read_exact(&mut hdr)?;
+    if &hdr[0..4] != b"TBD1" {
+        return Err(TinError::Format("bad TBD1 magic".into()));
+    }
+    let n = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let h = u16::from_le_bytes(hdr[8..10].try_into().unwrap()) as usize;
+    let w = u16::from_le_bytes(hdr[10..12].try_into().unwrap()) as usize;
+    let c = u16::from_le_bytes(hdr[12..14].try_into().unwrap()) as usize;
+    let n_classes = u16::from_le_bytes(hdr[14..16].try_into().unwrap()) as usize;
+
+    let sz = h * w * c;
+    let mut labels = Vec::with_capacity(n);
+    let mut pixels = vec![0u8; n * sz];
+    let mut lbl = [0u8; 1];
+    for i in 0..n {
+        f.read_exact(&mut lbl)?;
+        labels.push(lbl[0]);
+        f.read_exact(&mut pixels[i * sz..(i + 1) * sz])?;
+    }
+    Ok(Dataset { h, w, c, n_classes, labels, pixels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tiny(path: &std::path::Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"TBD1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap(); // n
+        f.write_all(&2u16.to_le_bytes()).unwrap(); // h
+        f.write_all(&2u16.to_le_bytes()).unwrap(); // w
+        f.write_all(&1u16.to_le_bytes()).unwrap(); // c
+        f.write_all(&3u16.to_le_bytes()).unwrap(); // classes
+        f.write_all(&[1, 10, 11, 12, 13]).unwrap(); // label + 4 px
+        f.write_all(&[2, 20, 21, 22, 23]).unwrap();
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("tinbinn_tbd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tbd");
+        write_tiny(&path);
+        let ds = load_tbd(&path).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.n_classes, 3);
+        assert_eq!(ds.labels, vec![1, 2]);
+        assert_eq!(ds.image(0), &[10, 11, 12, 13]);
+        assert_eq!(ds.image(1), &[20, 21, 22, 23]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic() {
+        let dir = std::env::temp_dir().join("tinbinn_tbd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tbd");
+        std::fs::write(&path, b"WRONG___________________").unwrap();
+        assert!(load_tbd(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(load_tbd("/nonexistent/x.tbd").is_err());
+    }
+}

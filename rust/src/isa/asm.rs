@@ -1,0 +1,359 @@
+//! In-crate RV32IM assembler / program builder.
+//!
+//! Emits raw little-endian instruction words with label resolution, so the
+//! scalar-baseline firmware (conv/dense inner loops of E5) is real machine
+//! code executed by the ISS — no external toolchain required.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy)]
+enum Patch {
+    /// B-type: branch to label.
+    Branch,
+    /// J-type: jal to label.
+    Jal,
+}
+
+/// Label-resolving assembler. Register convention follows the RISC-V ABI
+/// numbering but raw indices are used throughout (x0..x31).
+pub struct Asm {
+    words: Vec<u32>,
+    labels: HashMap<String, usize>,
+    fixups: Vec<(usize, String, Patch)>,
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Asm { words: Vec::new(), labels: HashMap::new(), fixups: Vec::new() }
+    }
+
+    /// Current location counter in bytes.
+    pub fn here(&self) -> u32 {
+        (self.words.len() * 4) as u32
+    }
+
+    pub fn label(&mut self, name: &str) {
+        let prev = self.labels.insert(name.to_string(), self.words.len());
+        assert!(prev.is_none(), "duplicate label {name}");
+    }
+
+    fn emit(&mut self, w: u32) {
+        self.words.push(w);
+    }
+
+    // ---- raw encoders -----------------------------------------------------
+
+    fn r_type(&mut self, funct7: u32, rs2: u8, rs1: u8, funct3: u32, rd: u8, opcode: u32) {
+        self.emit(
+            (funct7 << 25)
+                | ((rs2 as u32) << 20)
+                | ((rs1 as u32) << 15)
+                | (funct3 << 12)
+                | ((rd as u32) << 7)
+                | opcode,
+        );
+    }
+
+    fn i_type(&mut self, imm: i32, rs1: u8, funct3: u32, rd: u8, opcode: u32) {
+        assert!((-2048..=2047).contains(&imm), "i-imm out of range: {imm}");
+        self.emit(
+            (((imm as u32) & 0xFFF) << 20)
+                | ((rs1 as u32) << 15)
+                | (funct3 << 12)
+                | ((rd as u32) << 7)
+                | opcode,
+        );
+    }
+
+    fn s_type(&mut self, imm: i32, rs2: u8, rs1: u8, funct3: u32) {
+        assert!((-2048..=2047).contains(&imm), "s-imm out of range: {imm}");
+        let iu = imm as u32 & 0xFFF;
+        self.emit(
+            ((iu >> 5) << 25)
+                | ((rs2 as u32) << 20)
+                | ((rs1 as u32) << 15)
+                | (funct3 << 12)
+                | ((iu & 0x1F) << 7)
+                | 0x23,
+        );
+    }
+
+    fn b_type_imm(imm: i32) -> u32 {
+        assert!((-4096..=4094).contains(&imm) && imm % 2 == 0, "b-imm: {imm}");
+        let iu = imm as u32;
+        (((iu >> 12) & 1) << 31)
+            | (((iu >> 5) & 0x3F) << 25)
+            | (((iu >> 1) & 0xF) << 8)
+            | (((iu >> 11) & 1) << 7)
+    }
+
+    fn j_type_imm(imm: i32) -> u32 {
+        assert!((-(1 << 20)..(1 << 20)).contains(&imm) && imm % 2 == 0, "j-imm: {imm}");
+        let iu = imm as u32;
+        (((iu >> 20) & 1) << 31)
+            | (((iu >> 1) & 0x3FF) << 21)
+            | (((iu >> 11) & 1) << 20)
+            | (((iu >> 12) & 0xFF) << 12)
+    }
+
+    // ---- instructions -----------------------------------------------------
+
+    pub fn lui(&mut self, rd: u8, imm20: i32) {
+        self.emit(((imm20 as u32) << 12) | ((rd as u32) << 7) | 0x37);
+    }
+
+    /// Load a full 32-bit constant (lui+addi pair, or single addi).
+    pub fn li(&mut self, rd: u8, value: i32) {
+        if (-2048..=2047).contains(&value) {
+            self.addi(rd, 0, value);
+        } else {
+            let lo = (value << 20) >> 20; // low 12, sign-extended
+            let hi = (value.wrapping_sub(lo)) >> 12;
+            self.lui(rd, hi);
+            if lo != 0 {
+                self.addi(rd, rd, lo);
+            }
+        }
+    }
+
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 0, rd, 0x13);
+    }
+    pub fn slti(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 2, rd, 0x13);
+    }
+    pub fn andi(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 7, rd, 0x13);
+    }
+    pub fn ori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 6, rd, 0x13);
+    }
+    pub fn xori(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 4, rd, 0x13);
+    }
+    pub fn slli(&mut self, rd: u8, rs1: u8, shamt: u8) {
+        self.r_type(0, shamt, rs1, 1, rd, 0x13);
+    }
+    pub fn srli(&mut self, rd: u8, rs1: u8, shamt: u8) {
+        self.r_type(0, shamt, rs1, 5, rd, 0x13);
+    }
+    pub fn srai(&mut self, rd: u8, rs1: u8, shamt: u8) {
+        self.r_type(0x20, shamt, rs1, 5, rd, 0x13);
+    }
+
+    pub fn add(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 0, rd, 0x33);
+    }
+    pub fn sub(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0x20, rs2, rs1, 0, rd, 0x33);
+    }
+    pub fn and(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 7, rd, 0x33);
+    }
+    pub fn or(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 6, rd, 0x33);
+    }
+    pub fn xor(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 4, rd, 0x33);
+    }
+    pub fn sll(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 1, rd, 0x33);
+    }
+    pub fn srl(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 5, rd, 0x33);
+    }
+    pub fn sra(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0x20, rs2, rs1, 5, rd, 0x33);
+    }
+    pub fn slt(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 2, rd, 0x33);
+    }
+    pub fn sltu(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(0, rs2, rs1, 3, rd, 0x33);
+    }
+
+    pub fn mul(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(1, rs2, rs1, 0, rd, 0x33);
+    }
+    pub fn mulh(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(1, rs2, rs1, 1, rd, 0x33);
+    }
+    pub fn div(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(1, rs2, rs1, 4, rd, 0x33);
+    }
+    pub fn rem(&mut self, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(1, rs2, rs1, 6, rd, 0x33);
+    }
+
+    pub fn lb(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 0, rd, 0x03);
+    }
+    pub fn lh(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 1, rd, 0x03);
+    }
+    pub fn lw(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 2, rd, 0x03);
+    }
+    pub fn lbu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 4, rd, 0x03);
+    }
+    pub fn lhu(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 5, rd, 0x03);
+    }
+
+    pub fn sb(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.s_type(imm, rs2, rs1, 0);
+    }
+    pub fn sh(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.s_type(imm, rs2, rs1, 1);
+    }
+    pub fn sw(&mut self, rs1: u8, rs2: u8, imm: i32) {
+        self.s_type(imm, rs2, rs1, 2);
+    }
+
+    fn branch(&mut self, funct3: u32, rs1: u8, rs2: u8, target: &str) {
+        self.fixups.push((self.words.len(), target.to_string(), Patch::Branch));
+        self.emit(((rs2 as u32) << 20) | ((rs1 as u32) << 15) | (funct3 << 12) | 0x63);
+    }
+
+    pub fn beq(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(0, rs1, rs2, t);
+    }
+    pub fn bne(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(1, rs1, rs2, t);
+    }
+    pub fn blt(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(4, rs1, rs2, t);
+    }
+    pub fn bge(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(5, rs1, rs2, t);
+    }
+    pub fn bltu(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(6, rs1, rs2, t);
+    }
+    pub fn bgeu(&mut self, rs1: u8, rs2: u8, t: &str) {
+        self.branch(7, rs1, rs2, t);
+    }
+
+    pub fn jal(&mut self, rd: u8, target: &str) {
+        self.fixups.push((self.words.len(), target.to_string(), Patch::Jal));
+        self.emit(((rd as u32) << 7) | 0x6F);
+    }
+
+    pub fn jalr(&mut self, rd: u8, rs1: u8, imm: i32) {
+        self.i_type(imm, rs1, 0, rd, 0x67);
+    }
+
+    pub fn ecall(&mut self) {
+        self.emit(0x73);
+    }
+    pub fn ebreak(&mut self) {
+        self.emit(0x0010_0073);
+    }
+
+    /// Convenience: load service id 0 into a7 and ecall — stops the ISS.
+    pub fn halt(&mut self) {
+        self.addi(17, 0, 0);
+        self.ecall();
+    }
+
+    /// Custom-0 (LVE dispatch): funct7/funct3 select the vector op.
+    pub fn custom0(&mut self, funct7: u8, funct3: u8, rd: u8, rs1: u8, rs2: u8) {
+        self.r_type(funct7 as u32, rs2, rs1, funct3 as u32, rd, 0x0B);
+    }
+
+    /// Resolve labels and return the instruction stream as bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut words = self.words.clone();
+        for (at, label, patch) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .unwrap_or_else(|| panic!("undefined label {label}"));
+            let offset = (target as i64 - *at as i64) * 4;
+            match patch {
+                Patch::Branch => words[*at] |= Self::b_type_imm(offset as i32),
+                Patch::Jal => words[*at] |= Self::j_type_imm(offset as i32),
+            }
+        }
+        words.iter().flat_map(|w| w.to_le_bytes()).collect()
+    }
+
+    /// Number of instructions emitted so far.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::decode::{decode, AluOp, Instr};
+
+    #[test]
+    fn li_small_and_large() {
+        let mut a = Asm::new();
+        a.li(1, 42);
+        a.li(2, 0x12345678);
+        a.li(3, -1);
+        let bytes = a.encode();
+        assert_eq!(bytes.len() % 4, 0);
+        // first word is addi x1, x0, 42
+        let w = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        assert_eq!(decode(w), Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 42 });
+    }
+
+    #[test]
+    fn forward_and_backward_labels() {
+        let mut a = Asm::new();
+        a.jal(0, "fwd");
+        a.label("back");
+        a.addi(1, 1, 1);
+        a.label("fwd");
+        a.beq(0, 0, "back");
+        a.encode(); // must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new();
+        a.jal(0, "nowhere");
+        a.encode();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.label("x");
+    }
+
+    #[test]
+    fn roundtrip_through_decoder() {
+        let mut a = Asm::new();
+        a.lui(5, 0x10);
+        a.add(1, 2, 3);
+        a.sub(4, 5, 6);
+        a.mul(7, 8, 9);
+        a.lw(10, 11, 8);
+        a.sw(12, 13, -4);
+        a.ecall();
+        let bytes = a.encode();
+        for c in bytes.chunks(4) {
+            let w = u32::from_le_bytes(c.try_into().unwrap());
+            assert!(!matches!(decode(w), Instr::Illegal(_)), "{w:#x}");
+        }
+    }
+}

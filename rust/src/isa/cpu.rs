@@ -1,0 +1,443 @@
+//! RV32IM execution engine with cycle accounting.
+
+use super::decode::{decode, AluOp, BranchOp, Instr, LoadOp, MulOp, StoreOp};
+use super::CycleModel;
+use crate::util::TinError;
+
+/// Memory/peripheral bus seen by the CPU. Addresses are full 32-bit; the
+/// SoC (`soc::Board`) implements this over scratchpad + MMIO; tests use
+/// [`FlatMem`].
+pub trait Bus {
+    fn read8(&mut self, addr: u32) -> Result<u8, TinError>;
+    fn write8(&mut self, addr: u32, v: u8) -> Result<(), TinError>;
+
+    fn read16(&mut self, addr: u32) -> Result<u16, TinError> {
+        Ok(u16::from_le_bytes([self.read8(addr)?, self.read8(addr + 1)?]))
+    }
+    fn read32(&mut self, addr: u32) -> Result<u32, TinError> {
+        Ok(u32::from_le_bytes([
+            self.read8(addr)?,
+            self.read8(addr + 1)?,
+            self.read8(addr + 2)?,
+            self.read8(addr + 3)?,
+        ]))
+    }
+    fn write16(&mut self, addr: u32, v: u16) -> Result<(), TinError> {
+        let b = v.to_le_bytes();
+        self.write8(addr, b[0])?;
+        self.write8(addr + 1, b[1])
+    }
+    fn write32(&mut self, addr: u32, v: u32) -> Result<(), TinError> {
+        let b = v.to_le_bytes();
+        for (i, x) in b.iter().enumerate() {
+            self.write8(addr + i as u32, *x)?;
+        }
+        Ok(())
+    }
+
+    /// Custom-0 hook: the LVE engine. Returns extra cycles consumed.
+    /// Default: illegal (no vector unit attached).
+    fn custom0(
+        &mut self,
+        _funct7: u8,
+        _funct3: u8,
+        _rd: u8,
+        _rs1_val: u32,
+        _rs2_val: u32,
+    ) -> Result<(u32, u64), TinError> {
+        Err(TinError::Sim("custom-0 with no LVE attached".into()))
+    }
+}
+
+/// Simple flat RAM bus for ISS unit tests.
+pub struct FlatMem {
+    pub mem: Vec<u8>,
+}
+
+impl FlatMem {
+    pub fn new(size: usize) -> Self {
+        FlatMem { mem: vec![0; size] }
+    }
+
+    pub fn load(&mut self, addr: u32, bytes: &[u8]) {
+        self.mem[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+}
+
+impl Bus for FlatMem {
+    fn read8(&mut self, addr: u32) -> Result<u8, TinError> {
+        self.mem
+            .get(addr as usize)
+            .copied()
+            .ok_or_else(|| TinError::Sim(format!("read8 out of range: {addr:#x}")))
+    }
+    fn write8(&mut self, addr: u32, v: u8) -> Result<(), TinError> {
+        match self.mem.get_mut(addr as usize) {
+            Some(slot) => {
+                *slot = v;
+                Ok(())
+            }
+            None => Err(TinError::Sim(format!("write8 out of range: {addr:#x}"))),
+        }
+    }
+}
+
+/// Why [`Cpu::run`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// ECALL with a7 == 0 — firmware signals completion.
+    Halt,
+    /// EBREAK.
+    Break,
+    /// Instruction budget exhausted.
+    Budget,
+}
+
+/// RV32IM hart with cycle accounting.
+pub struct Cpu {
+    /// x0..x31; x0 is architecturally zero (enforced on write).
+    pub regs: [u32; 32],
+    pub pc: u32,
+    /// Total cycles consumed (CPU clock domain, 24 MHz on the MDP).
+    pub cycles: u64,
+    /// Retired instruction count.
+    pub retired: u64,
+    pub model: CycleModel,
+}
+
+impl Default for Cpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Cpu {
+    pub fn new() -> Self {
+        Cpu { regs: [0; 32], pc: 0, cycles: 0, retired: 0, model: CycleModel::default() }
+    }
+
+    #[inline]
+    fn set(&mut self, rd: u8, v: u32) {
+        if rd != 0 {
+            self.regs[rd as usize] = v;
+        }
+    }
+
+    /// Execute a single instruction. Returns Some(reason) if the hart
+    /// stopped (ECALL a7==0 / EBREAK).
+    pub fn step<B: Bus>(&mut self, bus: &mut B) -> Result<Option<StopReason>, TinError> {
+        let word = bus.read32(self.pc)?;
+        let instr = decode(word);
+        let mut next_pc = self.pc.wrapping_add(4);
+        let m = self.model;
+
+        match instr {
+            Instr::Lui { rd, imm } => {
+                self.set(rd, imm as u32);
+                self.cycles += m.alu;
+            }
+            Instr::Auipc { rd, imm } => {
+                self.set(rd, self.pc.wrapping_add(imm as u32));
+                self.cycles += m.alu;
+            }
+            Instr::Jal { rd, imm } => {
+                self.set(rd, next_pc);
+                next_pc = self.pc.wrapping_add(imm as u32);
+                self.cycles += m.branch_taken;
+            }
+            Instr::Jalr { rd, rs1, imm } => {
+                let target = self.regs[rs1 as usize].wrapping_add(imm as u32) & !1;
+                self.set(rd, next_pc);
+                next_pc = target;
+                self.cycles += m.branch_taken;
+            }
+            Instr::Branch { op, rs1, rs2, imm } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let taken = match op {
+                    BranchOp::Beq => a == b,
+                    BranchOp::Bne => a != b,
+                    BranchOp::Blt => (a as i32) < (b as i32),
+                    BranchOp::Bge => (a as i32) >= (b as i32),
+                    BranchOp::Bltu => a < b,
+                    BranchOp::Bgeu => a >= b,
+                };
+                if taken {
+                    next_pc = self.pc.wrapping_add(imm as u32);
+                    self.cycles += m.branch_taken;
+                } else {
+                    self.cycles += m.alu;
+                }
+            }
+            Instr::Load { op, rd, rs1, imm } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(imm as u32);
+                let v = match op {
+                    LoadOp::Lb => bus.read8(addr)? as i8 as i32 as u32,
+                    LoadOp::Lbu => bus.read8(addr)? as u32,
+                    LoadOp::Lh => bus.read16(addr)? as i16 as i32 as u32,
+                    LoadOp::Lhu => bus.read16(addr)? as u32,
+                    LoadOp::Lw => bus.read32(addr)?,
+                };
+                self.set(rd, v);
+                self.cycles += m.load;
+            }
+            Instr::Store { op, rs1, rs2, imm } => {
+                let addr = self.regs[rs1 as usize].wrapping_add(imm as u32);
+                let v = self.regs[rs2 as usize];
+                match op {
+                    StoreOp::Sb => bus.write8(addr, v as u8)?,
+                    StoreOp::Sh => bus.write16(addr, v as u16)?,
+                    StoreOp::Sw => bus.write32(addr, v)?,
+                }
+                self.cycles += m.store;
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let a = self.regs[rs1 as usize];
+                self.set(rd, alu(op, a, imm as u32));
+                self.cycles += m.alu;
+            }
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                self.set(rd, alu(op, a, b));
+                self.cycles += m.alu;
+            }
+            Instr::MulDiv { op, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let v = muldiv(op, a, b);
+                self.set(rd, v);
+                self.cycles += match op {
+                    MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => m.mul,
+                    _ => m.div,
+                };
+            }
+            Instr::Fence => self.cycles += m.alu,
+            Instr::Ecall => {
+                self.cycles += m.alu;
+                // a7 (x17) selects the service; 0 = halt.
+                if self.regs[17] == 0 {
+                    self.retired += 1;
+                    self.pc = next_pc;
+                    return Ok(Some(StopReason::Halt));
+                }
+            }
+            Instr::Ebreak => {
+                self.cycles += m.alu;
+                self.retired += 1;
+                self.pc = next_pc;
+                return Ok(Some(StopReason::Break));
+            }
+            Instr::Custom0 { funct7, funct3, rd, rs1, rs2 } => {
+                let a = self.regs[rs1 as usize];
+                let b = self.regs[rs2 as usize];
+                let (val, extra) = bus.custom0(funct7, funct3, rd, a, b)?;
+                self.set(rd, val);
+                // issue cost + whatever the vector engine consumed
+                self.cycles += m.alu + extra;
+            }
+            Instr::Illegal(w) => {
+                return Err(TinError::Sim(format!(
+                    "illegal instruction {w:#010x} at pc {:#010x}",
+                    self.pc
+                )));
+            }
+        }
+
+        self.retired += 1;
+        self.pc = next_pc;
+        Ok(None)
+    }
+
+    /// Run until halt/break or `max_instrs` retired.
+    pub fn run<B: Bus>(&mut self, bus: &mut B, max_instrs: u64) -> Result<StopReason, TinError> {
+        let limit = self.retired + max_instrs;
+        while self.retired < limit {
+            if let Some(r) = self.step(bus)? {
+                return Ok(r);
+            }
+        }
+        Ok(StopReason::Budget)
+    }
+}
+
+#[inline]
+fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Slt => ((a as i32) < (b as i32)) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Xor => a ^ b,
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        AluOp::Or => a | b,
+        AluOp::And => a & b,
+    }
+}
+
+#[inline]
+fn muldiv(op: MulOp, a: u32, b: u32) -> u32 {
+    match op {
+        MulOp::Mul => a.wrapping_mul(b),
+        MulOp::Mulh => (((a as i32 as i64) * (b as i32 as i64)) >> 32) as u32,
+        MulOp::Mulhsu => (((a as i32 as i64) * (b as u64 as i64)) >> 32) as u32,
+        MulOp::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        MulOp::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if a as i32 == i32::MIN && b as i32 == -1 {
+                a
+            } else {
+                ((a as i32) / (b as i32)) as u32
+            }
+        }
+        MulOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        MulOp::Rem => {
+            if b == 0 {
+                a
+            } else if a as i32 == i32::MIN && b as i32 == -1 {
+                0
+            } else {
+                ((a as i32) % (b as i32)) as u32
+            }
+        }
+        MulOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::asm::Asm;
+    use super::*;
+
+    fn run_program(a: &Asm) -> (Cpu, FlatMem) {
+        let mut mem = FlatMem::new(64 * 1024);
+        mem.load(0, &a.encode());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut mem, 1_000_000).unwrap();
+        (cpu, mem)
+    }
+
+    #[test]
+    fn arithmetic_loop_sums() {
+        // sum 1..=10 into x5
+        let mut a = Asm::new();
+        a.addi(5, 0, 0); // acc
+        a.addi(6, 0, 1); // i
+        a.addi(7, 0, 11); // limit
+        a.label("loop");
+        a.add(5, 5, 6);
+        a.addi(6, 6, 1);
+        a.blt(6, 7, "loop");
+        a.halt();
+        let (cpu, _) = run_program(&a);
+        assert_eq!(cpu.regs[5], 55);
+    }
+
+    #[test]
+    fn x0_stays_zero() {
+        let mut a = Asm::new();
+        a.addi(0, 0, 99);
+        a.addi(1, 0, 7);
+        a.halt();
+        let (cpu, _) = run_program(&a);
+        assert_eq!(cpu.regs[0], 0);
+        assert_eq!(cpu.regs[1], 7);
+    }
+
+    #[test]
+    fn loads_and_stores_roundtrip() {
+        let mut a = Asm::new();
+        a.li(1, 0x1000);
+        a.li(2, 0xDEADBEEFu32 as i32);
+        a.sw(1, 2, 0);
+        a.lw(3, 1, 0);
+        a.lbu(4, 1, 3); // 0xDE
+        a.lb(5, 1, 3); // sign-extended 0xDE -> -34
+        a.lhu(6, 1, 2); // 0xDEAD
+        a.halt();
+        let (cpu, _) = run_program(&a);
+        assert_eq!(cpu.regs[3], 0xDEADBEEF);
+        assert_eq!(cpu.regs[4], 0xDE);
+        assert_eq!(cpu.regs[5] as i32, -34);
+        assert_eq!(cpu.regs[6], 0xDEAD);
+    }
+
+    #[test]
+    fn mul_div_semantics() {
+        let mut a = Asm::new();
+        a.li(1, -6);
+        a.li(2, 4);
+        a.mul(3, 1, 2); // -24
+        a.div(4, 1, 2); // -1 (trunc toward zero)
+        a.rem(5, 1, 2); // -2
+        a.li(6, 0);
+        a.div(7, 1, 6); // div by zero -> -1 (all ones)
+        a.halt();
+        let (cpu, _) = run_program(&a);
+        assert_eq!(cpu.regs[3] as i32, -24);
+        assert_eq!(cpu.regs[4] as i32, -1);
+        assert_eq!(cpu.regs[5] as i32, -2);
+        assert_eq!(cpu.regs[7], u32::MAX);
+    }
+
+    #[test]
+    fn call_and_return() {
+        let mut a = Asm::new();
+        a.jal(1, "fn"); // call
+        a.addi(5, 5, 100);
+        a.halt();
+        a.label("fn");
+        a.addi(5, 0, 1);
+        a.jalr(0, 1, 0); // ret
+        let (cpu, _) = run_program(&a);
+        assert_eq!(cpu.regs[5], 101);
+    }
+
+    #[test]
+    fn cycle_accounting_matches_model() {
+        let mut a = Asm::new();
+        a.addi(1, 0, 1); // alu
+        a.addi(2, 0, 2); // alu
+        a.halt(); // li a7 + ecall
+        let (cpu, _) = run_program(&a);
+        let m = CycleModel::default();
+        // addi, addi, (addi a7), ecall
+        assert_eq!(cpu.cycles, m.alu * 4);
+        assert_eq!(cpu.retired, 4);
+    }
+
+    #[test]
+    fn illegal_instruction_faults() {
+        let mut mem = FlatMem::new(1024);
+        mem.load(0, &0xFFFF_FFFFu32.to_le_bytes());
+        let mut cpu = Cpu::new();
+        assert!(cpu.run(&mut mem, 10).is_err());
+    }
+
+    #[test]
+    fn budget_stop() {
+        let mut a = Asm::new();
+        a.label("spin");
+        a.jal(0, "spin");
+        let mut mem = FlatMem::new(1024);
+        mem.load(0, &a.encode());
+        let mut cpu = Cpu::new();
+        assert_eq!(cpu.run(&mut mem, 100).unwrap(), StopReason::Budget);
+        assert_eq!(cpu.retired, 100);
+    }
+}

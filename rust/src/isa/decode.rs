@@ -1,0 +1,280 @@
+//! RV32IM instruction decoder.
+//!
+//! Decodes raw 32-bit words into the [`Instr`] enum. Unknown encodings
+//! decode to [`Instr::Illegal`], which the CPU reports as a fault — the
+//! overlay firmware must never execute one.
+
+/// A decoded RV32IM instruction. Registers are 0..31; immediates are
+/// sign-extended where the ISA says so.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: u8, imm: i32 },
+    Auipc { rd: u8, imm: i32 },
+    Jal { rd: u8, imm: i32 },
+    Jalr { rd: u8, rs1: u8, imm: i32 },
+    Branch { op: BranchOp, rs1: u8, rs2: u8, imm: i32 },
+    Load { op: LoadOp, rd: u8, rs1: u8, imm: i32 },
+    Store { op: StoreOp, rs1: u8, rs2: u8, imm: i32 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+    MulDiv { op: MulOp, rd: u8, rs1: u8, rs2: u8 },
+    /// FENCE / FENCE.I — no-op for this single-hart machine.
+    Fence,
+    /// ECALL: used as the firmware->simulator service call (stop, print).
+    Ecall,
+    /// EBREAK: halts simulation (test harness breakpoint).
+    Ebreak,
+    /// Custom-0 opcode space: LVE vector instruction dispatch (see lve/).
+    /// funct7/funct3 select the vector op; rs1/rs2/rd index the LVE
+    /// control registers written beforehand.
+    Custom0 { funct7: u8, funct3: u8, rd: u8, rs1: u8, rs2: u8 },
+    Illegal(u32),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+#[inline]
+fn bits(w: u32, lo: u32, hi: u32) -> u32 {
+    (w >> lo) & ((1u32 << (hi - lo + 1)) - 1)
+}
+
+#[inline]
+fn sext(v: u32, width: u32) -> i32 {
+    let shift = 32 - width;
+    ((v << shift) as i32) >> shift
+}
+
+/// Decode one 32-bit RV32IM word.
+pub fn decode(w: u32) -> Instr {
+    let opcode = bits(w, 0, 6);
+    let rd = bits(w, 7, 11) as u8;
+    let funct3 = bits(w, 12, 14);
+    let rs1 = bits(w, 15, 19) as u8;
+    let rs2 = bits(w, 20, 24) as u8;
+    let funct7 = bits(w, 25, 31);
+
+    match opcode {
+        0x37 => Instr::Lui { rd, imm: (w & 0xFFFF_F000) as i32 },
+        0x17 => Instr::Auipc { rd, imm: (w & 0xFFFF_F000) as i32 },
+        0x6F => {
+            let imm = (bits(w, 31, 31) << 20)
+                | (bits(w, 12, 19) << 12)
+                | (bits(w, 20, 20) << 11)
+                | (bits(w, 21, 30) << 1);
+            Instr::Jal { rd, imm: sext(imm, 21) }
+        }
+        0x67 if funct3 == 0 => Instr::Jalr { rd, rs1, imm: sext(bits(w, 20, 31), 12) },
+        0x63 => {
+            let imm = (bits(w, 31, 31) << 12)
+                | (bits(w, 7, 7) << 11)
+                | (bits(w, 25, 30) << 5)
+                | (bits(w, 8, 11) << 1);
+            let imm = sext(imm, 13);
+            let op = match funct3 {
+                0 => BranchOp::Beq,
+                1 => BranchOp::Bne,
+                4 => BranchOp::Blt,
+                5 => BranchOp::Bge,
+                6 => BranchOp::Bltu,
+                7 => BranchOp::Bgeu,
+                _ => return Instr::Illegal(w),
+            };
+            Instr::Branch { op, rs1, rs2, imm }
+        }
+        0x03 => {
+            let op = match funct3 {
+                0 => LoadOp::Lb,
+                1 => LoadOp::Lh,
+                2 => LoadOp::Lw,
+                4 => LoadOp::Lbu,
+                5 => LoadOp::Lhu,
+                _ => return Instr::Illegal(w),
+            };
+            Instr::Load { op, rd, rs1, imm: sext(bits(w, 20, 31), 12) }
+        }
+        0x23 => {
+            let imm = sext((bits(w, 25, 31) << 5) | bits(w, 7, 11), 12);
+            let op = match funct3 {
+                0 => StoreOp::Sb,
+                1 => StoreOp::Sh,
+                2 => StoreOp::Sw,
+                _ => return Instr::Illegal(w),
+            };
+            Instr::Store { op, rs1, rs2, imm }
+        }
+        0x13 => {
+            let imm = sext(bits(w, 20, 31), 12);
+            let op = match funct3 {
+                0 => AluOp::Add,
+                1 if funct7 == 0 => AluOp::Sll,
+                2 => AluOp::Slt,
+                3 => AluOp::Sltu,
+                4 => AluOp::Xor,
+                5 if funct7 == 0 => AluOp::Srl,
+                5 if funct7 == 0x20 => AluOp::Sra,
+                6 => AluOp::Or,
+                7 => AluOp::And,
+                _ => return Instr::Illegal(w),
+            };
+            // shift-immediates carry shamt in rs2 field; keep imm = shamt
+            let imm = match op {
+                AluOp::Sll | AluOp::Srl | AluOp::Sra => rs2 as i32,
+                _ => imm,
+            };
+            Instr::OpImm { op, rd, rs1, imm }
+        }
+        0x33 => {
+            if funct7 == 1 {
+                let op = match funct3 {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    7 => MulOp::Remu,
+                    _ => unreachable!(),
+                };
+                return Instr::MulDiv { op, rd, rs1, rs2 };
+            }
+            let op = match (funct3, funct7) {
+                (0, 0) => AluOp::Add,
+                (0, 0x20) => AluOp::Sub,
+                (1, 0) => AluOp::Sll,
+                (2, 0) => AluOp::Slt,
+                (3, 0) => AluOp::Sltu,
+                (4, 0) => AluOp::Xor,
+                (5, 0) => AluOp::Srl,
+                (5, 0x20) => AluOp::Sra,
+                (6, 0) => AluOp::Or,
+                (7, 0) => AluOp::And,
+                _ => return Instr::Illegal(w),
+            };
+            Instr::Op { op, rd, rs1, rs2 }
+        }
+        0x0F => Instr::Fence,
+        0x73 => match bits(w, 20, 31) {
+            0 => Instr::Ecall,
+            1 => Instr::Ebreak,
+            _ => Instr::Illegal(w),
+        },
+        // custom-0 (0x0B): LVE dispatch, as ORCA's LVE uses the custom space.
+        0x0B => Instr::Custom0 { funct7: funct7 as u8, funct3: funct3 as u8, rd, rs1, rs2 },
+        _ => Instr::Illegal(w),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_addi() {
+        // addi x1, x0, 42
+        let w = 0x02A0_0093;
+        assert_eq!(
+            decode(w),
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 42 }
+        );
+    }
+
+    #[test]
+    fn decode_negative_imm() {
+        // addi x1, x0, -1
+        let w = 0xFFF0_0093;
+        assert_eq!(
+            decode(w),
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: -1 }
+        );
+    }
+
+    #[test]
+    fn decode_lui_auipc() {
+        assert_eq!(decode(0x0001_23B7), Instr::Lui { rd: 7, imm: 0x12000 });
+        assert_eq!(decode(0x0001_2397), Instr::Auipc { rd: 7, imm: 0x12000 });
+    }
+
+    #[test]
+    fn decode_mul() {
+        // mul x5, x6, x7
+        let w = 0x0273_02B3;
+        assert_eq!(decode(w), Instr::MulDiv { op: MulOp::Mul, rd: 5, rs1: 6, rs2: 7 });
+    }
+
+    #[test]
+    fn decode_branch_backward() {
+        // beq x0, x0, -4
+        let w = 0xFE00_0EE3;
+        match decode(w) {
+            Instr::Branch { op: BranchOp::Beq, imm, .. } => assert_eq!(imm, -4),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_illegal() {
+        assert!(matches!(decode(0xFFFF_FFFF), Instr::Illegal(_)));
+        assert!(matches!(decode(0), Instr::Illegal(_)));
+    }
+
+    #[test]
+    fn decode_sra_imm() {
+        // srai x3, x4, 5
+        let w = 0x4052_5193;
+        assert_eq!(
+            decode(w),
+            Instr::OpImm { op: AluOp::Sra, rd: 3, rs1: 4, imm: 5 }
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! S1: RV32IM instruction-set simulator — the ORCA soft CPU substrate.
+//!
+//! The paper's overlay starts from the ORCA FPGA-optimized RISC-V core
+//! (Lemieux & Vandergriendt, RISC-V workshops 2016) running at 24 MHz on
+//! the iCE40 UltraPlus.  We implement a cycle-counting RV32IM ISS:
+//!
+//! * full RV32I base + M extension (MUL/DIV) decode and execute,
+//! * a pluggable [`Bus`] for scratchpad + memory-mapped peripherals,
+//! * a cycle model matching a 4-stage in-order FPGA softcore
+//!   ([`CycleModel`]), used to *measure* the scalar baselines of the
+//!   paper's 73x / 8x / 71x speedup claims (experiment E5),
+//! * an in-crate assembler ([`asm::Asm`]) so tests and benchmarks build
+//!   real instruction streams without an external toolchain.
+
+pub mod asm;
+pub mod baseline;
+pub mod cpu;
+pub mod decode;
+
+pub use asm::Asm;
+pub use cpu::{Bus, Cpu, FlatMem, StopReason};
+pub use decode::{decode, Instr};
+
+/// Cycle costs of a small in-order FPGA softcore (ORCA-like, 4-stage).
+///
+/// These constants are the *scalar* side of E5. They follow the published
+/// ORCA microarchitecture: single-issue, no branch predictor (taken
+/// branches flush), one-cycle ALU, multi-cycle shifts on the LUT-based
+/// barrel-less shifter variant are NOT modelled (UltraPlus ORCA uses DSP
+/// blocks for shifts/mults), loads hit the single-ported scratchpad.
+#[derive(Clone, Copy, Debug)]
+pub struct CycleModel {
+    /// ALU / LUI / AUIPC and not-taken branches.
+    pub alu: u64,
+    /// Loads: address gen + scratchpad access + writeback.
+    pub load: u64,
+    /// Stores.
+    pub store: u64,
+    /// Taken branch / JAL / JALR: pipeline flush.
+    pub branch_taken: u64,
+    /// MUL via DSP blocks.
+    pub mul: u64,
+    /// DIV/REM iterative unit.
+    pub div: u64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        CycleModel {
+            alu: 1,
+            load: 3,
+            store: 1,
+            branch_taken: 3,
+            mul: 2,
+            div: 34,
+        }
+    }
+}

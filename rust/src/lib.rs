@@ -1,0 +1,34 @@
+//! TinBiNN — Tiny Binarized Neural Network Overlay, full-system reproduction.
+//!
+//! Layers:
+//! - L3 (this crate): cycle-accurate simulator of the TinBiNN overlay
+//!   (ORCA RV32IM + LVE vector engine + binarized-CNN accelerator on a
+//!   Lattice iCE40 UltraPlus SoC model), overlay compiler, resource/power
+//!   models, PJRT runtime for the AOT-compiled JAX model, and the frame
+//!   pipeline coordinator.
+//! - L2 (python/compile/model.py): JAX fixed-point BinaryConnect model.
+//! - L1 (python/compile/kernels/*.py): Pallas binarized-conv kernels.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod data;
+pub mod isa;
+pub mod model;
+pub mod accel;
+pub mod compiler;
+pub mod coordinator;
+pub mod lve;
+pub mod nn;
+pub mod power;
+pub mod resources;
+pub mod runtime;
+pub mod soc;
+pub mod report;
+pub mod util;
+pub mod util_json;
+
+pub mod testkit;
+
+pub use util::TinError;
+pub type Result<T> = std::result::Result<T, TinError>;

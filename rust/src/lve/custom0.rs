@@ -1,0 +1,253 @@
+//! The CPU-side LVE dispatch: ORCA issues LVE work through the custom-0
+//! opcode after programming the engine's control registers over MMIO —
+//! this module is that glue, wiring the RV32IM ISS ([`crate::isa`]) to
+//! the vector engine so real firmware can drive real vector ops.
+//!
+//! Memory map (matches the MDP's layout shape):
+//!   0x0000_0000 .. code/data RAM (instruction fetch + CPU data)
+//!   0x8000_0000 .. scratchpad (byte-addressable window)
+//!   0xF000_0000 .. LVE control registers (word writes):
+//!       +0x00 OP       opcode selector (see [`OpSel`])
+//!       +0x04 DST      scratchpad byte address
+//!       +0x08 SRCA     scratchpad byte address / bias value
+//!       +0x0C SRCB     scratchpad byte address / aux operand
+//!       +0x10 LEN      element count / rows
+//!       +0x14 SSTRIDE  source stride
+//!       +0x18 DSTRIDE  destination stride
+//!       +0x1C AUX      strip x0 / shift / misc
+//!   custom-0 (funct3=0) then launches the configured op, with rs1
+//!   carrying the immediate operand (conv weight bits / requant bias);
+//!   rd receives the op's cycle cost (useful to firmware for
+//!   scheduling).
+
+use super::{Lve, VectorOp};
+use crate::accel::ConvStrip;
+use crate::isa::cpu::Bus;
+use crate::util::TinError;
+
+/// Scratchpad window base.
+pub const SP_BASE: u32 = 0x8000_0000;
+/// LVE control register base.
+pub const LVE_BASE: u32 = 0xF000_0000;
+
+/// Control-register opcode selectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpSel {
+    Splat = 0,
+    Copy = 1,
+    AddI16 = 2,
+    WidenAccI16 = 3,
+    DotSel = 4,
+    QuantScalar = 5,
+    /// Fig. 2 conv strip; rs1 = 9-bit weight pattern. DST=acc16 plane,
+    /// SRCA=input plane interior origin, SRCB=interior width, LEN=rows,
+    /// SSTRIDE/DSTRIDE=strides, AUX=strip x0.
+    ConvStrip = 6,
+    /// 32b->8b activation over a plane; rs1 = per-channel bias. DST/SRCA
+    /// planes, LEN=rows, SRCB=row_len, SSTRIDE/DSTRIDE, AUX=shift.
+    ActQuant = 7,
+}
+
+/// A bus exposing code RAM, the scratchpad window, and the LVE control
+/// registers to the ISS.
+pub struct LveBus {
+    pub code: Vec<u8>,
+    pub lve: Lve,
+    regs: [u32; 8],
+}
+
+impl LveBus {
+    pub fn new(code_size: usize) -> Self {
+        LveBus { code: vec![0; code_size], lve: Lve::new(), regs: [0; 8] }
+    }
+
+    pub fn load_code(&mut self, addr: u32, bytes: &[u8]) {
+        self.code[addr as usize..addr as usize + bytes.len()].copy_from_slice(bytes);
+    }
+
+    fn build_op(&self, rs1: u32) -> Result<VectorOp, TinError> {
+        let [op, dst, srca, srcb, len, sstride, dstride, aux] = self.regs;
+        let (dst, srca_u, srcb_u, len) = (dst as usize, srca as usize, srcb as usize, len as usize);
+        Ok(match op {
+            0 => VectorOp::Splat { dst, n: len, value: srca as u8 },
+            1 => VectorOp::Copy { dst, src: srca_u, n: len },
+            2 => VectorOp::AddI16 { dst, a: srca_u, b: srcb_u, n: len },
+            3 => VectorOp::WidenAccI16 { dst, src: srca_u, n: len },
+            4 => VectorOp::DotSel { dst, acts: srca_u, wbits: srcb_u, n: len },
+            5 => VectorOp::QuantScalarI32 {
+                src: srca_u,
+                dst,
+                bias: srcb as i32,
+                shift: (len & 0x1F) as u8,
+            },
+            6 => VectorOp::Conv3x3Strip {
+                strip: ConvStrip {
+                    src: srca_u,
+                    src_stride: sstride as usize,
+                    dst,
+                    dst_stride: dstride as usize,
+                    h: len,
+                    w: srcb_u,
+                    x0: aux as usize,
+                },
+                weights: (rs1 & 0x1FF) as u16,
+            },
+            7 => VectorOp::ActQuant2D {
+                src: srca_u,
+                dst,
+                rows: len,
+                row_len: srcb_u,
+                src_stride: sstride as usize,
+                dst_stride: dstride as usize,
+                bias: rs1 as i32,
+                shift: (aux & 0x1F) as u8,
+            },
+            other => return Err(TinError::Sim(format!("bad LVE opcode {other}"))),
+        })
+    }
+}
+
+impl Bus for LveBus {
+    fn read8(&mut self, addr: u32) -> Result<u8, TinError> {
+        if addr >= SP_BASE && addr < LVE_BASE {
+            let off = (addr - SP_BASE) as usize;
+            Ok(self.lve.sp.checked(off, 1)?[0])
+        } else if (addr as usize) < self.code.len() {
+            Ok(self.code[addr as usize])
+        } else {
+            Err(TinError::Sim(format!("bus read {addr:#x} unmapped")))
+        }
+    }
+
+    fn write8(&mut self, addr: u32, v: u8) -> Result<(), TinError> {
+        if addr >= LVE_BASE {
+            // register file is word-oriented; accept byte writes
+            let idx = ((addr - LVE_BASE) / 4) as usize;
+            let sh = ((addr - LVE_BASE) % 4) * 8;
+            if idx < 8 {
+                self.regs[idx] = (self.regs[idx] & !(0xFF << sh)) | ((v as u32) << sh);
+                return Ok(());
+            }
+            return Err(TinError::Sim(format!("LVE reg write {addr:#x} out of range")));
+        }
+        if addr >= SP_BASE {
+            let off = (addr - SP_BASE) as usize;
+            self.lve.sp.checked_mut(off, 1)?[0] = v;
+            return Ok(());
+        }
+        if (addr as usize) < self.code.len() {
+            self.code[addr as usize] = v;
+            return Ok(());
+        }
+        Err(TinError::Sim(format!("bus write {addr:#x} unmapped")))
+    }
+
+    fn custom0(
+        &mut self,
+        _funct7: u8,
+        funct3: u8,
+        _rd: u8,
+        rs1: u32,
+        _rs2: u32,
+    ) -> Result<(u32, u64), TinError> {
+        if funct3 != 0 {
+            return Err(TinError::Sim(format!("unknown custom-0 funct3 {funct3}")));
+        }
+        let op = self.build_op(rs1)?;
+        let cycles = self.lve.execute(&op)?;
+        Ok((cycles as u32, cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::Asm;
+    use crate::isa::cpu::Cpu;
+
+    /// Full firmware round trip: the RISC-V program programs the LVE
+    /// control registers, launches a DotSel through custom-0, and reads
+    /// the i32 result back through the scratchpad window.
+    #[test]
+    fn firmware_drives_dotsel_through_custom0() {
+        let mut bus = LveBus::new(4 * 1024);
+        // acts at sp[0..4] = [10, 20, 30, 40]; weight bits at sp[64]
+        bus.lve.sp.write_bytes(0, &[10, 20, 30, 40]);
+        bus.lve.sp.write_u8(64, 0b0110); // -, +, +, -
+
+        let mut a = Asm::new();
+        a.li(1, LVE_BASE as i32);
+        a.li(2, OpSel::DotSel as i32);
+        a.sw(1, 2, 0x00); // OP = DotSel
+        a.li(2, 128);
+        a.sw(1, 2, 0x04); // DST = sp[128]
+        a.li(2, 0);
+        a.sw(1, 2, 0x08); // SRCA = acts
+        a.li(2, 64);
+        a.sw(1, 2, 0x0C); // SRCB = weight bits
+        a.li(2, 4);
+        a.sw(1, 2, 0x10); // LEN = 4
+        a.custom0(0, 0, 5, 0, 0); // launch; x5 = cycle cost
+        a.li(6, (SP_BASE + 128) as i32);
+        a.lw(7, 6, 0); // read result
+        a.halt();
+        bus.load_code(0, &a.encode());
+
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 10_000).unwrap();
+        // -10 + 20 + 30 - 40 = 0? -> -10+20=10, +30=40, -40=0
+        assert_eq!(cpu.regs[7] as i32, 0);
+        assert!(cpu.regs[5] > 0, "firmware sees the op's cycle cost");
+        assert_eq!(bus.lve.sp.read_i32(128), 0);
+    }
+
+    #[test]
+    fn firmware_splat_and_copy() {
+        let mut bus = LveBus::new(4 * 1024);
+        let mut a = Asm::new();
+        a.li(1, LVE_BASE as i32);
+        // splat 8 bytes of 0x55 at sp[256]
+        a.li(2, OpSel::Splat as i32);
+        a.sw(1, 2, 0x00);
+        a.li(2, 256);
+        a.sw(1, 2, 0x04);
+        a.li(2, 0x55);
+        a.sw(1, 2, 0x08);
+        a.li(2, 8);
+        a.sw(1, 2, 0x10);
+        a.custom0(0, 0, 5, 0, 0);
+        // copy them to sp[512]
+        a.li(2, OpSel::Copy as i32);
+        a.sw(1, 2, 0x00);
+        a.li(2, 512);
+        a.sw(1, 2, 0x04);
+        a.li(2, 256);
+        a.sw(1, 2, 0x08);
+        a.custom0(0, 0, 6, 0, 0);
+        a.halt();
+        bus.load_code(0, &a.encode());
+        let mut cpu = Cpu::new();
+        cpu.run(&mut bus, 10_000).unwrap();
+        assert_eq!(bus.lve.sp.read_bytes(512, 8), &[0x55; 8]);
+    }
+
+    #[test]
+    fn bad_opcode_faults() {
+        let mut bus = LveBus::new(1024);
+        let mut a = Asm::new();
+        a.li(1, LVE_BASE as i32);
+        a.li(2, 99);
+        a.sw(1, 2, 0x00);
+        a.custom0(0, 0, 5, 0, 0);
+        a.halt();
+        bus.load_code(0, &a.encode());
+        let mut cpu = Cpu::new();
+        assert!(cpu.run(&mut bus, 1000).is_err());
+    }
+
+    #[test]
+    fn unmapped_access_faults() {
+        let mut bus = LveBus::new(64);
+        assert!(bus.read8(0x4000_0000).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! S2: LVE — Lightweight Vector Extensions engine.
+//!
+//! ORCA's LVE streams data from a dedicated scratchpad through the CPU
+//! ALU (plus custom ALU slots), with no loop / memory-access / address
+//! generation overhead (Lemieux & Vandergriendt, 4th RISC-V Workshop).
+//! TinBiNN adds three custom ALUs (paper §I): the binarized-CNN conv
+//! unit (see [`crate::accel`]), a quad-16b→32b SIMD add, and a 32b→8b
+//! activation function.
+//!
+//! This module is the *functional + cycle* model: [`Lve::execute`] applies
+//! a [`VectorOp`] to the scratchpad and returns the cycles consumed in
+//! the 24 MHz CPU clock domain. Port accounting follows the paper: the
+//! single-ported 128 kB RAM runs at 72 MHz = **2 reads + 1 write of 32
+//! bits per CPU cycle** ([`PortBudget`]).
+
+pub mod custom0;
+pub mod ops;
+pub mod scratchpad;
+pub mod timing;
+
+pub use ops::VectorOp;
+pub use scratchpad::Scratchpad;
+pub use timing::{PortBudget, COST};
+
+use crate::accel::ConvUnit;
+use crate::Result;
+
+/// Cycle + traffic statistics for one executed op (power model input).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpStats {
+    pub cycles: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    /// Multiply-accumulates performed by the conv/dot custom units.
+    pub macs: u64,
+}
+
+/// The vector engine: scratchpad + custom ALUs + accounting.
+pub struct Lve {
+    pub sp: Scratchpad,
+    pub conv: ConvUnit,
+    /// Accumulated statistics since last reset.
+    pub stats: OpStats,
+}
+
+impl Lve {
+    /// Scratchpad capacity on the iCE40 UltraPlus-5K: 4 x 32 kB SPRAM.
+    pub const SCRATCHPAD_BYTES: usize = 128 * 1024;
+
+    pub fn new() -> Self {
+        Lve {
+            sp: Scratchpad::new(Self::SCRATCHPAD_BYTES),
+            conv: ConvUnit::new(),
+            stats: OpStats::default(),
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = OpStats::default();
+    }
+
+    /// Execute one vector op; returns cycles consumed (body only — the
+    /// scalar-core issue overhead is charged by the sequencer).
+    pub fn execute(&mut self, op: &VectorOp) -> Result<u64> {
+        let st = ops::execute(self, op)?;
+        self.stats.cycles += st.cycles;
+        self.stats.bytes_read += st.bytes_read;
+        self.stats.bytes_written += st.bytes_written;
+        self.stats.macs += st.macs;
+        Ok(st.cycles)
+    }
+}
+
+impl Default for Lve {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratchpad_capacity_is_128k() {
+        let lve = Lve::new();
+        assert_eq!(lve.sp.len(), 128 * 1024);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut lve = Lve::new();
+        lve.sp.write_bytes(0, &[1, 2, 3, 4]);
+        let op = VectorOp::AddU8Sat { dst: 16, a: 0, b: 0, n: 4 };
+        lve.execute(&op).unwrap();
+        assert!(lve.stats.cycles > 0);
+        assert!(lve.stats.bytes_read >= 8);
+        lve.reset_stats();
+        assert_eq!(lve.stats.cycles, 0);
+    }
+}

@@ -1,0 +1,328 @@
+//! The LVE vector-operation set and its functional + cycle execution.
+//!
+//! Every op reads/writes the scratchpad and returns [`OpStats`]. The set
+//! is exactly what the overlay compiler needs to lower the binarized
+//! CNNs: the three custom ALUs of the paper (conv strip, quad widen-add,
+//! activation requant), plain streaming ALU ops (add, max, copy, fill),
+//! and the select-negate-accumulate dense dot product.
+
+use super::timing::{div_ceil, read_cycles, write_cycles, COST};
+use super::{Lve, OpStats};
+use crate::accel::ConvStrip;
+use crate::nn::layers::quant_scalar;
+use crate::Result;
+
+/// One LVE vector instruction. Addresses are scratchpad byte offsets;
+/// strides are in elements unless noted.
+#[derive(Clone, Debug)]
+pub enum VectorOp {
+    /// Fill `n` bytes at `dst` with `value`.
+    Splat { dst: usize, n: usize, value: u8 },
+    /// Byte copy (DMA-like move inside the scratchpad).
+    Copy { dst: usize, src: usize, n: usize },
+    /// Strided byte copy: dst[i*ds] = src[i*ss] for i<n. Gather (ss>1),
+    /// scatter (ds>1), or plain move — used to de-interleave camera
+    /// pixels into planes and to HWC-flatten planar maps for dense layers.
+    CopyStrided { dst: usize, ds: usize, src: usize, ss: usize, n: usize },
+    /// Per-element scalar requant: dst_u8 = clamp((src_i32 + bias +
+    /// 2^(s-1)) >> s, 0, 255). One dense-layer neuron output (CPU-side).
+    QuantScalarI32 { src: usize, dst: usize, bias: i32, shift: u8 },
+    /// Saturating u8 add, 4 lanes: dst[i] = sat(a[i] + b[i]).
+    AddU8Sat { dst: usize, a: usize, b: usize, n: usize },
+    /// Wrapping i16 add, 2 lanes: dst[i] = a[i] + b[i].
+    AddI16 { dst: usize, a: usize, b: usize, n: usize },
+    /// Strided u8 max: dst[i] = max(src[a + i*sa], src[b + i*sb]).
+    MaxU8Strided { dst: usize, ds: usize, a: usize, sa: usize, b: usize, sb: usize, n: usize },
+    /// Custom ALU 1 (paper): quad-16b→32b widening accumulate:
+    /// dst_i32[i] += src_i16[i], processing 4 partials per beat.
+    WidenAccI16 { dst: usize, src: usize, n: usize },
+    /// Custom ALU 2 (paper): 32b→8b activation: for each of n i32
+    /// accumulators: clamp((acc + bias + 2^(s-1)) >> s, 0, 255), written
+    /// as u8 rows into a (possibly bordered) destination plane.
+    ActQuant2D {
+        src: usize,
+        dst: usize,
+        rows: usize,
+        row_len: usize,
+        /// source stride in i32 elements
+        src_stride: usize,
+        /// destination stride in bytes
+        dst_stride: usize,
+        bias: i32,
+        shift: u8,
+    },
+    /// Custom ALU 3 (paper Fig. 2): binarized 3x3 conv strip — see
+    /// [`crate::accel`]. `weights` is the 9-bit ±1 pattern for the
+    /// current (cout, cin) pair.
+    Conv3x3Strip { strip: ConvStrip, weights: u16 },
+    /// Dense select-negate-accumulate: dst_i32 = Σ_k ±acts[k], sign from
+    /// bit k of the packed words at `wbits`. Plain-LVE sequence (the
+    /// paper's dense layers gain only 8x over scalar).
+    DotSel { dst: usize, acts: usize, wbits: usize, n: usize },
+    /// Scalar i32 add at an address (bias add on SVM scores; charged as
+    /// one CPU load-modify-store).
+    AddScalarI32 { addr: usize, value: i32 },
+}
+
+pub(super) fn execute(lve: &mut Lve, op: &VectorOp) -> Result<OpStats> {
+    let mut st = OpStats::default();
+    match *op {
+        VectorOp::Splat { dst, n, value } => {
+            lve.sp.fill(dst, n, value)?;
+            st.cycles = write_cycles(n as u64);
+            st.bytes_written = n as u64;
+        }
+        VectorOp::Copy { dst, src, n } => {
+            let data = lve.sp.checked(src, n)?.to_vec();
+            lve.sp.checked_mut(dst, n)?.copy_from_slice(&data);
+            st.cycles = read_cycles(n as u64).max(write_cycles(n as u64));
+            st.bytes_read = n as u64;
+            st.bytes_written = n as u64;
+        }
+        VectorOp::CopyStrided { dst, ds, src, ss, n } => {
+            if n > 0 {
+                lve.sp.checked(src, (n - 1) * ss + 1)?;
+                lve.sp.checked_mut(dst, (n - 1) * ds + 1)?;
+            }
+            for i in 0..n {
+                let v = lve.sp.read_u8(src + i * ss);
+                lve.sp.write_u8(dst + i * ds, v);
+            }
+            // strided access defeats the 32b word width: 1 elem/cycle
+            // unless both sides are unit-stride (plain word copy).
+            st.cycles = if ds == 1 && ss == 1 {
+                read_cycles(n as u64).max(write_cycles(n as u64))
+            } else {
+                n as u64
+            };
+            st.bytes_read = n as u64;
+            st.bytes_written = n as u64;
+        }
+        VectorOp::QuantScalarI32 { src, dst, bias, shift } => {
+            let acc = lve.sp.read_i32(src);
+            let q = quant_scalar(acc, bias, shift) as u8;
+            lve.sp.write_u8(dst, q);
+            st.cycles = 6;
+            st.bytes_read = 4;
+            st.bytes_written = 1;
+        }
+        VectorOp::AddU8Sat { dst, a, b, n } => {
+            lve.sp.checked(a, n)?;
+            lve.sp.checked(b, n)?;
+            lve.sp.checked_mut(dst, n)?;
+            for i in 0..n {
+                let v = lve.sp.read_u8(a + i).saturating_add(lve.sp.read_u8(b + i));
+                lve.sp.write_u8(dst + i, v);
+            }
+            st.cycles = div_ceil(n as u64, COST.lanes_u8).max(read_cycles(2 * n as u64));
+            st.bytes_read = 2 * n as u64;
+            st.bytes_written = n as u64;
+        }
+        VectorOp::AddI16 { dst, a, b, n } => {
+            lve.sp.checked(a, 2 * n)?;
+            lve.sp.checked(b, 2 * n)?;
+            lve.sp.checked_mut(dst, 2 * n)?;
+            for i in 0..n {
+                let v = lve.sp.read_i16(a + 2 * i).wrapping_add(lve.sp.read_i16(b + 2 * i));
+                lve.sp.write_i16(dst + 2 * i, v);
+            }
+            st.cycles = div_ceil(n as u64, COST.lanes_i16).max(read_cycles(4 * n as u64));
+            st.bytes_read = 4 * n as u64;
+            st.bytes_written = 2 * n as u64;
+        }
+        VectorOp::MaxU8Strided { dst, ds, a, sa, b, sb, n } => {
+            if n > 0 {
+                lve.sp.checked(a, (n - 1) * sa + 1)?;
+                lve.sp.checked(b, (n - 1) * sb + 1)?;
+                lve.sp.checked_mut(dst, (n - 1) * ds + 1)?;
+            }
+            for i in 0..n {
+                let v = lve.sp.read_u8(a + i * sa).max(lve.sp.read_u8(b + i * sb));
+                lve.sp.write_u8(dst + i * ds, v);
+            }
+            st.cycles = n as u64; // strided: element-serial
+            st.bytes_read = 2 * n as u64;
+            st.bytes_written = n as u64;
+        }
+        VectorOp::WidenAccI16 { dst, src, n } => {
+            lve.sp.checked(src, 2 * n)?;
+            lve.sp.checked_mut(dst, 4 * n)?;
+            for i in 0..n {
+                let v = lve.sp.read_i32(dst + 4 * i).wrapping_add(lve.sp.read_i16(src + 2 * i) as i32);
+                lve.sp.write_i32(dst + 4 * i, v);
+            }
+            // quad unit: 4 i16 in per beat, but i32 RMW is write-port
+            // bound: n i32 writes -> n cycles
+            st.cycles = (n as u64).max(read_cycles(6 * n as u64));
+            st.bytes_read = 6 * n as u64;
+            st.bytes_written = 4 * n as u64;
+        }
+        VectorOp::ActQuant2D { src, dst, rows, row_len, src_stride, dst_stride, bias, shift } => {
+            for r in 0..rows {
+                lve.sp.checked(src + 4 * r * src_stride, 4 * row_len)?;
+                lve.sp.checked_mut(dst + r * dst_stride, row_len)?;
+                for i in 0..row_len {
+                    let acc = lve.sp.read_i32(src + 4 * (r * src_stride + i));
+                    let q = quant_scalar(acc, bias, shift) as u8;
+                    lve.sp.write_u8(dst + r * dst_stride + i, q);
+                }
+            }
+            let n = (rows * row_len) as u64;
+            // i32 reads dominate: n words / 2 read ports
+            st.cycles = div_ceil(n, 2).max(div_ceil(n, COST.lanes_i32));
+            st.bytes_read = 4 * n;
+            st.bytes_written = n;
+        }
+        VectorOp::Conv3x3Strip { strip, weights } => {
+            lve.conv.set_weights(weights);
+            let Lve { ref conv, ref mut sp, .. } = *lve;
+            let (cycles, br, bw, macs) = conv.conv_strip(sp, &strip);
+            st.cycles = cycles;
+            st.bytes_read = br;
+            st.bytes_written = bw;
+            st.macs = macs;
+        }
+        VectorOp::DotSel { dst, acts, wbits, n } => {
+            lve.sp.checked(acts, n)?;
+            lve.sp.checked(wbits, div_ceil(n as u64, 8) as usize)?;
+            lve.sp.checked_mut(dst, 4)?;
+            let mut acc: i32 = 0;
+            for k in 0..n {
+                let w = lve.sp.read_u8(wbits + k / 8);
+                let sign = if (w >> (k % 8)) & 1 == 1 { 1 } else { -1 };
+                acc = acc.wrapping_add(lve.sp.read_u8(acts + k) as i32 * sign);
+            }
+            lve.sp.write_i32(dst, acc);
+            st.cycles = COST.dotsel_per_elem * n as u64 + 2;
+            st.bytes_read = n as u64 + div_ceil(n as u64, 8);
+            st.bytes_written = 4;
+            st.macs = n as u64;
+        }
+        VectorOp::AddScalarI32 { addr, value } => {
+            let v = lve.sp.read_i32(addr).wrapping_add(value);
+            lve.sp.write_i32(addr, v);
+            st.cycles = 4;
+            st.bytes_read = 4;
+            st.bytes_written = 4;
+        }
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lve() -> Lve {
+        Lve::new()
+    }
+
+    #[test]
+    fn splat_and_copy() {
+        let mut l = lve();
+        l.execute(&VectorOp::Splat { dst: 0, n: 8, value: 7 }).unwrap();
+        l.execute(&VectorOp::Copy { dst: 16, src: 0, n: 8 }).unwrap();
+        assert_eq!(l.sp.read_bytes(16, 8), &[7; 8]);
+    }
+
+    #[test]
+    fn copy_strided_gather_and_scatter() {
+        let mut l = lve();
+        l.sp.write_bytes(0, &[1, 0, 0, 2, 0, 0, 3, 0, 0]);
+        l.execute(&VectorOp::CopyStrided { dst: 64, ds: 1, src: 0, ss: 3, n: 3 }).unwrap();
+        assert_eq!(l.sp.read_bytes(64, 3), &[1, 2, 3]);
+        l.execute(&VectorOp::CopyStrided { dst: 80, ds: 2, src: 64, ss: 1, n: 3 }).unwrap();
+        assert_eq!(l.sp.read_bytes(80, 5), &[1, 0, 2, 0, 3]);
+    }
+
+    #[test]
+    fn quant_scalar_op() {
+        let mut l = lve();
+        l.sp.write_i32(0, 1000);
+        l.execute(&VectorOp::QuantScalarI32 { src: 0, dst: 8, bias: 24, shift: 2 }).unwrap();
+        assert_eq!(l.sp.read_u8(8), 255); // 1024>>2 = 256 -> clamp
+        l.sp.write_i32(0, -5);
+        l.execute(&VectorOp::QuantScalarI32 { src: 0, dst: 9, bias: 0, shift: 0 }).unwrap();
+        assert_eq!(l.sp.read_u8(9), 0);
+    }
+
+    #[test]
+    fn add_i16_wraps() {
+        let mut l = lve();
+        l.sp.write_i16(0, i16::MAX);
+        l.sp.write_i16(8, 1);
+        l.execute(&VectorOp::AddI16 { dst: 16, a: 0, b: 8, n: 1 }).unwrap();
+        assert_eq!(l.sp.read_i16(16), i16::MIN);
+    }
+
+    #[test]
+    fn max_strided_pooling_shape() {
+        let mut l = lve();
+        l.sp.write_bytes(0, &[1, 9, 3, 7, 5, 5]);
+        // horizontal pool: max of pairs
+        l.execute(&VectorOp::MaxU8Strided { dst: 32, ds: 1, a: 0, sa: 2, b: 1, sb: 2, n: 3 })
+            .unwrap();
+        assert_eq!(l.sp.read_bytes(32, 3), &[9, 7, 5]);
+    }
+
+    #[test]
+    fn widen_acc_adds_into_i32() {
+        let mut l = lve();
+        l.sp.write_i16(0, -100);
+        l.sp.write_i16(2, 200);
+        l.sp.write_i32(64, 1000);
+        l.sp.write_i32(68, 1000);
+        l.execute(&VectorOp::WidenAccI16 { dst: 64, src: 0, n: 2 }).unwrap();
+        assert_eq!(l.sp.read_i32(64), 900);
+        assert_eq!(l.sp.read_i32(68), 1200);
+    }
+
+    #[test]
+    fn act_quant_2d_with_strides() {
+        let mut l = lve();
+        // 2 rows x 2 cols of i32 accs, src_stride 3 elems
+        for (i, v) in [300i32, 600, 0, 1200, -50, 0].iter().enumerate() {
+            l.sp.write_i32(4 * i, *v);
+        }
+        l.execute(&VectorOp::ActQuant2D {
+            src: 0,
+            dst: 100,
+            rows: 2,
+            row_len: 2,
+            src_stride: 3,
+            dst_stride: 5,
+            bias: 0,
+            shift: 2,
+        })
+        .unwrap();
+        assert_eq!(l.sp.read_u8(100), 75); // 300>>2
+        assert_eq!(l.sp.read_u8(101), 150);
+        assert_eq!(l.sp.read_u8(105), 255); // 1200>>2=300 clamps
+        assert_eq!(l.sp.read_u8(106), 0); // negative clamps
+    }
+
+    #[test]
+    fn dotsel_signs() {
+        let mut l = lve();
+        l.sp.write_bytes(0, &[10, 20, 30]);
+        l.sp.write_u8(64, 0b101); // +, -, +
+        l.execute(&VectorOp::DotSel { dst: 128, acts: 0, wbits: 64, n: 3 }).unwrap();
+        assert_eq!(l.sp.read_i32(128), 10 - 20 + 30);
+    }
+
+    #[test]
+    fn dotsel_cycle_cost_is_3_per_elem() {
+        let mut l = lve();
+        let c = l
+            .execute(&VectorOp::DotSel { dst: 128, acts: 0, wbits: 64, n: 100 })
+            .unwrap();
+        assert_eq!(c, 302);
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let mut l = lve();
+        let r = l.execute(&VectorOp::Copy { dst: 0, src: 128 * 1024 - 4, n: 8 });
+        assert!(r.is_err());
+    }
+}

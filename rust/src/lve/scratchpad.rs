@@ -1,0 +1,125 @@
+//! The 128 kB single-ported scratchpad (4 x 32 kB SPRAM blocks), clocked
+//! at 72 MHz to provide 2 reads + 1 write per 24 MHz CPU cycle.
+
+use crate::util::TinError;
+use crate::Result;
+
+/// Byte-addressable scratchpad with typed little-endian accessors.
+pub struct Scratchpad {
+    mem: Vec<u8>,
+}
+
+impl Scratchpad {
+    pub fn new(size: usize) -> Self {
+        Scratchpad { mem: vec![0; size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    #[inline]
+    fn check(&self, addr: usize, len: usize) -> Result<()> {
+        if addr + len > self.mem.len() {
+            return Err(TinError::Sim(format!(
+                "scratchpad access {addr:#x}+{len} out of {:#x}",
+                self.mem.len()
+            )));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    pub fn read_u8(&self, addr: usize) -> u8 {
+        self.mem[addr]
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, addr: usize, v: u8) {
+        self.mem[addr] = v;
+    }
+
+    #[inline]
+    pub fn read_i16(&self, addr: usize) -> i16 {
+        i16::from_le_bytes([self.mem[addr], self.mem[addr + 1]])
+    }
+
+    #[inline]
+    pub fn write_i16(&mut self, addr: usize, v: i16) {
+        self.mem[addr..addr + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn read_i32(&self, addr: usize) -> i32 {
+        i32::from_le_bytes(self.mem[addr..addr + 4].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn write_i32(&mut self, addr: usize, v: i32) {
+        self.mem[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn read_u32(&self, addr: usize) -> u32 {
+        u32::from_le_bytes(self.mem[addr..addr + 4].try_into().unwrap())
+    }
+
+    pub fn write_bytes(&mut self, addr: usize, bytes: &[u8]) {
+        self.mem[addr..addr + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn read_bytes(&self, addr: usize, len: usize) -> &[u8] {
+        &self.mem[addr..addr + len]
+    }
+
+    /// Bounds-checked slice access for op implementations.
+    pub fn checked(&self, addr: usize, len: usize) -> Result<&[u8]> {
+        self.check(addr, len)?;
+        Ok(&self.mem[addr..addr + len])
+    }
+
+    pub fn checked_mut(&mut self, addr: usize, len: usize) -> Result<&mut [u8]> {
+        self.check(addr, len)?;
+        Ok(&mut self.mem[addr..addr + len])
+    }
+
+    pub fn fill(&mut self, addr: usize, len: usize, v: u8) -> Result<()> {
+        self.check(addr, len)?;
+        self.mem[addr..addr + len].fill(v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_roundtrips() {
+        let mut sp = Scratchpad::new(64);
+        sp.write_i16(0, -1234);
+        assert_eq!(sp.read_i16(0), -1234);
+        sp.write_i32(4, -7_000_000);
+        assert_eq!(sp.read_i32(4), -7_000_000);
+        sp.write_u8(9, 200);
+        assert_eq!(sp.read_u8(9), 200);
+    }
+
+    #[test]
+    fn checked_rejects_oob() {
+        let sp = Scratchpad::new(16);
+        assert!(sp.checked(12, 8).is_err());
+        assert!(sp.checked(0, 16).is_ok());
+    }
+
+    #[test]
+    fn fill_works() {
+        let mut sp = Scratchpad::new(8);
+        sp.fill(2, 4, 9).unwrap();
+        assert_eq!(sp.read_bytes(0, 8), &[0, 0, 9, 9, 9, 9, 0, 0]);
+    }
+}

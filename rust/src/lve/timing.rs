@@ -1,0 +1,89 @@
+//! LVE cycle-cost model.
+//!
+//! Port budget (paper §I): the 128 kB single-ported RAM runs at 72 MHz
+//! against the 24 MHz CPU — 3 RAM accesses per CPU cycle, arranged as
+//! **2 reads + 1 write** of 32 bits. Every vector op's body cost is
+//! derived from the bytes it must move through those ports plus its
+//! datapath width; the constants live here so the timing model is
+//! auditable in one place (DESIGN.md §Cycle-model).
+
+/// Scratchpad port budget per CPU cycle.
+#[derive(Clone, Copy, Debug)]
+pub struct PortBudget {
+    /// 32-bit read slots per CPU cycle.
+    pub reads: u64,
+    /// 32-bit write slots per CPU cycle.
+    pub writes: u64,
+}
+
+/// Fixed cost constants.
+#[derive(Clone, Copy, Debug)]
+pub struct Costs {
+    pub ports: PortBudget,
+    /// Scalar-core cycles to issue one vector op (set VL + 3 pointers +
+    /// dispatch — the "no loop overhead" price paid once per op).
+    pub issue: u64,
+    /// Pipeline fill for the conv unit per pass.
+    pub conv_fill: u64,
+    /// Elements per cycle for 8b lane-parallel ops (32b ALU = 4 lanes).
+    pub lanes_u8: u64,
+    /// Elements per cycle for 16b ops (2 lanes).
+    pub lanes_i16: u64,
+    /// Elements per cycle for 32b ops.
+    pub lanes_i32: u64,
+    /// Cycles per element for the select-negate-accumulate dense path
+    /// (plain LVE, no custom SIMD: expand weight bit, negate, add —
+    /// the paper's dense layers only gain 8x over scalar).
+    pub dotsel_per_elem: u64,
+}
+
+/// The model used everywhere. Changing a constant here changes E3/E4/E5
+/// in one place.
+pub const COST: Costs = Costs {
+    ports: PortBudget { reads: 2, writes: 1 },
+    issue: 8,
+    conv_fill: 4,
+    lanes_u8: 4,
+    lanes_i16: 2,
+    lanes_i32: 1,
+    dotsel_per_elem: 3,
+};
+
+/// Cycles needed to read `bytes` through the read ports.
+#[inline]
+pub fn read_cycles(bytes: u64) -> u64 {
+    div_ceil(div_ceil(bytes, 4), COST.ports.reads)
+}
+
+/// Cycles needed to write `bytes` through the write port.
+#[inline]
+pub fn write_cycles(bytes: u64) -> u64 {
+    div_ceil(div_ceil(bytes, 4), COST.ports.writes)
+}
+
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn port_math() {
+        // 8 bytes = 2 words = 1 cycle through 2 read ports
+        assert_eq!(read_cycles(8), 1);
+        assert_eq!(read_cycles(12), 2);
+        // write port is single
+        assert_eq!(write_cycles(8), 2);
+        assert_eq!(write_cycles(1), 1);
+        assert_eq!(read_cycles(0), 0);
+    }
+
+    #[test]
+    fn budget_is_two_reads_one_write() {
+        assert_eq!(COST.ports.reads, 2);
+        assert_eq!(COST.ports.writes, 1);
+    }
+}

@@ -1,0 +1,270 @@
+//! `tinbinn` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   report    regenerate the paper's tables/figures (E1..E10)
+//!   sim       run one overlay inference with a per-layer cycle table
+//!   eval      classify a .tbd dataset on a chosen backend
+//!   serve     threaded serving demo with dynamic batching (PJRT)
+//!   desktop   E7 desktop-baseline timing via PJRT
+//!
+//! (CLI arg parsing is hand-rolled: the offline build has no clap.)
+
+use std::path::PathBuf;
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::coordinator::backend::{Backend, OverlayBackend, PjrtBackend};
+use tinbinn::coordinator::batcher::BatchPolicy;
+use tinbinn::coordinator::pipeline::{serve_threaded, Frame};
+use tinbinn::data::tbd::load_tbd;
+use tinbinn::nn::layers::classify;
+use tinbinn::report::bench;
+use tinbinn::report::tables;
+use tinbinn::runtime::{artifacts_dir, ModelRuntime};
+use tinbinn::soc::Board;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tinbinn <command> [options]\n\
+         \n\
+         commands:\n\
+           report [--all|--ops|--accuracy|--timing|--speedup|--resources|--power|--fig4|--train]\n\
+                  [--limit N]            accuracy sample size (default 200)\n\
+           sim     [--task 10cat|1cat]   one overlay inference + layer table\n\
+           eval    [--task T] [--backend overlay|golden|pjrt] [--limit N]\n\
+           serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
+           desktop [--task T] [--iters N]  E7 PJRT timing\n\
+         \n\
+         env: TINBINN_ARTIFACTS overrides the artifacts directory"
+    );
+    std::process::exit(2);
+}
+
+/// Tiny flag parser: --key value / --key.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { rest: std::env::args().skip(1).collect() }
+    }
+
+    fn command(&mut self) -> Option<String> {
+        if self.rest.is_empty() {
+            None
+        } else {
+            Some(self.rest.remove(0))
+        }
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            self.rest.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn opt(&mut self, name: &str) -> Option<String> {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            if i + 1 < self.rest.len() {
+                let v = self.rest.remove(i + 1);
+                self.rest.remove(i);
+                return Some(v);
+            }
+            self.rest.remove(i);
+        }
+        None
+    }
+
+    fn opt_usize(&mut self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn ncat_for(task: &str) -> usize {
+    if task == "10cat" {
+        10
+    } else {
+        1
+    }
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> tinbinn::Result<()> {
+    let mut args = Args::new();
+    let cmd = args.command().unwrap_or_else(|| usage());
+    let dir: PathBuf = artifacts_dir();
+
+    match cmd.as_str() {
+        "report" => {
+            let limit = args.opt_usize("--limit", 200);
+            let all = args.flag("--all") || args.rest.is_empty();
+            if all || args.flag("--ops") {
+                print!("{}", tables::report_ops());
+            }
+            if all || args.flag("--accuracy") {
+                print!("{}", tables::report_accuracy(&dir, limit)?);
+            }
+            if all || args.flag("--timing") {
+                print!("{}", tables::report_timing(&dir)?);
+            }
+            if all || args.flag("--speedup") {
+                print!("{}", tables::report_speedup(&dir)?);
+            }
+            if all || args.flag("--resources") {
+                print!("{}", tables::report_resources());
+            }
+            if all || args.flag("--power") {
+                print!("{}", tables::report_power(&dir)?);
+            }
+            if all || args.flag("--fig4") {
+                print!("{}", tables::report_fig4(&dir)?);
+            }
+            if all || args.flag("--train") {
+                print!("{}", tables::report_train(&dir)?);
+            }
+        }
+        "sim" => {
+            let task = args.opt("--task").unwrap_or_else(|| "10cat".into());
+            let np = tables::load_task(&dir, &task)?;
+            let compiled = compile(&np, InputMode::Direct)?;
+            let mut board = Board::new(&compiled);
+            let img = vec![128u8; 3072];
+            let (scores, r) = board.infer(&compiled, &img)?;
+            println!(
+                "{task}: {:.1} ms simulated @24 MHz ({} cycles, {:.2} MAC/cyc)",
+                r.ms(),
+                r.total_cycles,
+                r.macs_per_cycle()
+            );
+            for l in &r.per_layer {
+                if l.cycles > 0 {
+                    println!(
+                        "  {:10} {:>10} cyc {:>7.1} ms  {:>11} MACs  {:>6} vops  dma-stall {}",
+                        l.name,
+                        l.cycles,
+                        tinbinn::soc::cycles_to_ms(l.cycles),
+                        l.macs,
+                        l.vector_ops,
+                        l.dma_stall_cycles
+                    );
+                }
+            }
+            println!("scores: {scores:?}");
+        }
+        "eval" => {
+            let task = args.opt("--task").unwrap_or_else(|| "1cat".into());
+            let backend_name = args.opt("--backend").unwrap_or_else(|| "golden".into());
+            let limit = args.opt_usize("--limit", 200);
+            let np = tables::load_task(&dir, &task)?;
+            let ds = load_tbd(dir.join(format!("data_{task}_test.tbd")))?;
+            let n = ds.len().min(limit);
+            let t0 = std::time::Instant::now();
+            let mut correct = 0usize;
+            match backend_name.as_str() {
+                "golden" => {
+                    for i in 0..n {
+                        let s = tinbinn::nn::layers::forward(&np, ds.image(i))?;
+                        correct += (classify(&s) == ds.labels[i] as usize) as usize;
+                    }
+                }
+                "overlay" => {
+                    let compiled = compile(&np, InputMode::Direct)?;
+                    let mut be = OverlayBackend::new(compiled);
+                    for i in 0..n {
+                        let s = be.infer_batch(&[ds.image(i)])?;
+                        correct += (classify(&s[0]) == ds.labels[i] as usize) as usize;
+                    }
+                    println!(
+                        "simulated on-device time: {:.1} ms/frame",
+                        tinbinn::soc::cycles_to_ms(be.sim_cycles) / n as f64
+                    );
+                }
+                "pjrt" => {
+                    let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
+                    for i in 0..n {
+                        let s = rt.infer_one(ds.image(i))?;
+                        correct += (classify(&s) == ds.labels[i] as usize) as usize;
+                    }
+                }
+                other => {
+                    eprintln!("unknown backend {other}");
+                    usage();
+                }
+            }
+            println!(
+                "{task} on {backend_name}: {}/{} correct = {:.2}% error  ({:.1} ms wall total)",
+                correct,
+                n,
+                100.0 * (1.0 - correct as f64 / n as f64),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+        "serve" => {
+            let task = args.opt("--task").unwrap_or_else(|| "1cat".into());
+            let n = args.opt_usize("--frames", 256);
+            let batch = args.opt_usize("--batch", 8);
+            let wait = args.opt_usize("--wait-us", 2000) as u64;
+            let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
+            let ds = load_tbd(dir.join(format!("data_{task}_test.tbd")))?;
+            let frames: Vec<Frame> = (0..n)
+                .map(|i| Frame {
+                    id: i as u64,
+                    image: ds.image(i % ds.len()).to_vec(),
+                    label: Some(ds.labels[i % ds.len()]),
+                })
+                .collect();
+            let policy = BatchPolicy { max_batch: batch, max_wait_us: wait, queue_cap: 64 };
+            let (report, be) = serve_threaded(frames, PjrtBackend { rt }, policy)?;
+            let lat = report.latency.unwrap_or_default();
+            println!(
+                "served {} frames on {}: {:.0} fps, mean batch {:.2}, latency mean {:.0}us p50 {}us p99 {}us, rejected {}",
+                report.completed,
+                be.name(),
+                report.throughput_per_s,
+                report.mean_batch,
+                lat.mean_us,
+                lat.p50_us,
+                lat.p99_us,
+                report.rejected
+            );
+        }
+        "desktop" => {
+            let task = args.opt("--task").unwrap_or_else(|| "10cat".into());
+            let iters = args.opt_usize("--iters", 20) as u32;
+            let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
+            let img = vec![128u8; 3072];
+            let paper = if task == "10cat" { 6.4 } else { 2.0 };
+            let r = bench::run(&format!("pjrt_{task}_b1"), 3, iters, || {
+                rt.infer_one(&img).unwrap();
+            });
+            println!(
+                "E7 {task}: {:.2} ms/frame on PJRT-CPU (paper i7/Lasagne: {paper} ms)",
+                r.mean_ms()
+            );
+            for b in tinbinn::runtime::BATCHES {
+                let imgs: Vec<Vec<u8>> = (0..b).map(|_| img.clone()).collect();
+                let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+                let rb = bench::bench(&format!("pjrt_{task}_b{b}"), 2, iters, || {
+                    rt.infer_batch(&refs).unwrap();
+                });
+                println!(
+                    "   batch {b}: {:.2} ms/batch = {:.2} ms/frame ({:.0} fps)",
+                    rb.mean_ms(),
+                    rb.mean_ms() / b as f64,
+                    1000.0 / (rb.mean_ms() / b as f64)
+                );
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

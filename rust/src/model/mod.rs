@@ -1,0 +1,7 @@
+//! S6: network IR, the paper's model zoo, and the TBW1 weight container.
+
+pub mod weights;
+pub mod zoo;
+
+pub use weights::{load_tbw, save_tbw, LayerParams, NetParams};
+pub use zoo::{binaryconnect_orig, reduced_10cat, tiny_1cat, Layer, Net};

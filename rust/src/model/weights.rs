@@ -1,0 +1,291 @@
+//! TBW1 weight container — the on-flash format shared bit-for-bit with
+//! python/compile/model.py::save_tbw.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic 'TBW1', u16 h, u16 w, u16 c, u16 n_layers
+//! per layer:
+//!   u8 kind (0 conv3x3, 1 maxpool2, 2 dense, 3 svm)
+//!   conv3x3:   u16 cin, u16 cout, u8 shift, i32 bias[cout],
+//!              u32 words[cout * ceil(9*cin/32)]
+//!   maxpool2:  (no payload)
+//!   dense/svm: u16 nin, u16 nout, u8 shift, i32 bias[nout],
+//!              u32 words[nout * ceil(nin/32)]
+//! ```
+//! Weight bit packing: for output channel n, bit j of word i is weight
+//! index k = i*32 + j (LSB-first); bit 1 -> +1, bit 0 -> -1. Conv k
+//! ordering is (ky*3 + kx)*cin + c; dense k is the HWC-flattened feature.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::zoo::{Layer, Net};
+use crate::util::TinError;
+use crate::Result;
+
+/// Parameters for one weighted layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerParams {
+    /// GEMM K (9*cin for conv, flattened features for dense/svm).
+    pub k_in: usize,
+    /// Output channels / neurons.
+    pub n_out: usize,
+    /// Bit-packed weights, row-major [n_out][ceil(k_in/32)].
+    pub words: Vec<u32>,
+    /// Per-channel i32 bias.
+    pub bias: Vec<i32>,
+    /// Per-layer requant right shift (0 on the SVM head).
+    pub shift: u8,
+}
+
+impl LayerParams {
+    /// Words per output row.
+    pub fn kw(&self) -> usize {
+        (self.k_in + 31) / 32
+    }
+
+    /// Weight for (row n, index k): +1 or -1.
+    #[inline]
+    pub fn weight(&self, n: usize, k: usize) -> i32 {
+        let word = self.words[n * self.kw() + k / 32];
+        if (word >> (k % 32)) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Packed row slice for output channel n.
+    pub fn row_words(&self, n: usize) -> &[u32] {
+        let kw = self.kw();
+        &self.words[n * kw..(n + 1) * kw]
+    }
+}
+
+/// A network together with its trained fixed-point parameters.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetParams {
+    pub net: Net,
+    /// One entry per weighted layer, in layer order.
+    pub params: Vec<LayerParams>,
+}
+
+impl NetParams {
+    /// Total 1-bit weight payload in bytes (flash footprint, E6/§II).
+    pub fn weight_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.words.len() * 4).sum()
+    }
+}
+
+fn rd_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn rd_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Load a TBW1 container.
+pub fn load_tbw(path: impl AsRef<Path>, name: &str) -> Result<NetParams> {
+    let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+        TinError::Io(format!("open {}: {e}", path.as_ref().display()))
+    })?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"TBW1" {
+        return Err(TinError::Format("bad TBW1 magic".into()));
+    }
+    let h = rd_u16(&mut f)? as usize;
+    let w = rd_u16(&mut f)? as usize;
+    let c = rd_u16(&mut f)? as usize;
+    let n_layers = rd_u16(&mut f)? as usize;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut params = Vec::new();
+    for _ in 0..n_layers {
+        let kind = rd_u8(&mut f)?;
+        if kind == 1 {
+            layers.push(Layer::MaxPool2);
+            continue;
+        }
+        let a = rd_u16(&mut f)? as usize;
+        let b = rd_u16(&mut f)? as usize;
+        let shift = rd_u8(&mut f)?;
+        let mut bias_raw = vec![0u8; 4 * b];
+        f.read_exact(&mut bias_raw)?;
+        let bias: Vec<i32> = bias_raw
+            .chunks_exact(4)
+            .map(|x| i32::from_le_bytes(x.try_into().unwrap()))
+            .collect();
+        let k_in = if kind == 0 { 9 * a } else { a };
+        let kw = (k_in + 31) / 32;
+        let mut words_raw = vec![0u8; 4 * b * kw];
+        f.read_exact(&mut words_raw)?;
+        let words: Vec<u32> = words_raw
+            .chunks_exact(4)
+            .map(|x| u32::from_le_bytes(x.try_into().unwrap()))
+            .collect();
+        layers.push(match kind {
+            0 => Layer::Conv3x3 { cout: b },
+            2 => Layer::Dense { nout: b },
+            3 => Layer::Svm { nout: b },
+            _ => return Err(TinError::Format(format!("unknown layer kind {kind}"))),
+        });
+        params.push(LayerParams { k_in, n_out: b, words, bias, shift });
+    }
+
+    Ok(NetParams {
+        net: Net { name: name.into(), input_hwc: (h, w, c), layers },
+        params,
+    })
+}
+
+/// Write a TBW1 container (round-trip support + synthetic-net tests).
+pub fn save_tbw(path: impl AsRef<Path>, np: &NetParams) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"TBW1");
+    let (h, w, c) = np.net.input_hwc;
+    for v in [h as u16, w as u16, c as u16, np.net.layers.len() as u16] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut wi = 0usize;
+    let (mut fh, mut fw, mut cin) = np.net.input_hwc;
+    for ly in &np.net.layers {
+        match *ly {
+            Layer::Conv3x3 { cout } => {
+                let p = &np.params[wi];
+                out.push(0);
+                out.extend_from_slice(&(cin as u16).to_le_bytes());
+                out.extend_from_slice(&(cout as u16).to_le_bytes());
+                out.push(p.shift);
+                for b in &p.bias {
+                    out.extend_from_slice(&b.to_le_bytes());
+                }
+                for wd in &p.words {
+                    out.extend_from_slice(&wd.to_le_bytes());
+                }
+                cin = cout;
+                wi += 1;
+            }
+            Layer::MaxPool2 => {
+                out.push(1);
+                fh /= 2;
+                fw /= 2;
+            }
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                let p = &np.params[wi];
+                out.push(if matches!(ly, Layer::Dense { .. }) { 2 } else { 3 });
+                out.extend_from_slice(&((fh * fw * cin) as u16).to_le_bytes());
+                out.extend_from_slice(&(nout as u16).to_le_bytes());
+                out.push(if matches!(ly, Layer::Svm { .. }) { 0 } else { p.shift });
+                for b in &p.bias {
+                    out.extend_from_slice(&b.to_le_bytes());
+                }
+                for wd in &p.words {
+                    out.extend_from_slice(&wd.to_le_bytes());
+                }
+                fh = 1;
+                fw = 1;
+                cin = nout;
+                wi += 1;
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+/// Build random parameters for a net — deterministic, for tests/benches
+/// that don't need trained artifacts.
+pub fn random_params(net: &Net, seed: u64) -> NetParams {
+    use crate::util::Rng64;
+    let mut rng = Rng64::new(seed);
+    let geom = net.weighted_geometry();
+    let mut params = Vec::new();
+    let mut gi = 0;
+    for ly in &net.layers {
+        let (k_in, n_out) = match *ly {
+            Layer::Conv3x3 { cout } => {
+                let (_, _, c) = geom[gi];
+                gi += 1;
+                (9 * c, cout)
+            }
+            Layer::MaxPool2 => continue,
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                let (h, w, c) = geom[gi];
+                gi += 1;
+                (h * w * c, nout)
+            }
+        };
+        let kw = (k_in + 31) / 32;
+        let words: Vec<u32> = (0..n_out * kw).map(|_| rng.next_u32()).collect();
+        let bias: Vec<i32> = (0..n_out).map(|_| (rng.below(512) as i32) - 256).collect();
+        let shift = if matches!(ly, Layer::Svm { .. }) {
+            0
+        } else {
+            // keep activations in u8 range for random nets: log2(K*255/255)
+            (64 - (k_in as u64).leading_zeros()) as u8
+        };
+        params.push(LayerParams { k_in, n_out, words, bias, shift });
+    }
+    NetParams { net: net.clone(), params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::tiny_1cat;
+
+    #[test]
+    fn roundtrip_random_net() {
+        let np = random_params(&tiny_1cat(), 42);
+        let dir = std::env::temp_dir().join("tinbinn_tbw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.tbw");
+        save_tbw(&path, &np).unwrap();
+        let back = load_tbw(&path, "1cat").unwrap();
+        assert_eq!(back.net.layers, np.net.layers);
+        assert_eq!(back.params, np.params);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("tinbinn_tbw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tbw");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(load_tbw(&path, "x").is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn weight_accessor_sign() {
+        let p = LayerParams {
+            k_in: 33,
+            n_out: 1,
+            words: vec![0b101, 0b1],
+            bias: vec![0],
+            shift: 0,
+        };
+        assert_eq!(p.weight(0, 0), 1);
+        assert_eq!(p.weight(0, 1), -1);
+        assert_eq!(p.weight(0, 2), 1);
+        assert_eq!(p.weight(0, 32), 1);
+        assert_eq!(p.weight(0, 31), -1);
+    }
+
+    #[test]
+    fn weight_bytes_counts_payload() {
+        let np = random_params(&tiny_1cat(), 1);
+        // matches zoo weight_bits / 8 rounded up to words
+        let bits = np.net.weight_bits();
+        let bytes = np.weight_bytes() as u64;
+        assert!(bytes * 8 >= bits && bytes * 8 < bits + 32 * 8 * np.params.len() as u64 * 64);
+    }
+}

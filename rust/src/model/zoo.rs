@@ -1,0 +1,238 @@
+//! The paper's three networks and op-count analysis (experiment E1).
+
+/// One layer of the binarized CNN IR. Mirrors python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    /// 3x3 'same' binarized convolution + bias + requant-to-u8.
+    Conv3x3 { cout: usize },
+    /// 2x2 stride-2 max pooling.
+    MaxPool2,
+    /// Fully connected binarized layer + bias + requant-to-u8.
+    Dense { nout: usize },
+    /// L2-SVM head: binarized matmul + bias, raw i32 scores.
+    Svm { nout: usize },
+}
+
+/// A network: input geometry + layer stack.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Net {
+    pub name: String,
+    pub input_hwc: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl Net {
+    /// Multiply-accumulate count for one inference (E1's metric).
+    pub fn op_count(&self) -> u64 {
+        let (mut h, mut w, mut c) = self.input_hwc;
+        let mut macs: u64 = 0;
+        for ly in &self.layers {
+            match *ly {
+                Layer::Conv3x3 { cout } => {
+                    macs += (h * w * cout * 9 * c) as u64;
+                    c = cout;
+                }
+                Layer::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Dense { nout } | Layer::Svm { nout } => {
+                    macs += (h * w * c * nout) as u64;
+                    h = 1;
+                    w = 1;
+                    c = nout;
+                }
+            }
+        }
+        macs
+    }
+
+    /// 1-bit weight payload in bits (flash budget check, paper: ~270 kB
+    /// image for the 10-cat net including padding/params).
+    pub fn weight_bits(&self) -> u64 {
+        let (mut h, mut w, mut c) = self.input_hwc;
+        let mut bits: u64 = 0;
+        for ly in &self.layers {
+            match *ly {
+                Layer::Conv3x3 { cout } => {
+                    bits += (9 * c * cout) as u64;
+                    c = cout;
+                }
+                Layer::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Dense { nout } | Layer::Svm { nout } => {
+                    bits += (h * w * c * nout) as u64;
+                    h = 1;
+                    w = 1;
+                    c = nout;
+                }
+            }
+        }
+        bits
+    }
+
+    /// Number of weighted (conv/dense/svm) layers.
+    pub fn n_weighted(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| !matches!(l, Layer::MaxPool2))
+            .count()
+    }
+
+    /// Output category count (SVM head width).
+    pub fn n_categories(&self) -> usize {
+        match self.layers.last() {
+            Some(Layer::Svm { nout }) => *nout,
+            _ => panic!("network must end in an Svm head"),
+        }
+    }
+
+    /// Feature-map geometry entering each weighted layer, in order.
+    pub fn weighted_geometry(&self) -> Vec<(usize, usize, usize)> {
+        let (mut h, mut w, mut c) = self.input_hwc;
+        let mut out = Vec::new();
+        for ly in &self.layers {
+            match *ly {
+                Layer::Conv3x3 { cout } => {
+                    out.push((h, w, c));
+                    c = cout;
+                }
+                Layer::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Dense { nout } | Layer::Svm { nout } => {
+                    out.push((h, w, c));
+                    h = 1;
+                    w = 1;
+                    c = nout;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Original BinaryConnect CIFAR-10 topology (Courbariaux et al. 2015):
+/// (2x128C3)-MP2-(2x256C3)-MP2-(2x512C3)-MP2-(2x1024FC)-10SVM.
+pub fn binaryconnect_orig() -> Net {
+    Net {
+        name: "binaryconnect".into(),
+        input_hwc: (32, 32, 3),
+        layers: vec![
+            Layer::Conv3x3 { cout: 128 },
+            Layer::Conv3x3 { cout: 128 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 256 },
+            Layer::Conv3x3 { cout: 256 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 512 },
+            Layer::Conv3x3 { cout: 512 },
+            Layer::MaxPool2,
+            Layer::Dense { nout: 1024 },
+            Layer::Dense { nout: 1024 },
+            Layer::Svm { nout: 10 },
+        ],
+    }
+}
+
+/// The paper's reduced 10-category net (Fig. 3, 89% fewer ops):
+/// (2x48C3)-MP2-(2x96C3)-MP2-(2x128C3)-MP2-(2x256FC)-10SVM.
+pub fn reduced_10cat() -> Net {
+    Net {
+        name: "10cat".into(),
+        input_hwc: (32, 32, 3),
+        layers: vec![
+            Layer::Conv3x3 { cout: 48 },
+            Layer::Conv3x3 { cout: 48 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 96 },
+            Layer::Conv3x3 { cout: 96 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 128 },
+            Layer::Conv3x3 { cout: 128 },
+            Layer::MaxPool2,
+            Layer::Dense { nout: 256 },
+            Layer::Dense { nout: 256 },
+            Layer::Svm { nout: 10 },
+        ],
+    }
+}
+
+/// The further-reduced 1-category detector. The paper does not publish
+/// its exact shape; this lands at ~8x fewer ops than the 10-cat net
+/// (paper's runtime ratio 1315/195 = 6.7x). See DESIGN.md.
+pub fn tiny_1cat() -> Net {
+    Net {
+        name: "1cat".into(),
+        input_hwc: (32, 32, 3),
+        layers: vec![
+            Layer::Conv3x3 { cout: 16 },
+            Layer::Conv3x3 { cout: 16 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 32 },
+            Layer::Conv3x3 { cout: 32 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 48 },
+            Layer::Conv3x3 { cout: 48 },
+            Layer::MaxPool2,
+            Layer::Dense { nout: 64 },
+            Layer::Svm { nout: 1 },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_reduction_89pct() {
+        // Paper SI: "89% fewer operations than the BinaryConnect reproduction"
+        let orig = binaryconnect_orig().op_count();
+        let red = reduced_10cat().op_count();
+        let reduction = 1.0 - red as f64 / orig as f64;
+        assert!(
+            (0.85..=0.93).contains(&reduction),
+            "reduction = {reduction:.3}"
+        );
+    }
+
+    #[test]
+    fn tiny_net_ratio_matches_runtime_ratio() {
+        // 1315 ms / 195 ms = 6.7x; our tiny net is ~8x fewer MACs.
+        let r = reduced_10cat().op_count() as f64 / tiny_1cat().op_count() as f64;
+        assert!((5.0..=12.0).contains(&r), "ratio = {r:.2}");
+    }
+
+    #[test]
+    fn reduced_fc_input_is_2048() {
+        // Fig. 3: 4x4x128 = 2048 into the first FC layer.
+        let geom = reduced_10cat().weighted_geometry();
+        let (h, w, c) = geom[6];
+        assert_eq!(h * w * c, 2048);
+    }
+
+    #[test]
+    fn weight_payload_under_flash_budget() {
+        // SPI flash stores "about 270 kB" of binary weights.
+        let kb = reduced_10cat().weight_bits() as f64 / 8.0 / 1024.0;
+        assert!((100.0..=270.0).contains(&kb), "{kb:.1} kB");
+    }
+
+    #[test]
+    fn categories() {
+        assert_eq!(reduced_10cat().n_categories(), 10);
+        assert_eq!(tiny_1cat().n_categories(), 1);
+    }
+
+    #[test]
+    fn op_count_anchors() {
+        // Hand-computed anchors so zoo edits that silently change E1
+        // fail loudly.
+        assert_eq!(binaryconnect_orig().op_count(), 616_966_144);
+        assert_eq!(reduced_10cat().op_count(), 71_518_720);
+    }
+}

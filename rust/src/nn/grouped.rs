@@ -1,0 +1,219 @@
+//! The paper's exact accumulator pipeline: 16-bit partial convolution
+//! sums per group of 16 input maps, widened into 32-bit totals by the
+//! quad-16b SIMD add custom instruction.
+//!
+//! Plain i32 accumulation (layers.rs, the MXU kernel, the PJRT artifact)
+//! is bit-identical to this pipeline *iff no i16 partial wraps*. The
+//! paper's claim that fixed-point costs zero accuracy implicitly asserts
+//! exactly that for its trained nets; [`audit_net`] verifies it.
+
+use crate::model::{LayerParams, NetParams};
+use crate::model::zoo::Layer;
+use super::layers::{maxpool2, quant_act, quant_scalar, Tensor3};
+
+/// Result of a grouped-i16 GEMM.
+pub struct GroupedOut {
+    /// i32 totals (after quad-add widening), same shape as plain GEMM.
+    pub total: Vec<i32>,
+    /// Whether any i16 partial sum wrapped.
+    pub overflowed: bool,
+    /// Worst |partial| observed (pre-wrap), for headroom reporting.
+    pub max_abs_partial: i64,
+}
+
+/// Dense/im2col GEMM with wrapping i16 partials per `group` columns.
+pub fn grouped_gemm(x: &[i32], rows: usize, k: usize, p: &LayerParams, group: usize) -> GroupedOut {
+    assert_eq!(k, p.k_in);
+    let kw = p.kw();
+    let mut total = vec![0i32; rows * p.n_out];
+    let mut overflowed = false;
+    let mut max_abs: i64 = 0;
+    for r in 0..rows {
+        let xr = &x[r * k..(r + 1) * k];
+        for n in 0..p.n_out {
+            let row = &p.words[n * kw..(n + 1) * kw];
+            let mut acc32: i32 = 0;
+            let mut g0 = 0;
+            while g0 < k {
+                let g1 = (g0 + group).min(k);
+                let mut part: i64 = 0;
+                for (kk, &v) in xr[g0..g1].iter().enumerate() {
+                    let k_abs = g0 + kk;
+                    let sign = if (row[k_abs / 32] >> (k_abs % 32)) & 1 == 1 { 1 } else { -1 };
+                    part += (v as i64) * sign;
+                }
+                max_abs = max_abs.max(part.abs());
+                if part > i16::MAX as i64 || part < i16::MIN as i64 {
+                    overflowed = true;
+                }
+                // wrap exactly like 16-bit hardware, then widen (quad add)
+                acc32 = acc32.wrapping_add(part as i16 as i32);
+                g0 = g1;
+            }
+            total[r * p.n_out + n] = acc32;
+        }
+    }
+    GroupedOut { total, overflowed, max_abs_partial: max_abs }
+}
+
+/// im2col with the shared (ky*3+kx)*c + ch ordering (zero 'same' pad).
+pub fn im2col3x3(x: &Tensor3) -> Vec<i32> {
+    let (h, w, c) = (x.h, x.w, x.c);
+    let mut cols = vec![0i32; h * w * 9 * c];
+    for y in 0..h {
+        for xp in 0..w {
+            let m = y * w + xp;
+            for ky in 0..3usize {
+                let yy = y as isize + ky as isize - 1;
+                for kx in 0..3usize {
+                    let xx = xp as isize + kx as isize - 1;
+                    let p = ky * 3 + kx;
+                    for ch in 0..c {
+                        let v = if yy < 0 || yy >= h as isize || xx < 0 || xx >= w as isize {
+                            0
+                        } else {
+                            x.at(yy as usize, xx as usize, ch)
+                        };
+                        cols[m * 9 * c + p * c + ch] = v;
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Per-layer audit record.
+#[derive(Debug, Clone)]
+pub struct LayerAudit {
+    pub layer_index: usize,
+    pub kind: &'static str,
+    pub overflowed: bool,
+    pub max_abs_partial: i64,
+    /// Headroom factor: i16::MAX / max|partial| (>= 1.0 means safe).
+    pub headroom: f64,
+}
+
+/// Run a full forward in the paper's grouped-i16 pipeline and report
+/// per-layer overflow status. The forward output equals layers::forward
+/// iff no layer overflowed.
+pub fn audit_net(np: &NetParams, image: &[u8], group_maps: usize) -> (Vec<i32>, Vec<LayerAudit>) {
+    let (h, w, c) = np.net.input_hwc;
+    let mut x = Tensor3::from_u8(h, w, c, image);
+    let mut audits = Vec::new();
+    let mut wi = 0;
+    for (li, ly) in np.net.layers.iter().enumerate() {
+        match *ly {
+            Layer::Conv3x3 { cout } => {
+                let p = &np.params[wi];
+                let cols = im2col3x3(&x);
+                // group = 9 taps x group_maps input maps
+                let g = grouped_gemm(&cols, x.h * x.w, p.k_in, p, 9 * group_maps);
+                audits.push(LayerAudit {
+                    layer_index: li,
+                    kind: "conv3x3",
+                    overflowed: g.overflowed,
+                    max_abs_partial: g.max_abs_partial,
+                    headroom: i16::MAX as f64 / g.max_abs_partial.max(1) as f64,
+                });
+                let acc = Tensor3 { h: x.h, w: x.w, c: cout, data: g.total };
+                x = quant_act(&acc, &p.bias, p.shift);
+                wi += 1;
+            }
+            Layer::MaxPool2 => x = maxpool2(&x),
+            Layer::Dense { nout } => {
+                let p = &np.params[wi];
+                let g = grouped_gemm(&x.data, 1, p.k_in, p, group_maps);
+                audits.push(LayerAudit {
+                    layer_index: li,
+                    kind: "dense",
+                    overflowed: g.overflowed,
+                    max_abs_partial: g.max_abs_partial,
+                    headroom: i16::MAX as f64 / g.max_abs_partial.max(1) as f64,
+                });
+                let mut t = Tensor3::zeros(1, 1, nout);
+                for n in 0..nout {
+                    t.data[n] = quant_scalar(g.total[n], p.bias[n], p.shift);
+                }
+                x = t;
+                wi += 1;
+            }
+            Layer::Svm { .. } => {
+                let p = &np.params[wi];
+                let g = grouped_gemm(&x.data, 1, p.k_in, p, group_maps);
+                audits.push(LayerAudit {
+                    layer_index: li,
+                    kind: "svm",
+                    overflowed: g.overflowed,
+                    max_abs_partial: g.max_abs_partial,
+                    headroom: i16::MAX as f64 / g.max_abs_partial.max(1) as f64,
+                });
+                let scores = g
+                    .total
+                    .iter()
+                    .zip(&p.bias)
+                    .map(|(a, b)| a.wrapping_add(*b))
+                    .collect();
+                return (scores, audits);
+            }
+        }
+    }
+    panic!("network has no Svm head");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::random_params;
+    use crate::model::zoo::tiny_1cat;
+    use crate::nn::layers::forward;
+    use crate::util::Rng64;
+
+    #[test]
+    fn grouped_equals_plain_when_no_overflow() {
+        let np = random_params(&tiny_1cat(), 3);
+        let mut rng = Rng64::new(9);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let plain = forward(&np, &img).unwrap();
+        let (grouped, audits) = audit_net(&np, &img, 16);
+        let any_overflow = audits.iter().any(|a| a.overflowed);
+        if !any_overflow {
+            assert_eq!(plain, grouped);
+        }
+        // random ±1 weights cancel heavily; expect no overflow here
+        assert!(!any_overflow, "unexpected overflow: {audits:?}");
+    }
+
+    #[test]
+    fn overflow_detected_on_adversarial_weights() {
+        // all-+1 weights, all-255 activations, K=144 -> partial 36720 > i16
+        use crate::model::weights::LayerParams;
+        let k = 144;
+        let p = LayerParams {
+            k_in: k,
+            n_out: 1,
+            words: vec![u32::MAX; (k + 31) / 32],
+            bias: vec![0],
+            shift: 0,
+        };
+        let x = vec![255i32; k];
+        let g = grouped_gemm(&x, 1, k, &p, k);
+        assert!(g.overflowed);
+        assert_eq!(g.max_abs_partial, 255 * 144);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        use crate::model::weights::LayerParams;
+        let mut rng = Rng64::new(5);
+        let img: Vec<u8> = (0..6 * 6 * 2).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(6, 6, 2, &img);
+        let k = 18;
+        let words: Vec<u32> = (0..3).map(|_| rng.next_u32()).collect();
+        let p = LayerParams { k_in: k, n_out: 3, words, bias: vec![0; 3], shift: 0 };
+        let cols = im2col3x3(&x);
+        let g = grouped_gemm(&cols, 36, k, &p, k); // single group, no wrap
+        let direct = crate::nn::layers::conv3x3_binary(&x, &p);
+        assert_eq!(g.total, direct.data);
+    }
+}

@@ -1,0 +1,291 @@
+//! Fixed-point layer implementations over HWC u8 feature maps.
+
+use crate::model::{LayerParams, NetParams};
+use crate::model::zoo::Layer;
+use crate::util::TinError;
+use crate::Result;
+
+/// HWC feature map with i32 storage (values are u8-range activations
+/// everywhere except raw conv accumulators).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor3 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major HWC: index = (y*w + x)*c + ch.
+    pub data: Vec<i32>,
+}
+
+impl Tensor3 {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Tensor3 { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    pub fn from_u8(h: usize, w: usize, c: usize, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), h * w * c);
+        Tensor3 { h, w, c, data: bytes.iter().map(|&b| b as i32).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> i32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i32) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+}
+
+/// 3x3 'same' zero-padded binarized convolution: u8 HWC in, i32 HWC(cout)
+/// accumulators out. Weight k ordering is (ky*3 + kx)*cin + c.
+pub fn conv3x3_binary(x: &Tensor3, p: &LayerParams) -> Tensor3 {
+    assert_eq!(p.k_in, 9 * x.c, "conv K mismatch");
+    let (h, w, c) = (x.h, x.w, x.c);
+    let cout = p.n_out;
+    let mut out = Tensor3::zeros(h, w, cout);
+
+    // Pre-expand weights to ±1 i32 (hot path uses nn::opt in benches; the
+    // golden model favours obviousness over speed).
+    let kw_words = p.kw();
+    let mut wts = vec![0i32; cout * p.k_in];
+    for n in 0..cout {
+        for k in 0..p.k_in {
+            let word = p.words[n * kw_words + k / 32];
+            wts[n * p.k_in + k] = if (word >> (k % 32)) & 1 == 1 { 1 } else { -1 };
+        }
+    }
+
+    for y in 0..h {
+        for xp in 0..w {
+            for n in 0..cout {
+                let wrow = &wts[n * p.k_in..(n + 1) * p.k_in];
+                let mut acc: i32 = 0;
+                for ky in 0..3usize {
+                    let yy = y as isize + ky as isize - 1;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let xx = xp as isize + kx as isize - 1;
+                        if xx < 0 || xx >= w as isize {
+                            continue;
+                        }
+                        let base = (ky * 3 + kx) * c;
+                        for ch in 0..c {
+                            acc += x.at(yy as usize, xx as usize, ch) * wrow[base + ch];
+                        }
+                    }
+                }
+                out.set(y, xp, n, acc);
+            }
+        }
+    }
+    out
+}
+
+/// The 32b->8b activation instruction over a whole accumulator map:
+/// `y = clamp((acc + bias + 2^(s-1)) >> s, 0, 255)` (round-half-up,
+/// arithmetic shift).
+pub fn quant_act(acc: &Tensor3, bias: &[i32], shift: u8) -> Tensor3 {
+    assert_eq!(bias.len(), acc.c);
+    let mut out = Tensor3::zeros(acc.h, acc.w, acc.c);
+    for i in 0..acc.data.len() {
+        let ch = i % acc.c;
+        out.data[i] = quant_scalar(acc.data[i], bias[ch], shift);
+    }
+    out
+}
+
+/// Scalar requant — shared with the LVE custom-op implementation so the
+/// two cannot drift.
+#[inline]
+pub fn quant_scalar(acc: i32, bias: i32, shift: u8) -> i32 {
+    let mut v = acc.wrapping_add(bias);
+    if shift > 0 {
+        v = v.wrapping_add(1 << (shift - 1)) >> shift;
+    }
+    v.clamp(0, 255)
+}
+
+/// 2x2 stride-2 max pooling (h, w must be even).
+pub fn maxpool2(x: &Tensor3) -> Tensor3 {
+    assert!(x.h % 2 == 0 && x.w % 2 == 0);
+    let mut out = Tensor3::zeros(x.h / 2, x.w / 2, x.c);
+    for y in 0..out.h {
+        for xp in 0..out.w {
+            for ch in 0..x.c {
+                let m = x
+                    .at(2 * y, 2 * xp, ch)
+                    .max(x.at(2 * y, 2 * xp + 1, ch))
+                    .max(x.at(2 * y + 1, 2 * xp, ch))
+                    .max(x.at(2 * y + 1, 2 * xp + 1, ch));
+                out.set(y, xp, ch, m);
+            }
+        }
+    }
+    out
+}
+
+/// Binarized dense layer: flattened HWC input against packed rows.
+/// Returns raw i32 accumulators (bias NOT applied — callers requant or,
+/// for the SVM head, add bias directly).
+pub fn dense_binary(flat: &[i32], p: &LayerParams) -> Vec<i32> {
+    assert_eq!(flat.len(), p.k_in, "dense K mismatch");
+    let kw = p.kw();
+    let mut out = vec![0i32; p.n_out];
+    for (n, slot) in out.iter_mut().enumerate() {
+        let row = &p.words[n * kw..(n + 1) * kw];
+        let mut acc = 0i32;
+        for (k, &v) in flat.iter().enumerate() {
+            let sign = if (row[k / 32] >> (k % 32)) & 1 == 1 { 1 } else { -1 };
+            acc += v * sign;
+        }
+        *slot = acc;
+    }
+    out
+}
+
+/// Full golden forward pass: u8 image (HWC 32x32x3) -> raw i32 SVM scores.
+pub fn forward(np: &NetParams, image: &[u8]) -> Result<Vec<i32>> {
+    let (h, w, c) = np.net.input_hwc;
+    if image.len() != h * w * c {
+        return Err(TinError::Config(format!(
+            "image len {} != {}x{}x{}",
+            image.len(),
+            h,
+            w,
+            c
+        )));
+    }
+    let mut x = Tensor3::from_u8(h, w, c, image);
+    let mut wi = 0;
+    for ly in &np.net.layers {
+        match *ly {
+            Layer::Conv3x3 { .. } => {
+                let p = &np.params[wi];
+                let acc = conv3x3_binary(&x, p);
+                x = quant_act(&acc, &p.bias, p.shift);
+                wi += 1;
+            }
+            Layer::MaxPool2 => {
+                x = maxpool2(&x);
+            }
+            Layer::Dense { nout } => {
+                let p = &np.params[wi];
+                let acc = dense_binary(&x.data, p);
+                let mut t = Tensor3::zeros(1, 1, nout);
+                for (n, a) in acc.iter().enumerate() {
+                    t.data[n] = quant_scalar(*a, p.bias[n], p.shift);
+                }
+                x = t;
+                wi += 1;
+            }
+            Layer::Svm { .. } => {
+                let p = &np.params[wi];
+                let acc = dense_binary(&x.data, p);
+                return Ok(acc
+                    .iter()
+                    .zip(&p.bias)
+                    .map(|(a, b)| a.wrapping_add(*b))
+                    .collect());
+            }
+        }
+    }
+    Err(TinError::Config("network has no Svm head".into()))
+}
+
+/// Argmax classification; for 1-category heads, score>0 -> class 1.
+pub fn classify(scores: &[i32]) -> usize {
+    if scores.len() == 1 {
+        return (scores[0] > 0) as usize;
+    }
+    scores
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, v)| **v)
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{random_params, LayerParams};
+    use crate::model::zoo::tiny_1cat;
+    use crate::util::Rng64;
+
+    fn plus_ones(k_in: usize, n_out: usize) -> LayerParams {
+        let kw = (k_in + 31) / 32;
+        LayerParams { k_in, n_out, words: vec![u32::MAX; n_out * kw], bias: vec![0; n_out], shift: 0 }
+    }
+
+    #[test]
+    fn conv_all_plus_one_is_window_sum() {
+        // 1 channel, all-ones image, +1 weights: interior = 9, corner = 4.
+        let img = vec![1u8; 5 * 5];
+        let x = Tensor3::from_u8(5, 5, 1, &img);
+        let p = plus_ones(9, 1);
+        let out = conv3x3_binary(&x, &p);
+        assert_eq!(out.at(2, 2, 0), 9);
+        assert_eq!(out.at(0, 0, 0), 4);
+        assert_eq!(out.at(0, 2, 0), 6);
+    }
+
+    #[test]
+    fn conv_zero_padding_is_black() {
+        let img = vec![255u8; 3 * 3];
+        let x = Tensor3::from_u8(3, 3, 1, &img);
+        let p = plus_ones(9, 1);
+        let out = conv3x3_binary(&x, &p);
+        // corner: 4 in-bounds taps
+        assert_eq!(out.at(0, 0, 0), 4 * 255);
+    }
+
+    #[test]
+    fn quant_rounding_matches_contract() {
+        assert_eq!(quant_scalar(3, 0, 2), 1); // (3+2)>>2
+        assert_eq!(quant_scalar(5, 0, 2), 1); // 1.25 -> 1 (round half up on .5 only)
+        assert_eq!(quant_scalar(6, 0, 2), 2); // 1.5 -> 2
+        assert_eq!(quant_scalar(-3, 0, 2), 0); // clamps at 0
+        assert_eq!(quant_scalar(100_000, 0, 2), 255);
+        assert_eq!(quant_scalar(10, -10, 0), 0);
+    }
+
+    #[test]
+    fn maxpool_takes_max() {
+        let mut x = Tensor3::zeros(2, 2, 1);
+        x.data.copy_from_slice(&[1, 9, 3, 7]);
+        let out = maxpool2(&x);
+        assert_eq!(out.data, vec![9]);
+    }
+
+    #[test]
+    fn dense_sign_sum() {
+        // weights row 0: k0=+1, k1=-1 (word = 0b01)
+        let p = LayerParams { k_in: 2, n_out: 1, words: vec![0b01], bias: vec![0], shift: 0 };
+        assert_eq!(dense_binary(&[10, 3], &p), vec![7]);
+    }
+
+    #[test]
+    fn forward_runs_tiny_net() {
+        let np = random_params(&tiny_1cat(), 7);
+        let mut rng = Rng64::new(1);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let scores = forward(&np, &img).unwrap();
+        assert_eq!(scores.len(), 1);
+    }
+
+    #[test]
+    fn forward_rejects_wrong_image_size() {
+        let np = random_params(&tiny_1cat(), 7);
+        assert!(forward(&np, &[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn classify_argmax_and_binary() {
+        assert_eq!(classify(&[1, 5, 3]), 1);
+        assert_eq!(classify(&[7]), 1);
+        assert_eq!(classify(&[-7]), 0);
+    }
+}

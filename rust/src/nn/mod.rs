@@ -1,0 +1,17 @@
+//! S5: golden fixed-point NN library — the bit-exact reference for the
+//! overlay simulator, the JAX fixed model, and the PJRT artifact.
+//!
+//! Numeric contract (DESIGN.md): u8 activations, ±1 weights, i32
+//! accumulation, per-channel i32 bias, per-layer round-half-up right
+//! shift, clamp to 0..255; the SVM head emits raw i32 scores. The paper's
+//! exact hardware pipeline (i16 partial sums per 16 input maps, widened by
+//! the quad add) is available via [`grouped`] for the overflow audit.
+
+pub mod floatref;
+pub mod grouped;
+pub mod layers;
+
+pub use layers::{conv3x3_binary, dense_binary, forward, maxpool2, quant_act, Tensor3};
+
+#[cfg(test)]
+mod proptests;

@@ -1,0 +1,143 @@
+//! Property tests on the golden NN (in-tree generator — see testkit).
+
+use crate::model::weights::LayerParams;
+use crate::nn::layers::*;
+use crate::testkit::Arbitrary;
+use crate::util::Rng64;
+
+fn rand_layer(rng: &mut Rng64, k_in: usize, n_out: usize) -> LayerParams {
+    let kw = (k_in + 31) / 32;
+    LayerParams {
+        k_in,
+        n_out,
+        words: (0..n_out * kw).map(|_| rng.next_u32()).collect(),
+        bias: (0..n_out).map(|_| rng.below(200) as i32 - 100).collect(),
+        shift: (rng.below(8)) as u8,
+    }
+}
+
+#[test]
+fn prop_conv_linearity_in_input_scale() {
+    // conv(2x) == 2*conv(x) for accumulators (pure ±1 linear op)
+    crate::testkit::check(200, |rng| {
+        let h = 2 + rng.below(5) as usize;
+        let w = 2 + rng.below(5) as usize;
+        let c = 1 + rng.below(3) as usize;
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8() / 2).collect();
+        let x1 = Tensor3::from_u8(h, w, c, &img);
+        let img2: Vec<u8> = img.iter().map(|&v| v * 2).collect();
+        let x2 = Tensor3::from_u8(h, w, c, &img2);
+        let n_out = 1 + rng.below(4) as usize;
+        let p = rand_layer(rng, 9 * c, n_out);
+        let a = conv3x3_binary(&x1, &p);
+        let b = conv3x3_binary(&x2, &p);
+        for i in 0..a.data.len() {
+            assert_eq!(2 * a.data[i], b.data[i]);
+        }
+    });
+}
+
+#[test]
+fn prop_conv_bounded_by_window_mass() {
+    // |acc| <= sum of window activations (weights are ±1)
+    crate::testkit::check(100, |rng| {
+        let h = 2 + rng.below(6) as usize;
+        let w = 2 + rng.below(6) as usize;
+        let c = 1 + rng.below(3) as usize;
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(h, w, c, &img);
+        let p = rand_layer(rng, 9 * c, 2);
+        let out = conv3x3_binary(&x, &p);
+        let total: i64 = img.iter().map(|&v| v as i64).sum();
+        for v in &out.data {
+            assert!((*v as i64).abs() <= total);
+        }
+    });
+}
+
+#[test]
+fn prop_quant_output_in_u8_range() {
+    crate::testkit::check(300, |rng| {
+        let acc = (rng.next_u32() as i32).wrapping_mul(3);
+        let bias = rng.below(10_000) as i32 - 5_000;
+        let shift = rng.below(16) as u8;
+        let q = quant_scalar(acc, bias, shift);
+        assert!((0..=255).contains(&q));
+    });
+}
+
+#[test]
+fn prop_quant_monotonic_in_acc() {
+    crate::testkit::check(200, |rng| {
+        let bias = rng.below(1000) as i32 - 500;
+        let shift = rng.below(12) as u8;
+        let a = rng.below(1 << 20) as i32 - (1 << 19);
+        let b = a + rng.below(1 << 10) as i32;
+        assert!(quant_scalar(a, bias, shift) <= quant_scalar(b, bias, shift));
+    });
+}
+
+#[test]
+fn prop_maxpool_idempotent_on_constant() {
+    crate::testkit::check(50, |rng| {
+        let h = 2 * (1 + rng.below(4) as usize);
+        let w = 2 * (1 + rng.below(4) as usize);
+        let c = 1 + rng.below(4) as usize;
+        let v = rng.next_u8() as i32;
+        let x = Tensor3 { h, w, c, data: vec![v; h * w * c] };
+        let out = maxpool2(&x);
+        assert!(out.data.iter().all(|&o| o == v));
+    });
+}
+
+#[test]
+fn prop_maxpool_dominates_every_element() {
+    crate::testkit::check(100, |rng| {
+        let h = 2 * (1 + rng.below(3) as usize);
+        let w = 2 * (1 + rng.below(3) as usize);
+        let x = Tensor3 {
+            h,
+            w,
+            c: 1,
+            data: (0..h * w).map(|_| rng.next_u8() as i32).collect(),
+        };
+        let out = maxpool2(&x);
+        for y in 0..h {
+            for xp in 0..w {
+                assert!(out.at(y / 2, xp / 2, 0) >= x.at(y, xp, 0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_dense_flip_one_bit_changes_by_2x() {
+    // flipping weight bit k changes the output by exactly ±2*x[k]
+    crate::testkit::check(100, |rng| {
+        let k_in = 1 + rng.below(60) as usize;
+        let mut p = rand_layer(rng, k_in, 1);
+        let flat: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+        let before = dense_binary(&flat, &p)[0];
+        let k = rng.below(k_in as u32) as usize;
+        let sign_before = p.weight(0, k);
+        p.words[k / 32] ^= 1 << (k % 32);
+        let after = dense_binary(&flat, &p)[0];
+        assert_eq!(after - before, -2 * sign_before * flat[k]);
+    });
+}
+
+#[test]
+fn prop_forward_deterministic() {
+    use crate::model::weights::random_params;
+    use crate::model::zoo::tiny_1cat;
+    let np = random_params(&tiny_1cat(), 11);
+    let mut rng = Rng64::new(2);
+    let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+    let a = forward(&np, &img).unwrap();
+    let b = forward(&np, &img).unwrap();
+    assert_eq!(a, b);
+}
+
+// keep Arbitrary referenced until more generators land
+#[allow(dead_code)]
+fn _touch(_: &dyn Arbitrary) {}

@@ -1,0 +1,148 @@
+//! S9: activity-based power model (paper §II: the 1-category detector
+//! consumes 21.8 mW running continuously; a power-optimized 1 fps duty-
+//! cycled version consumes 4.6 mW).
+//!
+//! Board power measurements are unavailable here; the model is the
+//! standard embedded-FPGA decomposition P = static + Σ(activity_i × e_i)
+//! with iCE40-UltraPlus-scale coefficients. The paper publishes only the
+//! two aggregate operating points, which calibrate the overall scale;
+//! the *decomposition* and the duty-cycle crossover behaviour are the
+//! reproducible structure (experiment E8).
+
+use crate::compiler::schedule::RunReport;
+use crate::soc::CPU_HZ;
+
+/// Energy/power coefficients (iCE40 UP5K scale).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerModel {
+    /// Static leakage + always-on rails (mW). iCE40 UP5K core leakage
+    /// is ~75-100 uA at 1.2 V plus board standby.
+    pub static_mw: f64,
+    /// Clock tree + core switching while the CPU domain is active (mW).
+    pub active_clock_mw: f64,
+    /// Energy per scratchpad byte moved (nJ).
+    pub nj_per_sp_byte: f64,
+    /// Energy per accelerator MAC (nJ) — add/sub datapath toggle.
+    pub nj_per_mac: f64,
+    /// Energy per DMA byte from SPI flash (nJ) — SPI pads dominate.
+    pub nj_per_dma_byte: f64,
+    /// Camera + capture pipeline while sensing (mW).
+    pub camera_mw: f64,
+    /// Camera standby (mW) in duty-cycled sleep.
+    pub camera_standby_mw: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            static_mw: 0.45,
+            active_clock_mw: 9.0,
+            nj_per_sp_byte: 0.012,
+            nj_per_mac: 0.0045,
+            nj_per_dma_byte: 0.08,
+            // board-level: the paper's mW figures include the VGA sensor
+            // and capture pipeline, the dominant non-FPGA consumer
+            camera_mw: 8.0,
+            camera_standby_mw: 0.12,
+        }
+    }
+}
+
+/// One computed operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerBreakdown {
+    pub static_mw: f64,
+    pub clock_mw: f64,
+    pub scratchpad_mw: f64,
+    pub datapath_mw: f64,
+    pub dma_mw: f64,
+    pub camera_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.static_mw + self.clock_mw + self.scratchpad_mw + self.datapath_mw + self.dma_mw + self.camera_mw
+    }
+}
+
+impl PowerModel {
+    /// Power while running inference back-to-back (continuous mode).
+    pub fn continuous(&self, r: &RunReport) -> PowerBreakdown {
+        let seconds = r.total_cycles as f64 / CPU_HZ as f64;
+        let sp_bytes = (r.lve_bytes_read + r.lve_bytes_written) as f64;
+        PowerBreakdown {
+            static_mw: self.static_mw,
+            clock_mw: self.active_clock_mw,
+            scratchpad_mw: sp_bytes * self.nj_per_sp_byte * 1e-6 / seconds,
+            datapath_mw: r.macs as f64 * self.nj_per_mac * 1e-6 / seconds,
+            dma_mw: r.dma_bytes as f64 * self.nj_per_dma_byte * 1e-6 / seconds,
+            camera_mw: self.camera_mw,
+        }
+    }
+
+    /// Duty-cycled operation at `fps` frames per second: active for the
+    /// inference, clock-gated sleep otherwise (the paper's
+    /// "power-optimized version designed to run at one frame per second").
+    pub fn duty_cycled(&self, r: &RunReport, fps: f64) -> f64 {
+        let active_s = r.total_cycles as f64 / CPU_HZ as f64;
+        let frac = (active_s * fps).min(1.0);
+        let active = self.continuous(r).total_mw();
+        let sleep = self.static_mw + self.camera_standby_mw;
+        frac * active + (1.0 - frac) * sleep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lower::{compile, InputMode};
+    use crate::model::weights::random_params;
+    use crate::model::zoo::tiny_1cat;
+    use crate::soc::Board;
+
+    fn one_cat_report() -> RunReport {
+        let np = random_params(&tiny_1cat(), 3);
+        let c = compile(&np, InputMode::Direct).unwrap();
+        let mut b = Board::new(&c);
+        let img = vec![100u8; 3072];
+        b.infer(&c, &img).unwrap().1
+    }
+
+    #[test]
+    fn continuous_power_in_paper_band() {
+        // paper: 21.8 mW for the continuous 1-cat detector
+        let r = one_cat_report();
+        let p = PowerModel::default().continuous(&r).total_mw();
+        assert!((12.0..32.0).contains(&p), "continuous = {p:.1} mW");
+    }
+
+    #[test]
+    fn duty_cycled_is_several_times_lower() {
+        // paper: 4.6 mW at 1 fps — a ~5x reduction
+        let r = one_cat_report();
+        let m = PowerModel::default();
+        let cont = m.continuous(&r).total_mw();
+        let duty = m.duty_cycled(&r, 1.0);
+        assert!(duty < cont / 2.5, "duty {duty:.1} vs cont {cont:.1}");
+        assert!((1.0..8.0).contains(&duty), "duty = {duty:.2} mW");
+    }
+
+    #[test]
+    fn duty_cycle_saturates_at_continuous() {
+        let r = one_cat_report();
+        let m = PowerModel::default();
+        let cont = m.continuous(&r).total_mw();
+        let sat = m.duty_cycled(&r, 1000.0);
+        assert!((sat - cont).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_components_positive() {
+        let r = one_cat_report();
+        let b = PowerModel::default().continuous(&r);
+        assert!(b.scratchpad_mw > 0.0);
+        assert!(b.datapath_mw > 0.0);
+        assert!(b.dma_mw > 0.0);
+        assert!(b.total_mw() > b.static_mw);
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal benchmarking harness (criterion is unavailable offline):
+//! warms up, runs timed iterations, reports mean / stddev / min, and
+//! prints rows in a stable machine-grepable format.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: min,
+    }
+}
+
+/// Print a result row (criterion-like).
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "bench {:40} {:>12.4} ms/iter (± {:>8.4}, min {:>10.4}, n={})",
+        r.name,
+        r.mean_s * 1e3,
+        r.stddev_s * 1e3,
+        r.min_s * 1e3,
+        r.iters
+    );
+}
+
+/// Run + print in one go.
+pub fn run<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    print_result(&r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert_eq!(r.iters, 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! S14: report harness — regenerates every quantitative claim of the
+//! paper (experiment index E1..E11 in DESIGN.md) as printable tables,
+//! each row showing paper-reported vs measured-here.
+
+pub mod bench;
+pub mod tables;
+
+pub use tables::{
+    report_accuracy, report_all, report_fig4, report_ops, report_power, report_resources,
+    report_speedup, report_timing, report_train,
+};

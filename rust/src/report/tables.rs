@@ -1,0 +1,411 @@
+//! Table generators for E1..E10. Every function returns the formatted
+//! table as a String (and is exercised by tests); `tinbinn report`
+//! prints them.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::compiler::lower::{compile, CompiledNet, InputMode};
+use crate::compiler::schedule::RunReport;
+use crate::data::tbd::load_tbd;
+use crate::isa::baseline::{measure_rates, scalar_net_cycles};
+use crate::model::weights::load_tbw;
+use crate::model::zoo::{binaryconnect_orig, reduced_10cat, tiny_1cat};
+use crate::model::NetParams;
+use crate::nn::layers::{classify, forward};
+use crate::power::PowerModel;
+use crate::resources::{estimate, OverlayConfig};
+use crate::soc::{cycles_to_ms, Board};
+use crate::util_json;
+use crate::Result;
+
+/// Load trained weights for a task from the artifacts dir.
+pub fn load_task(dir: &Path, task: &str) -> Result<NetParams> {
+    load_tbw(dir.join(format!("weights_{task}.tbw")), task)
+}
+
+/// Run one overlay inference and return the report (trained weights).
+pub fn overlay_run(np: &NetParams) -> Result<(CompiledNet, Vec<i32>, RunReport)> {
+    let compiled = compile(np, InputMode::Direct)?;
+    let mut board = Board::new(&compiled);
+    let img = vec![128u8; 32 * 32 * 3];
+    let (scores, report) = board.infer(&compiled, &img)?;
+    Ok((compiled, scores, report))
+}
+
+// ------------------------------------------------------------------ E1
+
+/// E1: op-count reduction (paper: reduced net has 89% fewer operations).
+pub fn report_ops() -> String {
+    let orig = binaryconnect_orig();
+    let red = reduced_10cat();
+    let tiny = tiny_1cat();
+    let mut s = String::new();
+    writeln!(s, "== E1: network op counts (MACs/inference) ==").unwrap();
+    for n in [&orig, &red, &tiny] {
+        writeln!(
+            s,
+            "  {:15} {:>13} MACs   {:>9.1} kB weights",
+            n.name,
+            n.op_count(),
+            n.weight_bits() as f64 / 8.0 / 1024.0
+        )
+        .unwrap();
+    }
+    let reduction = 100.0 * (1.0 - red.op_count() as f64 / orig.op_count() as f64);
+    writeln!(s, "  reduction reduced vs original: {reduction:.1}%   (paper: 89%)").unwrap();
+    s
+}
+
+// ------------------------------------------------------------------ E2
+
+/// E2: float-vs-fixed accuracy parity on the synthetic test set.
+pub fn report_accuracy(dir: &Path, limit: usize) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E2: accuracy, float vs 8b fixed (paper: identical 13.6%) ==").unwrap();
+    for task in ["10cat", "1cat"] {
+        let np = load_task(dir, task)?;
+        let ds = load_tbd(dir.join(format!("data_{task}_test.tbd")))?;
+        let n = ds.len().min(limit);
+        let mut fixed_ok = 0usize;
+        let mut float_ok = 0usize;
+        let mut agree = 0usize;
+        for i in 0..n {
+            let img = ds.image(i);
+            let want = ds.labels[i] as usize;
+            let fx = forward(&np, img)?;
+            let fl = crate::nn::floatref::forward_float(&np, img)?;
+            let pf = classify(&fx);
+            let pl = if fl.len() == 1 {
+                (fl[0] > 0.0) as usize
+            } else {
+                fl.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+            };
+            fixed_ok += (pf == want) as usize;
+            float_ok += (pl == want) as usize;
+            agree += (pf == pl) as usize;
+        }
+        // training-side float error for reference (train_*.json)
+        let train_err = std::fs::read_to_string(dir.join(format!("train_{task}.json")))
+            .ok()
+            .and_then(|t| util_json::parse(&t).ok())
+            .and_then(|j| j.get("float_test_err").and_then(|v| v.as_f64()));
+        writeln!(
+            s,
+            "  {task}: n={n}  float err {:.2}%  fixed err {:.2}%  |Δ| {:.2}pp  pred-agreement {:.1}%{}",
+            100.0 * (1.0 - float_ok as f64 / n as f64),
+            100.0 * (1.0 - fixed_ok as f64 / n as f64),
+            100.0 * ((float_ok as f64 - fixed_ok as f64) / n as f64).abs(),
+            100.0 * agree as f64 / n as f64,
+            train_err
+                .map(|e| format!("  (jax float err at export: {:.2}%)", 100.0 * e))
+                .unwrap_or_default()
+        )
+        .unwrap();
+    }
+    writeln!(s, "  paper: error attributable entirely to training, not precision").unwrap();
+    Ok(s)
+}
+
+// -------------------------------------------------------------- E3 / E4
+
+/// E3/E4: overlay runtime for both classifiers.
+pub fn report_timing(dir: &Path) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E3/E4: overlay runtime @24 MHz ==").unwrap();
+    for (task, paper_ms) in [("10cat", 1315.0), ("1cat", 195.0)] {
+        let np = load_task(dir, task)?;
+        let (_c, _scores, r) = overlay_run(&np)?;
+        writeln!(
+            s,
+            "  {task}: measured {:>7.1} ms ({} cycles, {:.2} MAC/cyc)   paper: {:>6.0} ms   ratio {:.2}x",
+            r.ms(),
+            r.total_cycles,
+            r.macs_per_cycle(),
+            paper_ms,
+            paper_ms / r.ms()
+        )
+        .unwrap();
+        for l in &r.per_layer {
+            if l.cycles > 0 {
+                writeln!(
+                    s,
+                    "      {:10} {:>9} cyc {:>7.1} ms  {:>11} MACs  dma-stall {}",
+                    l.name, l.cycles, cycles_to_ms(l.cycles), l.macs, l.dma_stall_cycles
+                )
+                .unwrap();
+            }
+        }
+    }
+    let np10 = load_task(dir, "10cat")?;
+    let np1 = load_task(dir, "1cat")?;
+    let r10 = overlay_run(&np10)?.2.ms();
+    let r1 = overlay_run(&np1)?.2.ms();
+    writeln!(s, "  10cat/1cat runtime ratio: {:.1}x (paper: 1315/195 = 6.7x)", r10 / r1).unwrap();
+    Ok(s)
+}
+
+// ------------------------------------------------------------------ E5
+
+/// E5: accelerator speedups vs scalar ORCA (paper: conv 73x, dense 8x,
+/// overall 71x).
+pub fn report_speedup(dir: &Path) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E5: speedup vs scalar RV32IM (ISS-measured loops) ==").unwrap();
+    let rates = measure_rates()?;
+    writeln!(
+        s,
+        "  scalar rates: conv {:.1} cyc/MAC, dense {:.1} cyc/MAC",
+        rates.conv_cycles_per_mac, rates.dense_cycles_per_mac
+    )
+    .unwrap();
+    for task in ["10cat", "1cat"] {
+        let np = load_task(dir, task)?;
+        let (sc_conv, sc_dense, sc_misc) = scalar_net_cycles(&np.net, &rates);
+        let (_c, _sc, r) = overlay_run(&np)?;
+        let ov_conv: u64 = r.per_layer.iter().filter(|l| l.name == "conv3x3").map(|l| l.cycles).sum();
+        let ov_dense: u64 = r
+            .per_layer
+            .iter()
+            .filter(|l| l.name == "dense" || l.name == "svm")
+            .map(|l| l.cycles)
+            .sum();
+        let conv_x = sc_conv as f64 / ov_conv.max(1) as f64;
+        let dense_x = sc_dense as f64 / ov_dense.max(1) as f64;
+        let overall = (sc_conv + sc_dense + sc_misc) as f64 / r.total_cycles as f64;
+        writeln!(
+            s,
+            "  {task}: conv {:.0}x (paper 73x)   dense {:.1}x (paper 8x)   overall {:.0}x (paper 71x)",
+            conv_x, dense_x, overall
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "      scalar total {:.1} s vs overlay {:.3} s @24 MHz",
+            (sc_conv + sc_dense + sc_misc) as f64 / 24e6,
+            r.total_cycles as f64 / 24e6
+        )
+        .unwrap();
+    }
+    Ok(s)
+}
+
+// ------------------------------------------------------------------ E6
+
+/// E6: FPGA resource table.
+pub fn report_resources() -> String {
+    let mut s = String::new();
+    writeln!(s, "== E6: iCE40 UltraPlus-5K resources ==").unwrap();
+    let r = estimate(&OverlayConfig::paper());
+    for l in &r.lines {
+        writeln!(
+            s,
+            "  {:32} {:>5} LUT {:>2} DSP {:>2} BRAM {:>2} SPRAM",
+            l.component, l.luts, l.dsp, l.bram, l.spram
+        )
+        .unwrap();
+    }
+    writeln!(
+        s,
+        "  TOTAL {:>31} LUT {:>2} DSP {:>2} BRAM {:>2} SPRAM   (paper: 4,895 / 4 / 26 / 4)",
+        r.total_luts(),
+        r.total_dsp(),
+        r.total_bram(),
+        r.total_spram()
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "  device {:>29} LUT {:>2} DSP {:>2} BRAM {:>2} SPRAM   fits: {}",
+        r.device.luts, r.device.dsp, r.device.bram, r.device.spram, r.fits()
+    )
+    .unwrap();
+    let scalar = estimate(&OverlayConfig::scalar_only());
+    writeln!(s, "  (ablation: scalar-only ORCA = {} LUTs)", scalar.total_luts()).unwrap();
+    s
+}
+
+// ------------------------------------------------------------------ E8
+
+/// E8: power table (paper: 21.8 mW continuous 1-cat; 4.6 mW @1 fps).
+pub fn report_power(dir: &Path) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E8: power model ==").unwrap();
+    let m = PowerModel::default();
+    for (task, paper_cont, paper_duty) in [("1cat", Some(21.8), Some(4.6)), ("10cat", None, None)] {
+        let np = load_task(dir, task)?;
+        let (_c, _sc, r) = overlay_run(&np)?;
+        let b = m.continuous(&r);
+        writeln!(
+            s,
+            "  {task}: continuous {:>5.1} mW{}  [static {:.2} clk {:.1} sp {:.2} mac {:.2} dma {:.2} cam {:.1}]",
+            b.total_mw(),
+            paper_cont.map(|p| format!(" (paper {p} mW)")).unwrap_or_default(),
+            b.static_mw, b.clock_mw, b.scratchpad_mw, b.datapath_mw, b.dma_mw, b.camera_mw
+        )
+        .unwrap();
+        let duty = m.duty_cycled(&r, 1.0);
+        writeln!(
+            s,
+            "  {task}: duty-cycled @1 fps {:>5.1} mW{}",
+            duty,
+            paper_duty.map(|p| format!(" (paper {p} mW)")).unwrap_or_default()
+        )
+        .unwrap();
+    }
+    Ok(s)
+}
+
+// ------------------------------------------------------------------ E9
+
+/// E9 (Fig. 4): per-class scores, float vs fixed, on sample images.
+pub fn report_fig4(dir: &Path) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E9 (Fig. 4): person detection sample scores, float | 8b fixed ==").unwrap();
+    let np = load_task(dir, "10cat")?;
+    let ds = load_tbd(dir.join("data_10cat_test.tbd"))?;
+    let class_names = [
+        "airplane", "automobile", "bird", "cat", "person", "dog", "frog", "horse", "ship", "truck",
+    ];
+    // one person sample + one non-person sample
+    let person = (0..ds.len()).find(|&i| ds.labels[i] == 4);
+    let other = (0..ds.len()).find(|&i| ds.labels[i] != 4);
+    for (tag, idx) in [("person", person), ("non-person", other)] {
+        let Some(i) = idx else { continue };
+        let img = ds.image(i);
+        let fx = forward(&np, img)?;
+        let fl = crate::nn::floatref::forward_float(&np, img)?;
+        writeln!(s, "  sample: {tag} (true class: {})", class_names[ds.labels[i] as usize]).unwrap();
+        for (c, name) in class_names.iter().enumerate() {
+            writeln!(s, "    {:12} {:>10.1} | {:>8}", name, fl[c], fx[c]).unwrap();
+        }
+        let pf = classify(&fx);
+        let pl = fl.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        writeln!(
+            s,
+            "    argmax: float={} fixed={}  agree={}",
+            class_names[pl],
+            class_names[pf],
+            pl == pf
+        )
+        .unwrap();
+    }
+    writeln!(s, "  (more positive is better, as in the paper)").unwrap();
+    Ok(s)
+}
+
+// ----------------------------------------------------------------- E10
+
+/// E10: training ladder from the python run records.
+pub fn report_train(dir: &Path) -> Result<String> {
+    let mut s = String::new();
+    writeln!(s, "== E10: training results (synthetic-data substitution) ==").unwrap();
+    writeln!(s, "  paper ladder on CIFAR-10: 10.3% repro -> 11.8% reduced -> 13.6% no-ZCA == 13.6% fixed; 0.4% 1-cat").unwrap();
+    for task in ["10cat", "1cat"] {
+        let path = dir.join(format!("train_{task}.json"));
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            writeln!(s, "  {task}: (no training record — run `make artifacts`)").unwrap();
+            continue;
+        };
+        let j = util_json::parse(&text)?;
+        let fe = j.get("float_test_err").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let xe = j.get("fixed_test_err_subset").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let ep = j.get("epochs").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        writeln!(
+            s,
+            "  {task}: float {:.2}% -> fixed {:.2}%  (Δ {:.2}pp, {} epochs)",
+            100.0 * fe,
+            100.0 * xe,
+            100.0 * (xe - fe).abs(),
+            ep as u32
+        )
+        .unwrap();
+        if let Some(hist) = j.get("history").and_then(|v| v.as_arr()) {
+            let curve: Vec<String> = hist
+                .iter()
+                .filter_map(|e| e.get("test_err").and_then(|v| v.as_f64()))
+                .map(|e| format!("{:.1}", 100.0 * e))
+                .collect();
+            writeln!(s, "      err curve: [{}]%", curve.join(" -> ")).unwrap();
+        }
+    }
+    Ok(s)
+}
+
+/// Everything except the PJRT-dependent desktop table (that one lives in
+/// the CLI so `report --all` can skip it gracefully when artifacts are
+/// missing).
+pub fn report_all(dir: &Path, accuracy_limit: usize) -> Result<String> {
+    let mut s = String::new();
+    s.push_str(&report_ops());
+    s.push('\n');
+    s.push_str(&report_accuracy(dir, accuracy_limit)?);
+    s.push('\n');
+    s.push_str(&report_timing(dir)?);
+    s.push('\n');
+    s.push_str(&report_speedup(dir)?);
+    s.push('\n');
+    s.push_str(&report_resources());
+    s.push('\n');
+    s.push_str(&report_power(dir)?);
+    s.push('\n');
+    s.push_str(&report_fig4(dir)?);
+    s.push('\n');
+    s.push_str(&report_train(dir)?);
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir() -> std::path::PathBuf {
+        crate::runtime::artifacts_dir()
+    }
+
+    fn have_artifacts() -> bool {
+        dir().join("weights_1cat.tbw").exists()
+    }
+
+    #[test]
+    fn ops_table_mentions_89pct() {
+        let t = report_ops();
+        assert!(t.contains("88.") || t.contains("89."), "{t}");
+    }
+
+    #[test]
+    fn resources_table_totals() {
+        let t = report_resources();
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains("SPRAM"));
+    }
+
+    #[test]
+    fn timing_table_runs() {
+        if !have_artifacts() {
+            return;
+        }
+        let t = report_timing(&dir()).unwrap();
+        assert!(t.contains("10cat"));
+        assert!(t.contains("paper"));
+    }
+
+    #[test]
+    fn fig4_has_person_row() {
+        if !have_artifacts() {
+            return;
+        }
+        let t = report_fig4(&dir()).unwrap();
+        assert!(t.contains("person"));
+        assert!(t.contains("argmax"));
+    }
+
+    #[test]
+    fn accuracy_parity_small_sample() {
+        if !have_artifacts() {
+            return;
+        }
+        let t = report_accuracy(&dir(), 30).unwrap();
+        assert!(t.contains("float err"));
+    }
+}

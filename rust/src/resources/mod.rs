@@ -1,0 +1,165 @@
+//! S8: FPGA resource estimator for the overlay (paper §II: 4,895 of
+//! 5,280 4-input LUTs, 4 of 8 DSP blocks, 26 of 30 4096b BRAMs, all
+//! four 32 kB SPRAMs on the iCE40 UltraPlus-5K).
+//!
+//! Synthesis is not available here; the estimator is structural: an
+//! itemized per-component budget whose line items come from the
+//! published ORCA/LVE resource numbers (ORCA small RV32IM ≈ 2.1 kLUT on
+//! iCE40) and sized datapath arithmetic for the custom ALUs (an 8-bit
+//! add/sub cell ≈ 12 LUT4s on iCE40). The table's *structure* — what
+//! consumes the chip — is the reproducible claim; the paper's total
+//! anchors the calibration.
+
+/// iCE40 UltraPlus-5K device capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub luts: u32,
+    pub dsp: u32,
+    pub bram: u32,
+    pub spram: u32,
+}
+
+/// The UP5K as on the MDP board.
+pub const UP5K: Device = Device { luts: 5280, dsp: 8, bram: 30, spram: 4 };
+
+/// Overlay configuration knobs (ablation axes for the resource table).
+#[derive(Clone, Copy, Debug)]
+pub struct OverlayConfig {
+    /// Include the Fig. 2 binarized conv unit.
+    pub cnn_accel: bool,
+    /// Include LVE (vector streaming + quad-add + act-quant ALUs).
+    pub lve: bool,
+    /// Include the camera capture + downscale gateware.
+    pub camera: bool,
+    /// Parallel convolutions in the accel datapath (paper: 2).
+    pub conv_parallelism: u32,
+}
+
+impl OverlayConfig {
+    /// The paper's shipped configuration.
+    pub fn paper() -> Self {
+        OverlayConfig { cnn_accel: true, lve: true, camera: true, conv_parallelism: 2 }
+    }
+
+    /// Plain ORCA scalar core (the 73x/71x baseline).
+    pub fn scalar_only() -> Self {
+        OverlayConfig { cnn_accel: false, lve: false, camera: true, conv_parallelism: 0 }
+    }
+}
+
+/// One line of the resource table.
+#[derive(Clone, Debug)]
+pub struct ResourceLine {
+    pub component: &'static str,
+    pub luts: u32,
+    pub dsp: u32,
+    pub bram: u32,
+    pub spram: u32,
+}
+
+/// Full estimate.
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub lines: Vec<ResourceLine>,
+    pub device: Device,
+}
+
+impl ResourceReport {
+    pub fn total_luts(&self) -> u32 {
+        self.lines.iter().map(|l| l.luts).sum()
+    }
+    pub fn total_dsp(&self) -> u32 {
+        self.lines.iter().map(|l| l.dsp).sum()
+    }
+    pub fn total_bram(&self) -> u32 {
+        self.lines.iter().map(|l| l.bram).sum()
+    }
+    pub fn total_spram(&self) -> u32 {
+        self.lines.iter().map(|l| l.spram).sum()
+    }
+    pub fn fits(&self) -> bool {
+        self.total_luts() <= self.device.luts
+            && self.total_dsp() <= self.device.dsp
+            && self.total_bram() <= self.device.bram
+            && self.total_spram() <= self.device.spram
+    }
+}
+
+/// Estimate the overlay's FPGA footprint.
+pub fn estimate(cfg: &OverlayConfig) -> ResourceReport {
+    let mut lines = Vec::new();
+    // ORCA RV32IM, small config: published iCE40 numbers ≈ 2.1 kLUT,
+    // 4 DSP (32x32 mul), register file + icache in BRAM.
+    lines.push(ResourceLine { component: "ORCA RV32IM core", luts: 2080, dsp: 4, bram: 14, spram: 0 });
+    lines.push(ResourceLine { component: "instruction memory ctrl", luts: 90, dsp: 0, bram: 6, spram: 0 });
+    if cfg.lve {
+        // vector sequencer, 3 address generators, VL/stride regs
+        lines.push(ResourceLine { component: "LVE sequencer + AGUs", luts: 730, dsp: 0, bram: 2, spram: 0 });
+        // quad 16b->32b add tree: 3 x 32b adders + control
+        lines.push(ResourceLine { component: "quad-add custom ALU", luts: 120, dsp: 0, bram: 0, spram: 0 });
+        // 32b->8b activation: add, round, shift, clamp
+        lines.push(ResourceLine { component: "act-quant custom ALU", luts: 140, dsp: 0, bram: 0, spram: 0 });
+    }
+    if cfg.cnn_accel {
+        // per parallel conv: 3 x (8b add/sub) window row + 16b acc chain
+        // ≈ 12 LUT per 8b add/sub cell x 9 taps + window regs + mux
+        let per_conv = 9 * 12 + 96 + 60;
+        lines.push(ResourceLine {
+            component: "binarized conv unit (Fig. 2)",
+            luts: cfg.conv_parallelism * per_conv as u32 + 110,
+            dsp: 0,
+            bram: 1,
+            spram: 0,
+        });
+    }
+    // scratchpad uses the four 32 kB SPRAMs + banking glue
+    lines.push(ResourceLine { component: "scratchpad (4x SPRAM) + banking", luts: 160, dsp: 0, bram: 0, spram: 4 });
+    lines.push(ResourceLine { component: "DMA engine", luts: 330, dsp: 0, bram: 1, spram: 0 });
+    lines.push(ResourceLine { component: "SPI flash controller", luts: 210, dsp: 0, bram: 0, spram: 0 });
+    if cfg.camera {
+        lines.push(ResourceLine { component: "camera capture + 16x downscale", luts: 390, dsp: 0, bram: 2, spram: 0 });
+    }
+    lines.push(ResourceLine { component: "bus arbiter / glue", luts: 115, dsp: 0, bram: 0, spram: 0 });
+    ResourceReport { lines, device: UP5K }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_reported_totals() {
+        let r = estimate(&OverlayConfig::paper());
+        // paper: 4,895 LUTs / 4 DSP / 26 BRAM / 4 SPRAM
+        let luts = r.total_luts();
+        assert!((4700..=5100).contains(&luts), "LUTs = {luts}");
+        assert_eq!(r.total_dsp(), 4);
+        assert_eq!(r.total_bram(), 26);
+        assert_eq!(r.total_spram(), 4);
+        assert!(r.fits());
+    }
+
+    #[test]
+    fn fits_up5k_with_headroom_shape() {
+        let r = estimate(&OverlayConfig::paper());
+        // paper: 4,895 of 5,280 — >88% utilization
+        let util = r.total_luts() as f64 / r.device.luts as f64;
+        assert!(util > 0.85 && util <= 1.0, "util = {util:.3}");
+    }
+
+    #[test]
+    fn scalar_config_much_smaller() {
+        let accel = estimate(&OverlayConfig::paper()).total_luts();
+        let scalar = estimate(&OverlayConfig::scalar_only()).total_luts();
+        assert!(scalar < accel - 1000);
+    }
+
+    #[test]
+    fn conv_unit_scales_with_parallelism() {
+        let mut cfg = OverlayConfig::paper();
+        cfg.conv_parallelism = 4;
+        let wide = estimate(&cfg).total_luts();
+        let narrow = estimate(&OverlayConfig::paper()).total_luts();
+        assert!(wide > narrow);
+    }
+}

@@ -1,0 +1,225 @@
+//! S10: PJRT runtime — loads the AOT-compiled JAX/XLA modules
+//! (`artifacts/model_{task}_b{N}.hlo.txt`) and executes them from Rust.
+//!
+//! This is the "desktop" execution path of the paper's §II comparison
+//! (their 4 GHz i7 + Python/Lasagne) and the cross-check target proving
+//! the L2/L1 compile path and the golden model agree: HLO text →
+//! `HloModuleProto::from_text_file` → compile on the PJRT CPU client →
+//! execute. Python never runs here.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::TinError;
+use crate::Result;
+
+/// Batch sizes emitted by python/compile/aot.py.
+pub const BATCHES: [usize; 3] = [1, 4, 8];
+
+fn xerr(e: xla::Error) -> TinError {
+    TinError::Runtime(e.to_string())
+}
+
+/// A loaded model variant (one executable per batch size).
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Output categories.
+    pub ncat: usize,
+    pub task: String,
+}
+
+impl ModelRuntime {
+    /// Load every batch variant of `task` ("10cat" / "1cat") from `dir`.
+    pub fn load(dir: impl AsRef<Path>, task: &str, ncat: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        let mut exes = HashMap::new();
+        for b in BATCHES {
+            let path: PathBuf = dir.as_ref().join(format!("model_{task}_b{b}.hlo.txt"));
+            if !path.exists() {
+                return Err(TinError::Io(format!(
+                    "missing artifact {} (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| TinError::Io("non-utf8 path".into()))?,
+            )
+            .map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xerr)?;
+            exes.insert(b, exe);
+        }
+        Ok(ModelRuntime { client, exes, ncat, task: task.to_string() })
+    }
+
+    /// Smallest compiled batch size that fits `n` images.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for b in BATCHES {
+            if b >= n {
+                return b;
+            }
+        }
+        *BATCHES.last().unwrap()
+    }
+
+    /// Run up to 8 images (HWC u8, 3072 bytes each); returns one score
+    /// vector per input image. Short batches are padded with zeros.
+    pub fn infer_batch(&self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let b = self.pick_batch(images.len());
+        if images.len() > b {
+            return Err(TinError::Config(format!(
+                "batch {} exceeds largest compiled variant {b}",
+                images.len()
+            )));
+        }
+        let exe = &self.exes[&b];
+        let mut flat = vec![0i32; b * 32 * 32 * 3];
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != 32 * 32 * 3 {
+                return Err(TinError::Config(format!("image {} wrong size {}", i, img.len())));
+            }
+            for (j, &px) in img.iter().enumerate() {
+                flat[i * 3072 + j] = px as i32;
+            }
+        }
+        let lit = xla::Literal::vec1(&flat)
+            .reshape(&[b as i64, 32, 32, 3])
+            .map_err(xerr)?;
+        let out = exe.execute::<xla::Literal>(&[lit]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let tup = out.to_tuple1().map_err(xerr)?;
+        let scores: Vec<i32> = tup.to_vec::<i32>().map_err(xerr)?;
+        Ok(images
+            .iter()
+            .enumerate()
+            .map(|(i, _)| scores[i * self.ncat..(i + 1) * self.ncat].to_vec())
+            .collect())
+    }
+
+    /// Convenience: one image.
+    pub fn infer_one(&self, image: &[u8]) -> Result<Vec<i32>> {
+        Ok(self.infer_batch(&[image])?.remove(0))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load the Pallas-lowered b1 parity artifact and run one image —
+    /// used to prove the L1-kernel lowering and the serving lowering
+    /// compute identical integers (DESIGN.md L1/L2 contract).
+    pub fn infer_one_pallas(&self, dir: impl AsRef<Path>, image: &[u8]) -> Result<Vec<i32>> {
+        let path = dir.as_ref().join(format!("model_{}_b1_pallas.hlo.txt", self.task));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| TinError::Io("non-utf8 path".into()))?,
+        )
+        .map_err(xerr)?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(xerr)?;
+        let flat: Vec<i32> = image.iter().map(|&b| b as i32).collect();
+        let lit = xla::Literal::vec1(&flat).reshape(&[1, 32, 32, 3]).map_err(xerr)?;
+        let out = exe.execute::<xla::Literal>(&[lit]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        out.to_tuple1().map_err(xerr)?.to_vec::<i32>().map_err(xerr)
+    }
+}
+
+/// Locate the artifacts directory (cwd/artifacts or $TINBINN_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TINBINN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("model_1cat_b1.hlo.txt").exists()
+    }
+
+    #[test]
+    fn load_and_run_1cat() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).unwrap();
+        let img = vec![128u8; 3072];
+        let scores = rt.infer_one(&img).unwrap();
+        assert_eq!(scores.len(), 1);
+    }
+
+    #[test]
+    fn batch_padding_consistent_with_single() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).unwrap();
+        let a = vec![10u8; 3072];
+        let b = vec![200u8; 3072];
+        let single_a = rt.infer_one(&a).unwrap();
+        let single_b = rt.infer_one(&b).unwrap();
+        let both = rt.infer_batch(&[&a, &b]).unwrap();
+        assert_eq!(both[0], single_a);
+        assert_eq!(both[1], single_b);
+    }
+
+    #[test]
+    fn pjrt_runtime_matches_golden_model() {
+        // The FULL cross-layer check: AOT JAX/Pallas artifact (trained
+        // weights baked in) == rust golden model on the same weights.
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let dir = artifacts_dir();
+        let np = crate::model::weights::load_tbw(dir.join("weights_1cat.tbw"), "1cat").unwrap();
+        let rt = ModelRuntime::load(&dir, "1cat", 1).unwrap();
+        let mut rng = crate::util::Rng64::new(42);
+        for _ in 0..3 {
+            let img: Vec<u8> = (0..3072).map(|_| rng.next_u8()).collect();
+            let golden = crate::nn::layers::forward(&np, &img).unwrap();
+            let pjrt = rt.infer_one(&img).unwrap();
+            assert_eq!(golden, pjrt, "PJRT artifact != golden model");
+        }
+    }
+
+    #[test]
+    fn pallas_and_serving_artifacts_agree() {
+        // L1 contract: the Pallas-kernel lowering and the plain serving
+        // lowering are different HLO but identical integers.
+        if !artifacts_dir().join("model_1cat_b1_pallas.hlo.txt").exists() {
+            eprintln!("skipping: pallas parity artifact not built");
+            return;
+        }
+        let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).unwrap();
+        let mut rng = crate::util::Rng64::new(77);
+        let img: Vec<u8> = (0..3072).map(|_| rng.next_u8()).collect();
+        let serving = rt.infer_one(&img).unwrap();
+        let pallas = rt.infer_one_pallas(artifacts_dir(), &img).unwrap();
+        assert_eq!(serving, pallas);
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).unwrap();
+        assert_eq!(rt.pick_batch(1), 1);
+        assert_eq!(rt.pick_batch(2), 4);
+        assert_eq!(rt.pick_batch(5), 8);
+    }
+}

@@ -1,0 +1,117 @@
+//! The MDP board: composition of LVE (scratchpad + custom ALUs), DMA,
+//! SPI flash, and camera — executes compiled overlay programs.
+
+use crate::compiler::lower::{CompiledNet, InputMode};
+use crate::compiler::schedule::{run, RunReport};
+use crate::lve::Lve;
+use crate::soc::camera::Camera;
+use crate::soc::dma::Dma;
+use crate::soc::flash::SpiFlash;
+use crate::util::TinError;
+use crate::Result;
+
+/// A board instance loaded with one compiled network.
+pub struct Board {
+    pub lve: Lve,
+    pub dma: Dma,
+    pub flash: SpiFlash,
+    pub camera: Camera,
+    /// Monotonic CPU cycle counter across frames.
+    pub now: u64,
+}
+
+impl Board {
+    /// Bring up a board with the network's weights burned into flash.
+    pub fn new(compiled: &CompiledNet) -> Self {
+        Board {
+            lve: Lve::new(),
+            dma: Dma::new(),
+            flash: SpiFlash::new(compiled.flash_image.clone()),
+            camera: Camera::new(0xCA1),
+            now: 0,
+        }
+    }
+
+    /// Land an input in the IMG region.
+    ///
+    /// * Direct mode: `image` is 32x32x3 HWC bytes (3072).
+    /// * Camera mode: `image` is 40x30x4 RGBA bytes (4800) — the output
+    ///   of the hardware downscaler; charged as the frame DMA burst.
+    pub fn load_input(&mut self, compiled: &CompiledNet, image: &[u8]) -> Result<()> {
+        let want = match compiled.input_mode {
+            InputMode::Direct => 32 * 32 * 3,
+            InputMode::Camera => 40 * 30 * 4,
+        };
+        if image.len() != want {
+            return Err(TinError::Config(format!(
+                "input length {} != {want} for {:?}",
+                image.len(),
+                compiled.input_mode
+            )));
+        }
+        self.lve.sp.checked_mut(compiled.img_addr, image.len())?;
+        self.lve.sp.write_bytes(compiled.img_addr, image);
+        self.now += self.camera.frame_dma_cycles();
+        Ok(())
+    }
+
+    /// Run one inference; returns (scores, run report).
+    pub fn infer(&mut self, compiled: &CompiledNet, image: &[u8]) -> Result<(Vec<i32>, RunReport)> {
+        self.load_input(compiled, image)?;
+        let report = run(&mut self.lve, &mut self.dma, &self.flash, &compiled.schedule, self.now)?;
+        self.now += report.total_cycles;
+        let scores = (0..compiled.ncat)
+            .map(|i| self.lve.sp.read_i32(compiled.scores_addr + 4 * i))
+            .collect();
+        Ok((scores, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lower::compile;
+    use crate::model::weights::random_params;
+    use crate::model::zoo::tiny_1cat;
+    use crate::nn::layers::forward;
+    use crate::util::Rng64;
+
+    /// THE integration test: the cycle-accurate overlay simulation must
+    /// reproduce the golden fixed-point model bit-exactly.
+    #[test]
+    fn overlay_matches_golden_model() {
+        let np = random_params(&tiny_1cat(), 77);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        let mut rng = Rng64::new(123);
+        for _ in 0..3 {
+            let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+            let golden = forward(&np, &img).unwrap();
+            let (scores, report) = board.infer(&compiled, &img).unwrap();
+            assert_eq!(scores, golden, "overlay != golden");
+            assert!(report.total_cycles > 0);
+            assert!(report.macs >= np.net.op_count() * 9 / 10);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_input_size() {
+        let np = random_params(&tiny_1cat(), 1);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        assert!(board.infer(&compiled, &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn repeated_inference_is_deterministic() {
+        let np = random_params(&tiny_1cat(), 4);
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        let mut rng = Rng64::new(5);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let (s1, r1) = board.infer(&compiled, &img).unwrap();
+        let (s2, r2) = board.infer(&compiled, &img).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(r1.total_cycles, r2.total_cycles);
+    }
+}

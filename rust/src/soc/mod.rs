@@ -1,0 +1,37 @@
+//! S4: the iCE40 UltraPlus MDP SoC model (paper Fig. 1).
+//!
+//! Components: the 24 MHz ORCA CPU domain (cycle unit of the whole
+//! simulator), the 128 kB scratchpad @72 MHz (inside [`crate::lve`]),
+//! a DMA engine streaming weights from SPI flash, and the VGA camera
+//! pipeline (640x480 RGB565 → hardware 16x downscale → RGBA DMA writes).
+
+pub mod board;
+pub mod camera;
+pub mod dma;
+pub mod firmware;
+pub mod flash;
+
+pub use board::Board;
+pub use camera::Camera;
+pub use dma::{Dma, DmaRequest};
+pub use flash::SpiFlash;
+
+/// CPU clock: 24 MHz (paper §II). All simulator cycle counts are in this
+/// domain; wall-clock ms = cycles / 24_000.
+pub const CPU_HZ: u64 = 24_000_000;
+
+/// Convert CPU cycles to milliseconds on the MDP.
+pub fn cycles_to_ms(cycles: u64) -> f64 {
+    cycles as f64 * 1000.0 / CPU_HZ as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_ms_conversion() {
+        assert!((cycles_to_ms(24_000_000) - 1000.0).abs() < 1e-9);
+        assert!((cycles_to_ms(24_000) - 1.0).abs() < 1e-9);
+    }
+}

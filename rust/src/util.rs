@@ -1,0 +1,116 @@
+//! Shared small utilities: error type, deterministic PRNG.
+
+use std::fmt;
+
+/// Crate-wide error type.
+#[derive(Debug)]
+pub enum TinError {
+    /// I/O failure with context.
+    Io(String),
+    /// Malformed artifact / file format.
+    Format(String),
+    /// Simulator fault (bad address, illegal instruction, ...).
+    Sim(String),
+    /// Configuration / API misuse.
+    Config(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+}
+
+impl fmt::Display for TinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TinError::Io(s) => write!(f, "io error: {s}"),
+            TinError::Format(s) => write!(f, "format error: {s}"),
+            TinError::Sim(s) => write!(f, "simulator fault: {s}"),
+            TinError::Config(s) => write!(f, "config error: {s}"),
+            TinError::Runtime(s) => write!(f, "runtime error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for TinError {}
+
+impl From<std::io::Error> for TinError {
+    fn from(e: std::io::Error) -> Self {
+        TinError::Io(e.to_string())
+    }
+}
+
+/// Deterministic xorshift64* PRNG — reproducible across runs and matching
+/// the python-side generator used for synthetic workloads.
+#[derive(Clone, Debug)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    /// Seeded constructor; seed 0 is remapped to a fixed odd constant.
+    pub fn new(seed: u64) -> Self {
+        Rng64 {
+            state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u32) -> u32 {
+        if n == 0 {
+            0
+        } else {
+            (self.next_u64() % n as u64) as u32
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform u8.
+    pub fn next_u8(&mut self) -> u8 {
+        (self.next_u64() >> 56) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng64::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn rng_zero_seed_ok() {
+        let mut r = Rng64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+}

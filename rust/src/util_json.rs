@@ -1,0 +1,231 @@
+//! Minimal JSON reader (the offline environment has no serde): enough to
+//! read the flat training-result files (train_*.json) — objects, arrays,
+//! numbers, strings, bools, null.
+
+use std::collections::HashMap;
+
+use crate::util::TinError;
+use crate::Result;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| TinError::Format("json: unexpected end".into()))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            return Err(TinError::Format(format!(
+                "json: expected '{}' at {}",
+                c as char, self.i
+            )));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.obj(),
+            b'[' => self.arr(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.num(),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        self.ws();
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(TinError::Format(format!("json: bad literal at {}", self.i)))
+        }
+    }
+
+    fn num(&mut self) -> Result<Json> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .map(Json::Num)
+            .ok_or_else(|| TinError::Format(format!("json: bad number at {start}")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.b.get(self.i).copied().unwrap_or(b'"');
+                    self.i += 1;
+                    out.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        other => other as char,
+                    });
+                }
+                _ => out.push(c as char),
+            }
+        }
+        Err(TinError::Format("json: unterminated string".into()))
+    }
+
+    fn obj(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = HashMap::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            let k = self.string()?;
+            self.eat(b':')?;
+            m.insert(k, self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => return Err(TinError::Format(format!("json: bad obj char '{}'", c as char))),
+            }
+        }
+    }
+
+    fn arr(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => return Err(TinError::Format(format!("json: bad arr char '{}'", c as char))),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = P { b: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_train_json_shape() {
+        let doc = r#"{"task": "1cat", "epochs": 4, "shifts": [3, 3, 4],
+                      "float_test_err": 0.085, "history": [{"epoch": 0, "loss": 0.72}]}"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("task").unwrap().as_str(), Some("1cat"));
+        assert_eq!(j.get("epochs").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("shifts").unwrap().as_arr().unwrap().len(), 3);
+        let h = j.get("history").unwrap().as_arr().unwrap();
+        assert_eq!(h[0].get("loss").unwrap().as_f64(), Some(0.72));
+    }
+
+    #[test]
+    fn parses_escapes_and_negatives() {
+        let j = parse(r#"{"s": "a\nb", "n": -1.5e2, "b": true, "x": null}"#).unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("a\nb"));
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(j.get("b"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-layer integration tests over the trained artifacts:
+//! golden model == overlay simulator == PJRT artifact, the paper's
+//! numeric contract on real trained weights, and the coordinator
+//! end-to-end on real dataset streams.
+//!
+//! All tests skip gracefully when `make artifacts` has not run.
+
+use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::coordinator::backend::OverlayBackend;
+use tinbinn::coordinator::batcher::BatchPolicy;
+use tinbinn::coordinator::pipeline::{run_stream, Frame, StreamConfig};
+use tinbinn::data::tbd::load_tbd;
+use tinbinn::model::weights::load_tbw;
+use tinbinn::model::NetParams;
+use tinbinn::nn::grouped::audit_net;
+use tinbinn::nn::layers::{classify, forward};
+use tinbinn::runtime::{artifacts_dir, ModelRuntime};
+use tinbinn::soc::Board;
+
+fn trained(task: &str) -> Option<NetParams> {
+    load_tbw(artifacts_dir().join(format!("weights_{task}.tbw")), task).ok()
+}
+
+fn dataset(task: &str) -> Option<tinbinn::data::tbd::Dataset> {
+    load_tbd(artifacts_dir().join(format!("data_{task}_test.tbd"))).ok()
+}
+
+#[test]
+fn golden_overlay_pjrt_agree_on_trained_weights() {
+    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    let mut board = Board::new(&compiled);
+    let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).ok();
+    for i in 0..8 {
+        let img = ds.image(i);
+        let golden = forward(&np, img).unwrap();
+        let (sim, _) = board.infer(&compiled, img).unwrap();
+        assert_eq!(golden, sim, "overlay != golden on image {i}");
+        if let Some(rt) = &rt {
+            let pjrt = rt.infer_one(img).unwrap();
+            assert_eq!(golden, pjrt, "pjrt != golden on image {i}");
+        }
+    }
+}
+
+#[test]
+fn ten_cat_overlay_matches_golden() {
+    let (Some(np), Some(ds)) = (trained("10cat"), dataset("10cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    let mut board = Board::new(&compiled);
+    for i in 0..3 {
+        let img = ds.image(i);
+        let golden = forward(&np, img).unwrap();
+        let (sim, _) = board.infer(&compiled, img).unwrap();
+        assert_eq!(golden, sim, "10cat overlay != golden on image {i}");
+    }
+}
+
+/// The paper's implicit numeric requirement: on trained nets the 16-bit
+/// partial sums (per 16 input maps) never wrap, which is what makes
+/// plain i32 accumulation == the hardware pipeline.
+#[test]
+fn trained_nets_never_overflow_i16_partials() {
+    for task in ["10cat", "1cat"] {
+        let (Some(np), Some(ds)) = (trained(task), dataset(task)) else {
+            eprintln!("skipping: artifacts missing");
+            return;
+        };
+        for i in 0..4 {
+            let img = ds.image(i);
+            let (grouped_scores, audits) = audit_net(&np, img, 16);
+            for a in &audits {
+                assert!(
+                    !a.overflowed,
+                    "{task} image {i}: i16 overflow in layer {} ({})",
+                    a.layer_index, a.kind
+                );
+            }
+            let plain = forward(&np, img).unwrap();
+            assert_eq!(plain, grouped_scores, "{task}: grouped pipeline != i32 pipeline");
+        }
+    }
+}
+
+#[test]
+fn camera_mode_agrees_with_direct_mode_predictions() {
+    // The camera path loses two image rows to padding and quantizes
+    // through RGB565; predictions should still agree most of the time.
+    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let direct = compile(&np, InputMode::Direct).unwrap();
+    let cam = compile(&np, InputMode::Camera).unwrap();
+    let mut b_direct = Board::new(&direct);
+    let mut b_cam = Board::new(&cam);
+    let camera = tinbinn::soc::Camera::new(3);
+    let mut agree = 0;
+    let n = 12;
+    for i in 0..n {
+        let img = ds.image(i);
+        let (sd, _) = b_direct.infer(&direct, img).unwrap();
+        let frame = camera.frame_from_image(img, 32, 32);
+        let rgba = camera.downscale(&frame);
+        let (sc, _) = b_cam.infer(&cam, &rgba).unwrap();
+        agree += (classify(&sd) == classify(&sc)) as usize;
+    }
+    assert!(agree * 10 >= n * 8, "camera/direct agreement too low: {agree}/{n}");
+}
+
+#[test]
+fn coordinator_stream_over_overlay_backend() {
+    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    let mut be = OverlayBackend::new(compiled);
+    let frames: Vec<Frame> = (0..20)
+        .map(|i| Frame { id: i as u64, image: ds.image(i).to_vec(), label: Some(ds.labels[i]) })
+        .collect();
+    let cfg = StreamConfig {
+        interarrival_us: 100,
+        service_us_per_image: 92_500, // the overlay's simulated latency
+        policy: BatchPolicy { max_batch: 1, max_wait_us: 0, queue_cap: 64 },
+    };
+    let r = run_stream(frames, &mut be, &cfg).unwrap();
+    assert_eq!(r.completed, 20);
+    assert_eq!(r.labelled, 20);
+    // trained detector beats chance comfortably
+    assert!(r.correct >= 14, "correct = {}", r.correct);
+    assert!(be.sim_cycles > 0);
+}
+
+#[test]
+fn overlay_timing_is_stable_across_inputs() {
+    // data-independent runtime (no data-dependent branches in the
+    // datapath) — a property the real hardware has by construction.
+    let Some(np) = trained("1cat") else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    let mut board = Board::new(&compiled);
+    let (_, r1) = board.infer(&compiled, &vec![0u8; 3072]).unwrap();
+    let (_, r2) = board.infer(&compiled, &vec![255u8; 3072]).unwrap();
+    assert_eq!(r1.total_cycles, r2.total_cycles);
+}
+
+#[test]
+fn weight_bytes_match_flash_image() {
+    let Some(np) = trained("10cat") else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    assert_eq!(compiled.flash_image.len(), np.weight_bytes());
+    // paper: ~270 kB flash image (ours is the pure weight payload)
+    let kb = compiled.flash_image.len() as f64 / 1024.0;
+    assert!((100.0..270.0).contains(&kb), "{kb} kB");
+}
