@@ -1,6 +1,7 @@
-//! Quickstart: load trained weights, classify one image three ways —
-//! golden model, cycle-accurate overlay simulator, and the AOT-compiled
-//! XLA artifact via PJRT — and show they agree bit-exactly.
+//! Quickstart: load trained weights, classify one image four ways —
+//! golden model, the nn::opt fast engine, the cycle-accurate overlay
+//! simulator, and the AOT-compiled XLA artifact via PJRT — and show
+//! they agree bit-exactly.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
@@ -8,6 +9,7 @@ use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::data::tbd::load_tbd;
 use tinbinn::model::weights::load_tbw;
 use tinbinn::nn::layers::{classify, forward};
+use tinbinn::nn::opt::{OptModel, Scratch};
 use tinbinn::runtime::{artifacts_dir, ModelRuntime};
 use tinbinn::soc::Board;
 
@@ -22,6 +24,14 @@ fn main() -> tinbinn::Result<()> {
     // 1. golden fixed-point model
     let golden = forward(&np, img)?;
     println!("golden scores:  {golden:?}  -> class {}", classify(&golden));
+
+    // 1b. the fast path: packed weights, fused requant, zero per-layer
+    // allocations — the engine the serving coordinator runs on
+    let engine = OptModel::new(&np)?;
+    let mut scratch = Scratch::new();
+    let fast = engine.forward(img, &mut scratch)?;
+    println!("opt scores:     {fast:?}  -> class {}", classify(&fast));
+    assert_eq!(golden, fast, "nn::opt must be bit-exact");
 
     // 2. cycle-accurate overlay simulation
     let compiled = compile(&np, InputMode::Direct)?;

@@ -1,10 +1,14 @@
 //! Hot-path microbenchmarks — the §Perf optimization targets of each
 //! layer's inner loop:
 //!   * conv-strip op execution (the simulator's dominant cost),
-//!   * golden conv layer (cross-check oracle speed),
+//!   * golden conv layer vs the nn::opt fused conv (oracle vs fast path),
+//!   * full forward golden vs nn::opt on both nets,
 //!   * ISS retirement rate (scalar-baseline measurement speed),
 //!   * dense DotSel op,
 //!   * full-schedule execution overhead (ops/s through the sequencer).
+//!
+//! Writes the suite to `<repo-root>/BENCH_hotpath.json` so the perf
+//! trajectory is tracked from PR to PR (schema: report::bench).
 
 use tinbinn::accel::ConvStrip;
 use tinbinn::compiler::lower::{compile, InputMode};
@@ -14,12 +18,15 @@ use tinbinn::lve::{Lve, VectorOp};
 use tinbinn::model::weights::random_params;
 use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
 use tinbinn::nn::layers::{conv3x3_binary, Tensor3};
+use tinbinn::nn::opt::{conv3x3_requant, OptModel, Scratch};
+use tinbinn::nn::pack::PackedLayer;
 use tinbinn::report::bench;
 use tinbinn::soc::Board;
 use tinbinn::util::Rng64;
 
 fn main() {
     println!("== tab_hotpath: per-layer inner-loop microbenchmarks ==");
+    let mut suite: Vec<bench::BenchResult> = Vec::new();
 
     // L3a: conv strip through the LVE (the simulator's hot op)
     {
@@ -36,23 +43,72 @@ fn main() {
         });
         let macs = 4.0 * 32.0 * 9.0;
         println!("   -> {:.0} M MAC/s functional", macs / r.mean_s / 1e6);
+        suite.push(r);
     }
 
-    // L3b: one full 48ch conv layer on the golden model
+    // L3b: one full 48ch conv layer — golden oracle vs nn::opt fast path
     {
         let mut rng = Rng64::new(2);
         let img: Vec<u8> = (0..32 * 32 * 48).map(|_| rng.next_u8()).collect();
         let x = Tensor3::from_u8(32, 32, 48, &img);
         let np = random_params(&reduced_10cat(), 3);
         let p = &np.params[1]; // 48 -> 48 conv
-        let r = bench::run("golden_conv_48to48_32x32", 1, 10, || {
+        let macs = 32.0 * 32.0 * 48.0 * 9.0 * 48.0;
+
+        let r_gold = bench::run("golden_conv_48to48_32x32", 1, 10, || {
             std::hint::black_box(conv3x3_binary(&x, p));
         });
-        let macs = 32.0 * 32.0 * 48.0 * 9.0 * 48.0;
-        println!("   -> {:.0} M MAC/s golden", macs / r.mean_s / 1e6);
+        println!("   -> {:.0} M MAC/s golden", macs / r_gold.mean_s / 1e6);
+
+        let pl = PackedLayer::prepare(p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9 * 48];
+        let mut dst = vec![0i32; 32 * 32 * 48];
+        let r_opt = bench::run("opt_conv_48to48_32x32", 1, 10, || {
+            conv3x3_requant(&src, 32, 32, 48, &pl, &mut win, &mut dst);
+            std::hint::black_box(&dst);
+        });
+        println!(
+            "   -> {:.0} M MAC/s opt (fused requant)   {:.1}x golden",
+            macs / r_opt.mean_s / 1e6,
+            r_gold.mean_s / r_opt.mean_s
+        );
+        suite.push(r_gold);
+        suite.push(r_opt);
     }
 
-    // L3c: ISS retirement rate
+    // L3c: full forward — golden vs nn::opt, both nets
+    {
+        for (tag, net) in [("1cat", tiny_1cat()), ("10cat", reduced_10cat())] {
+            let np = random_params(&net, 5);
+            let mut rng = Rng64::new(6);
+            let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+            let r_gold = bench::run(&format!("golden_forward_{tag}"), 1, 10, || {
+                std::hint::black_box(tinbinn::nn::layers::forward(&np, &img).unwrap());
+            });
+            let model = OptModel::new(&np).unwrap();
+            let mut scratch = Scratch::new();
+            // parity spot check before timing
+            assert_eq!(
+                tinbinn::nn::layers::forward(&np, &img).unwrap(),
+                model.forward(&img, &mut scratch).unwrap(),
+                "opt engine must be bit-exact"
+            );
+            let r_opt = bench::run(&format!("opt_forward_{tag}"), 1, 10, || {
+                std::hint::black_box(model.forward(&img, &mut scratch).unwrap());
+            });
+            println!(
+                "   -> {tag}: {:.2} ms golden vs {:.2} ms opt = {:.1}x",
+                r_gold.mean_ms(),
+                r_opt.mean_ms(),
+                r_gold.mean_s / r_opt.mean_s
+            );
+            suite.push(r_gold);
+            suite.push(r_opt);
+        }
+    }
+
+    // L3d: ISS retirement rate
     {
         let mut a = Asm::new();
         a.li(5, 0);
@@ -70,9 +126,10 @@ fn main() {
             cpu.run(&mut mem, 10_000_000).unwrap();
         });
         println!("   -> {:.0} M instrs/s ISS", 1.5e6 / r.mean_s / 1e6);
+        suite.push(r);
     }
 
-    // L3d: dense DotSel
+    // L3e: dense DotSel
     {
         let mut lve = Lve::new();
         let op = VectorOp::DotSel { dst: 65536, acts: 0, wbits: 8192, n: 2048 };
@@ -80,9 +137,11 @@ fn main() {
             lve.execute(&op).unwrap();
         });
         println!("   -> {:.0} M MAC/s functional", 2048.0 / r.mean_s / 1e6);
+        suite.push(r);
     }
 
-    // L3e: whole tiny-net schedule (op-dispatch overhead)
+    // L3f: whole tiny-net schedule (op-dispatch overhead; speeds up as
+    // the LVE bulk fast paths land)
     {
         let np = random_params(&tiny_1cat(), 4);
         let compiled = compile(&np, InputMode::Direct).unwrap();
@@ -93,5 +152,16 @@ fn main() {
             board.infer(&compiled, &img).unwrap();
         });
         println!("   -> {:.2} M vector-ops/s through the sequencer", nops / r.mean_s / 1e6);
+        suite.push(r);
+    }
+
+    // perf-trajectory artifact at the repo root
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_hotpath.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_hotpath.json"));
+    match bench::write_json(&out, "tab_hotpath", &suite) {
+        Ok(()) => println!("\nwrote {} ({} rows)", out.display(), suite.len()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 }

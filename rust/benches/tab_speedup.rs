@@ -6,13 +6,45 @@
 
 use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::isa::baseline::{measure_conv, measure_dense, measure_rates, scalar_net_cycles};
-use tinbinn::model::weights::load_tbw;
+use tinbinn::model::weights::{load_tbw, random_params};
+use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
+use tinbinn::nn::opt::{OptModel, Scratch};
 use tinbinn::report::bench;
 use tinbinn::runtime::artifacts_dir;
 use tinbinn::soc::Board;
+use tinbinn::util::Rng64;
 
 fn main() {
     println!("== tab_speedup: accelerator vs scalar RV32IM (paper: 73x conv / 8x dense / 71x overall) ==");
+
+    // host-side engines first: golden oracle vs nn::opt fast path (no
+    // trained artifacts needed — random weights, identical integers)
+    println!("-- host engines: golden model vs nn::opt fast path --");
+    for (task, net) in [("10cat", reduced_10cat()), ("1cat", tiny_1cat())] {
+        let np = random_params(&net, 11);
+        let mut rng = Rng64::new(12);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let model = OptModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        assert_eq!(
+            tinbinn::nn::layers::forward(&np, &img).unwrap(),
+            model.forward(&img, &mut scratch).unwrap(),
+            "{task}: opt engine must be bit-exact with the golden model"
+        );
+        let r_gold = bench::bench(&format!("golden_forward_{task}"), 1, 8, || {
+            std::hint::black_box(tinbinn::nn::layers::forward(&np, &img).unwrap());
+        });
+        let r_opt = bench::bench(&format!("opt_forward_{task}"), 1, 8, || {
+            std::hint::black_box(model.forward(&img, &mut scratch).unwrap());
+        });
+        println!(
+            "{task}: golden {:>8.2} ms  |  opt {:>7.2} ms  |  {:>4.1}x faster, bit-exact",
+            r_gold.mean_ms(),
+            r_opt.mean_ms(),
+            r_gold.mean_s / r_opt.mean_s
+        );
+    }
+    println!();
     // ISS measurement itself, timed
     bench::run("iss_measure_dense_k2048", 1, 5, || {
         measure_dense(2048, 11).unwrap();

@@ -90,8 +90,10 @@ impl ConvUnit {
     /// out of interior bounds.
     ///
     /// Hot path of the whole simulator (one 10-cat frame = ~132k calls):
-    /// signs are hoisted out of the pixel loop and window rows are read
-    /// through slices — see EXPERIMENTS.md §Perf-L3.
+    /// signs are hoisted out of the pixel loop and the three window rows
+    /// are staged into fixed-size stack buffers once per strip row — one
+    /// bounds-checked slice fetch per row instead of three per output
+    /// pixel — see EXPERIMENTS.md §Perf-L3.
     pub fn conv_strip(&self, sp: &mut Scratchpad, p: &ConvStrip) -> (u64, u64, u64, u64) {
         let cols = p.w.saturating_sub(p.x0).min(4);
         let mut sign = [0i32; 9];
@@ -102,25 +104,66 @@ impl ConvUnit {
         // top-left of the window for output (0, x0): one row and one
         // column into the border ring
         let win_base = p.src - stride - 1 + p.x0;
-        for y in 0..p.h {
-            let row0 = win_base + y * stride;
-            for dx in 0..cols {
-                let r0 = sp.read_bytes(row0 + dx, 3);
-                let r1 = sp.read_bytes(row0 + stride + dx, 3);
-                let r2 = sp.read_bytes(row0 + 2 * stride + dx, 3);
-                let acc = r0[0] as i32 * sign[0]
-                    + r0[1] as i32 * sign[1]
-                    + r0[2] as i32 * sign[2]
-                    + r1[0] as i32 * sign[3]
-                    + r1[1] as i32 * sign[4]
-                    + r1[2] as i32 * sign[5]
-                    + r2[0] as i32 * sign[6]
-                    + r2[1] as i32 * sign[7]
-                    + r2[2] as i32 * sign[8];
-                let daddr = p.dst + (y * p.dst_stride + p.x0 + dx) * 2;
-                let cur = sp.read_i16(daddr);
-                // wrap exactly like 16-bit hardware
-                sp.write_i16(daddr, cur.wrapping_add(acc as i16));
+        if cols > 0 {
+            let span = cols + 2; // bytes covering all `cols` windows of a row
+            // the staged fast path snapshots window rows; it is only valid
+            // when the accumulator writes cannot land inside the window
+            // (always true for compiler-emitted strips — planes and acc16
+            // are disjoint regions)
+            let src_end = win_base + (p.h + 1) * stride + span;
+            let dst_lo = p.dst + 2 * p.x0;
+            let dst_end = p.dst + (p.h.saturating_sub(1) * p.dst_stride + p.x0 + cols) * 2;
+            if dst_lo >= src_end || dst_end <= win_base {
+                for y in 0..p.h {
+                    let row0 = win_base + y * stride;
+                    let mut r0 = [0u8; 6];
+                    let mut r1 = [0u8; 6];
+                    let mut r2 = [0u8; 6];
+                    r0[..span].copy_from_slice(sp.read_bytes(row0, span));
+                    r1[..span].copy_from_slice(sp.read_bytes(row0 + stride, span));
+                    r2[..span].copy_from_slice(sp.read_bytes(row0 + 2 * stride, span));
+                    let dbase = p.dst + (y * p.dst_stride + p.x0) * 2;
+                    for dx in 0..cols {
+                        let acc = r0[dx] as i32 * sign[0]
+                            + r0[dx + 1] as i32 * sign[1]
+                            + r0[dx + 2] as i32 * sign[2]
+                            + r1[dx] as i32 * sign[3]
+                            + r1[dx + 1] as i32 * sign[4]
+                            + r1[dx + 2] as i32 * sign[5]
+                            + r2[dx] as i32 * sign[6]
+                            + r2[dx + 1] as i32 * sign[7]
+                            + r2[dx + 2] as i32 * sign[8];
+                        let daddr = dbase + 2 * dx;
+                        let cur = sp.read_i16(daddr);
+                        // wrap exactly like 16-bit hardware
+                        sp.write_i16(daddr, cur.wrapping_add(acc as i16));
+                    }
+                }
+            } else {
+                // overlapping dst/window: per-pixel re-reads, the exact
+                // element-serial reference order
+                for y in 0..p.h {
+                    let row0 = win_base + y * stride;
+                    for dx in 0..cols {
+                        let acc = {
+                            let r0 = sp.read_bytes(row0 + dx, 3);
+                            let r1 = sp.read_bytes(row0 + stride + dx, 3);
+                            let r2 = sp.read_bytes(row0 + 2 * stride + dx, 3);
+                            r0[0] as i32 * sign[0]
+                                + r0[1] as i32 * sign[1]
+                                + r0[2] as i32 * sign[2]
+                                + r1[0] as i32 * sign[3]
+                                + r1[1] as i32 * sign[4]
+                                + r1[2] as i32 * sign[5]
+                                + r2[0] as i32 * sign[6]
+                                + r2[1] as i32 * sign[7]
+                                + r2[2] as i32 * sign[8]
+                        };
+                        let daddr = p.dst + (y * p.dst_stride + p.x0 + dx) * 2;
+                        let cur = sp.read_i16(daddr);
+                        sp.write_i16(daddr, cur.wrapping_add(acc as i16));
+                    }
+                }
             }
         }
 
@@ -232,6 +275,25 @@ mod tests {
         unit.conv_strip(&mut sp, &p);
         assert_eq!(sp.read_i16(256), 2 * first);
         assert_eq!(first, 4); // corner of all-ones 2x2: 4 taps
+    }
+
+    #[test]
+    fn overlapping_dst_takes_reference_path() {
+        // dst inside the window's byte range: the strip must still run
+        // (element-serial fallback) and accumulate pre-write values
+        let mut sp = Scratchpad::new(4096);
+        let stride = 8;
+        let mut plane = vec![0u8; 3 * stride];
+        plane[stride + 1] = 5; // 1x1 interior at (1,1)
+        sp.write_bytes(0, &plane);
+        let mut unit = ConvUnit::new();
+        unit.set_weights(0x1FF);
+        let p = ConvStrip { src: stride + 1, src_stride: stride, dst: 4, dst_stride: 1, h: 1, w: 1, x0: 0 };
+        let (cycles, _, _, macs) = unit.conv_strip(&mut sp, &p);
+        assert_eq!(sp.read_i16(4), 5);
+        // stats identical to the disjoint path
+        assert_eq!(cycles, conv_strip_cycles(1));
+        assert_eq!(macs, 9);
     }
 
     #[test]

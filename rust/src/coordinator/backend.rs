@@ -1,7 +1,10 @@
 //! Inference backends behind a common trait: the overlay simulator
-//! (embedded mode) and the PJRT executables (desktop mode).
+//! (embedded mode), the bit-packed fast engine (`nn::opt`, the CPU
+//! serving hot path), and the PJRT executables (desktop mode).
 
 use crate::compiler::lower::CompiledNet;
+use crate::model::NetParams;
+use crate::nn::opt::{OptModel, Scratch};
 use crate::soc::Board;
 use crate::Result;
 
@@ -47,6 +50,40 @@ impl Backend for OverlayBackend {
 
     fn max_batch(&self) -> usize {
         1
+    }
+}
+
+/// The fast-path CPU backend: golden semantics through the `nn::opt`
+/// engine (packed weights, fused requant, reusable scratch arena). No
+/// cycle model — it answers as fast as the host allows, which is what
+/// the serving path wants. Cheap to construct per worker thread, so
+/// [`crate::coordinator::pipeline::serve_parallel`] can run one per
+/// core.
+pub struct OptBackend {
+    pub model: OptModel,
+    scratch: Scratch,
+}
+
+impl OptBackend {
+    pub fn new(np: &NetParams) -> Result<Self> {
+        Ok(OptBackend { model: OptModel::new(np)?, scratch: Scratch::new() })
+    }
+}
+
+impl Backend for OptBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        images
+            .iter()
+            .map(|img| self.model.forward(img, &mut self.scratch))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "nn-opt"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
     }
 }
 
@@ -119,6 +156,21 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0], out[1]);
         assert!(be.sim_cycles > 0);
+    }
+
+    #[test]
+    fn opt_backend_matches_golden() {
+        let np = random_params(&tiny_1cat(), 21);
+        let mut be = OptBackend::new(&np).unwrap();
+        let mut rng = crate::util::Rng64::new(3);
+        let imgs: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let out = be.infer_batch(&refs).unwrap();
+        for (img, scores) in imgs.iter().zip(&out) {
+            assert_eq!(scores, &crate::nn::layers::forward(&np, img).unwrap());
+        }
     }
 
     #[test]

@@ -37,6 +37,16 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram into this one (multi-worker merge).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     /// Upper bound of the bucket containing quantile `q` (0..1).
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -94,6 +104,27 @@ mod tests {
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
         assert_eq!(h.max_us, 100_000);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_everything() {
+        let mut all = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, us) in [5u64, 50, 500, 5000, 50_000, 500_000].iter().enumerate() {
+            all.record(*us);
+            if i % 2 == 0 {
+                a.record(*us);
+            } else {
+                b.record(*us);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count, all.count);
+        assert_eq!(a.sum_us, all.sum_us);
+        assert_eq!(a.max_us, all.max_us);
+        assert_eq!(a.quantile_us(0.5), all.quantile_us(0.5));
+        assert_eq!(a.quantile_us(0.99), all.quantile_us(0.99));
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod pipeline;
 
-pub use backend::{Backend, OverlayBackend};
+pub use backend::{Backend, OptBackend, OverlayBackend};
 pub use batcher::{Batcher, BatchPolicy};
 pub use metrics::{Histogram, Meter};
-pub use pipeline::{run_stream, Frame, PipelineReport, StreamConfig};
+pub use pipeline::{run_stream, serve_parallel, Frame, PipelineReport, StreamConfig};

@@ -136,7 +136,8 @@ pub fn run_stream<B: Backend>(
         dispatch(&mut now_us, backend, chunk.to_vec(), &mut latency, &mut meter, &mut report, &mut batch_sizes, &labels)?;
     }
 
-    report.rejected += batcher.rejected;
+    // (rejections were already counted per push; batcher.rejected tracks
+    // the same events — adding it here would double-count)
     report.latency = Some(HistogramSummary::from(&latency));
     report.throughput_per_s = meter.per_second();
     report.mean_batch = if report.batches > 0 {
@@ -218,6 +219,126 @@ pub fn serve_threaded<B: Backend>(
         0.0
     };
     Ok((report, backend))
+}
+
+/// Multi-worker serving front-end: the batcher dispatches onto a shared
+/// bounded queue drained by one OS thread per backend
+/// (`std::thread::scope`), so a CPU-bound backend (nn::opt, overlay
+/// sim) actually scales across cores instead of serializing behind one
+/// consumer the way [`serve_threaded`] does.
+///
+/// Each worker owns its backend and a private latency histogram; the
+/// histograms are merged after join. Returns the same report shape as
+/// [`run_stream`] plus the workers (so callers can inspect per-worker
+/// state).
+pub fn serve_parallel<B: Backend + Send>(
+    frames: Vec<Frame>,
+    mut workers: Vec<B>,
+    policy: BatchPolicy,
+) -> Result<(PipelineReport, Vec<B>)> {
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Mutex;
+
+    if workers.is_empty() {
+        return Err(crate::util::TinError::Config("serve_parallel needs >= 1 worker".into()));
+    }
+    let max_batch = workers[0].max_batch().max(1);
+    let n_workers = workers.len();
+    let (btx, brx) = sync_channel::<Vec<Request>>(2 * n_workers);
+    let brx = Mutex::new(brx);
+    let t_start = std::time::Instant::now();
+
+    struct WorkerTally {
+        completed: u64,
+        batches: u64,
+        batch_sizes: u64,
+        latency: Histogram,
+    }
+
+    let mut report = PipelineReport::default();
+    let tallies: Vec<Result<WorkerTally>> = std::thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter_mut()
+            .map(|be| {
+                let brx = &brx;
+                s.spawn(move || -> Result<WorkerTally> {
+                    let mut tally = WorkerTally {
+                        completed: 0,
+                        batches: 0,
+                        batch_sizes: 0,
+                        latency: Histogram::new(),
+                    };
+                    let mut failed: Option<crate::util::TinError> = None;
+                    loop {
+                        // hold the lock only for the dequeue
+                        let batch = match brx.lock().unwrap().recv() {
+                            Ok(b) => b,
+                            Err(_) => break, // producer done
+                        };
+                        if failed.is_some() {
+                            continue; // keep draining so the producer never blocks
+                        }
+                        let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+                        match be.infer_batch(&imgs) {
+                            Ok(_scores) => {
+                                let t = t_start.elapsed().as_micros() as u64;
+                                for req in &batch {
+                                    tally.latency.record(t.saturating_sub(req.enqueue_us));
+                                    tally.completed += 1;
+                                }
+                                tally.batches += 1;
+                                tally.batch_sizes += batch.len() as u64;
+                            }
+                            Err(e) => failed = Some(e),
+                        }
+                    }
+                    match failed {
+                        Some(e) => Err(e),
+                        None => Ok(tally),
+                    }
+                })
+            })
+            .collect();
+
+        // producer side: feed the batcher, dispatch to the queue
+        let mut batcher = Batcher::new(policy);
+        for frame in frames {
+            let now = t_start.elapsed().as_micros() as u64;
+            if !batcher.push(Request { id: frame.id, enqueue_us: now, image: frame.image }) {
+                report.rejected += 1;
+            }
+            while let Some(batch) = batcher.poll(t_start.elapsed().as_micros() as u64) {
+                if btx.send(batch).is_err() {
+                    break;
+                }
+            }
+        }
+        for chunk in batcher.flush().chunks(max_batch) {
+            btx.send(chunk.to_vec()).ok();
+        }
+        drop(btx); // disconnect -> workers drain and exit
+
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut latency = Histogram::new();
+    let mut batch_sizes = 0u64;
+    for t in tallies {
+        let t = t?;
+        report.completed += t.completed;
+        report.batches += t.batches;
+        batch_sizes += t.batch_sizes;
+        latency.merge(&t.latency);
+    }
+    let wall = t_start.elapsed().as_secs_f64();
+    report.throughput_per_s = report.completed as f64 / wall.max(1e-9);
+    report.latency = Some(HistogramSummary::from(&latency));
+    report.mean_batch = if report.batches > 0 {
+        batch_sizes as f64 / report.batches as f64
+    } else {
+        0.0
+    };
+    Ok((report, workers))
 }
 
 #[cfg(test)]
@@ -309,6 +430,40 @@ mod tests {
         assert_eq!(r.completed + r.rejected, 64);
         assert_eq!(r.completed, be.seen);
         assert!(r.latency.unwrap().p99_us > 0);
+    }
+
+    #[test]
+    fn parallel_serving_conserves_frames() {
+        let workers: Vec<MockBackend> = (0..4).map(|_| MockBackend::new(0)).collect();
+        let (r, workers) = serve_parallel(
+            frames(200),
+            workers,
+            BatchPolicy { max_batch: 8, max_wait_us: 100, queue_cap: 256 },
+        )
+        .unwrap();
+        assert_eq!(r.completed + r.rejected, 200);
+        let seen: u64 = workers.iter().map(|w| w.seen).sum();
+        assert_eq!(seen, r.completed);
+        assert!(r.throughput_per_s > 0.0);
+        assert!(r.latency.is_some());
+    }
+
+    #[test]
+    fn parallel_serving_rejects_empty_worker_pool() {
+        let workers: Vec<MockBackend> = Vec::new();
+        assert!(serve_parallel(frames(4), workers, BatchPolicy::default()).is_err());
+    }
+
+    #[test]
+    fn parallel_serving_single_worker_matches_threaded_totals() {
+        let (r, workers) = serve_parallel(
+            frames(64),
+            vec![MockBackend::new(0)],
+            BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 64 },
+        )
+        .unwrap();
+        assert_eq!(r.completed + r.rejected, 64);
+        assert_eq!(workers[0].seen, r.completed);
     }
 
     #[test]

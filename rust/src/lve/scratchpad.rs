@@ -92,6 +92,75 @@ impl Scratchpad {
         self.mem[addr..addr + len].fill(v);
         Ok(())
     }
+
+    /// Bulk copy inside the scratchpad with memmove (snapshot) semantics
+    /// — overlap-safe, no temporary allocation.
+    pub fn copy_within(&mut self, src: usize, dst: usize, n: usize) -> Result<()> {
+        self.check(src, n)?;
+        self.check(dst, n)?;
+        self.mem.copy_within(src..src + n, dst);
+        Ok(())
+    }
+
+    /// Strided byte copy `dst[i*ds] = src[i*ss]` for `i < n`, preserving
+    /// the element-serial order of the reference implementation. Bulk
+    /// fast paths kick in for unit strides and for disjoint ranges; the
+    /// element loop remains for every other (overlapping / degenerate)
+    /// case so observable semantics never change.
+    pub fn copy_strided(&mut self, dst: usize, ds: usize, src: usize, ss: usize, n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        let src_span = (n - 1) * ss + 1;
+        let dst_span = (n - 1) * ds + 1;
+        self.check(src, src_span)?;
+        self.check(dst, dst_span)?;
+        if ss == 1 && ds == 1 && (dst <= src || src + n <= dst) {
+            // backward/disjoint unit-stride: element-serial == memmove
+            self.mem.copy_within(src..src + n, dst);
+        } else if ss >= 1 && ds >= 1 && (src + src_span <= dst || dst + dst_span <= src) {
+            // disjoint: split into a read half and a write half
+            let (rd, wr): (&[u8], &mut [u8]) = if src < dst {
+                let (lo, hi) = self.mem.split_at_mut(dst);
+                (&lo[src..src + src_span], &mut hi[..dst_span])
+            } else {
+                let (lo, hi) = self.mem.split_at_mut(src);
+                (&hi[..src_span], &mut lo[dst..dst + dst_span])
+            };
+            for (d, s) in wr.iter_mut().step_by(ds).zip(rd.iter().step_by(ss)).take(n) {
+                *d = *s;
+            }
+        } else {
+            for i in 0..n {
+                self.mem[dst + i * ds] = self.mem[src + i * ss];
+            }
+        }
+        Ok(())
+    }
+
+    /// Disjoint (read, write) slice pair for bulk op implementations;
+    /// `None` when the ranges overlap (callers fall back to the
+    /// element-serial path).
+    pub fn rw_pair(
+        &mut self,
+        read: (usize, usize),
+        write: (usize, usize),
+    ) -> Option<(&[u8], &mut [u8])> {
+        let (ra, rn) = read;
+        let (wa, wn) = write;
+        if ra + rn > self.mem.len() || wa + wn > self.mem.len() {
+            return None;
+        }
+        if ra + rn <= wa {
+            let (lo, hi) = self.mem.split_at_mut(wa);
+            Some((&lo[ra..ra + rn], &mut hi[..wn]))
+        } else if wa + wn <= ra {
+            let (lo, hi) = self.mem.split_at_mut(ra);
+            Some((&hi[..rn], &mut lo[wa..wa + wn]))
+        } else {
+            None
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +190,48 @@ mod tests {
         let mut sp = Scratchpad::new(8);
         sp.fill(2, 4, 9).unwrap();
         assert_eq!(sp.read_bytes(0, 8), &[0, 0, 9, 9, 9, 9, 0, 0]);
+    }
+
+    #[test]
+    fn copy_within_handles_overlap() {
+        let mut sp = Scratchpad::new(16);
+        sp.write_bytes(0, &[1, 2, 3, 4]);
+        sp.copy_within(0, 2, 4).unwrap();
+        assert_eq!(sp.read_bytes(2, 4), &[1, 2, 3, 4]);
+        assert!(sp.copy_within(12, 0, 8).is_err());
+    }
+
+    #[test]
+    fn copy_strided_matches_element_reference() {
+        // randomized strides/addresses vs a plain element loop
+        crate::testkit::check(100, |rng| {
+            let size = 256;
+            let n = rng.below(24) as usize;
+            let ss = rng.below(4) as usize;
+            let ds = rng.below(4) as usize;
+            let span_s = if n == 0 { 0 } else { (n - 1) * ss + 1 };
+            let span_d = if n == 0 { 0 } else { (n - 1) * ds + 1 };
+            let src = rng.below((size - span_s.max(1)) as u32 + 1) as usize;
+            let dst = rng.below((size - span_d.max(1)) as u32 + 1) as usize;
+            let mut sp = Scratchpad::new(size);
+            for i in 0..size {
+                sp.write_u8(i, (i * 7 + 13) as u8);
+            }
+            let mut want: Vec<u8> = sp.read_bytes(0, size).to_vec();
+            for i in 0..n {
+                want[dst + i * ds] = want[src + i * ss];
+            }
+            sp.copy_strided(dst, ds, src, ss, n).unwrap();
+            assert_eq!(sp.read_bytes(0, size), &want[..], "n={n} ss={ss} ds={ds} src={src} dst={dst}");
+        });
+    }
+
+    #[test]
+    fn rw_pair_rejects_overlap() {
+        let mut sp = Scratchpad::new(64);
+        assert!(sp.rw_pair((0, 16), (8, 16)).is_none());
+        assert!(sp.rw_pair((0, 16), (16, 16)).is_some());
+        assert!(sp.rw_pair((32, 8), (0, 8)).is_some());
+        assert!(sp.rw_pair((60, 8), (0, 8)).is_none()); // read OOB
     }
 }

@@ -12,9 +12,9 @@
 use std::path::PathBuf;
 
 use tinbinn::compiler::lower::{compile, InputMode};
-use tinbinn::coordinator::backend::{Backend, OverlayBackend, PjrtBackend};
+use tinbinn::coordinator::backend::{Backend, OptBackend, OverlayBackend, PjrtBackend};
 use tinbinn::coordinator::batcher::BatchPolicy;
-use tinbinn::coordinator::pipeline::{serve_threaded, Frame};
+use tinbinn::coordinator::pipeline::{serve_parallel, serve_threaded, Frame};
 use tinbinn::data::tbd::load_tbd;
 use tinbinn::nn::layers::classify;
 use tinbinn::report::bench;
@@ -30,8 +30,9 @@ fn usage() -> ! {
            report [--all|--ops|--accuracy|--timing|--speedup|--resources|--power|--fig4|--train]\n\
                   [--limit N]            accuracy sample size (default 200)\n\
            sim     [--task 10cat|1cat]   one overlay inference + layer table\n\
-           eval    [--task T] [--backend overlay|golden|pjrt] [--limit N]\n\
+           eval    [--task T] [--backend overlay|golden|opt|pjrt] [--limit N]\n\
            serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
+                   [--backend pjrt|opt] [--workers W]   (opt: W nn::opt workers)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
          \n\
          env: TINBINN_ARTIFACTS overrides the artifacts directory"
@@ -188,6 +189,13 @@ fn real_main() -> tinbinn::Result<()> {
                         tinbinn::soc::cycles_to_ms(be.sim_cycles) / n as f64
                     );
                 }
+                "opt" => {
+                    let mut be = OptBackend::new(&np)?;
+                    for i in 0..n {
+                        let s = be.infer_batch(&[ds.image(i)])?;
+                        correct += (classify(&s[0]) == ds.labels[i] as usize) as usize;
+                    }
+                }
                 "pjrt" => {
                     let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
                     for i in 0..n {
@@ -213,7 +221,8 @@ fn real_main() -> tinbinn::Result<()> {
             let n = args.opt_usize("--frames", 256);
             let batch = args.opt_usize("--batch", 8);
             let wait = args.opt_usize("--wait-us", 2000) as u64;
-            let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
+            let backend_name = args.opt("--backend").unwrap_or_else(|| "pjrt".into());
+            let workers = args.opt_usize("--workers", 4);
             let ds = load_tbd(dir.join(format!("data_{task}_test.tbd")))?;
             let frames: Vec<Frame> = (0..n)
                 .map(|i| Frame {
@@ -223,12 +232,26 @@ fn real_main() -> tinbinn::Result<()> {
                 })
                 .collect();
             let policy = BatchPolicy { max_batch: batch, max_wait_us: wait, queue_cap: 64 };
-            let (report, be) = serve_threaded(frames, PjrtBackend { rt }, policy)?;
+            let (report, backend_label) = match backend_name.as_str() {
+                "opt" => {
+                    // multi-worker CPU serving on the fast engine
+                    let np = tables::load_task(&dir, &task)?;
+                    let pool: tinbinn::Result<Vec<OptBackend>> =
+                        (0..workers.max(1)).map(|_| OptBackend::new(&np)).collect();
+                    let (report, _pool) = serve_parallel(frames, pool?, policy)?;
+                    (report, format!("nn-opt x{}", workers.max(1)))
+                }
+                _ => {
+                    let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
+                    let (report, be) = serve_threaded(frames, PjrtBackend { rt }, policy)?;
+                    (report, be.name().to_string())
+                }
+            };
             let lat = report.latency.unwrap_or_default();
             println!(
                 "served {} frames on {}: {:.0} fps, mean batch {:.2}, latency mean {:.0}us p50 {}us p99 {}us, rejected {}",
                 report.completed,
-                be.name(),
+                backend_label,
                 report.throughput_per_s,
                 report.mean_batch,
                 lat.mean_us,

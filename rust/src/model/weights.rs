@@ -135,7 +135,12 @@ pub fn load_tbw(path: impl AsRef<Path>, name: &str) -> Result<NetParams> {
             3 => Layer::Svm { nout: b },
             _ => return Err(TinError::Format(format!("unknown layer kind {kind}"))),
         });
-        params.push(LayerParams { k_in, n_out: b, words, bias, shift });
+        let p = LayerParams { k_in, n_out: b, words, bias, shift };
+        // Reject hostile containers up front: quant_scalar computes
+        // `1 << (shift - 1)` / `>> shift`, which panics in debug builds
+        // for shift >= 32 (crate::nn::pack::MAX_SHIFT).
+        crate::nn::pack::validate_params(&p)?;
+        params.push(p);
     }
 
     Ok(NetParams {
@@ -251,6 +256,30 @@ mod tests {
         let back = load_tbw(&path, "1cat").unwrap();
         assert_eq!(back.net.layers, np.net.layers);
         assert_eq!(back.params, np.params);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn hostile_shift_rejected() {
+        // hand-built TBW1 with a dense layer whose shift would make
+        // quant_scalar's `1 << (shift - 1)` overflow
+        let mut raw: Vec<u8> = Vec::new();
+        raw.extend_from_slice(b"TBW1");
+        for v in [1u16, 1, 4, 1] {
+            raw.extend_from_slice(&v.to_le_bytes()); // h, w, c, n_layers
+        }
+        raw.push(2); // dense
+        raw.extend_from_slice(&4u16.to_le_bytes()); // nin
+        raw.extend_from_slice(&1u16.to_le_bytes()); // nout
+        raw.push(40); // hostile shift
+        raw.extend_from_slice(&0i32.to_le_bytes()); // bias[0]
+        raw.extend_from_slice(&0u32.to_le_bytes()); // words[0]
+        let dir = std::env::temp_dir().join("tinbinn_tbw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hostile_shift.tbw");
+        std::fs::write(&path, &raw).unwrap();
+        let err = load_tbw(&path, "x").unwrap_err();
+        assert!(err.to_string().contains("shift"), "{err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -45,8 +45,10 @@ pub fn conv3x3_binary(x: &Tensor3, p: &LayerParams) -> Tensor3 {
     let cout = p.n_out;
     let mut out = Tensor3::zeros(h, w, cout);
 
-    // Pre-expand weights to ±1 i32 (hot path uses nn::opt in benches; the
-    // golden model favours obviousness over speed).
+    // Pre-expand weights to ±1 i32. The golden model favours obviousness
+    // over speed; the hot path is crate::nn::opt::conv3x3_requant, which
+    // keeps the words packed and is pinned bit-exact to this function by
+    // nn/proptests.rs.
     let kw_words = p.kw();
     let mut wts = vec![0i32; cout * p.k_in];
     for n in 0..cout {

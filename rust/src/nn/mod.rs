@@ -1,5 +1,13 @@
-//! S5: golden fixed-point NN library — the bit-exact reference for the
-//! overlay simulator, the JAX fixed model, and the PJRT artifact.
+//! S5: fixed-point NN library — two engines over one numeric contract.
+//!
+//! * [`layers`] — the **golden model**: the bit-exact, obviousness-first
+//!   reference for the overlay simulator, the JAX fixed model, and the
+//!   PJRT artifact. Never optimized; it is the oracle.
+//! * [`opt`] — the **fast path**: blocked, bit-packed, fused inference
+//!   (packed-word sign trick, scratch arena, zero per-layer
+//!   allocations). Bit-exact with the golden model; `proptests` pins the
+//!   two together over randomized nets.
+//! * [`pack`] — packed-weight preparation shared by the fast path.
 //!
 //! Numeric contract (DESIGN.md): u8 activations, ±1 weights, i32
 //! accumulation, per-channel i32 bias, per-layer round-half-up right
@@ -10,8 +18,12 @@
 pub mod floatref;
 pub mod grouped;
 pub mod layers;
+pub mod opt;
+pub mod pack;
 
 pub use layers::{conv3x3_binary, dense_binary, forward, maxpool2, quant_act, Tensor3};
+pub use opt::{OptModel, Scratch};
+pub use pack::PackedLayer;
 
 #[cfg(test)]
 mod proptests;

@@ -1,0 +1,456 @@
+//! `nn::opt` — the blocked, bit-packed fast inference engine.
+//!
+//! Bit-exact with the golden model ([`crate::nn::layers`]) but
+//! restructured for speed, the way FINN-style BNN kernels are:
+//!
+//! * **Weights stay packed.** No ±1 expansion: kernels walk the set bits
+//!   of each packed row ([`crate::nn::pack::plus_sum`]) and use the
+//!   add/sub sign identity `acc = 2·Σ₊ − Σ`, so the window sum Σ is
+//!   computed once per output pixel and shared by every output channel.
+//! * **Channel-blocked conv.** The 3x3xC window is gathered once per
+//!   pixel (three contiguous row copies in the interior) and all `cout`
+//!   channels consume it — the golden model re-reads the window with
+//!   bounds checks per (pixel, channel, tap).
+//! * **Fused conv + requant.** Accumulators are biased, shifted and
+//!   clamped as they are produced; no i32 accumulator map round-trips
+//!   through a second full-image pass.
+//! * **Zero per-layer allocations.** A reusable [`Scratch`] arena holds
+//!   the ping/pong feature maps and the window buffer; a full
+//!   [`OptModel::forward`] allocates only the returned score vector.
+//!
+//! The golden model stays the obvious oracle; `nn/proptests.rs` pins the
+//! two together over randomized shapes, weights and images. Perf work
+//! happens here — never by complicating the oracle.
+
+use crate::model::zoo::Layer;
+use crate::model::NetParams;
+use crate::nn::layers::quant_scalar;
+use crate::nn::pack::{plus_sum, PackedLayer};
+use crate::util::TinError;
+use crate::Result;
+
+/// One compiled stage of the fast path.
+enum Stage {
+    Conv { p: PackedLayer, h: usize, w: usize, cin: usize },
+    Pool { h: usize, w: usize, c: usize },
+    Dense(PackedLayer),
+    Svm(PackedLayer),
+}
+
+/// A network prepared for fast forward passes: packed tail-masked
+/// weights plus the geometry of every stage, validated up front.
+pub struct OptModel {
+    input_hwc: (usize, usize, usize),
+    stages: Vec<Stage>,
+    /// Largest feature-map buffer (elements) any stage reads or writes.
+    buf_elems: usize,
+    /// Largest conv window (9*cin elements).
+    win_elems: usize,
+    ncat: usize,
+}
+
+/// Reusable scratch arena: two feature-map buffers (ping/pong) and the
+/// shared conv window. Grow-only; one arena serves any number of
+/// forward passes and any model it has been sized for.
+#[derive(Default)]
+pub struct Scratch {
+    ping: Vec<i32>,
+    pong: Vec<i32>,
+    win: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    fn ensure(&mut self, model: &OptModel) {
+        if self.ping.len() < model.buf_elems {
+            self.ping.resize(model.buf_elems, 0);
+        }
+        if self.pong.len() < model.buf_elems {
+            self.pong.resize(model.buf_elems, 0);
+        }
+        if self.win.len() < model.win_elems {
+            self.win.resize(model.win_elems, 0);
+        }
+    }
+}
+
+impl OptModel {
+    /// Prepare a network: validates every layer's parameters (shift
+    /// range, word/bias geometry, K against the feature-map geometry)
+    /// and tail-masks the packed rows.
+    pub fn new(np: &NetParams) -> Result<Self> {
+        let (h0, w0, c0) = np.net.input_hwc;
+        let (mut h, mut w, mut c) = (h0, w0, c0);
+        let mut stages = Vec::new();
+        let mut buf_elems = h * w * c;
+        let mut win_elems = 1usize;
+        let mut ncat = 0usize;
+        let mut wi = 0usize;
+
+        for ly in &np.net.layers {
+            match *ly {
+                Layer::Conv3x3 { cout } => {
+                    let p = np
+                        .params
+                        .get(wi)
+                        .ok_or_else(|| TinError::Config("missing conv params".into()))?;
+                    if p.k_in != 9 * c || p.n_out != cout {
+                        return Err(TinError::Config(format!(
+                            "conv layer {wi}: K {} != 9x{c} or n_out {} != {cout}",
+                            p.k_in, p.n_out
+                        )));
+                    }
+                    stages.push(Stage::Conv { p: PackedLayer::prepare(p)?, h, w, cin: c });
+                    win_elems = win_elems.max(9 * c);
+                    c = cout;
+                    buf_elems = buf_elems.max(h * w * c);
+                    wi += 1;
+                }
+                Layer::MaxPool2 => {
+                    if h % 2 != 0 || w % 2 != 0 {
+                        return Err(TinError::Config(format!(
+                            "maxpool2 on odd feature map {h}x{w}"
+                        )));
+                    }
+                    stages.push(Stage::Pool { h, w, c });
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Dense { nout } | Layer::Svm { nout } => {
+                    let p = np
+                        .params
+                        .get(wi)
+                        .ok_or_else(|| TinError::Config("missing dense params".into()))?;
+                    if p.k_in != h * w * c || p.n_out != nout {
+                        return Err(TinError::Config(format!(
+                            "dense layer {wi}: K {} != {h}x{w}x{c} or n_out {} != {nout}",
+                            p.k_in, p.n_out
+                        )));
+                    }
+                    let pl = PackedLayer::prepare(p)?;
+                    if matches!(ly, Layer::Svm { .. }) {
+                        ncat = nout;
+                        stages.push(Stage::Svm(pl));
+                    } else {
+                        stages.push(Stage::Dense(pl));
+                    }
+                    h = 1;
+                    w = 1;
+                    c = nout;
+                    buf_elems = buf_elems.max(nout);
+                    wi += 1;
+                }
+            }
+        }
+        if ncat == 0 {
+            return Err(TinError::Config("network has no Svm head".into()));
+        }
+        Ok(OptModel { input_hwc: (h0, w0, c0), stages, buf_elems, win_elems, ncat })
+    }
+
+    /// Output category count (SVM head width).
+    pub fn ncat(&self) -> usize {
+        self.ncat
+    }
+
+    /// Fast forward pass: u8 HWC image → raw i32 SVM scores. Bit-exact
+    /// with [`crate::nn::layers::forward`]. Feature maps live entirely
+    /// in `scratch`; only the returned score vector allocates.
+    pub fn forward(&self, image: &[u8], scratch: &mut Scratch) -> Result<Vec<i32>> {
+        let mut scores = Vec::new();
+        self.forward_into(image, scratch, &mut scores)?;
+        Ok(scores)
+    }
+
+    /// Allocation-free variant: scores land in the caller's vector.
+    pub fn forward_into(
+        &self,
+        image: &[u8],
+        scratch: &mut Scratch,
+        scores: &mut Vec<i32>,
+    ) -> Result<()> {
+        let (h0, w0, c0) = self.input_hwc;
+        if image.len() != h0 * w0 * c0 {
+            return Err(TinError::Config(format!(
+                "image len {} != {h0}x{w0}x{c0}",
+                image.len()
+            )));
+        }
+        scratch.ensure(self);
+        for (dst, &b) in scratch.ping.iter_mut().zip(image.iter()) {
+            *dst = b as i32;
+        }
+
+        let mut src_is_ping = true;
+        for stage in &self.stages {
+            let Scratch { ping, pong, win } = &mut *scratch;
+            let (src, dst): (&[i32], &mut [i32]) = if src_is_ping {
+                (&ping[..], &mut pong[..])
+            } else {
+                (&pong[..], &mut ping[..])
+            };
+            match stage {
+                Stage::Conv { p, h, w, cin } => {
+                    conv3x3_requant(
+                        &src[..h * w * cin],
+                        *h,
+                        *w,
+                        *cin,
+                        p,
+                        &mut win[..9 * cin],
+                        &mut dst[..h * w * p.n_out],
+                    );
+                }
+                Stage::Pool { h, w, c } => {
+                    maxpool2_into(&src[..h * w * c], *h, *w, *c, &mut dst[..(h / 2) * (w / 2) * c]);
+                }
+                Stage::Dense(p) => {
+                    dense_binary_fast(&src[..p.k_in], p, &mut dst[..p.n_out]);
+                    for (v, &b) in dst[..p.n_out].iter_mut().zip(p.bias.iter()) {
+                        *v = quant_scalar(*v, b, p.shift);
+                    }
+                }
+                Stage::Svm(p) => {
+                    scores.clear();
+                    scores.resize(p.n_out, 0);
+                    dense_binary_fast(&src[..p.k_in], p, &mut scores[..]);
+                    for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
+                        *v = v.wrapping_add(b);
+                    }
+                    return Ok(());
+                }
+            }
+            src_is_ping = !src_is_ping;
+        }
+        Err(TinError::Config("network has no Svm head".into()))
+    }
+}
+
+/// Drop-in counterpart of [`crate::nn::layers::forward`] on the fast
+/// engine (prepares the model and a scratch arena per call — use
+/// [`OptModel`] + [`Scratch`] directly on hot paths).
+pub fn forward(np: &NetParams, image: &[u8]) -> Result<Vec<i32>> {
+    let model = OptModel::new(np)?;
+    let mut scratch = Scratch::new();
+    model.forward(image, &mut scratch)
+}
+
+/// Fused binarized 3x3 'same' conv + bias + requant over an HWC map:
+/// u8-range activations in `src` (h*w*c), u8-range activations out
+/// (h*w*n_out). `win` must hold 9*c elements.
+///
+/// The window is gathered once per pixel; out-of-bounds taps are zeros,
+/// which ±1 weights cannot distinguish from the golden model's skipped
+/// taps — so `2·Σ₊ − Σ` over the window equals the golden accumulator.
+pub fn conv3x3_requant(
+    src: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    p: &PackedLayer,
+    win: &mut [i32],
+    dst: &mut [i32],
+) {
+    assert_eq!(p.k_in, 9 * c, "conv K mismatch");
+    assert_eq!(win.len(), 9 * c);
+    assert_eq!(src.len(), h * w * c);
+    assert_eq!(dst.len(), h * w * p.n_out);
+    let nout = p.n_out;
+    for y in 0..h {
+        let interior_y = y > 0 && y + 1 < h;
+        for x in 0..w {
+            if interior_y && x > 0 && x + 1 < w {
+                // interior: three contiguous 3c-element row copies
+                for ky in 0..3usize {
+                    let s = ((y - 1 + ky) * w + (x - 1)) * c;
+                    win[ky * 3 * c..(ky * 3 + 3) * c].copy_from_slice(&src[s..s + 3 * c]);
+                }
+            } else {
+                // border: zero the window, then copy the in-bounds span
+                // of each window row
+                win.fill(0);
+                let x0 = x.saturating_sub(1);
+                let x1 = (x + 2).min(w);
+                let kx0 = x0 + 1 - x; // window column of src column x0
+                for ky in 0..3usize {
+                    let yy = y as isize + ky as isize - 1;
+                    if yy < 0 || yy >= h as isize {
+                        continue;
+                    }
+                    let s = ((yy as usize) * w + x0) * c;
+                    let d = (ky * 3 + kx0) * c;
+                    let len = (x1 - x0) * c;
+                    win[d..d + len].copy_from_slice(&src[s..s + len]);
+                }
+            }
+            let mut total = 0i32;
+            for &v in win.iter() {
+                total += v;
+            }
+            let out_base = (y * w + x) * nout;
+            for n in 0..nout {
+                let acc = 2 * plus_sum(p.row(n), win) - total;
+                dst[out_base + n] = quant_scalar(acc, p.bias[n], p.shift);
+            }
+        }
+    }
+}
+
+/// Word-at-a-time binarized dense layer: raw i32 accumulators (bias NOT
+/// applied), walking packed rows without sign expansion. Bit-exact with
+/// [`crate::nn::layers::dense_binary`].
+pub fn dense_binary_fast(flat: &[i32], p: &PackedLayer, out: &mut [i32]) {
+    assert_eq!(flat.len(), p.k_in, "dense K mismatch");
+    assert_eq!(out.len(), p.n_out);
+    let mut total = 0i32;
+    for &v in flat.iter() {
+        total += v;
+    }
+    for (n, slot) in out.iter_mut().enumerate() {
+        *slot = 2 * plus_sum(p.row(n), flat) - total;
+    }
+}
+
+/// 2x2 stride-2 max pooling into a caller-provided buffer.
+pub fn maxpool2_into(src: &[i32], h: usize, w: usize, c: usize, dst: &mut [i32]) {
+    assert!(h % 2 == 0 && w % 2 == 0);
+    let (oh, ow) = (h / 2, w / 2);
+    assert_eq!(src.len(), h * w * c);
+    assert_eq!(dst.len(), oh * ow * c);
+    for y in 0..oh {
+        for x in 0..ow {
+            let r0 = ((2 * y) * w + 2 * x) * c;
+            let r1 = ((2 * y + 1) * w + 2 * x) * c;
+            let o = (y * ow + x) * c;
+            for ch in 0..c {
+                let m = src[r0 + ch]
+                    .max(src[r0 + c + ch])
+                    .max(src[r1 + ch])
+                    .max(src[r1 + c + ch]);
+                dst[o + ch] = m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{random_params, LayerParams};
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+    use crate::nn::layers;
+    use crate::util::Rng64;
+
+    #[test]
+    fn opt_forward_matches_golden_tiny_net() {
+        let np = random_params(&tiny_1cat(), 7);
+        let mut rng = Rng64::new(1);
+        let model = OptModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        for _ in 0..3 {
+            let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+            let golden = layers::forward(&np, &img).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(golden, fast);
+        }
+    }
+
+    #[test]
+    fn opt_forward_matches_golden_10cat() {
+        let np = random_params(&reduced_10cat(), 3);
+        let mut rng = Rng64::new(2);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        assert_eq!(layers::forward(&np, &img).unwrap(), forward(&np, &img).unwrap());
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let np = random_params(&tiny_1cat(), 7);
+        assert!(forward(&np, &[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_shift() {
+        let mut np = random_params(&tiny_1cat(), 7);
+        np.params[0].shift = 40;
+        assert!(OptModel::new(&np).is_err());
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch() {
+        let mut np = random_params(&tiny_1cat(), 7);
+        np.params[0].k_in = 5;
+        assert!(OptModel::new(&np).is_err());
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_models() {
+        let np1 = random_params(&tiny_1cat(), 1);
+        let np2 = random_params(&reduced_10cat(), 2);
+        let m1 = OptModel::new(&np1).unwrap();
+        let m2 = OptModel::new(&np2).unwrap();
+        let mut scratch = Scratch::new();
+        let img = vec![128u8; 3072];
+        let a = m1.forward(&img, &mut scratch).unwrap();
+        let b = m2.forward(&img, &mut scratch).unwrap();
+        let a2 = m1.forward(&img, &mut scratch).unwrap();
+        assert_eq!(a, a2, "scratch reuse must not change results");
+        assert_eq!(b.len(), 10);
+    }
+
+    #[test]
+    fn conv_kernel_matches_golden_on_borders() {
+        // 1-channel 3x3 map: every pixel is a border pixel
+        let mut rng = Rng64::new(4);
+        let img: Vec<u8> = (0..9).map(|_| rng.next_u8()).collect();
+        let x = layers::Tensor3::from_u8(3, 3, 1, &img);
+        let p = LayerParams {
+            k_in: 9,
+            n_out: 2,
+            words: vec![rng.next_u32(), rng.next_u32()],
+            bias: vec![3, -4],
+            shift: 2,
+        };
+        let golden = layers::quant_act(&layers::conv3x3_binary(&x, &p), &p.bias, p.shift);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9];
+        let mut dst = vec![0i32; 9 * 2];
+        conv3x3_requant(&src, 3, 3, 1, &pl, &mut win, &mut dst);
+        assert_eq!(dst, golden.data);
+    }
+
+    #[test]
+    fn dense_fast_matches_golden_with_stray_tail_bits() {
+        let mut rng = Rng64::new(5);
+        let k = 45; // non-word-aligned: tail bits matter
+        let p = LayerParams {
+            k_in: k,
+            n_out: 3,
+            words: (0..3 * 2).map(|_| rng.next_u32()).collect(),
+            bias: vec![0; 3],
+            shift: 0,
+        };
+        let flat: Vec<i32> = (0..k).map(|_| rng.next_u8() as i32).collect();
+        let golden = layers::dense_binary(&flat, &p);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut out = vec![0i32; 3];
+        dense_binary_fast(&flat, &pl, &mut out);
+        assert_eq!(out, golden);
+    }
+
+    #[test]
+    fn maxpool_into_matches_golden() {
+        let mut rng = Rng64::new(6);
+        let (h, w, c) = (4, 6, 3);
+        let data: Vec<i32> = (0..h * w * c).map(|_| rng.next_u8() as i32).collect();
+        let x = layers::Tensor3 { h, w, c, data: data.clone() };
+        let golden = layers::maxpool2(&x);
+        let mut dst = vec![0i32; (h / 2) * (w / 2) * c];
+        maxpool2_into(&data, h, w, c, &mut dst);
+        assert_eq!(dst, golden.data);
+    }
+}

@@ -1,0 +1,191 @@
+//! Packed-weight preparation for the fast inference engine ([`crate::nn::opt`]).
+//!
+//! The golden model expands every packed weight word back into ±1 `i32`s
+//! before use; the fast path keeps rows packed. [`PackedLayer`] owns a
+//! tail-masked copy of one layer's weight words so kernels can walk set
+//! bits word-at-a-time without per-bit range tracking, and [`plus_sum`]
+//! is the shared Σ₊ walk behind the add/sub sign identity:
+//!
+//! ```text
+//! Σ_k w_k·x_k  =  Σ₊ − Σ₋  =  2·Σ₊ − Σ        (w_k ∈ {−1, +1})
+//! ```
+//!
+//! so one window/feature sum Σ is computed once and reused by every
+//! output channel, and only the set bits of each packed row are visited.
+
+use crate::model::weights::LayerParams;
+use crate::util::TinError;
+use crate::Result;
+
+/// Largest legal requant shift. `quant_scalar` computes
+/// `1 << (shift - 1)` and `>> shift` on `i32`, so any shift >= 32 from a
+/// weight file is hostile input (panic in debug builds, shift-overflow
+/// wrap in release).
+pub const MAX_SHIFT: u8 = 31;
+
+/// Validate one layer's parameters against the structural invariants
+/// every consumer (golden model, fast path, overlay lowering) assumes.
+pub fn validate_params(p: &LayerParams) -> Result<()> {
+    if p.shift > MAX_SHIFT {
+        return Err(TinError::Format(format!(
+            "layer shift {} out of range (max {MAX_SHIFT})",
+            p.shift
+        )));
+    }
+    if p.bias.len() != p.n_out {
+        return Err(TinError::Format(format!(
+            "bias len {} != n_out {}",
+            p.bias.len(),
+            p.n_out
+        )));
+    }
+    if p.words.len() != p.n_out * p.kw() {
+        return Err(TinError::Format(format!(
+            "weight words {} != n_out {} x kw {}",
+            p.words.len(),
+            p.n_out,
+            p.kw()
+        )));
+    }
+    Ok(())
+}
+
+/// One weighted layer with tail-masked packed rows, ready for the
+/// word-at-a-time kernels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedLayer {
+    /// GEMM K (9*cin for conv, flattened features for dense/svm).
+    pub k_in: usize,
+    /// Output channels / neurons.
+    pub n_out: usize,
+    /// Words per row.
+    pub kw: usize,
+    /// Row-major `[n_out][kw]`; bits >= k_in in each row's last word are
+    /// cleared so bit walks never index past the feature vector.
+    pub words: Vec<u32>,
+    pub bias: Vec<i32>,
+    pub shift: u8,
+}
+
+impl PackedLayer {
+    /// Prepare (validate + tail-mask) a layer for the fast path.
+    pub fn prepare(p: &LayerParams) -> Result<Self> {
+        validate_params(p)?;
+        let kw = p.kw();
+        let mut words = p.words.clone();
+        let rem = p.k_in % 32;
+        if rem != 0 {
+            let mask = (1u32 << rem) - 1;
+            for n in 0..p.n_out {
+                words[n * kw + kw - 1] &= mask;
+            }
+        }
+        Ok(PackedLayer {
+            k_in: p.k_in,
+            n_out: p.n_out,
+            kw,
+            words,
+            bias: p.bias.clone(),
+            shift: p.shift,
+        })
+    }
+
+    /// Packed row of output channel `n`.
+    #[inline]
+    pub fn row(&self, n: usize) -> &[u32] {
+        &self.words[n * self.kw..(n + 1) * self.kw]
+    }
+}
+
+/// Σ₊ of one packed row over `vals`: the sum of `vals[k]` for every set
+/// bit k. With Σ = sum(vals), the ±1 dot product is `2·Σ₊ − Σ`.
+///
+/// `vals.len()` must cover the row's K (tail-masked rows guarantee no
+/// out-of-range bit).
+#[inline]
+pub fn plus_sum(row: &[u32], vals: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    let mut base = 0usize;
+    for &word in row {
+        let mut w = word;
+        while w != 0 {
+            let j = w.trailing_zeros() as usize;
+            acc += vals[base + j];
+            w &= w - 1;
+        }
+        base += 32;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn layer(k_in: usize, n_out: usize, seed: u64) -> LayerParams {
+        let mut rng = Rng64::new(seed);
+        let kw = (k_in + 31) / 32;
+        LayerParams {
+            k_in,
+            n_out,
+            words: (0..n_out * kw).map(|_| rng.next_u32()).collect(),
+            bias: (0..n_out).map(|_| rng.below(100) as i32 - 50).collect(),
+            shift: (rng.below(8)) as u8,
+        }
+    }
+
+    #[test]
+    fn prepare_masks_tail_bits() {
+        let mut p = layer(33, 2, 1);
+        // force stray high bits into each row's final word
+        p.words[1] |= 0xFFFF_FFF0;
+        p.words[3] |= 0xFFFF_FFF0;
+        let pl = PackedLayer::prepare(&p).unwrap();
+        assert_eq!(pl.row(0)[1], p.words[1] & 1);
+        assert_eq!(pl.row(1)[1], p.words[3] & 1);
+        // full words untouched
+        assert_eq!(pl.row(0)[0], p.words[0]);
+    }
+
+    #[test]
+    fn prepare_keeps_aligned_rows_verbatim() {
+        let p = layer(64, 3, 2);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        assert_eq!(pl.words, p.words);
+    }
+
+    #[test]
+    fn plus_sum_matches_weight_walk() {
+        let p = layer(70, 4, 3);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut rng = Rng64::new(9);
+        let vals: Vec<i32> = (0..70).map(|_| rng.next_u8() as i32).collect();
+        let total: i32 = vals.iter().sum();
+        for n in 0..4 {
+            let want: i32 = (0..70).map(|k| p.weight(n, k) * vals[k]).sum();
+            let got = 2 * plus_sum(pl.row(n), &vals) - total;
+            assert_eq!(got, want, "row {n}");
+        }
+    }
+
+    #[test]
+    fn hostile_shift_rejected() {
+        let mut p = layer(8, 1, 4);
+        p.shift = 32;
+        assert!(validate_params(&p).is_err());
+        assert!(PackedLayer::prepare(&p).is_err());
+        p.shift = 31;
+        assert!(validate_params(&p).is_ok());
+    }
+
+    #[test]
+    fn malformed_geometry_rejected() {
+        let mut p = layer(8, 2, 5);
+        p.bias.pop();
+        assert!(validate_params(&p).is_err());
+        let mut p = layer(8, 2, 6);
+        p.words.pop();
+        assert!(validate_params(&p).is_err());
+    }
+}

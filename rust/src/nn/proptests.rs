@@ -1,7 +1,12 @@
-//! Property tests on the golden NN (in-tree generator — see testkit).
+//! Property tests on the golden NN (in-tree generator — see testkit),
+//! including the differential suite pinning the nn::opt fast path to
+//! the golden oracle over randomized shapes, weights and images.
 
-use crate::model::weights::LayerParams;
+use crate::model::weights::{random_params, LayerParams};
+use crate::model::zoo::{Layer, Net};
 use crate::nn::layers::*;
+use crate::nn::opt;
+use crate::nn::pack::PackedLayer;
 use crate::testkit::Arbitrary;
 use crate::util::Rng64;
 
@@ -128,7 +133,6 @@ fn prop_dense_flip_one_bit_changes_by_2x() {
 
 #[test]
 fn prop_forward_deterministic() {
-    use crate::model::weights::random_params;
     use crate::model::zoo::tiny_1cat;
     let np = random_params(&tiny_1cat(), 11);
     let mut rng = Rng64::new(2);
@@ -136,6 +140,97 @@ fn prop_forward_deterministic() {
     let a = forward(&np, &img).unwrap();
     let b = forward(&np, &img).unwrap();
     assert_eq!(a, b);
+}
+
+// ---- golden vs nn::opt differential suite ------------------------------
+//
+// The golden model is the oracle; the fast path must be bit-exact on
+// every shape it supports. These properties randomize geometry (incl.
+// 1-channel, non-square maps, 1-category heads), weights (incl. stray
+// tail bits in the last packed word), and images.
+
+/// Random small net: conv stacks, optional pool, optional dense,
+/// 1..4-category SVM head, on a random (possibly non-square) input.
+fn rand_net(rng: &mut Rng64) -> Net {
+    let h = 2 * (2 + rng.below(3) as usize); // 4, 6, 8
+    let w = 2 * (2 + rng.below(4) as usize); // 4..10, often != h
+    let c = 1 + rng.below(3) as usize; // incl. single-channel
+    let mut layers = vec![Layer::Conv3x3 { cout: 1 + rng.below(6) as usize }];
+    if rng.below(2) == 1 {
+        layers.push(Layer::Conv3x3 { cout: 1 + rng.below(4) as usize });
+    }
+    layers.push(Layer::MaxPool2);
+    if rng.below(2) == 1 {
+        layers.push(Layer::Dense { nout: 1 + rng.below(8) as usize });
+    }
+    layers.push(Layer::Svm { nout: 1 + rng.below(4) as usize }); // incl. 1-cat
+    Net { name: "prop".into(), input_hwc: (h, w, c), layers }
+}
+
+#[test]
+fn prop_opt_forward_matches_golden() {
+    crate::testkit::check(40, |rng| {
+        let net = rand_net(rng);
+        let np = random_params(&net, rng.next_u64());
+        let (h, w, c) = net.input_hwc;
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let golden = forward(&np, &img).unwrap();
+        let fast = opt::forward(&np, &img).unwrap();
+        assert_eq!(golden, fast, "net {:?} input {h}x{w}x{c}", net.layers);
+    });
+}
+
+#[test]
+fn prop_opt_conv_kernel_matches_golden() {
+    crate::testkit::check(100, |rng| {
+        let h = 1 + rng.below(7) as usize;
+        let w = 1 + rng.below(7) as usize;
+        let c = 1 + rng.below(4) as usize;
+        let n_out = 1 + rng.below(5) as usize;
+        let p = rand_layer(rng, 9 * c, n_out);
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(h, w, c, &img);
+        let golden = quant_act(&conv3x3_binary(&x, &p), &p.bias, p.shift);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9 * c];
+        let mut dst = vec![0i32; h * w * n_out];
+        opt::conv3x3_requant(&src, h, w, c, &pl, &mut win, &mut dst);
+        assert_eq!(dst, golden.data, "{h}x{w}x{c} -> {n_out}");
+    });
+}
+
+#[test]
+fn prop_opt_dense_matches_golden() {
+    crate::testkit::check(150, |rng| {
+        // k_in deliberately hits word-aligned and ragged sizes
+        let k_in = 1 + rng.below(130) as usize;
+        let n_out = 1 + rng.below(6) as usize;
+        let p = rand_layer(rng, k_in, n_out);
+        let flat: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+        let golden = dense_binary(&flat, &p);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut out = vec![0i32; n_out];
+        opt::dense_binary_fast(&flat, &pl, &mut out);
+        assert_eq!(out, golden);
+    });
+}
+
+#[test]
+fn prop_opt_scratch_reuse_is_stateless() {
+    // one arena across many different nets/images must never leak state
+    crate::testkit::check(20, |rng| {
+        let mut scratch = opt::Scratch::new();
+        for _ in 0..3 {
+            let net = rand_net(rng);
+            let np = random_params(&net, rng.next_u64());
+            let (h, w, c) = net.input_hwc;
+            let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+            let model = opt::OptModel::new(&np).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(fast, forward(&np, &img).unwrap());
+        }
+    });
 }
 
 // keep Arbitrary referenced until more generators land

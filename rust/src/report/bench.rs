@@ -1,8 +1,13 @@
 //! Minimal benchmarking harness (criterion is unavailable offline):
-//! warms up, runs timed iterations, reports mean / stddev / min, and
-//! prints rows in a stable machine-grepable format.
+//! warms up, runs timed iterations, reports mean / stddev / min, prints
+//! rows in a stable machine-grepable format, and serializes suites to
+//! util_json-compatible JSON so the perf trajectory is tracked in-repo
+//! (`BENCH_hotpath.json`, written by the tab_hotpath bench).
 
+use std::collections::HashMap;
 use std::time::Instant;
+
+use crate::util_json::Json;
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -18,6 +23,41 @@ impl BenchResult {
     pub fn mean_ms(&self) -> f64 {
         self.mean_s * 1e3
     }
+
+    /// Machine-readable JSON value for one result row.
+    pub fn to_json(&self) -> Json {
+        let mut m = HashMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
+        m.insert("stddev_s".to_string(), Json::Num(self.stddev_s));
+        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        Json::Obj(m)
+    }
+}
+
+/// Serialize a whole bench suite as one JSON document (schema v1:
+/// `{"suite": .., "schema": 1, "results": [row, ..]}`), parseable back
+/// with [`crate::util_json::parse`].
+pub fn suite_json(suite: &str, results: &[BenchResult]) -> String {
+    let mut m = HashMap::new();
+    m.insert("suite".to_string(), Json::Str(suite.to_string()));
+    m.insert("schema".to_string(), Json::Num(1.0));
+    m.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    );
+    Json::Obj(m).render()
+}
+
+/// Write a bench suite to a JSON file (the perf-trajectory artifact).
+pub fn write_json(
+    path: impl AsRef<std::path::Path>,
+    suite: &str,
+    results: &[BenchResult],
+) -> crate::Result<()> {
+    std::fs::write(path.as_ref(), suite_json(suite, results))?;
+    Ok(())
 }
 
 /// Time `f` for `iters` iterations after `warmup` runs.
@@ -78,5 +118,22 @@ mod tests {
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn suite_json_parses_back() {
+        let rows = vec![
+            BenchResult { name: "a".into(), iters: 3, mean_s: 0.5, stddev_s: 0.01, min_s: 0.4 },
+            BenchResult { name: "b".into(), iters: 7, mean_s: 1.5e-4, stddev_s: 0.0, min_s: 1e-4 },
+        ];
+        let text = suite_json("hotpath", &rows);
+        let j = crate::util_json::parse(&text).unwrap();
+        assert_eq!(j.get("suite").unwrap().as_str(), Some("hotpath"));
+        assert_eq!(j.get("schema").unwrap().as_f64(), Some(1.0));
+        let rs = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(rs[1].get("mean_s").unwrap().as_f64(), Some(1.5e-4));
+        assert_eq!(rs[1].get("iters").unwrap().as_f64(), Some(7.0));
     }
 }

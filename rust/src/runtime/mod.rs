@@ -13,6 +13,11 @@ use std::path::{Path, PathBuf};
 use crate::util::TinError;
 use crate::Result;
 
+// Offline builds link against the in-tree stub (see xla_stub.rs); the
+// rest of this module is written against the real `xla` API surface.
+pub mod xla_stub;
+use self::xla_stub as xla;
+
 /// Batch sizes emitted by python/compile/aot.py.
 pub const BATCHES: [usize; 3] = [1, 4, 8];
 

@@ -1,0 +1,114 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build environment has no network and no XLA shared library, so
+//! the crate carries this API-compatible stub instead of an external
+//! `xla` dependency. Every entry point that would touch a real PJRT
+//! client fails with a descriptive error at the first call
+//! ([`PjRtClient::cpu`]), so `ModelRuntime::load` returns `Err` and all
+//! callers take their documented "artifacts unavailable" path. Swapping
+//! in real bindings only requires replacing the `use xla_stub as xla`
+//! alias in [`super`] with an actual dependency.
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built with the offline xla stub (no XLA runtime in this environment)";
+
+/// Error type mirroring `xla::Error` far enough for `.to_string()`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Stub PJRT client; construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Stub compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub literal (host tensor).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT unavailable"));
+    }
+}

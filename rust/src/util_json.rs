@@ -26,6 +26,72 @@ impl Json {
         }
     }
 
+    /// Serialize back to JSON text. Object keys are emitted sorted so
+    /// output is deterministic (the HashMap has no order); non-finite
+    /// numbers become `null` (JSON has no NaN/inf).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if *n == n.trunc() && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                out.push('{');
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str((*k).clone()).render_into(out);
+                    out.push(':');
+                    m[*k].render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -127,12 +193,28 @@ impl<'a> P<'a> {
                 b'\\' => {
                     let e = self.b.get(self.i).copied().unwrap_or(b'"');
                     self.i += 1;
-                    out.push(match e {
-                        b'n' => '\n',
-                        b't' => '\t',
-                        b'r' => '\r',
-                        other => other as char,
-                    });
+                    match e {
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            // \uXXXX (BMP only — enough to roundtrip the
+                            // control-char escapes render() emits)
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| {
+                                    TinError::Format(format!("json: bad \\u escape at {}", self.i))
+                                })?;
+                            self.i += 4;
+                            out.push(char::from_u32(hex).ok_or_else(|| {
+                                TinError::Format(format!("json: invalid codepoint \\u{hex:04x}"))
+                            })?);
+                        }
+                        other => out.push(other as char),
+                    }
                 }
                 _ => out.push(c as char),
             }
@@ -227,5 +309,30 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let doc = r#"{"name": "lve_conv", "mean_s": 0.00125, "iters": 200,
+                      "tags": ["a", "b\nc"], "ok": true, "none": null}"#;
+        let j = parse(doc).unwrap();
+        let text = j.render();
+        assert_eq!(parse(&text).unwrap(), j, "roundtrip changed value: {text}");
+    }
+
+    #[test]
+    fn control_chars_roundtrip_via_u_escape() {
+        let j = Json::Str("a\u{1}b".into());
+        assert_eq!(j.render(), "\"a\\u0001b\"");
+        assert_eq!(parse(&j.render()).unwrap(), j);
+        assert!(parse(r#""bad \uZZZZ""#).is_err());
+    }
+
+    #[test]
+    fn render_is_deterministic_and_sorted() {
+        let j = parse(r#"{"b": 1, "a": 2}"#).unwrap();
+        assert_eq!(j.render(), r#"{"a":2,"b":1}"#);
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(3.0).render(), "3");
     }
 }

@@ -26,6 +26,41 @@ fn dataset(task: &str) -> Option<tinbinn::data::tbd::Dataset> {
 }
 
 #[test]
+fn opt_engine_matches_golden_on_trained_weights() {
+    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let model = tinbinn::nn::opt::OptModel::new(&np).unwrap();
+    let mut scratch = tinbinn::nn::opt::Scratch::new();
+    for i in 0..16 {
+        let img = ds.image(i);
+        let golden = forward(&np, img).unwrap();
+        let fast = model.forward(img, &mut scratch).unwrap();
+        assert_eq!(golden, fast, "nn::opt != golden on image {i}");
+    }
+}
+
+#[test]
+fn parallel_opt_serving_on_trained_weights() {
+    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    let workers: Vec<_> = (0..3)
+        .map(|_| tinbinn::coordinator::backend::OptBackend::new(&np).unwrap())
+        .collect();
+    let frames: Vec<Frame> = (0..48)
+        .map(|i| Frame { id: i as u64, image: ds.image(i % ds.len()).to_vec(), label: None })
+        .collect();
+    let policy = BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 128 };
+    let (report, _workers) =
+        tinbinn::coordinator::pipeline::serve_parallel(frames, workers, policy).unwrap();
+    assert_eq!(report.completed + report.rejected, 48);
+    assert!(report.completed > 0);
+}
+
+#[test]
 fn golden_overlay_pjrt_agree_on_trained_weights() {
     let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
         eprintln!("skipping: artifacts missing");
