@@ -15,6 +15,7 @@
 use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::data::tbd::load_tbd;
 use tinbinn::model::weights::load_tbw;
+use tinbinn::nn::bitplane::BitplaneModel;
 use tinbinn::nn::opt::{OptModel, Scratch};
 use tinbinn::power::PowerModel;
 use tinbinn::runtime::artifacts_dir;
@@ -90,16 +91,41 @@ fn main() -> tinbinn::Result<()> {
     let mut scratch = Scratch::new();
     let t0 = std::time::Instant::now();
     let mut host_correct = 0usize;
+    let mut host_scores = Vec::with_capacity(n_frames);
     for i in 0..n_frames {
         let scores = engine.forward(ds.image(i), &mut scratch)?;
         let detected = scores[0] > 0;
         host_correct += (detected == (ds.labels[i] == 1)) as usize;
+        host_scores.push(scores[0]);
     }
     let host_s = t0.elapsed().as_secs_f64();
     println!(
         "  host fast path (nn::opt): {:.0} fps wall-clock, accuracy {:.1}% ({} frames)",
         n_frames as f64 / host_s.max(1e-9),
         100.0 * host_correct as f64 / n_frames as f64,
+        n_frames
+    );
+
+    // The popcount datapath on the same stream: the bit-plane engine is
+    // the fastest single-image CPU path and must agree bit-for-bit.
+    let bp_engine = BitplaneModel::new(&np)?;
+    let mut bp_scratch = tinbinn::nn::bitplane::Scratch::new();
+    let t0 = std::time::Instant::now();
+    let mut bp_correct = 0usize;
+    for i in 0..n_frames {
+        let scores = bp_engine.forward(ds.image(i), &mut bp_scratch)?;
+        let detected = scores[0] > 0;
+        bp_correct += (detected == (ds.labels[i] == 1)) as usize;
+        assert_eq!(
+            scores[0], host_scores[i],
+            "bitplane engine disagrees with nn::opt on frame {i}"
+        );
+    }
+    let bp_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  host popcount path (nn::bitplane): {:.0} fps wall-clock, accuracy {:.1}% ({} frames)",
+        n_frames as f64 / bp_s.max(1e-9),
+        100.0 * bp_correct as f64 / n_frames as f64,
         n_frames
     );
     Ok(())

@@ -1,13 +1,14 @@
-//! Quickstart: load trained weights, classify one image four ways —
-//! golden model, the nn::opt fast engine, the cycle-accurate overlay
-//! simulator, and the AOT-compiled XLA artifact via PJRT — and show
-//! they agree bit-exactly.
+//! Quickstart: load trained weights, classify one image five ways —
+//! golden model, the nn::opt fast engine, the nn::bitplane popcount
+//! engine, the cycle-accurate overlay simulator, and the AOT-compiled
+//! XLA artifact via PJRT — and show they agree bit-exactly.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::data::tbd::load_tbd;
 use tinbinn::model::weights::load_tbw;
+use tinbinn::nn::bitplane::BitplaneModel;
 use tinbinn::nn::layers::{classify, forward};
 use tinbinn::nn::opt::{OptModel, Scratch};
 use tinbinn::runtime::{artifacts_dir, ModelRuntime};
@@ -32,6 +33,15 @@ fn main() -> tinbinn::Result<()> {
     let fast = engine.forward(img, &mut scratch)?;
     println!("opt scores:     {fast:?}  -> class {}", classify(&fast));
     assert_eq!(golden, fast, "nn::opt must be bit-exact");
+
+    // 1c. the popcount datapath: activations transposed into 8 packed
+    // bit-planes, every channel an AND+popcount walk — the fastest
+    // single-image CPU engine and the serving default
+    let popcnt_engine = BitplaneModel::new(&np)?;
+    let mut popcnt_scratch = tinbinn::nn::bitplane::Scratch::new();
+    let popcnt = popcnt_engine.forward(img, &mut popcnt_scratch)?;
+    println!("bitplane scores: {popcnt:?}  -> class {}", classify(&popcnt));
+    assert_eq!(golden, popcnt, "nn::bitplane must be bit-exact");
 
     // 2. cycle-accurate overlay simulation
     let compiled = compile(&np, InputMode::Direct)?;

@@ -1,8 +1,9 @@
 //! Hot-path microbenchmarks — the §Perf optimization targets of each
 //! layer's inner loop:
 //!   * conv-strip op execution (the simulator's dominant cost),
-//!   * golden conv layer vs the nn::opt fused conv (oracle vs fast path),
-//!   * full forward golden vs nn::opt on both nets,
+//!   * golden conv layer vs nn::opt fused conv vs nn::bitplane popcount
+//!     conv (oracle vs both fast engines),
+//!   * full forward golden vs nn::opt vs nn::bitplane on both nets,
 //!   * ISS retirement rate (scalar-baseline measurement speed),
 //!   * dense DotSel op,
 //!   * full-schedule execution overhead (ops/s through the sequencer).
@@ -17,6 +18,7 @@ use tinbinn::isa::cpu::{Cpu, FlatMem};
 use tinbinn::lve::{Lve, VectorOp};
 use tinbinn::model::weights::random_params;
 use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
+use tinbinn::nn::bitplane::{conv3x3_bitplane, BitplaneModel};
 use tinbinn::nn::layers::{conv3x3_binary, Tensor3};
 use tinbinn::nn::opt::{conv3x3_requant, OptModel, Scratch};
 use tinbinn::nn::pack::PackedLayer;
@@ -63,9 +65,10 @@ fn main() {
         let pl = PackedLayer::prepare(p).unwrap();
         let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
         let mut win = vec![0i32; 9 * 48];
+        let mut cols = vec![0i32; 32];
         let mut dst = vec![0i32; 32 * 32 * 48];
         let r_opt = bench::run("opt_conv_48to48_32x32", 1, 10, || {
-            conv3x3_requant(&src, 32, 32, 48, &pl, &mut win, &mut dst);
+            conv3x3_requant(&src, 32, 32, 48, &pl, &mut win, &mut cols, &mut dst);
             std::hint::black_box(&dst);
         });
         println!(
@@ -73,11 +76,22 @@ fn main() {
             macs / r_opt.mean_s / 1e6,
             r_gold.mean_s / r_opt.mean_s
         );
+        let mut planes = vec![0u32; 8 * pl.kw];
+        let r_bp = bench::run("bitplane_conv_48to48_32x32", 1, 10, || {
+            conv3x3_bitplane(&src, 32, 32, 48, &pl, &mut win, &mut planes, &mut dst);
+            std::hint::black_box(&dst);
+        });
+        println!(
+            "   -> {:.0} M MAC/s bitplane (popcount)   {:.1}x golden",
+            macs / r_bp.mean_s / 1e6,
+            r_gold.mean_s / r_bp.mean_s
+        );
         suite.push(r_gold);
         suite.push(r_opt);
+        suite.push(r_bp);
     }
 
-    // L3c: full forward — golden vs nn::opt, both nets
+    // L3c: full forward — golden vs nn::opt vs nn::bitplane, both nets
     {
         for (tag, net) in [("1cat", tiny_1cat()), ("10cat", reduced_10cat())] {
             let np = random_params(&net, 5);
@@ -88,23 +102,37 @@ fn main() {
             });
             let model = OptModel::new(&np).unwrap();
             let mut scratch = Scratch::new();
+            let bp_model = BitplaneModel::new(&np).unwrap();
+            let mut bp_scratch = tinbinn::nn::bitplane::Scratch::new();
             // parity spot check before timing
+            let golden = tinbinn::nn::layers::forward(&np, &img).unwrap();
             assert_eq!(
-                tinbinn::nn::layers::forward(&np, &img).unwrap(),
+                golden,
                 model.forward(&img, &mut scratch).unwrap(),
                 "opt engine must be bit-exact"
+            );
+            assert_eq!(
+                golden,
+                bp_model.forward(&img, &mut bp_scratch).unwrap(),
+                "bitplane engine must be bit-exact"
             );
             let r_opt = bench::run(&format!("opt_forward_{tag}"), 1, 10, || {
                 std::hint::black_box(model.forward(&img, &mut scratch).unwrap());
             });
+            let r_bp = bench::run(&format!("bitplane_forward_{tag}"), 1, 10, || {
+                std::hint::black_box(bp_model.forward(&img, &mut bp_scratch).unwrap());
+            });
             println!(
-                "   -> {tag}: {:.2} ms golden vs {:.2} ms opt = {:.1}x",
+                "   -> {tag}: {:.2} ms golden vs {:.2} ms opt vs {:.2} ms bitplane = {:.1}x / {:.1}x",
                 r_gold.mean_ms(),
                 r_opt.mean_ms(),
-                r_gold.mean_s / r_opt.mean_s
+                r_bp.mean_ms(),
+                r_gold.mean_s / r_opt.mean_s,
+                r_gold.mean_s / r_bp.mean_s
             );
             suite.push(r_gold);
             suite.push(r_opt);
+            suite.push(r_bp);
         }
     }
 

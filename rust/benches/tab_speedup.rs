@@ -1,35 +1,99 @@
-//! Bench E5 — the paper's speedup claims: the CNN accelerator improves
-//! conv-layer runtime 73x, LVE improves dense layers 8x, overall 71x
-//! over scalar ORCA. Scalar rates are MEASURED by running real RV32IM
-//! loops on the ISS; overlay times come from the cycle-accurate
-//! schedule execution.
+//! Bench E5 — the paper's speedup claims plus the host-side serving
+//! trajectory. Two halves:
+//!
+//! * paper claims: the CNN accelerator improves conv-layer runtime 73x,
+//!   LVE improves dense layers 8x, overall 71x over scalar ORCA. Scalar
+//!   rates are MEASURED by running real RV32IM loops on the ISS; overlay
+//!   times come from the cycle-accurate schedule execution.
+//! * host engines: golden oracle vs nn::opt vs nn::bitplane single-image
+//!   latency, and the batched multi-worker serving path
+//!   (`serve_parallel` + `forward_batch`) as frames-per-second
+//!   throughput rows.
+//!
+//! Writes the suite to `<repo-root>/BENCH_speedup.json` (schema:
+//! report::bench; throughput rows encode seconds-per-frame in `mean_s`,
+//! so fps = 1/mean_s) — the perf trajectory is tracked from PR to PR.
 
 use tinbinn::compiler::lower::{compile, InputMode};
+use tinbinn::coordinator::backend::{BitplaneBackend, OptBackend};
+use tinbinn::coordinator::batcher::BatchPolicy;
+use tinbinn::coordinator::pipeline::{serve_parallel, Frame};
 use tinbinn::isa::baseline::{measure_conv, measure_dense, measure_rates, scalar_net_cycles};
 use tinbinn::model::weights::{load_tbw, random_params};
 use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
+use tinbinn::nn::bitplane::BitplaneModel;
 use tinbinn::nn::opt::{OptModel, Scratch};
 use tinbinn::report::bench;
 use tinbinn::runtime::artifacts_dir;
 use tinbinn::soc::Board;
 use tinbinn::util::Rng64;
 
+/// Serve `n_frames` random frames through `serve_parallel` on a pool of
+/// `workers` backends and record the result as a throughput row:
+/// `mean_s` = seconds per frame, so fps = 1 / mean_s.
+fn throughput_row<B, F>(
+    name: &str,
+    n_frames: usize,
+    workers: usize,
+    make: F,
+) -> bench::BenchResult
+where
+    B: tinbinn::coordinator::backend::Backend + Send,
+    F: Fn() -> B,
+{
+    let mut rng = Rng64::new(31);
+    let frames: Vec<Frame> = (0..n_frames)
+        .map(|i| Frame {
+            id: i as u64,
+            image: (0..3072).map(|_| rng.next_u8()).collect(),
+            label: None,
+        })
+        .collect();
+    let pool: Vec<B> = (0..workers).map(|_| make()).collect();
+    let policy = BatchPolicy { max_batch: 16, max_wait_us: 200, queue_cap: 4 * n_frames };
+    let (report, _pool) = serve_parallel(frames, pool, policy).unwrap();
+    assert_eq!(report.completed as usize, n_frames, "{name}: frames lost in serving");
+    let spf = 1.0 / report.throughput_per_s.max(1e-12);
+    let r = bench::BenchResult {
+        name: name.to_string(),
+        iters: n_frames as u32,
+        mean_s: spf,
+        stddev_s: 0.0,
+        min_s: spf,
+    };
+    bench::print_result(&r);
+    println!(
+        "   -> {:.0} fps through serve_parallel x{workers} (mean batch {:.2})",
+        report.throughput_per_s, report.mean_batch
+    );
+    r
+}
+
 fn main() {
     println!("== tab_speedup: accelerator vs scalar RV32IM (paper: 73x conv / 8x dense / 71x overall) ==");
+    let mut suite: Vec<bench::BenchResult> = Vec::new();
 
-    // host-side engines first: golden oracle vs nn::opt fast path (no
+    // host-side engines first: golden oracle vs both fast engines (no
     // trained artifacts needed — random weights, identical integers)
-    println!("-- host engines: golden model vs nn::opt fast path --");
+    println!("-- host engines: golden model vs nn::opt vs nn::bitplane --");
     for (task, net) in [("10cat", reduced_10cat()), ("1cat", tiny_1cat())] {
         let np = random_params(&net, 11);
         let mut rng = Rng64::new(12);
         let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
         let model = OptModel::new(&np).unwrap();
         let mut scratch = Scratch::new();
+        let bp_model = BitplaneModel::new(&np).unwrap();
+        let mut bp_scratch = tinbinn::nn::bitplane::Scratch::new();
+        let golden = tinbinn::nn::layers::forward(&np, &img).unwrap();
         assert_eq!(
-            tinbinn::nn::layers::forward(&np, &img).unwrap(),
+            golden,
             model.forward(&img, &mut scratch).unwrap(),
             "{task}: opt engine must be bit-exact with the golden model"
+        );
+        assert_eq!(
+            golden,
+            bp_model.forward(&img, &mut bp_scratch).unwrap(),
+            "{task}: bitplane engine must be bit-exact with the golden model"
         );
         let r_gold = bench::bench(&format!("golden_forward_{task}"), 1, 8, || {
             std::hint::black_box(tinbinn::nn::layers::forward(&np, &img).unwrap());
@@ -37,21 +101,59 @@ fn main() {
         let r_opt = bench::bench(&format!("opt_forward_{task}"), 1, 8, || {
             std::hint::black_box(model.forward(&img, &mut scratch).unwrap());
         });
+        let r_bp = bench::bench(&format!("bitplane_forward_{task}"), 1, 8, || {
+            std::hint::black_box(bp_model.forward(&img, &mut bp_scratch).unwrap());
+        });
         println!(
-            "{task}: golden {:>8.2} ms  |  opt {:>7.2} ms  |  {:>4.1}x faster, bit-exact",
+            "{task}: golden {:>8.2} ms  |  opt {:>7.2} ms ({:>4.1}x)  |  bitplane {:>7.2} ms ({:>4.1}x), bit-exact",
             r_gold.mean_ms(),
             r_opt.mean_ms(),
-            r_gold.mean_s / r_opt.mean_s
+            r_gold.mean_s / r_opt.mean_s,
+            r_bp.mean_ms(),
+            r_gold.mean_s / r_bp.mean_s
         );
+        suite.push(r_gold);
+        suite.push(r_opt);
+        suite.push(r_bp);
     }
     println!();
+
+    // batched parallel serving throughput (the coordinator's hot path):
+    // whole batches dispatched across workers, per-worker scratch
+    // arenas, zero steady-state allocations
+    println!("-- batched parallel serving (serve_parallel, tiny_1cat random weights) --");
+    {
+        let np = random_params(&tiny_1cat(), 11);
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(4);
+        let np_ref = &np;
+        suite.push(throughput_row(
+            &format!("serve_parallel_opt_x{workers}_1cat"),
+            256,
+            workers,
+            || OptBackend::new(np_ref).unwrap(),
+        ));
+        suite.push(throughput_row(
+            &format!("serve_parallel_bitplane_x{workers}_1cat"),
+            256,
+            workers,
+            || BitplaneBackend::new(np_ref).unwrap(),
+        ));
+        suite.push(throughput_row(
+            "serve_parallel_bitplane_x1_1cat",
+            128,
+            1,
+            || BitplaneBackend::new(np_ref).unwrap(),
+        ));
+    }
+    println!();
+
     // ISS measurement itself, timed
-    bench::run("iss_measure_dense_k2048", 1, 5, || {
+    suite.push(bench::run("iss_measure_dense_k2048", 1, 5, || {
         measure_dense(2048, 11).unwrap();
-    });
-    bench::run("iss_measure_conv_cin32", 1, 5, || {
+    }));
+    suite.push(bench::run("iss_measure_conv_cin32", 1, 5, || {
         measure_conv(32, 12).unwrap();
-    });
+    }));
 
     let rates = measure_rates().unwrap();
     println!(
@@ -79,5 +181,15 @@ fn main() {
             sc_dense as f64 / ov_dense.max(1) as f64,
             (sc_conv + sc_dense + sc_misc) as f64 / r.total_cycles as f64,
         );
+    }
+
+    // perf-trajectory artifact at the repo root
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_speedup.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_speedup.json"));
+    match bench::write_json(&out, "tab_speedup", &suite) {
+        Ok(()) => println!("\nwrote {} ({} rows)", out.display(), suite.len()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", out.display()),
     }
 }

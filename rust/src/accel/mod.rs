@@ -90,15 +90,27 @@ impl ConvUnit {
     /// out of interior bounds.
     ///
     /// Hot path of the whole simulator (one 10-cat frame = ~132k calls):
-    /// signs are hoisted out of the pixel loop and the three window rows
-    /// are staged into fixed-size stack buffers once per strip row — one
-    /// bounds-checked slice fetch per row instead of three per output
-    /// pixel — see EXPERIMENTS.md §Perf-L3.
+    /// the three window rows are staged into fixed-size stack buffers
+    /// once per strip row — one bounds-checked slice fetch per row
+    /// instead of three per output pixel — and the staged path computes
+    /// each output through the `2·Σ₊ − Σ` sign identity: the window
+    /// total comes from three shared column sums and only the +1 taps
+    /// are visited, instead of 9 sign-multiplies per pixel — see
+    /// EXPERIMENTS.md §Perf-L3.
     pub fn conv_strip(&self, sp: &mut Scratchpad, p: &ConvStrip) -> (u64, u64, u64, u64) {
         let cols = p.w.saturating_sub(p.x0).min(4);
         let mut sign = [0i32; 9];
         for (k, s) in sign.iter_mut().enumerate() {
             *s = self.wsign(k);
+        }
+        // +1 taps as (window row, window col) — hoisted for the staged path
+        let mut plus = [(0usize, 0usize); 9];
+        let mut nplus = 0usize;
+        for k in 0..9usize {
+            if (self.weights >> k) & 1 == 1 {
+                plus[nplus] = (k / 3, k % 3);
+                nplus += 1;
+            }
         }
         let stride = p.src_stride;
         // top-left of the window for output (0, x0): one row and one
@@ -122,17 +134,22 @@ impl ConvUnit {
                     r0[..span].copy_from_slice(sp.read_bytes(row0, span));
                     r1[..span].copy_from_slice(sp.read_bytes(row0 + stride, span));
                     r2[..span].copy_from_slice(sp.read_bytes(row0 + 2 * stride, span));
+                    // column sums over the three staged rows: the window
+                    // total for output dx is colt[dx..dx+3], so
+                    // acc = 2·Σ₊ − Σ visits only the +1 taps
+                    let mut colt = [0i32; 6];
+                    for t in 0..span {
+                        colt[t] = r0[t] as i32 + r1[t] as i32 + r2[t] as i32;
+                    }
+                    let rows = [&r0, &r1, &r2];
                     let dbase = p.dst + (y * p.dst_stride + p.x0) * 2;
                     for dx in 0..cols {
-                        let acc = r0[dx] as i32 * sign[0]
-                            + r0[dx + 1] as i32 * sign[1]
-                            + r0[dx + 2] as i32 * sign[2]
-                            + r1[dx] as i32 * sign[3]
-                            + r1[dx + 1] as i32 * sign[4]
-                            + r1[dx + 2] as i32 * sign[5]
-                            + r2[dx] as i32 * sign[6]
-                            + r2[dx + 1] as i32 * sign[7]
-                            + r2[dx + 2] as i32 * sign[8];
+                        let total = colt[dx] + colt[dx + 1] + colt[dx + 2];
+                        let mut pos = 0i32;
+                        for &(ky, kx) in &plus[..nplus] {
+                            pos += rows[ky][dx + kx] as i32;
+                        }
+                        let acc = 2 * pos - total;
                         let daddr = dbase + 2 * dx;
                         let cur = sp.read_i16(daddr);
                         // wrap exactly like 16-bit hardware

@@ -1,9 +1,11 @@
 //! Inference backends behind a common trait: the overlay simulator
-//! (embedded mode), the bit-packed fast engine (`nn::opt`, the CPU
-//! serving hot path), and the PJRT executables (desktop mode).
+//! (embedded mode), the bit-packed fast engine (`nn::opt`), the
+//! bit-plane popcount engine (`nn::bitplane`, the fastest CPU serving
+//! hot path), and the PJRT executables (desktop mode).
 
 use crate::compiler::lower::CompiledNet;
 use crate::model::NetParams;
+use crate::nn::bitplane::{BitplaneModel, Scratch as BitplaneScratch};
 use crate::nn::opt::{OptModel, Scratch};
 use crate::soc::Board;
 use crate::Result;
@@ -12,6 +14,18 @@ use crate::Result;
 pub trait Backend {
     /// One score vector per image.
     fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>>;
+
+    /// Batched inference into a reusable output buffer: `out` is resized
+    /// to `images.len()` and its inner vectors are reused across calls,
+    /// so steady-state serving allocates nothing. The default falls back
+    /// to [`Backend::infer_batch`]; the CPU engines override it.
+    fn infer_batch_into(&mut self, images: &[&[u8]], out: &mut Vec<Vec<i32>>) -> Result<()> {
+        let scores = self.infer_batch(images)?;
+        out.clear();
+        out.extend(scores);
+        Ok(())
+    }
+
     fn name(&self) -> &'static str;
     /// Largest batch the backend accepts at once.
     fn max_batch(&self) -> usize;
@@ -72,14 +86,50 @@ impl OptBackend {
 
 impl Backend for OptBackend {
     fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
-        images
-            .iter()
-            .map(|img| self.model.forward(img, &mut self.scratch))
-            .collect()
+        self.model.forward_batch(images, &mut self.scratch)
+    }
+
+    fn infer_batch_into(&mut self, images: &[&[u8]], out: &mut Vec<Vec<i32>>) -> Result<()> {
+        self.model.forward_batch_into(images, &mut self.scratch, out)
     }
 
     fn name(&self) -> &'static str {
         "nn-opt"
+    }
+
+    fn max_batch(&self) -> usize {
+        64
+    }
+}
+
+/// The bit-plane popcount CPU backend: golden semantics through
+/// `nn::bitplane` (activation bit-planes, word-wide AND+popcount,
+/// shared per-window plane popcounts). Like [`OptBackend`] it is cheap
+/// to construct per worker thread, and with
+/// [`Backend::infer_batch_into`] a serving worker runs whole batches
+/// with zero steady-state allocations.
+pub struct BitplaneBackend {
+    pub model: BitplaneModel,
+    scratch: BitplaneScratch,
+}
+
+impl BitplaneBackend {
+    pub fn new(np: &NetParams) -> Result<Self> {
+        Ok(BitplaneBackend { model: BitplaneModel::new(np)?, scratch: BitplaneScratch::new() })
+    }
+}
+
+impl Backend for BitplaneBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        self.model.forward_batch(images, &mut self.scratch)
+    }
+
+    fn infer_batch_into(&mut self, images: &[&[u8]], out: &mut Vec<Vec<i32>>) -> Result<()> {
+        self.model.forward_batch_into(images, &mut self.scratch, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "nn-bitplane"
     }
 
     fn max_batch(&self) -> usize {
@@ -171,6 +221,43 @@ mod tests {
         for (img, scores) in imgs.iter().zip(&out) {
             assert_eq!(scores, &crate::nn::layers::forward(&np, img).unwrap());
         }
+    }
+
+    #[test]
+    fn bitplane_backend_matches_golden() {
+        let np = random_params(&tiny_1cat(), 22);
+        let mut be = BitplaneBackend::new(&np).unwrap();
+        let mut rng = crate::util::Rng64::new(4);
+        let imgs: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let out = be.infer_batch(&refs).unwrap();
+        for (img, scores) in imgs.iter().zip(&out) {
+            assert_eq!(scores, &crate::nn::layers::forward(&np, img).unwrap());
+        }
+    }
+
+    #[test]
+    fn infer_batch_into_reuses_buffer_and_matches_infer_batch() {
+        let np = random_params(&tiny_1cat(), 23);
+        let mut be = BitplaneBackend::new(&np).unwrap();
+        let mut rng = crate::util::Rng64::new(5);
+        let imgs: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut buf = Vec::new();
+        be.infer_batch_into(&refs, &mut buf).unwrap();
+        assert_eq!(buf, be.infer_batch(&refs).unwrap());
+        // second call reuses the buffer and truncates to the batch size
+        be.infer_batch_into(&refs[..2], &mut buf).unwrap();
+        assert_eq!(buf.len(), 2);
+        // the default (fallback) implementation agrees, via MockBackend
+        let mut mock = MockBackend::new(0);
+        let mut mbuf = vec![vec![99i32]; 7];
+        mock.infer_batch_into(&refs, &mut mbuf).unwrap();
+        assert_eq!(mbuf, mock.infer_batch(&refs).unwrap());
     }
 
     #[test]

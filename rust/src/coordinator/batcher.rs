@@ -130,6 +130,62 @@ mod tests {
         assert_eq!(b.accepted, 2);
     }
 
+    // ---- edge policies --------------------------------------------------
+
+    #[test]
+    fn max_batch_one_dispatches_each_request_alone() {
+        // degenerate batching: every request becomes its own batch, in
+        // FIFO order, regardless of how long it waited
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_wait_us: 1_000_000, queue_cap: 16 });
+        for i in 0..3 {
+            assert!(b.push(req(i, 0)));
+        }
+        for want in 0..3u64 {
+            let batch = b.poll(0).unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].id, want);
+        }
+        assert!(b.poll(0).is_none());
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn zero_timeout_dispatches_immediately() {
+        // max_wait_us = 0: a request never waits — the first poll at (or
+        // after) its enqueue time fires, even for a batch of one
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_us: 0, queue_cap: 16 });
+        b.push(req(0, 500));
+        let batch = b.poll(500).unwrap();
+        assert_eq!(batch.len(), 1);
+        // multiple queued requests still coalesce up to max_batch
+        for i in 1..=4 {
+            b.push(req(i, 600));
+        }
+        let batch = b.poll(600).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn zero_timeout_with_max_batch_one_is_pure_passthrough() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 1, max_wait_us: 0, queue_cap: 4 });
+        assert!(b.push(req(0, 10)));
+        assert!(b.push(req(1, 10)));
+        assert_eq!(b.poll(10).unwrap()[0].id, 0);
+        assert_eq!(b.poll(10).unwrap()[0].id, 1);
+        assert!(b.poll(10).is_none());
+    }
+
+    #[test]
+    fn poll_before_enqueue_time_does_not_underflow() {
+        // clock skew: poll at a time earlier than the oldest enqueue must
+        // neither panic nor dispatch early (saturating wait math)
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 4 });
+        b.push(req(0, 1000));
+        assert!(b.poll(500).is_none());
+        assert!(b.poll(1100).is_some());
+    }
+
     // ---- property tests (in-tree harness) -------------------------------
 
     #[test]

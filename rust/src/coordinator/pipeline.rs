@@ -227,10 +227,13 @@ pub fn serve_threaded<B: Backend>(
 /// sim) actually scales across cores instead of serializing behind one
 /// consumer the way [`serve_threaded`] does.
 ///
-/// Each worker owns its backend and a private latency histogram; the
-/// histograms are merged after join. Returns the same report shape as
-/// [`run_stream`] plus the workers (so callers can inspect per-worker
-/// state).
+/// Each worker owns its backend, a private latency histogram, and a
+/// reusable score buffer: batches are dispatched whole through
+/// [`Backend::infer_batch_into`], so a CPU engine worker (nn::opt,
+/// nn::bitplane) runs with zero steady-state allocations in the
+/// inference path. The histograms are merged after join. Returns the
+/// same report shape as [`run_stream`] plus the workers (so callers can
+/// inspect per-worker state).
 pub fn serve_parallel<B: Backend + Send>(
     frames: Vec<Frame>,
     mut workers: Vec<B>,
@@ -269,6 +272,9 @@ pub fn serve_parallel<B: Backend + Send>(
                         latency: Histogram::new(),
                     };
                     let mut failed: Option<crate::util::TinError> = None;
+                    // per-worker reusable score buffer (inner vectors are
+                    // recycled across batches by infer_batch_into)
+                    let mut scores_buf: Vec<Vec<i32>> = Vec::new();
                     loop {
                         // hold the lock only for the dequeue
                         let batch = match brx.lock().unwrap().recv() {
@@ -279,8 +285,8 @@ pub fn serve_parallel<B: Backend + Send>(
                             continue; // keep draining so the producer never blocks
                         }
                         let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
-                        match be.infer_batch(&imgs) {
-                            Ok(_scores) => {
+                        match be.infer_batch_into(&imgs, &mut scores_buf) {
+                            Ok(()) => {
                                 let t = t_start.elapsed().as_micros() as u64;
                                 for req in &batch {
                                     tally.latency.record(t.saturating_sub(req.enqueue_us));
@@ -464,6 +470,71 @@ mod tests {
         .unwrap();
         assert_eq!(r.completed + r.rejected, 64);
         assert_eq!(workers[0].seen, r.completed);
+    }
+
+    /// Wraps a real backend and records every (image, scores) pair so
+    /// tests can check what the parallel path actually computed.
+    struct CaptureBackend<B: Backend> {
+        inner: B,
+        seen: Vec<(Vec<u8>, Vec<i32>)>,
+    }
+
+    impl<B: Backend> Backend for CaptureBackend<B> {
+        fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+            let scores = self.inner.infer_batch(images)?;
+            for (img, s) in images.iter().zip(&scores) {
+                self.seen.push((img.to_vec(), s.clone()));
+            }
+            Ok(scores)
+        }
+
+        fn name(&self) -> &'static str {
+            "capture"
+        }
+
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+    }
+
+    #[test]
+    fn parallel_batched_serving_is_bit_exact_with_serial_inference() {
+        use crate::coordinator::backend::BitplaneBackend;
+        use crate::model::weights::random_params;
+        use crate::model::zoo::tiny_1cat;
+        let np = random_params(&tiny_1cat(), 33);
+        let mut rng = crate::util::Rng64::new(7);
+        let imgs: Vec<Vec<u8>> = (0..12)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let frames: Vec<Frame> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| Frame { id: i as u64, image: im.clone(), label: None })
+            .collect();
+        let workers: Vec<_> = (0..3)
+            .map(|_| CaptureBackend { inner: BitplaneBackend::new(&np).unwrap(), seen: Vec::new() })
+            .collect();
+        let (r, workers) = serve_parallel(
+            frames,
+            workers,
+            BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 64 },
+        )
+        .unwrap();
+        assert_eq!(r.completed, 12);
+        assert_eq!(r.rejected, 0);
+        let mut checked = 0usize;
+        for w in &workers {
+            for (img, scores) in &w.seen {
+                assert_eq!(
+                    scores,
+                    &crate::nn::layers::forward(&np, img).unwrap(),
+                    "parallel batch path diverged from serial inference"
+                );
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, 12, "every frame must be scored exactly once");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 
 use tinbinn::compiler::lower::{compile, InputMode};
-use tinbinn::coordinator::backend::{Backend, OptBackend, OverlayBackend, PjrtBackend};
+use tinbinn::coordinator::backend::{Backend, BitplaneBackend, OptBackend, OverlayBackend, PjrtBackend};
 use tinbinn::coordinator::batcher::BatchPolicy;
 use tinbinn::coordinator::pipeline::{serve_parallel, serve_threaded, Frame};
 use tinbinn::data::tbd::load_tbd;
@@ -30,9 +30,10 @@ fn usage() -> ! {
            report [--all|--ops|--accuracy|--timing|--speedup|--resources|--power|--fig4|--train]\n\
                   [--limit N]            accuracy sample size (default 200)\n\
            sim     [--task 10cat|1cat]   one overlay inference + layer table\n\
-           eval    [--task T] [--backend overlay|golden|opt|pjrt] [--limit N]\n\
+           eval    [--task T] [--backend overlay|golden|opt|bitplane|pjrt] [--limit N]\n\
            serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
-                   [--backend pjrt|opt] [--workers W]   (opt: W nn::opt workers)\n\
+                   [--backend pjrt|opt|bitplane] [--workers W]\n\
+                   (opt/bitplane: W CPU-engine workers, batched via serve_parallel)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
          \n\
          env: TINBINN_ARTIFACTS overrides the artifacts directory"
@@ -196,6 +197,13 @@ fn real_main() -> tinbinn::Result<()> {
                         correct += (classify(&s[0]) == ds.labels[i] as usize) as usize;
                     }
                 }
+                "bitplane" => {
+                    let mut be = BitplaneBackend::new(&np)?;
+                    for i in 0..n {
+                        let s = be.infer_batch(&[ds.image(i)])?;
+                        correct += (classify(&s[0]) == ds.labels[i] as usize) as usize;
+                    }
+                }
                 "pjrt" => {
                     let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
                     for i in 0..n {
@@ -240,6 +248,14 @@ fn real_main() -> tinbinn::Result<()> {
                         (0..workers.max(1)).map(|_| OptBackend::new(&np)).collect();
                     let (report, _pool) = serve_parallel(frames, pool?, policy)?;
                     (report, format!("nn-opt x{}", workers.max(1)))
+                }
+                "bitplane" => {
+                    // multi-worker batched serving on the popcount engine
+                    let np = tables::load_task(&dir, &task)?;
+                    let pool: tinbinn::Result<Vec<BitplaneBackend>> =
+                        (0..workers.max(1)).map(|_| BitplaneBackend::new(&np)).collect();
+                    let (report, _pool) = serve_parallel(frames, pool?, policy)?;
+                    (report, format!("nn-bitplane x{}", workers.max(1)))
                 }
                 _ => {
                     let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;

@@ -1,0 +1,369 @@
+//! `nn::bitplane` — the bit-plane popcount inference engine.
+//!
+//! The third engine over the shared numeric contract, one step closer
+//! to how FINN-style BNN hardware actually computes: activations are
+//! transposed into 8 bit-planes of packed `u32` words
+//! ([`crate::nn::pack::pack_planes`]), and every output channel's
+//! accumulator becomes
+//!
+//! ```text
+//! acc = Σ_b 2^b · (2·popcount(w_row ∧ plane_b) − popcount(plane_b))
+//! ```
+//!
+//! so the inner loop is `~8·⌈9C/32⌉` word-wide AND+popcount ops per
+//! (pixel, channel) instead of the element-serial `9·C` adds the
+//! `nn::opt` bit-walk does. The per-plane window popcounts are computed
+//! once per pixel and shared across all output channels — they also
+//! yield the window sum Σ for free (`Σ = Σ_b 2^b·pop_b`), so nothing is
+//! summed element-serially at all.
+//!
+//! Same contract as `nn::opt`: bit-exact with the golden model
+//! ([`crate::nn::layers`]), pinned by the differential proptests in
+//! `nn/proptests.rs`; zero allocations in steady state via a reusable
+//! [`Scratch`] arena. Stage compilation and validation are shared with
+//! [`OptModel`] — one compiled form, three engines.
+
+use crate::model::NetParams;
+use crate::nn::layers::quant_scalar;
+use crate::nn::opt::{gather_window, maxpool2_into, OptModel, Stage};
+use crate::nn::pack::{bitplane_dot, pack_planes, plane_popcounts, PackedLayer};
+use crate::util::TinError;
+use crate::Result;
+
+/// A network prepared for bit-plane forward passes. Wraps the compiled
+/// stage list of [`OptModel`] (same validation, same packed weights) and
+/// swaps the compute kernels for the popcount datapath.
+pub struct BitplaneModel {
+    pub(crate) compiled: OptModel,
+}
+
+/// Reusable scratch arena for the bit-plane engine: ping/pong feature
+/// maps, the gathered conv window, and the 8 activation bit-planes.
+#[derive(Default)]
+pub struct Scratch {
+    ping: Vec<i32>,
+    pong: Vec<i32>,
+    win: Vec<i32>,
+    planes: Vec<u32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    fn ensure(&mut self, model: &BitplaneModel) {
+        let m = &model.compiled;
+        if self.ping.len() < m.buf_elems {
+            self.ping.resize(m.buf_elems, 0);
+        }
+        if self.pong.len() < m.buf_elems {
+            self.pong.resize(m.buf_elems, 0);
+        }
+        if self.win.len() < m.win_elems {
+            self.win.resize(m.win_elems, 0);
+        }
+        if self.planes.len() < 8 * m.kw_max {
+            self.planes.resize(8 * m.kw_max, 0);
+        }
+    }
+}
+
+impl BitplaneModel {
+    /// Prepare a network: same validation and packing as
+    /// [`OptModel::new`].
+    pub fn new(np: &NetParams) -> Result<Self> {
+        Ok(BitplaneModel { compiled: OptModel::new(np)? })
+    }
+
+    /// Output category count (SVM head width).
+    pub fn ncat(&self) -> usize {
+        self.compiled.ncat
+    }
+
+    /// Bit-plane forward pass: u8 HWC image → raw i32 SVM scores.
+    /// Bit-exact with [`crate::nn::layers::forward`].
+    pub fn forward(&self, image: &[u8], scratch: &mut Scratch) -> Result<Vec<i32>> {
+        let mut scores = Vec::new();
+        self.forward_into(image, scratch, &mut scores)?;
+        Ok(scores)
+    }
+
+    /// Allocation-free variant: scores land in the caller's vector.
+    pub fn forward_into(
+        &self,
+        image: &[u8],
+        scratch: &mut Scratch,
+        scores: &mut Vec<i32>,
+    ) -> Result<()> {
+        let (h0, w0, c0) = self.compiled.input_hwc;
+        if image.len() != h0 * w0 * c0 {
+            return Err(TinError::Config(format!(
+                "image len {} != {h0}x{w0}x{c0}",
+                image.len()
+            )));
+        }
+        scratch.ensure(self);
+        for (dst, &b) in scratch.ping.iter_mut().zip(image.iter()) {
+            *dst = b as i32;
+        }
+
+        let mut src_is_ping = true;
+        for stage in &self.compiled.stages {
+            let Scratch { ping, pong, win, planes } = &mut *scratch;
+            let (src, dst): (&[i32], &mut [i32]) = if src_is_ping {
+                (&ping[..], &mut pong[..])
+            } else {
+                (&pong[..], &mut ping[..])
+            };
+            match stage {
+                Stage::Conv { p, h, w, cin } => {
+                    conv3x3_bitplane(
+                        &src[..h * w * cin],
+                        *h,
+                        *w,
+                        *cin,
+                        p,
+                        &mut win[..9 * cin],
+                        &mut planes[..8 * p.kw],
+                        &mut dst[..h * w * p.n_out],
+                    );
+                }
+                Stage::Pool { h, w, c } => {
+                    maxpool2_into(&src[..h * w * c], *h, *w, *c, &mut dst[..(h / 2) * (w / 2) * c]);
+                }
+                Stage::Dense(p) => {
+                    dense_bitplane(&src[..p.k_in], p, &mut planes[..8 * p.kw], &mut dst[..p.n_out]);
+                    for (v, &b) in dst[..p.n_out].iter_mut().zip(p.bias.iter()) {
+                        *v = quant_scalar(*v, b, p.shift);
+                    }
+                }
+                Stage::Svm(p) => {
+                    scores.clear();
+                    scores.resize(p.n_out, 0);
+                    dense_bitplane(&src[..p.k_in], p, &mut planes[..8 * p.kw], &mut scores[..]);
+                    for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
+                        *v = v.wrapping_add(b);
+                    }
+                    return Ok(());
+                }
+            }
+            src_is_ping = !src_is_ping;
+        }
+        Err(TinError::Config("network has no Svm head".into()))
+    }
+
+    /// Batched forward pass: one score vector per image, reusing the
+    /// inner vectors of `out` across calls — zero steady-state
+    /// allocations once the buffers have grown.
+    pub fn forward_batch_into(
+        &self,
+        images: &[&[u8]],
+        scratch: &mut Scratch,
+        out: &mut Vec<Vec<i32>>,
+    ) -> Result<()> {
+        out.truncate(images.len());
+        while out.len() < images.len() {
+            out.push(Vec::new());
+        }
+        for (img, scores) in images.iter().zip(out.iter_mut()) {
+            self.forward_into(img, scratch, scores)?;
+        }
+        Ok(())
+    }
+
+    /// Batched forward pass returning fresh score vectors (use
+    /// [`BitplaneModel::forward_batch_into`] on hot paths).
+    pub fn forward_batch(&self, images: &[&[u8]], scratch: &mut Scratch) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::new();
+        self.forward_batch_into(images, scratch, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Drop-in counterpart of [`crate::nn::layers::forward`] on the
+/// bit-plane engine (prepares the model and a scratch arena per call —
+/// use [`BitplaneModel`] + [`Scratch`] directly on hot paths).
+pub fn forward(np: &NetParams, image: &[u8]) -> Result<Vec<i32>> {
+    let model = BitplaneModel::new(np)?;
+    let mut scratch = Scratch::new();
+    model.forward(image, &mut scratch)
+}
+
+/// Fused binarized 3x3 'same' conv + bias + requant on the popcount
+/// datapath: the 9·C window is gathered once per pixel, transposed into
+/// 8 bit-planes, and every output channel consumes the planes with
+/// word-wide AND+popcount. `win` must hold 9*c elements, `planes`
+/// 8*⌈9c/32⌉ words. `src` values must be in `0..=255` (see
+/// [`crate::nn::pack::pack_planes`]).
+pub fn conv3x3_bitplane(
+    src: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    p: &PackedLayer,
+    win: &mut [i32],
+    planes: &mut [u32],
+    dst: &mut [i32],
+) {
+    assert_eq!(p.k_in, 9 * c, "conv K mismatch");
+    assert_eq!(win.len(), 9 * c);
+    assert_eq!(planes.len(), 8 * p.kw);
+    assert_eq!(src.len(), h * w * c);
+    assert_eq!(dst.len(), h * w * p.n_out);
+    let nout = p.n_out;
+    for y in 0..h {
+        for x in 0..w {
+            gather_window(src, h, w, c, y, x, win);
+            pack_planes(win, planes);
+            let pops = plane_popcounts(planes);
+            let out_base = (y * w + x) * nout;
+            for n in 0..nout {
+                let acc = bitplane_dot(p.row(n), planes, &pops);
+                dst[out_base + n] = quant_scalar(acc, p.bias[n], p.shift);
+            }
+        }
+    }
+}
+
+/// Binarized dense layer on the popcount datapath: raw i32 accumulators
+/// (bias NOT applied). The flattened feature vector is packed once;
+/// every output row is 8·⌈K/32⌉ AND+popcount word ops. Bit-exact with
+/// [`crate::nn::layers::dense_binary`] for contract activations —
+/// `flat` values must be in `0..=255` (see
+/// [`crate::nn::pack::pack_planes`]; the golden dense accepts any i32,
+/// this kernel does not).
+pub fn dense_bitplane(flat: &[i32], p: &PackedLayer, planes: &mut [u32], out: &mut [i32]) {
+    assert_eq!(flat.len(), p.k_in, "dense K mismatch");
+    assert_eq!(planes.len(), 8 * p.kw);
+    assert_eq!(out.len(), p.n_out);
+    pack_planes(flat, planes);
+    let pops = plane_popcounts(planes);
+    for (n, slot) in out.iter_mut().enumerate() {
+        *slot = bitplane_dot(p.row(n), planes, &pops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::{random_params, LayerParams};
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+    use crate::nn::layers;
+    use crate::util::Rng64;
+
+    #[test]
+    fn bitplane_forward_matches_golden_tiny_net() {
+        let np = random_params(&tiny_1cat(), 7);
+        let mut rng = Rng64::new(1);
+        let model = BitplaneModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        for _ in 0..3 {
+            let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+            let golden = layers::forward(&np, &img).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(golden, fast);
+        }
+    }
+
+    #[test]
+    fn bitplane_forward_matches_golden_10cat() {
+        let np = random_params(&reduced_10cat(), 3);
+        let mut rng = Rng64::new(2);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        assert_eq!(layers::forward(&np, &img).unwrap(), forward(&np, &img).unwrap());
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let np = random_params(&tiny_1cat(), 7);
+        assert!(forward(&np, &[0u8; 10]).is_err());
+    }
+
+    #[test]
+    fn rejects_hostile_shift() {
+        let mut np = random_params(&tiny_1cat(), 7);
+        np.params[0].shift = 40;
+        assert!(BitplaneModel::new(&np).is_err());
+    }
+
+    #[test]
+    fn conv_kernel_matches_golden_on_all_border_map() {
+        // 1-channel 3x3 map: every pixel is a border pixel
+        let mut rng = Rng64::new(4);
+        let img: Vec<u8> = (0..9).map(|_| rng.next_u8()).collect();
+        let x = layers::Tensor3::from_u8(3, 3, 1, &img);
+        let p = LayerParams {
+            k_in: 9,
+            n_out: 2,
+            words: vec![rng.next_u32(), rng.next_u32()],
+            bias: vec![3, -4],
+            shift: 2,
+        };
+        let golden = layers::quant_act(&layers::conv3x3_binary(&x, &p), &p.bias, p.shift);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9];
+        let mut planes = vec![0u32; 8];
+        let mut dst = vec![0i32; 9 * 2];
+        conv3x3_bitplane(&src, 3, 3, 1, &pl, &mut win, &mut planes, &mut dst);
+        assert_eq!(dst, golden.data);
+    }
+
+    #[test]
+    fn dense_bitplane_matches_golden_with_stray_tail_bits() {
+        let mut rng = Rng64::new(5);
+        let k = 45; // non-word-aligned: tail bits matter
+        let p = LayerParams {
+            k_in: k,
+            n_out: 3,
+            words: (0..3 * 2).map(|_| rng.next_u32()).collect(),
+            bias: vec![0; 3],
+            shift: 0,
+        };
+        let flat: Vec<i32> = (0..k).map(|_| rng.next_u8() as i32).collect();
+        let golden = layers::dense_binary(&flat, &p);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut planes = vec![0u32; 8 * 2];
+        let mut out = vec![0i32; 3];
+        dense_bitplane(&flat, &pl, &mut planes, &mut out);
+        assert_eq!(out, golden);
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_models() {
+        let np1 = random_params(&tiny_1cat(), 1);
+        let np2 = random_params(&reduced_10cat(), 2);
+        let m1 = BitplaneModel::new(&np1).unwrap();
+        let m2 = BitplaneModel::new(&np2).unwrap();
+        let mut scratch = Scratch::new();
+        let img = vec![128u8; 3072];
+        let a = m1.forward(&img, &mut scratch).unwrap();
+        let b = m2.forward(&img, &mut scratch).unwrap();
+        let a2 = m1.forward(&img, &mut scratch).unwrap();
+        assert_eq!(a, a2, "scratch reuse must not change results");
+        assert_eq!(b.len(), 10);
+    }
+
+    #[test]
+    fn forward_batch_matches_serial_forwards() {
+        let np = random_params(&tiny_1cat(), 9);
+        let model = BitplaneModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        let mut rng = Rng64::new(10);
+        let imgs: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut out = Vec::new();
+        model.forward_batch_into(&refs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        for (img, scores) in imgs.iter().zip(&out) {
+            assert_eq!(scores, &model.forward(img, &mut scratch).unwrap());
+            assert_eq!(scores, &layers::forward(&np, img).unwrap());
+        }
+        // shrinking batches truncate the output vector
+        model.forward_batch_into(&refs[..2], &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+    }
+}

@@ -1,4 +1,4 @@
-//! S5: fixed-point NN library — two engines over one numeric contract.
+//! S5: fixed-point NN library — three engines over one numeric contract.
 //!
 //! * [`layers`] — the **golden model**: the bit-exact, obviousness-first
 //!   reference for the overlay simulator, the JAX fixed model, and the
@@ -7,7 +7,14 @@
 //!   (packed-word sign trick, scratch arena, zero per-layer
 //!   allocations). Bit-exact with the golden model; `proptests` pins the
 //!   two together over randomized nets.
-//! * [`pack`] — packed-weight preparation shared by the fast path.
+//! * [`bitplane`] — the **popcount datapath**: activations transposed
+//!   into 8 packed bit-planes, every ±1 dot product computed as
+//!   `Σ_b 2^b·(2·popcount(w ∧ plane_b) − popcount(plane_b))` with
+//!   per-window plane popcounts shared across all output channels.
+//!   Shares stage compilation with [`opt`]; bit-exact with the golden
+//!   model under the same differential-proptest contract.
+//! * [`pack`] — packed-weight preparation and the bit-plane/popcount
+//!   primitives shared by both fast engines.
 //!
 //! Numeric contract (DESIGN.md): u8 activations, ±1 weights, i32
 //! accumulation, per-channel i32 bias, per-layer round-half-up right
@@ -15,12 +22,14 @@
 //! exact hardware pipeline (i16 partial sums per 16 input maps, widened by
 //! the quad add) is available via [`grouped`] for the overflow audit.
 
+pub mod bitplane;
 pub mod floatref;
 pub mod grouped;
 pub mod layers;
 pub mod opt;
 pub mod pack;
 
+pub use bitplane::BitplaneModel;
 pub use layers::{conv3x3_binary, dense_binary, forward, maxpool2, quant_act, Tensor3};
 pub use opt::{OptModel, Scratch};
 pub use pack::PackedLayer;

@@ -6,7 +6,9 @@
 //! * **Weights stay packed.** No ±1 expansion: kernels walk the set bits
 //!   of each packed row ([`crate::nn::pack::plus_sum`]) and use the
 //!   add/sub sign identity `acc = 2·Σ₊ − Σ`, so the window sum Σ is
-//!   computed once per output pixel and shared by every output channel.
+//!   shared by every output channel — and slides incrementally along
+//!   each row via per-column running sums (one column enters, one
+//!   leaves) instead of being re-summed over the full 9·C window.
 //! * **Channel-blocked conv.** The 3x3xC window is gathered once per
 //!   pixel (three contiguous row copies in the interior) and all `cout`
 //!   channels consume it — the golden model re-reads the window with
@@ -29,8 +31,10 @@ use crate::nn::pack::{plus_sum, PackedLayer};
 use crate::util::TinError;
 use crate::Result;
 
-/// One compiled stage of the fast path.
-enum Stage {
+/// One compiled stage of the fast path. Crate-visible so the
+/// bit-plane engine ([`crate::nn::bitplane`]) can reuse the compiled
+/// stage list instead of re-deriving geometry.
+pub(crate) enum Stage {
     Conv { p: PackedLayer, h: usize, w: usize, cin: usize },
     Pool { h: usize, w: usize, c: usize },
     Dense(PackedLayer),
@@ -40,23 +44,30 @@ enum Stage {
 /// A network prepared for fast forward passes: packed tail-masked
 /// weights plus the geometry of every stage, validated up front.
 pub struct OptModel {
-    input_hwc: (usize, usize, usize),
-    stages: Vec<Stage>,
+    pub(crate) input_hwc: (usize, usize, usize),
+    pub(crate) stages: Vec<Stage>,
     /// Largest feature-map buffer (elements) any stage reads or writes.
-    buf_elems: usize,
+    pub(crate) buf_elems: usize,
     /// Largest conv window (9*cin elements).
-    win_elems: usize,
-    ncat: usize,
+    pub(crate) win_elems: usize,
+    /// Widest conv feature map (column-sum buffer sizing).
+    pub(crate) conv_w_max: usize,
+    /// Most words per packed row of any weighted stage (bit-plane
+    /// buffer sizing).
+    pub(crate) kw_max: usize,
+    pub(crate) ncat: usize,
 }
 
-/// Reusable scratch arena: two feature-map buffers (ping/pong) and the
-/// shared conv window. Grow-only; one arena serves any number of
-/// forward passes and any model it has been sized for.
+/// Reusable scratch arena: two feature-map buffers (ping/pong), the
+/// shared conv window, and the per-row column sums. Grow-only; one
+/// arena serves any number of forward passes and any model it has been
+/// sized for.
 #[derive(Default)]
 pub struct Scratch {
     ping: Vec<i32>,
     pong: Vec<i32>,
     win: Vec<i32>,
+    cols: Vec<i32>,
 }
 
 impl Scratch {
@@ -74,6 +85,9 @@ impl Scratch {
         if self.win.len() < model.win_elems {
             self.win.resize(model.win_elems, 0);
         }
+        if self.cols.len() < model.conv_w_max {
+            self.cols.resize(model.conv_w_max, 0);
+        }
     }
 }
 
@@ -87,6 +101,8 @@ impl OptModel {
         let mut stages = Vec::new();
         let mut buf_elems = h * w * c;
         let mut win_elems = 1usize;
+        let mut conv_w_max = 0usize;
+        let mut kw_max = 1usize;
         let mut ncat = 0usize;
         let mut wi = 0usize;
 
@@ -105,6 +121,8 @@ impl OptModel {
                     }
                     stages.push(Stage::Conv { p: PackedLayer::prepare(p)?, h, w, cin: c });
                     win_elems = win_elems.max(9 * c);
+                    conv_w_max = conv_w_max.max(w);
+                    kw_max = kw_max.max(p.kw());
                     c = cout;
                     buf_elems = buf_elems.max(h * w * c);
                     wi += 1;
@@ -131,6 +149,7 @@ impl OptModel {
                         )));
                     }
                     let pl = PackedLayer::prepare(p)?;
+                    kw_max = kw_max.max(pl.kw);
                     if matches!(ly, Layer::Svm { .. }) {
                         ncat = nout;
                         stages.push(Stage::Svm(pl));
@@ -148,7 +167,15 @@ impl OptModel {
         if ncat == 0 {
             return Err(TinError::Config("network has no Svm head".into()));
         }
-        Ok(OptModel { input_hwc: (h0, w0, c0), stages, buf_elems, win_elems, ncat })
+        Ok(OptModel {
+            input_hwc: (h0, w0, c0),
+            stages,
+            buf_elems,
+            win_elems,
+            conv_w_max,
+            kw_max,
+            ncat,
+        })
     }
 
     /// Output category count (SVM head width).
@@ -186,7 +213,7 @@ impl OptModel {
 
         let mut src_is_ping = true;
         for stage in &self.stages {
-            let Scratch { ping, pong, win } = &mut *scratch;
+            let Scratch { ping, pong, win, cols } = &mut *scratch;
             let (src, dst): (&[i32], &mut [i32]) = if src_is_ping {
                 (&ping[..], &mut pong[..])
             } else {
@@ -201,6 +228,7 @@ impl OptModel {
                         *cin,
                         p,
                         &mut win[..9 * cin],
+                        &mut cols[..*w],
                         &mut dst[..h * w * p.n_out],
                     );
                 }
@@ -227,6 +255,34 @@ impl OptModel {
         }
         Err(TinError::Config("network has no Svm head".into()))
     }
+
+    /// Batched forward pass: one score vector per image, reusing the
+    /// inner vectors of `out` across calls — zero steady-state
+    /// allocations once the buffers have grown. `out` is resized to
+    /// `images.len()`.
+    pub fn forward_batch_into(
+        &self,
+        images: &[&[u8]],
+        scratch: &mut Scratch,
+        out: &mut Vec<Vec<i32>>,
+    ) -> Result<()> {
+        out.truncate(images.len());
+        while out.len() < images.len() {
+            out.push(Vec::new());
+        }
+        for (img, scores) in images.iter().zip(out.iter_mut()) {
+            self.forward_into(img, scratch, scores)?;
+        }
+        Ok(())
+    }
+
+    /// Batched forward pass returning fresh score vectors (use
+    /// [`OptModel::forward_batch_into`] on hot paths).
+    pub fn forward_batch(&self, images: &[&[u8]], scratch: &mut Scratch) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::new();
+        self.forward_batch_into(images, scratch, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Drop-in counterpart of [`crate::nn::layers::forward`] on the fast
@@ -238,13 +294,56 @@ pub fn forward(np: &NetParams, image: &[u8]) -> Result<Vec<i32>> {
     model.forward(image, &mut scratch)
 }
 
+/// Gather the zero-padded 3x3xC window around output pixel (y, x) into
+/// `win` (9*c elements, kernel-tap-major order). Out-of-bounds taps are
+/// zeros, which ±1 weights cannot distinguish from the golden model's
+/// skipped taps. Shared by the opt and bit-plane conv kernels.
+#[inline]
+pub fn gather_window(
+    src: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    y: usize,
+    x: usize,
+    win: &mut [i32],
+) {
+    if y > 0 && y + 1 < h && x > 0 && x + 1 < w {
+        // interior: three contiguous 3c-element row copies
+        for ky in 0..3usize {
+            let s = ((y - 1 + ky) * w + (x - 1)) * c;
+            win[ky * 3 * c..(ky * 3 + 3) * c].copy_from_slice(&src[s..s + 3 * c]);
+        }
+    } else {
+        // border: zero the window, then copy the in-bounds span of each
+        // window row
+        win.fill(0);
+        let x0 = x.saturating_sub(1);
+        let x1 = (x + 2).min(w);
+        let kx0 = x0 + 1 - x; // window column of src column x0
+        for ky in 0..3usize {
+            let yy = y as isize + ky as isize - 1;
+            if yy < 0 || yy >= h as isize {
+                continue;
+            }
+            let s = ((yy as usize) * w + x0) * c;
+            let d = (ky * 3 + kx0) * c;
+            let len = (x1 - x0) * c;
+            win[d..d + len].copy_from_slice(&src[s..s + len]);
+        }
+    }
+}
+
 /// Fused binarized 3x3 'same' conv + bias + requant over an HWC map:
 /// u8-range activations in `src` (h*w*c), u8-range activations out
-/// (h*w*n_out). `win` must hold 9*c elements.
+/// (h*w*n_out). `win` must hold 9*c elements, `cols` w elements.
 ///
-/// The window is gathered once per pixel; out-of-bounds taps are zeros,
-/// which ±1 weights cannot distinguish from the golden model's skipped
-/// taps — so `2·Σ₊ − Σ` over the window equals the golden accumulator.
+/// The window is gathered once per pixel and shared by all output
+/// channels. The window sum Σ of the `2·Σ₊ − Σ` identity slides
+/// incrementally along each row: `cols[x]` holds the 3-row column sum,
+/// and stepping right exchanges one leaving column for one entering
+/// column — 3·C adds per pixel (amortized) instead of the 9·C full
+/// re-sum.
 pub fn conv3x3_requant(
     src: &[i32],
     h: usize,
@@ -252,48 +351,49 @@ pub fn conv3x3_requant(
     c: usize,
     p: &PackedLayer,
     win: &mut [i32],
+    cols: &mut [i32],
     dst: &mut [i32],
 ) {
     assert_eq!(p.k_in, 9 * c, "conv K mismatch");
     assert_eq!(win.len(), 9 * c);
+    assert_eq!(cols.len(), w);
     assert_eq!(src.len(), h * w * c);
     assert_eq!(dst.len(), h * w * p.n_out);
+    if h == 0 || w == 0 {
+        return;
+    }
     let nout = p.n_out;
     for y in 0..h {
-        let interior_y = y > 0 && y + 1 < h;
+        // per-column sums over the (up to 3) in-bounds window rows
+        let y0 = y.saturating_sub(1);
+        let y1 = (y + 2).min(h);
+        for (x, slot) in cols.iter_mut().enumerate() {
+            let mut s = 0i32;
+            for yy in y0..y1 {
+                let base = (yy * w + x) * c;
+                for &v in &src[base..base + c] {
+                    s += v;
+                }
+            }
+            *slot = s;
+        }
+        // window sum for x: cols[x-1] + cols[x] + cols[x+1], clipped
+        let mut total = cols[0] + if w > 1 { cols[1] } else { 0 };
         for x in 0..w {
-            if interior_y && x > 0 && x + 1 < w {
-                // interior: three contiguous 3c-element row copies
-                for ky in 0..3usize {
-                    let s = ((y - 1 + ky) * w + (x - 1)) * c;
-                    win[ky * 3 * c..(ky * 3 + 3) * c].copy_from_slice(&src[s..s + 3 * c]);
-                }
-            } else {
-                // border: zero the window, then copy the in-bounds span
-                // of each window row
-                win.fill(0);
-                let x0 = x.saturating_sub(1);
-                let x1 = (x + 2).min(w);
-                let kx0 = x0 + 1 - x; // window column of src column x0
-                for ky in 0..3usize {
-                    let yy = y as isize + ky as isize - 1;
-                    if yy < 0 || yy >= h as isize {
-                        continue;
-                    }
-                    let s = ((yy as usize) * w + x0) * c;
-                    let d = (ky * 3 + kx0) * c;
-                    let len = (x1 - x0) * c;
-                    win[d..d + len].copy_from_slice(&src[s..s + len]);
-                }
-            }
-            let mut total = 0i32;
-            for &v in win.iter() {
-                total += v;
-            }
+            gather_window(src, h, w, c, y, x, win);
             let out_base = (y * w + x) * nout;
             for n in 0..nout {
                 let acc = 2 * plus_sum(p.row(n), win) - total;
                 dst[out_base + n] = quant_scalar(acc, p.bias[n], p.shift);
+            }
+            // slide: drop the leaving column, add the entering one
+            if x + 1 < w {
+                if x + 2 < w {
+                    total += cols[x + 2];
+                }
+                if x >= 1 {
+                    total -= cols[x - 1];
+                }
             }
         }
     }
@@ -373,6 +473,27 @@ mod tests {
     }
 
     #[test]
+    fn forward_batch_matches_serial_forwards() {
+        let np = random_params(&tiny_1cat(), 9);
+        let model = OptModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        let mut rng = Rng64::new(10);
+        let imgs: Vec<Vec<u8>> = (0..4)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut out = Vec::new();
+        model.forward_batch_into(&refs, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        for (img, scores) in imgs.iter().zip(&out) {
+            assert_eq!(scores, &model.forward(img, &mut scratch).unwrap());
+        }
+        // a failing image mid-batch propagates the error
+        let bad: &[u8] = &[0u8; 3];
+        assert!(model.forward_batch(&[refs[0], bad], &mut scratch).is_err());
+    }
+
+    #[test]
     fn rejects_hostile_shift() {
         let mut np = random_params(&tiny_1cat(), 7);
         np.params[0].shift = 40;
@@ -418,8 +539,9 @@ mod tests {
         let pl = PackedLayer::prepare(&p).unwrap();
         let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
         let mut win = vec![0i32; 9];
+        let mut cols = vec![0i32; 3];
         let mut dst = vec![0i32; 9 * 2];
-        conv3x3_requant(&src, 3, 3, 1, &pl, &mut win, &mut dst);
+        conv3x3_requant(&src, 3, 3, 1, &pl, &mut win, &mut cols, &mut dst);
         assert_eq!(dst, golden.data);
     }
 

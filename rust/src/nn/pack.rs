@@ -1,7 +1,8 @@
-//! Packed-weight preparation for the fast inference engine ([`crate::nn::opt`]).
+//! Packed-weight preparation and popcount primitives shared by the fast
+//! inference engines ([`crate::nn::opt`], [`crate::nn::bitplane`]).
 //!
 //! The golden model expands every packed weight word back into ±1 `i32`s
-//! before use; the fast path keeps rows packed. [`PackedLayer`] owns a
+//! before use; the fast paths keep rows packed. [`PackedLayer`] owns a
 //! tail-masked copy of one layer's weight words so kernels can walk set
 //! bits word-at-a-time without per-bit range tracking, and [`plus_sum`]
 //! is the shared Σ₊ walk behind the add/sub sign identity:
@@ -12,6 +13,12 @@
 //!
 //! so one window/feature sum Σ is computed once and reused by every
 //! output channel, and only the set bits of each packed row are visited.
+//!
+//! The bit-plane half ([`pack_planes`], [`plane_popcounts`],
+//! [`bitplane_dot`]) realizes the same identity per activation bit:
+//! activations transpose into 8 packed planes and every dot product
+//! becomes word-wide AND+popcount — the software shape of the FINN/
+//! LUTNet XNOR-popcount datapath.
 
 use crate::model::weights::LayerParams;
 use crate::util::TinError;
@@ -118,6 +125,76 @@ pub fn plus_sum(row: &[u32], vals: &[i32]) -> i32 {
     acc
 }
 
+/// Transpose u8-range activations into 8 bit-planes of packed `u32`
+/// words: plane `b`, word `j`, bit `i` is bit `b` of `vals[32*j + i]`.
+/// `planes` must hold exactly `8 * ⌈vals.len()/32⌉` words, laid out
+/// plane-major (`planes[b*kw + j]`). Bits at positions >= `vals.len()`
+/// are cleared, so AND-popcount walks against tail-masked rows never
+/// see phantom activations.
+///
+/// **Precondition:** every value must be in `0..=255` (the numeric
+/// contract's activation range). Out-of-range values are rejected in
+/// debug builds and silently truncated to their low 8 bits in release —
+/// callers feeding anything other than contract activations get wrong
+/// answers, not an error.
+///
+/// This is the FINN-style datapath: with planes in hand, every ±1 dot
+/// product collapses to `Σ_b 2^b · (2·popcount(row ∧ plane_b) −
+/// popcount(plane_b))` — word ops instead of element-serial adds.
+pub fn pack_planes(vals: &[i32], planes: &mut [u32]) {
+    let kw = (vals.len() + 31) / 32;
+    assert_eq!(planes.len(), 8 * kw, "planes buffer must be 8 x kw words");
+    planes.fill(0);
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!((0..=255).contains(&v), "bit-plane packing needs u8-range activations");
+        let j = i / 32;
+        let bit = 1u32 << (i % 32);
+        let mut v = (v as u32) & 0xFF;
+        while v != 0 {
+            let b = v.trailing_zeros() as usize;
+            planes[b * kw + j] |= bit;
+            v &= v - 1;
+        }
+    }
+}
+
+/// Per-plane popcounts of a packed plane set (`planes.len() == 8 * kw`).
+/// `Σ_b 2^b · pop[b]` is the activation sum Σ of the packed window, so
+/// one popcount pass replaces the per-pixel window re-sum AND feeds the
+/// `2·Σ₊ − Σ` identity for every output channel.
+pub fn plane_popcounts(planes: &[u32]) -> [i32; 8] {
+    assert!(planes.len() % 8 == 0, "planes buffer must be 8 x kw words");
+    let kw = planes.len() / 8;
+    let mut out = [0i32; 8];
+    for (b, slot) in out.iter_mut().enumerate() {
+        let mut pop = 0i32;
+        for &w in &planes[b * kw..(b + 1) * kw] {
+            pop += w.count_ones() as i32;
+        }
+        *slot = pop;
+    }
+    out
+}
+
+/// ±1 dot product of one tail-masked packed row against a packed plane
+/// set: `Σ_b 2^b · (2·popcount(row ∧ plane_b) − pop[b])`. `pops` must be
+/// [`plane_popcounts`] of the same planes (computed once per window and
+/// shared across all output channels).
+#[inline]
+pub fn bitplane_dot(row: &[u32], planes: &[u32], pops: &[i32; 8]) -> i32 {
+    let kw = row.len();
+    debug_assert_eq!(planes.len(), 8 * kw, "planes/row word-count mismatch");
+    let mut acc = 0i32;
+    for (b, &pop) in pops.iter().enumerate() {
+        let mut pos = 0i32;
+        for (&w, &p) in row.iter().zip(&planes[b * kw..(b + 1) * kw]) {
+            pos += (w & p).count_ones() as i32;
+        }
+        acc += (2 * pos - pop) << b;
+    }
+    acc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +243,72 @@ mod tests {
             let want: i32 = (0..70).map(|k| p.weight(n, k) * vals[k]).sum();
             let got = 2 * plus_sum(pl.row(n), &vals) - total;
             assert_eq!(got, want, "row {n}");
+        }
+    }
+
+    #[test]
+    fn pack_planes_roundtrips_values() {
+        let mut rng = Rng64::new(21);
+        let vals: Vec<i32> = (0..45).map(|_| rng.next_u8() as i32).collect();
+        let kw = 2;
+        let mut planes = vec![0u32; 8 * kw];
+        pack_planes(&vals, &mut planes);
+        for (i, &v) in vals.iter().enumerate() {
+            let mut got = 0i32;
+            for b in 0..8 {
+                got |= (((planes[b * kw + i / 32] >> (i % 32)) & 1) as i32) << b;
+            }
+            assert_eq!(got, v, "element {i}");
+        }
+        // no phantom bits past K in the tail word
+        for b in 0..8 {
+            assert_eq!(planes[b * kw + 1] >> (45 - 32), 0, "plane {b} tail");
+        }
+    }
+
+    #[test]
+    fn plane_popcounts_give_activation_sum() {
+        let mut rng = Rng64::new(22);
+        let vals: Vec<i32> = (0..70).map(|_| rng.next_u8() as i32).collect();
+        let mut planes = vec![0u32; 8 * 3];
+        pack_planes(&vals, &mut planes);
+        let pops = plane_popcounts(&planes);
+        let sum: i32 = (0..8).map(|b| pops[b] << b).sum();
+        assert_eq!(sum, vals.iter().sum::<i32>());
+    }
+
+    #[test]
+    fn bitplane_dot_matches_weight_walk() {
+        let p = layer(70, 4, 23);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut rng = Rng64::new(24);
+        let vals: Vec<i32> = (0..70).map(|_| rng.next_u8() as i32).collect();
+        let mut planes = vec![0u32; 8 * pl.kw];
+        pack_planes(&vals, &mut planes);
+        let pops = plane_popcounts(&planes);
+        for n in 0..4 {
+            let want: i32 = (0..70).map(|k| p.weight(n, k) * vals[k]).sum();
+            assert_eq!(bitplane_dot(pl.row(n), &planes, &pops), want, "row {n}");
+        }
+    }
+
+    #[test]
+    fn bitplane_dot_agrees_with_plus_sum_on_stray_tail_bits() {
+        let mut p = layer(33, 2, 25);
+        p.words[1] |= 0xFFFF_FFF0; // stray bits past K in the tail word
+        p.words[3] |= 0xFFFF_FFF0;
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut rng = Rng64::new(26);
+        let vals: Vec<i32> = (0..33).map(|_| rng.next_u8() as i32).collect();
+        let total: i32 = vals.iter().sum();
+        let mut planes = vec![0u32; 8 * pl.kw];
+        pack_planes(&vals, &mut planes);
+        let pops = plane_popcounts(&planes);
+        for n in 0..2 {
+            assert_eq!(
+                bitplane_dot(pl.row(n), &planes, &pops),
+                2 * plus_sum(pl.row(n), &vals) - total
+            );
         }
     }
 

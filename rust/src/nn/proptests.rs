@@ -1,9 +1,11 @@
 //! Property tests on the golden NN (in-tree generator — see testkit),
-//! including the differential suite pinning the nn::opt fast path to
-//! the golden oracle over randomized shapes, weights and images.
+//! including the differential suites pinning the nn::opt fast path AND
+//! the nn::bitplane popcount engine to the golden oracle over
+//! randomized shapes, weights and images.
 
 use crate::model::weights::{random_params, LayerParams};
 use crate::model::zoo::{Layer, Net};
+use crate::nn::bitplane;
 use crate::nn::layers::*;
 use crate::nn::opt;
 use crate::nn::pack::PackedLayer;
@@ -194,8 +196,9 @@ fn prop_opt_conv_kernel_matches_golden() {
         let pl = PackedLayer::prepare(&p).unwrap();
         let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
         let mut win = vec![0i32; 9 * c];
+        let mut cols = vec![0i32; w];
         let mut dst = vec![0i32; h * w * n_out];
-        opt::conv3x3_requant(&src, h, w, c, &pl, &mut win, &mut dst);
+        opt::conv3x3_requant(&src, h, w, c, &pl, &mut win, &mut cols, &mut dst);
         assert_eq!(dst, golden.data, "{h}x{w}x{c} -> {n_out}");
     });
 }
@@ -213,6 +216,117 @@ fn prop_opt_dense_matches_golden() {
         let mut out = vec![0i32; n_out];
         opt::dense_binary_fast(&flat, &pl, &mut out);
         assert_eq!(out, golden);
+    });
+}
+
+// ---- golden vs nn::bitplane differential suite -------------------------
+//
+// The popcount engine gets the same contract as nn::opt: bit-exact with
+// the golden oracle on every supported shape, including non-word-aligned
+// K (stray tail bits in the last packed word), all-border feature maps,
+// and the full zoo nets.
+
+#[test]
+fn prop_bitplane_forward_matches_golden() {
+    crate::testkit::check(40, |rng| {
+        let net = rand_net(rng);
+        let np = random_params(&net, rng.next_u64());
+        let (h, w, c) = net.input_hwc;
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let golden = forward(&np, &img).unwrap();
+        let fast = bitplane::forward(&np, &img).unwrap();
+        assert_eq!(golden, fast, "net {:?} input {h}x{w}x{c}", net.layers);
+    });
+}
+
+#[test]
+fn prop_bitplane_conv_kernel_matches_golden() {
+    crate::testkit::check(100, |rng| {
+        let h = 1 + rng.below(7) as usize;
+        let w = 1 + rng.below(7) as usize;
+        let c = 1 + rng.below(4) as usize;
+        let n_out = 1 + rng.below(5) as usize;
+        let p = rand_layer(rng, 9 * c, n_out);
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(h, w, c, &img);
+        let golden = quant_act(&conv3x3_binary(&x, &p), &p.bias, p.shift);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9 * c];
+        let mut planes = vec![0u32; 8 * pl.kw];
+        let mut dst = vec![0i32; h * w * n_out];
+        bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst);
+        assert_eq!(dst, golden.data, "{h}x{w}x{c} -> {n_out}");
+    });
+}
+
+#[test]
+fn prop_bitplane_conv_all_border_maps() {
+    // h, w <= 3: every output pixel touches the zero-padding
+    crate::testkit::check(80, |rng| {
+        let h = 1 + rng.below(3) as usize;
+        let w = 1 + rng.below(3) as usize;
+        let c = 1 + rng.below(4) as usize;
+        let n_out = 1 + rng.below(4) as usize;
+        let p = rand_layer(rng, 9 * c, n_out);
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let x = Tensor3::from_u8(h, w, c, &img);
+        let golden = quant_act(&conv3x3_binary(&x, &p), &p.bias, p.shift);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
+        let mut win = vec![0i32; 9 * c];
+        let mut planes = vec![0u32; 8 * pl.kw];
+        let mut dst = vec![0i32; h * w * n_out];
+        bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst);
+        assert_eq!(dst, golden.data, "all-border {h}x{w}x{c} -> {n_out}");
+    });
+}
+
+#[test]
+fn prop_bitplane_dense_matches_golden() {
+    crate::testkit::check(150, |rng| {
+        // k_in deliberately hits word-aligned and ragged sizes
+        let k_in = 1 + rng.below(130) as usize;
+        let n_out = 1 + rng.below(6) as usize;
+        let p = rand_layer(rng, k_in, n_out);
+        let flat: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+        let golden = dense_binary(&flat, &p);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let mut planes = vec![0u32; 8 * pl.kw];
+        let mut out = vec![0i32; n_out];
+        bitplane::dense_bitplane(&flat, &pl, &mut planes, &mut out);
+        assert_eq!(out, golden);
+    });
+}
+
+#[test]
+fn bitplane_matches_golden_on_full_zoo_nets() {
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+    let mut rng = Rng64::new(77);
+    for (seed, net) in [(31u64, tiny_1cat()), (32, reduced_10cat())] {
+        let np = random_params(&net, seed);
+        let model = bitplane::BitplaneModel::new(&np).unwrap();
+        let mut scratch = bitplane::Scratch::new();
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let golden = forward(&np, &img).unwrap();
+        assert_eq!(golden, model.forward(&img, &mut scratch).unwrap(), "{}", net.name);
+    }
+}
+
+#[test]
+fn prop_bitplane_scratch_reuse_is_stateless() {
+    // one arena across many different nets/images must never leak state
+    crate::testkit::check(20, |rng| {
+        let mut scratch = bitplane::Scratch::new();
+        for _ in 0..3 {
+            let net = rand_net(rng);
+            let np = random_params(&net, rng.next_u64());
+            let (h, w, c) = net.input_hwc;
+            let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+            let model = bitplane::BitplaneModel::new(&np).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(fast, forward(&np, &img).unwrap());
+        }
     });
 }
 
