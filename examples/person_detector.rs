@@ -128,5 +128,58 @@ fn main() -> tinbinn::Result<()> {
         100.0 * bp_correct as f64 / n_frames as f64,
         n_frames
     );
+
+    // The serving front door on the same stream: the multi-model
+    // gateway runs the detector as two named models on two distinct
+    // engines at once (the popcount hot path and the bit-packed
+    // engine), with per-model accounting — and both lanes must agree
+    // bit-for-bit with the serial fast path above.
+    use tinbinn::coordinator::batcher::BatchPolicy;
+    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+    use tinbinn::coordinator::registry::AnyBackend;
+    use tinbinn::coordinator::backend::{BitplaneBackend, OptBackend};
+    let policy = BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 1024 };
+    let lanes = vec![
+        GatewayLane {
+            name: "det-bitplane".to_string(),
+            policy,
+            workers: (0..2)
+                .map(|_| Ok(AnyBackend::Bitplane(BitplaneBackend::new(&np)?)))
+                .collect::<tinbinn::Result<Vec<_>>>()?,
+        },
+        GatewayLane {
+            name: "det-opt".to_string(),
+            policy,
+            workers: (0..2)
+                .map(|_| Ok(AnyBackend::Opt(OptBackend::new(&np)?)))
+                .collect::<tinbinn::Result<Vec<_>>>()?,
+        },
+    ];
+    let requests: Vec<GatewayRequest> = (0..2 * n_frames)
+        .map(|i| {
+            let model = if i % 2 == 0 { "det-bitplane" } else { "det-opt" };
+            GatewayRequest::new(i as u64, model, ds.image((i / 2) % ds.len()).to_vec())
+        })
+        .collect();
+    let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true })?;
+    assert!(report.conserved(), "gateway accounting violated");
+    for m in &report.models {
+        for (id, scores) in &m.scores {
+            let frame_i = *id as usize / 2; // requests interleave the two lanes
+            assert_eq!(
+                scores[0], host_scores[frame_i],
+                "gateway lane {} disagrees with the serial fast path on frame {frame_i}",
+                m.name
+            );
+        }
+    }
+    println!("\n  serving gateway (2 models x 2 workers, bit-exact with the fast path):");
+    for m in &report.models {
+        println!(
+            "    {:12} on {:12}: {} frames, mean batch {:.2}, p99 {}us, {:.0} fps",
+            m.name, m.backend, m.completed, m.mean_batch, m.latency.p99_us, m.throughput_per_s
+        );
+    }
+    println!("    fleet: {:.0} fps over {} frames", report.throughput_per_s, report.completed);
     Ok(())
 }

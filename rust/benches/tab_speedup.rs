@@ -147,6 +147,80 @@ fn main() {
     }
     println!();
 
+    // multi-model gateway throughput: both paper models served from one
+    // process, each on its own engine + worker pool, exact accounting
+    println!("-- multi-model serving gateway (1cat:bitplane + 10cat:opt, random weights) --");
+    {
+        use tinbinn::coordinator::gateway::{
+            serve_gateway, GatewayConfig, GatewayLane, GatewayRequest,
+        };
+        use tinbinn::coordinator::registry::AnyBackend;
+        let np1 = random_params(&tiny_1cat(), 11);
+        let np10 = random_params(&reduced_10cat(), 11);
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(4);
+        let n_frames = 256usize;
+        let mut rng = Rng64::new(32);
+        let imgs: Vec<Vec<u8>> = (0..n_frames)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let requests: Vec<GatewayRequest> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| {
+                let model = if i % 2 == 0 { "1cat" } else { "10cat" };
+                GatewayRequest::new(i as u64, model, im.clone())
+            })
+            .collect();
+        let policy = BatchPolicy { max_batch: 16, max_wait_us: 200, queue_cap: 4 * n_frames };
+        let lanes = vec![
+            GatewayLane {
+                name: "1cat".into(),
+                policy,
+                workers: (0..workers)
+                    .map(|_| AnyBackend::Bitplane(BitplaneBackend::new(&np1).unwrap()))
+                    .collect(),
+            },
+            GatewayLane {
+                name: "10cat".into(),
+                policy,
+                workers: (0..workers)
+                    .map(|_| AnyBackend::Opt(OptBackend::new(&np10).unwrap()))
+                    .collect(),
+            },
+        ];
+        let (report, _lanes) =
+            serve_gateway(requests, lanes, &GatewayConfig::default()).unwrap();
+        assert!(report.conserved(), "gateway accounting violated in bench");
+        assert_eq!(report.completed as usize, n_frames, "gateway lost frames in bench");
+        let spf = 1.0 / report.throughput_per_s.max(1e-12);
+        let fleet = bench::BenchResult {
+            name: format!("gateway_2model_bitplane_opt_x{workers}"),
+            iters: n_frames as u32,
+            mean_s: spf,
+            stddev_s: 0.0,
+            min_s: spf,
+        };
+        bench::print_result(&fleet);
+        suite.push(fleet);
+        for m in &report.models {
+            let m_spf = 1.0 / m.throughput_per_s.max(1e-12);
+            let row = bench::BenchResult {
+                name: format!("gateway_{}_{}_x{}", m.name, m.backend, m.workers),
+                iters: m.completed as u32,
+                mean_s: m_spf,
+                stddev_s: 0.0,
+                min_s: m_spf,
+            };
+            bench::print_result(&row);
+            suite.push(row);
+        }
+        println!(
+            "   -> {:.0} fps fleet-wide across 2 models ({} workers each), accounting exact",
+            report.throughput_per_s, workers
+        );
+    }
+    println!();
+
     // ISS measurement itself, timed
     suite.push(bench::run("iss_measure_dense_k2048", 1, 5, || {
         measure_dense(2048, 11).unwrap();

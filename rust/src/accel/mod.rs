@@ -99,19 +99,6 @@ impl ConvUnit {
     /// EXPERIMENTS.md §Perf-L3.
     pub fn conv_strip(&self, sp: &mut Scratchpad, p: &ConvStrip) -> (u64, u64, u64, u64) {
         let cols = p.w.saturating_sub(p.x0).min(4);
-        let mut sign = [0i32; 9];
-        for (k, s) in sign.iter_mut().enumerate() {
-            *s = self.wsign(k);
-        }
-        // +1 taps as (window row, window col) — hoisted for the staged path
-        let mut plus = [(0usize, 0usize); 9];
-        let mut nplus = 0usize;
-        for k in 0..9usize {
-            if (self.weights >> k) & 1 == 1 {
-                plus[nplus] = (k / 3, k % 3);
-                nplus += 1;
-            }
-        }
         let stride = p.src_stride;
         // top-left of the window for output (0, x0): one row and one
         // column into the border ring
@@ -126,6 +113,16 @@ impl ConvUnit {
             let dst_lo = p.dst + 2 * p.x0;
             let dst_end = p.dst + (p.h.saturating_sub(1) * p.dst_stride + p.x0 + cols) * 2;
             if dst_lo >= src_end || dst_end <= win_base {
+                // +1 taps as (window row, window col) — hoisted for the
+                // staged path (the only path that walks them)
+                let mut plus = [(0usize, 0usize); 9];
+                let mut nplus = 0usize;
+                for k in 0..9usize {
+                    if (self.weights >> k) & 1 == 1 {
+                        plus[nplus] = (k / 3, k % 3);
+                        nplus += 1;
+                    }
+                }
                 for y in 0..p.h {
                     let row0 = win_base + y * stride;
                     let mut r0 = [0u8; 6];
@@ -159,6 +156,10 @@ impl ConvUnit {
             } else {
                 // overlapping dst/window: per-pixel re-reads, the exact
                 // element-serial reference order
+                let mut sign = [0i32; 9];
+                for (k, s) in sign.iter_mut().enumerate() {
+                    *s = self.wsign(k);
+                }
                 for y in 0..p.h {
                     let row0 = win_base + y * stride;
                     for dx in 0..cols {

@@ -38,6 +38,8 @@ pub struct CompiledNet {
     pub scores_addr: usize,
     /// Scratchpad address of the IMG landing zone.
     pub img_addr: usize,
+    /// Network input geometry (Direct-mode images are h*w*c HWC bytes).
+    pub input_hwc: (usize, usize, usize),
     pub input_mode: InputMode,
     pub ncat: usize,
 }
@@ -334,6 +336,7 @@ pub fn compile(np: &NetParams, input_mode: InputMode) -> Result<CompiledNet> {
         layout: layout.clone(),
         scores_addr: layout.scores.base,
         img_addr: layout.img.base,
+        input_hwc: np.net.input_hwc,
         input_mode,
         ncat,
     })

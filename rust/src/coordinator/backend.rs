@@ -137,6 +137,34 @@ impl Backend for BitplaneBackend {
     }
 }
 
+/// The golden-oracle backend: straight-line `nn::layers::forward`, never
+/// optimized. Slow by design — use it for validation lanes and as the
+/// reference leg of differential serving tests; production lanes want
+/// [`OptBackend`] or [`BitplaneBackend`].
+pub struct GoldenBackend {
+    pub np: NetParams,
+}
+
+impl GoldenBackend {
+    pub fn new(np: &NetParams) -> Self {
+        GoldenBackend { np: np.clone() }
+    }
+}
+
+impl Backend for GoldenBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        images.iter().map(|img| crate::nn::layers::forward(&self.np, img)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn max_batch(&self) -> usize {
+        16
+    }
+}
+
 /// PJRT desktop backend (wraps runtime::ModelRuntime).
 pub struct PjrtBackend {
     pub rt: crate::runtime::ModelRuntime,
@@ -258,6 +286,15 @@ mod tests {
         let mut mbuf = vec![vec![99i32]; 7];
         mock.infer_batch_into(&refs, &mut mbuf).unwrap();
         assert_eq!(mbuf, mock.infer_batch(&refs).unwrap());
+    }
+
+    #[test]
+    fn golden_backend_matches_forward() {
+        let np = random_params(&tiny_1cat(), 24);
+        let mut be = GoldenBackend::new(&np);
+        let img = vec![9u8; 3072];
+        let out = be.infer_batch(&[&img]).unwrap();
+        assert_eq!(out[0], crate::nn::layers::forward(&np, &img).unwrap());
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Dynamic request batcher (vLLM-router-style, sized for this system):
 //! requests accumulate until the batch fills or the oldest request has
 //! waited `max_wait_us`; a bounded queue applies backpressure upstream.
+//! Requests carry an optional absolute deadline and a [`Priority`]: the
+//! batcher sheds low-priority work early under load, and the gateway
+//! (`coordinator::gateway`) expires overdue requests at dispatch time.
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -10,6 +13,7 @@ pub struct BatchPolicy {
     /// Dispatch a partial batch once the oldest request waited this long.
     pub max_wait_us: u64,
     /// Queue capacity; pushes beyond it are rejected (backpressure).
+    /// [`Priority::Low`] requests are shed earlier, at half occupancy.
     pub queue_cap: usize,
 }
 
@@ -19,12 +23,40 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Request priority: under load, [`Priority::Low`] is shed once the
+/// queue is half full, while `Normal`/`High` are only rejected at the
+/// full `queue_cap` bound.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
 /// A queued request.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Request {
     pub id: u64,
     pub enqueue_us: u64,
     pub image: Vec<u8>,
+    /// Absolute drop-dead time (same clock as `enqueue_us`); `None`
+    /// never expires. Expiry is enforced by dispatch-time filters (the
+    /// gateway), not by the batcher itself.
+    pub deadline_us: Option<u64>,
+    pub priority: Priority,
+}
+
+impl Request {
+    /// A plain request: no deadline, [`Priority::Normal`].
+    pub fn new(id: u64, enqueue_us: u64, image: Vec<u8>) -> Self {
+        Request { id, enqueue_us, image, deadline_us: None, priority: Priority::Normal }
+    }
+
+    /// True once `now_us` has passed the request's deadline.
+    pub fn expired(&self, now_us: u64) -> bool {
+        matches!(self.deadline_us, Some(d) if now_us > d)
+    }
 }
 
 /// Pure batching state machine (time injected — deterministic tests).
@@ -51,8 +83,15 @@ impl Batcher {
     }
 
     /// Try to enqueue; false = backpressure (caller drops or retries).
+    /// [`Priority::Low`] requests are shed once the queue is half full —
+    /// cheap early load-shedding that keeps headroom for normal traffic.
     pub fn push(&mut self, req: Request) -> bool {
-        if self.queue.len() >= self.policy.queue_cap {
+        let cap = if req.priority == Priority::Low {
+            (self.policy.queue_cap / 2).max(1)
+        } else {
+            self.policy.queue_cap
+        };
+        if self.queue.len() >= cap {
             self.rejected += 1;
             return false;
         }
@@ -86,7 +125,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, t: u64) -> Request {
-        Request { id, enqueue_us: t, image: vec![] }
+        Request::new(id, t, vec![])
     }
 
     #[test]
@@ -118,6 +157,38 @@ mod tests {
         let batch = b.poll(10).unwrap();
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn low_priority_shed_at_half_occupancy() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_us: 1000, queue_cap: 8 });
+        for i in 0..4 {
+            assert!(b.push(req(i, 0)));
+        }
+        // queue at half cap: Low is shed, Normal and High still admitted
+        let low = Request { priority: Priority::Low, ..req(90, 0) };
+        assert!(!b.push(low));
+        assert_eq!(b.rejected, 1);
+        assert!(b.push(req(91, 0)));
+        let high = Request { priority: Priority::High, ..req(92, 0) };
+        assert!(b.push(high));
+    }
+
+    #[test]
+    fn low_priority_admitted_when_idle() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait_us: 1000, queue_cap: 8 });
+        let low = Request { priority: Priority::Low, ..req(0, 0) };
+        assert!(b.push(low));
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn deadline_expiry_accessor() {
+        let mut r = req(0, 100);
+        assert!(!r.expired(u64::MAX));
+        r.deadline_us = Some(500);
+        assert!(!r.expired(500)); // inclusive: exactly-at-deadline is live
+        assert!(r.expired(501));
     }
 
     #[test]

@@ -1,0 +1,777 @@
+//! The multi-model serving gateway: one front door, many models, many
+//! engines.
+//!
+//! The paper ships two detectors from one overlay (the 10-category
+//! CIFAR classifier and the 1-category person detector); FINN-style
+//! serving treats that as a multi-workload scheduling problem. This
+//! module is the front door: a [`Router`] admits tagged requests with
+//! per-request deadlines and [`Priority`]s, applies a per-model
+//! [`BatchPolicy`] (low-priority shedding at half queue occupancy,
+//! hard rejection at `queue_cap`, deadline expiry at dispatch), and
+//! [`serve_gateway`] drives one sharded worker pool per model — the
+//! same scoped-thread, per-worker-scratch, zero-steady-state-allocation
+//! scheme as [`crate::coordinator::pipeline::serve_parallel`] — with
+//! per-model [`Histogram`]/[`Meter`] metrics merged into a fleet
+//! report.
+//!
+//! Exact accounting is the contract: for every model and for the fleet,
+//! `submitted == completed + rejected + expired` once serving ends
+//! (unknown-model requests count as fleet-level rejections). The
+//! conservation proptests in this module and the differential tests
+//! (gateway scores bit-exact with serial per-model inference) pin it.
+
+use std::collections::HashMap;
+
+use super::backend::Backend;
+use super::batcher::{BatchPolicy, Batcher, Priority, Request};
+use super::metrics::{Histogram, Meter};
+use super::pipeline::HistogramSummary;
+use crate::util::TinError;
+use crate::Result;
+
+/// One tagged inference request entering the gateway.
+#[derive(Clone, Debug)]
+pub struct GatewayRequest {
+    pub id: u64,
+    /// Registered model name; unknown names are rejected on admission.
+    pub model: String,
+    pub image: Vec<u8>,
+    /// Latency budget in microseconds from admission; the request is
+    /// dropped (counted `expired`) if it is still queued past the
+    /// budget. `None` never expires.
+    pub deadline_budget_us: Option<u64>,
+    pub priority: Priority,
+}
+
+impl GatewayRequest {
+    pub fn new(id: u64, model: impl Into<String>, image: Vec<u8>) -> Self {
+        GatewayRequest {
+            id,
+            model: model.into(),
+            image,
+            deadline_budget_us: None,
+            priority: Priority::Normal,
+        }
+    }
+
+    pub fn with_deadline(mut self, budget_us: u64) -> Self {
+        self.deadline_budget_us = Some(budget_us);
+        self
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+/// Admission outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    Queued,
+    /// Shed by backpressure (queue full, or half-full for low priority).
+    Rejected,
+    /// No lane with that model name.
+    UnknownModel,
+}
+
+/// Per-lane exact accounting. Once serving is done,
+/// `submitted == completed + rejected + expired`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneCounts {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+}
+
+struct RouterLane {
+    name: String,
+    policy: BatchPolicy,
+    batcher: Batcher,
+    counts: LaneCounts,
+}
+
+/// The admission + dispatch state machine (time injected, fully
+/// deterministic — the threaded front-end and the proptests share it).
+pub struct Router {
+    lanes: Vec<RouterLane>,
+    by_name: HashMap<String, usize>,
+    /// Requests naming no registered model (fleet-level rejections).
+    pub unknown_model: u64,
+}
+
+impl Router {
+    /// Build a router with one lane per (model name, policy).
+    pub fn new(lanes: &[(String, BatchPolicy)]) -> Self {
+        let mut by_name = HashMap::new();
+        let lanes: Vec<RouterLane> = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, (name, policy))| {
+                by_name.insert(name.clone(), i);
+                RouterLane {
+                    name: name.clone(),
+                    policy: *policy,
+                    batcher: Batcher::new(*policy),
+                    counts: LaneCounts::default(),
+                }
+            })
+            .collect();
+        Router { lanes, by_name, unknown_model: 0 }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn lane_name(&self, li: usize) -> &str {
+        &self.lanes[li].name
+    }
+
+    pub fn counts(&self, li: usize) -> LaneCounts {
+        self.lanes[li].counts
+    }
+
+    /// Admit one request at time `now_us`: route by model tag, stamp the
+    /// absolute deadline, push through the lane's batcher (which sheds
+    /// low-priority work at half occupancy).
+    pub fn admit(&mut self, gr: GatewayRequest, now_us: u64) -> Admit {
+        let Some(&li) = self.by_name.get(&gr.model) else {
+            self.unknown_model += 1;
+            return Admit::UnknownModel;
+        };
+        let lane = &mut self.lanes[li];
+        lane.counts.submitted += 1;
+        let req = Request {
+            deadline_us: gr.deadline_budget_us.map(|b| now_us.saturating_add(b)),
+            priority: gr.priority,
+            ..Request::new(gr.id, now_us, gr.image)
+        };
+        if lane.batcher.push(req) {
+            Admit::Queued
+        } else {
+            lane.counts.rejected += 1;
+            Admit::Rejected
+        }
+    }
+
+    /// Pop every batch whose lane policy fires at `now_us`. Requests past
+    /// their deadline are dropped here (counted `expired`); only live
+    /// batches are returned, tagged with their lane index.
+    pub fn poll(&mut self, now_us: u64) -> Vec<(usize, Vec<Request>)> {
+        let mut out = Vec::new();
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
+            while let Some(batch) = lane.batcher.poll(now_us) {
+                let n_before = batch.len() as u64;
+                let live: Vec<Request> = batch.into_iter().filter(|r| !r.expired(now_us)).collect();
+                lane.counts.expired += n_before - live.len() as u64;
+                if !live.is_empty() {
+                    out.push((li, live));
+                }
+            }
+        }
+        out
+    }
+
+    /// Drain every lane (shutdown), chunking by each lane's `max_batch`
+    /// and applying the same deadline expiry as [`Router::poll`].
+    pub fn flush(&mut self, now_us: u64) -> Vec<(usize, Vec<Request>)> {
+        let mut out = Vec::new();
+        for (li, lane) in self.lanes.iter_mut().enumerate() {
+            let rest = lane.batcher.flush();
+            let n_before = rest.len() as u64;
+            let live: Vec<Request> = rest.into_iter().filter(|r| !r.expired(now_us)).collect();
+            lane.counts.expired += n_before - live.len() as u64;
+            for chunk in live.chunks(lane.policy.max_batch.max(1)) {
+                out.push((li, chunk.to_vec()));
+            }
+        }
+        out
+    }
+
+    /// Record `n` completions on a lane (called by whoever ran the
+    /// dispatched batch).
+    pub fn note_completed(&mut self, li: usize, n: u64) {
+        self.lanes[li].counts.completed += n;
+    }
+}
+
+/// One model lane handed to [`serve_gateway`]: a name, a batching
+/// policy, and a sharded worker pool (one backend instance per worker).
+pub struct GatewayLane<B> {
+    pub name: String,
+    pub policy: BatchPolicy,
+    pub workers: Vec<B>,
+}
+
+/// Gateway serving knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayConfig {
+    /// Collect `(request id, scores)` pairs per model — the hook the
+    /// differential tests use to pin gateway results against serial
+    /// inference. Off for throughput runs.
+    pub collect_scores: bool,
+}
+
+/// Per-model serving results.
+pub struct ModelReport {
+    pub name: String,
+    pub backend: &'static str,
+    pub workers: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency: HistogramSummary,
+    pub throughput_per_s: f64,
+    /// `(request id, scores)` for every completed request, when
+    /// [`GatewayConfig::collect_scores`] is set.
+    pub scores: Vec<(u64, Vec<i32>)>,
+}
+
+/// The merged fleet report.
+pub struct GatewayReport {
+    pub models: Vec<ModelReport>,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Includes per-lane backpressure rejections AND unknown-model
+    /// requests (tracked separately in `unknown_model`).
+    pub rejected: u64,
+    pub expired: u64,
+    pub unknown_model: u64,
+    pub latency: HistogramSummary,
+    pub throughput_per_s: f64,
+    pub wall_s: f64,
+}
+
+impl GatewayReport {
+    /// The exact-accounting invariant, per model and fleet-wide.
+    pub fn conserved(&self) -> bool {
+        self.submitted == self.completed + self.rejected + self.expired
+            && self
+                .models
+                .iter()
+                .all(|m| m.submitted == m.completed + m.rejected + m.expired)
+    }
+}
+
+/// Serve a tagged request stream across per-model worker pools.
+///
+/// The producer thread admits requests through the [`Router`] and
+/// dispatches live batches onto one bounded channel per model; each
+/// worker owns its backend and a reusable score buffer
+/// ([`Backend::infer_batch_into`]), so CPU-engine lanes run with zero
+/// steady-state allocations. Distinct models genuinely run
+/// concurrently: every worker of every lane is its own OS thread.
+pub fn serve_gateway<B: Backend + Send>(
+    requests: Vec<GatewayRequest>,
+    mut lanes: Vec<GatewayLane<B>>,
+    cfg: &GatewayConfig,
+) -> Result<(GatewayReport, Vec<GatewayLane<B>>)> {
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Mutex;
+
+    if lanes.is_empty() {
+        return Err(TinError::Config("serve_gateway needs >= 1 model lane".into()));
+    }
+    for lane in &lanes {
+        if lane.workers.is_empty() {
+            return Err(TinError::Config(format!(
+                "model '{}' has an empty worker pool",
+                lane.name
+            )));
+        }
+    }
+
+    // effective per-lane policy: never hand a backend more than its
+    // max_batch (the overlay takes one frame at a time)
+    let routes: Vec<(String, BatchPolicy)> = lanes
+        .iter()
+        .map(|l| {
+            let eff = BatchPolicy {
+                max_batch: l.policy.max_batch.min(l.workers[0].max_batch()).max(1),
+                ..l.policy
+            };
+            (l.name.clone(), eff)
+        })
+        .collect();
+    let mut router = Router::new(&routes);
+
+    struct WorkerTally {
+        completed: u64,
+        batches: u64,
+        batch_sizes: u64,
+        latency: Histogram,
+        meter: Meter,
+        scores: Vec<(u64, Vec<i32>)>,
+    }
+
+    let n_lanes = lanes.len();
+    let mut txs = Vec::with_capacity(n_lanes);
+    let mut rxs = Vec::with_capacity(n_lanes);
+    for lane in &lanes {
+        let (tx, rx) = sync_channel::<Vec<Request>>(2 * lane.workers.len());
+        txs.push(tx);
+        rxs.push(Mutex::new(rx));
+    }
+    let rxs = &rxs;
+    let t_start = std::time::Instant::now();
+    let collect_scores = cfg.collect_scores;
+
+    let tallies: Vec<(usize, Result<WorkerTally>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (li, lane) in lanes.iter_mut().enumerate() {
+            for be in lane.workers.iter_mut() {
+                handles.push((
+                    li,
+                    s.spawn(move || -> Result<WorkerTally> {
+                        let mut tally = WorkerTally {
+                            completed: 0,
+                            batches: 0,
+                            batch_sizes: 0,
+                            latency: Histogram::new(),
+                            meter: Meter::default(),
+                            scores: Vec::new(),
+                        };
+                        let mut failed: Option<TinError> = None;
+                        let mut scores_buf: Vec<Vec<i32>> = Vec::new();
+                        loop {
+                            // hold the lane lock only for the dequeue
+                            let batch = match rxs[li].lock().unwrap().recv() {
+                                Ok(b) => b,
+                                Err(_) => break, // producer done
+                            };
+                            if failed.is_some() {
+                                continue; // drain so the producer never blocks
+                            }
+                            let imgs: Vec<&[u8]> =
+                                batch.iter().map(|r| r.image.as_slice()).collect();
+                            match be.infer_batch_into(&imgs, &mut scores_buf) {
+                                Ok(()) => {
+                                    let t = t_start.elapsed().as_micros() as u64;
+                                    for (req, sc) in batch.iter().zip(scores_buf.iter()) {
+                                        tally.latency.record(t.saturating_sub(req.enqueue_us));
+                                        tally.completed += 1;
+                                        if collect_scores {
+                                            tally.scores.push((req.id, sc.clone()));
+                                        }
+                                    }
+                                    tally.meter.record(t, batch.len() as u64);
+                                    tally.batches += 1;
+                                    tally.batch_sizes += batch.len() as u64;
+                                }
+                                Err(e) => failed = Some(e),
+                            }
+                        }
+                        match failed {
+                            Some(e) => Err(e),
+                            None => Ok(tally),
+                        }
+                    }),
+                ));
+            }
+        }
+
+        // front door: admit, batch, expire, dispatch
+        for gr in requests {
+            let now = t_start.elapsed().as_micros() as u64;
+            router.admit(gr, now);
+            for (li, batch) in router.poll(t_start.elapsed().as_micros() as u64) {
+                txs[li].send(batch).ok();
+            }
+        }
+        let now = t_start.elapsed().as_micros() as u64;
+        for (li, batch) in router.flush(now) {
+            txs[li].send(batch).ok();
+        }
+        drop(txs); // disconnect -> workers drain and exit
+
+        handles
+            .into_iter()
+            .map(|(li, h)| (li, h.join().unwrap()))
+            .collect()
+    });
+
+    // merge per-worker tallies into per-model and fleet reports
+    struct LaneAgg {
+        completed: u64,
+        batches: u64,
+        batch_sizes: u64,
+        latency: Histogram,
+        meter: Meter,
+        scores: Vec<(u64, Vec<i32>)>,
+    }
+    let mut aggs: Vec<LaneAgg> = (0..n_lanes)
+        .map(|_| LaneAgg {
+            completed: 0,
+            batches: 0,
+            batch_sizes: 0,
+            latency: Histogram::new(),
+            meter: Meter::default(),
+            scores: Vec::new(),
+        })
+        .collect();
+    for (li, tally) in tallies {
+        let t = tally?;
+        let agg = &mut aggs[li];
+        agg.completed += t.completed;
+        agg.batches += t.batches;
+        agg.batch_sizes += t.batch_sizes;
+        agg.latency.merge(&t.latency);
+        agg.meter.merge(&t.meter);
+        agg.scores.extend(t.scores);
+    }
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let mut fleet_latency = Histogram::new();
+    let mut models = Vec::with_capacity(n_lanes);
+    let mut submitted = router.unknown_model;
+    let mut completed = 0u64;
+    let mut rejected = router.unknown_model;
+    let mut expired = 0u64;
+    for (li, (lane, agg)) in lanes.iter().zip(aggs.into_iter()).enumerate() {
+        router.note_completed(li, agg.completed);
+        let c = router.counts(li);
+        submitted += c.submitted;
+        completed += c.completed;
+        rejected += c.rejected;
+        expired += c.expired;
+        fleet_latency.merge(&agg.latency);
+        models.push(ModelReport {
+            name: lane.name.clone(),
+            backend: lane.workers[0].name(),
+            workers: lane.workers.len(),
+            submitted: c.submitted,
+            completed: c.completed,
+            rejected: c.rejected,
+            expired: c.expired,
+            batches: agg.batches,
+            mean_batch: if agg.batches > 0 {
+                agg.batch_sizes as f64 / agg.batches as f64
+            } else {
+                0.0
+            },
+            latency: HistogramSummary::from(&agg.latency),
+            throughput_per_s: agg.meter.per_second(),
+            scores: agg.scores,
+        });
+    }
+
+    let report = GatewayReport {
+        models,
+        submitted,
+        completed,
+        rejected,
+        expired,
+        unknown_model: router.unknown_model,
+        latency: HistogramSummary::from(&fleet_latency),
+        throughput_per_s: completed as f64 / wall_s.max(1e-9),
+        wall_s,
+    };
+    Ok((report, lanes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{BitplaneBackend, MockBackend, OptBackend};
+    use crate::model::weights::random_params;
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+    use crate::util::Rng64;
+
+    fn mock_lane(name: &str, workers: usize, policy: BatchPolicy) -> GatewayLane<MockBackend> {
+        GatewayLane {
+            name: name.into(),
+            policy,
+            workers: (0..workers).map(|_| MockBackend::new(0)).collect(),
+        }
+    }
+
+    fn wide_policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 10_000 }
+    }
+
+    #[test]
+    fn gateway_serves_two_models_bit_exact_with_serial_inference() {
+        // the acceptance-criterion test: two models on two distinct
+        // engines, concurrently, scores bit-exact with serial inference
+        let np1 = random_params(&tiny_1cat(), 51);
+        let np10 = random_params(&reduced_10cat(), 52);
+        let mut rng = Rng64::new(8);
+        let imgs: Vec<Vec<u8>> = (0..24)
+            .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
+            .collect();
+        let requests: Vec<GatewayRequest> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| {
+                let model = if i % 2 == 0 { "1cat" } else { "10cat" };
+                GatewayRequest::new(i as u64, model, im.clone())
+            })
+            .collect();
+        let lanes = vec![
+            GatewayLane {
+                name: "1cat".into(),
+                policy: wide_policy(),
+                workers: (0..2)
+                    .map(|_| crate::coordinator::registry::AnyBackend::Bitplane(
+                        BitplaneBackend::new(&np1).unwrap(),
+                    ))
+                    .collect(),
+            },
+            GatewayLane {
+                name: "10cat".into(),
+                policy: wide_policy(),
+                workers: (0..2)
+                    .map(|_| crate::coordinator::registry::AnyBackend::Opt(
+                        OptBackend::new(&np10).unwrap(),
+                    ))
+                    .collect(),
+            },
+        ];
+        let (report, _lanes) =
+            serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+        assert!(report.conserved(), "accounting broken");
+        assert_eq!(report.completed, 24);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.expired, 0);
+        let mut seen = 0usize;
+        for m in &report.models {
+            let np = if m.name == "1cat" { &np1 } else { &np10 };
+            assert_eq!(m.completed as usize, 12);
+            assert_eq!(m.scores.len(), 12);
+            for (id, scores) in &m.scores {
+                let want = crate::nn::layers::forward(np, &imgs[*id as usize]).unwrap();
+                assert_eq!(scores, &want, "model {} request {id} diverged", m.name);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 24, "every request scored exactly once");
+        assert!(report.latency.p99_us > 0);
+        assert!(report.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_is_rejected_with_exact_accounting() {
+        let requests = vec![
+            GatewayRequest::new(0, "known", vec![1; 8]),
+            GatewayRequest::new(1, "nope", vec![2; 8]),
+            GatewayRequest::new(2, "known", vec![3; 8]),
+        ];
+        let lanes = vec![mock_lane("known", 1, wide_policy())];
+        let (report, lanes) = serve_gateway(requests, lanes, &GatewayConfig::default()).unwrap();
+        assert_eq!(report.submitted, 3);
+        assert_eq!(report.unknown_model, 1);
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 1); // the unknown-model request
+        assert!(report.conserved());
+        assert_eq!(lanes[0].workers[0].seen, 2);
+    }
+
+    #[test]
+    fn gateway_rejects_empty_configurations() {
+        let none: Vec<GatewayLane<MockBackend>> = Vec::new();
+        assert!(serve_gateway(vec![], none, &GatewayConfig::default()).is_err());
+        let empty_pool = vec![GatewayLane::<MockBackend> {
+            name: "m".into(),
+            policy: wide_policy(),
+            workers: Vec::new(),
+        }];
+        assert!(serve_gateway(vec![], empty_pool, &GatewayConfig::default()).is_err());
+    }
+
+    #[test]
+    fn router_expires_overdue_requests_deterministically() {
+        let policy = BatchPolicy { max_batch: 4, max_wait_us: 1000, queue_cap: 16 };
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        // two requests at t=0: one with a 100us budget, one without
+        assert_eq!(
+            router.admit(GatewayRequest::new(0, "m", vec![]).with_deadline(100), 0),
+            Admit::Queued
+        );
+        assert_eq!(router.admit(GatewayRequest::new(1, "m", vec![]), 0), Admit::Queued);
+        // nothing fires before the wait bound
+        assert!(router.poll(500).is_empty());
+        // at t=1000 the lane fires; request 0 is 900us past its deadline
+        let batches = router.poll(1000);
+        assert_eq!(batches.len(), 1);
+        let (li, batch) = &batches[0];
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+        router.note_completed(*li, 1);
+        let c = router.counts(0);
+        assert_eq!(c.submitted, 2);
+        assert_eq!(c.expired, 1);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.completed + c.rejected + c.expired, c.submitted);
+    }
+
+    #[test]
+    fn router_sheds_low_priority_under_load() {
+        let policy = BatchPolicy { max_batch: 64, max_wait_us: u64::MAX, queue_cap: 8 };
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        for i in 0..4 {
+            assert_eq!(router.admit(GatewayRequest::new(i, "m", vec![]), 0), Admit::Queued);
+        }
+        // half full: low is shed, normal still admitted
+        assert_eq!(
+            router.admit(
+                GatewayRequest::new(90, "m", vec![]).with_priority(Priority::Low),
+                0
+            ),
+            Admit::Rejected
+        );
+        assert_eq!(router.admit(GatewayRequest::new(91, "m", vec![]), 0), Admit::Queued);
+        let c = router.counts(0);
+        assert_eq!(c.rejected, 1);
+        assert_eq!(c.submitted, 6);
+    }
+
+    #[test]
+    fn prop_router_conservation_under_random_traffic() {
+        // random lanes x arrivals x deadlines x priorities: every admitted
+        // request leaves exactly once (dispatched live, rejected, or
+        // expired) and the ledger balances
+        crate::testkit::check(60, |rng| {
+            let n_lanes = 1 + rng.below(3) as usize;
+            let routes: Vec<(String, BatchPolicy)> = (0..n_lanes)
+                .map(|i| {
+                    (
+                        format!("m{i}"),
+                        BatchPolicy {
+                            max_batch: 1 + rng.below(6) as usize,
+                            max_wait_us: rng.below(2000) as u64,
+                            queue_cap: 1 + rng.below(24) as usize,
+                        },
+                    )
+                })
+                .collect();
+            let mut router = Router::new(&routes);
+            let mut now = 0u64;
+            let n = 1 + rng.below(200) as u64;
+            let mut dispatched_ids = Vec::new();
+            let mut live = 0u64;
+            for id in 0..n {
+                now += rng.below(400) as u64;
+                // ~1 in 8 requests names a model nobody serves
+                let model = if rng.below(8) == 0 {
+                    "ghost".to_string()
+                } else {
+                    format!("m{}", rng.below(n_lanes as u32))
+                };
+                let mut gr = GatewayRequest::new(id, model, vec![]);
+                if rng.below(3) == 0 {
+                    gr = gr.with_deadline(rng.below(1500) as u64);
+                }
+                gr = gr.with_priority(match rng.below(3) {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                });
+                router.admit(gr, now);
+                for (li, batch) in router.poll(now) {
+                    live += batch.len() as u64;
+                    router.note_completed(li, batch.len() as u64);
+                    dispatched_ids.extend(batch.iter().map(|r| r.id));
+                }
+            }
+            now += 10_000;
+            for (li, batch) in router.flush(now) {
+                live += batch.len() as u64;
+                router.note_completed(li, batch.len() as u64);
+                dispatched_ids.extend(batch.iter().map(|r| r.id));
+            }
+            // no id dispatched twice
+            let mut ids = dispatched_ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), dispatched_ids.len(), "a request was double-dispatched");
+            // per-lane and fleet ledgers balance
+            let mut total = router.unknown_model;
+            for li in 0..n_lanes {
+                let c = router.counts(li);
+                assert_eq!(
+                    c.submitted,
+                    c.completed + c.rejected + c.expired,
+                    "lane {li} ledger broken"
+                );
+                total += c.submitted;
+            }
+            assert_eq!(total, n, "fleet ledger broken");
+            assert_eq!(live, (0..n_lanes).map(|li| router.counts(li).completed).sum::<u64>());
+        });
+    }
+
+    #[test]
+    fn prop_gateway_threaded_conservation() {
+        // the real threaded path: random worker counts, policies and
+        // deadlines never lose or double-count a frame
+        crate::testkit::check(10, |rng| {
+            let n = 1 + rng.below(80) as u64;
+            let requests: Vec<GatewayRequest> = (0..n)
+                .map(|id| {
+                    let model = if id % 3 == 2 { "b" } else { "a" };
+                    let mut gr =
+                        GatewayRequest::new(id, model, vec![(id % 251) as u8; 16]);
+                    if rng.below(4) == 0 {
+                        gr = gr.with_deadline(rng.below(2000) as u64);
+                    }
+                    if rng.below(4) == 0 {
+                        gr = gr.with_priority(Priority::Low);
+                    }
+                    gr
+                })
+                .collect();
+            let lanes = vec![
+                mock_lane(
+                    "a",
+                    1 + rng.below(3) as usize,
+                    BatchPolicy {
+                        max_batch: 1 + rng.below(8) as usize,
+                        max_wait_us: rng.below(500) as u64,
+                        queue_cap: 1 + rng.below(64) as usize,
+                    },
+                ),
+                mock_lane(
+                    "b",
+                    1 + rng.below(2) as usize,
+                    BatchPolicy {
+                        max_batch: 1 + rng.below(4) as usize,
+                        max_wait_us: rng.below(500) as u64,
+                        queue_cap: 1 + rng.below(16) as usize,
+                    },
+                ),
+            ];
+            let (report, lanes) =
+                serve_gateway(requests, lanes, &GatewayConfig::default()).unwrap();
+            assert_eq!(report.submitted, n);
+            assert!(report.conserved(), "accounting broken");
+            // what the workers saw is exactly what the ledger says
+            for (m, lane) in report.models.iter().zip(&lanes) {
+                let seen: u64 = lane.workers.iter().map(|w| w.seen).sum();
+                assert_eq!(seen, m.completed, "model {}", m.name);
+            }
+        });
+    }
+
+    #[test]
+    fn per_model_metrics_are_populated() {
+        let requests: Vec<GatewayRequest> = (0..32)
+            .map(|id| GatewayRequest::new(id, if id % 2 == 0 { "a" } else { "b" }, vec![1; 8]))
+            .collect();
+        let lanes = vec![mock_lane("a", 2, wide_policy()), mock_lane("b", 1, wide_policy())];
+        let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig::default()).unwrap();
+        assert!(report.conserved());
+        for m in &report.models {
+            assert_eq!(m.completed, 16, "model {}", m.name);
+            assert!(m.batches > 0);
+            assert!(m.mean_batch >= 1.0);
+            assert!(m.latency.max_us > 0 || m.latency.p99_us > 0);
+        }
+        assert_eq!(report.models[0].backend, "mock");
+        assert_eq!(report.models[0].workers, 2);
+    }
+}

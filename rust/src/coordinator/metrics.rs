@@ -88,6 +88,21 @@ impl Meter {
         }
         self.events as f64 * 1e6 / span as f64
     }
+
+    /// Fold another meter into this one (fleet-report merge): events add,
+    /// the observation window becomes the union of the two windows.
+    pub fn merge(&mut self, other: &Meter) {
+        if other.events == 0 {
+            return;
+        }
+        if self.events == 0 {
+            *self = *other;
+            return;
+        }
+        self.start_us = self.start_us.min(other.start_us);
+        self.end_us = self.end_us.max(other.end_us);
+        self.events += other.events;
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +155,105 @@ mod tests {
         m.record(0, 1);
         m.record(1_000_000, 99);
         assert!((m.per_second() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn meter_merge_adds_events_and_unions_windows() {
+        let mut a = Meter::default();
+        let mut b = Meter::default();
+        let mut all = Meter::default();
+        a.record(100, 3);
+        all.record(100, 3);
+        b.record(50, 2);
+        all.record(50, 2);
+        b.record(1_000_000, 5);
+        all.record(1_000_000, 5);
+        a.merge(&b);
+        assert_eq!(a.events, all.events);
+        assert_eq!(a.start_us, 50);
+        assert_eq!(a.end_us, 1_000_000);
+        // merging an empty meter is a no-op in both directions
+        let empty = Meter::default();
+        let before = a;
+        a.merge(&empty);
+        assert_eq!(a.events, before.events);
+        let mut e = Meter::default();
+        e.merge(&a);
+        assert_eq!(e.per_second(), a.per_second());
+    }
+
+    #[test]
+    fn prop_quantile_monotone_in_q() {
+        // quantile_us must be non-decreasing in q over arbitrary samples
+        crate::testkit::check(50, |rng| {
+            let mut h = Histogram::new();
+            let n = 1 + rng.below(200);
+            for _ in 0..n {
+                h.record(1 + rng.below(2_000_000) as u64);
+            }
+            let qs = [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+            for w in qs.windows(2) {
+                assert!(
+                    h.quantile_us(w[0]) <= h.quantile_us(w[1]),
+                    "quantile not monotone: q{} -> {} > q{} -> {}",
+                    w[0],
+                    h.quantile_us(w[0]),
+                    w[1],
+                    h.quantile_us(w[1])
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_merge_equals_concatenated_recording() {
+        // merge(a, b) must be indistinguishable from recording the
+        // concatenated sample stream into one histogram
+        crate::testkit::check(50, |rng| {
+            let mut a = Histogram::new();
+            let mut b = Histogram::new();
+            let mut all = Histogram::new();
+            let n = rng.below(150);
+            for _ in 0..n {
+                let v = rng.below(5_000_000) as u64;
+                all.record(v);
+                if rng.below(2) == 0 {
+                    a.record(v);
+                } else {
+                    b.record(v);
+                }
+            }
+            a.merge(&b);
+            assert_eq!(a.count, all.count);
+            assert_eq!(a.sum_us, all.sum_us);
+            assert_eq!(a.max_us, all.max_us);
+            for q in [0.1, 0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(a.quantile_us(q), all.quantile_us(q), "q={q}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_meter_per_second_stable_under_split_recording() {
+        // recording n events at time t in one call or split across many
+        // calls (any partition, any order) gives the same rate
+        crate::testkit::check(50, |rng| {
+            let n_ticks = 2 + rng.below(20);
+            let ticks: Vec<(u64, u64)> = (0..n_ticks)
+                .map(|_| (rng.below(1_000_000) as u64, 1 + rng.below(40) as u64))
+                .collect();
+            let mut whole = Meter::default();
+            let mut split = Meter::default();
+            for &(t, n) in &ticks {
+                whole.record(t, n);
+                // split the same n events at the same instant
+                let cut = rng.below(n as u32 + 1) as u64;
+                split.record(t, cut);
+                split.record(t, n - cut);
+            }
+            assert_eq!(whole.events, split.events);
+            assert!((whole.per_second() - split.per_second()).abs() < 1e-9);
+        });
     }
 
     #[test]

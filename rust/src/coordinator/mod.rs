@@ -2,20 +2,32 @@
 //! overlay: frame sources, dynamic batching, inference backends,
 //! backpressure, and latency/throughput metrics.
 //!
-//! Two deployment shapes, matching the paper's two §II comparisons:
+//! Three deployment shapes, matching the paper's two §II comparisons
+//! plus the serving north star:
 //!
 //! * **Embedded**: camera frames → preprocessing → the overlay
 //!   simulator, one frame at a time (the MDP person detector).
 //! * **Desktop**: request stream → dynamic batcher → AOT-compiled XLA
 //!   executables via PJRT (the i7 baseline re-cast as a serving path
 //!   with b1/b4/b8 variants).
+//! * **Gateway**: a multi-model front door (`registry` + `gateway`)
+//!   routing tagged requests — the paper's two detectors served from
+//!   one process — across per-model sharded worker pools on any mix of
+//!   engines, with deadlines, priorities, load shedding and exact
+//!   accounting.
 
 pub mod backend;
 pub mod batcher;
+pub mod gateway;
 pub mod metrics;
 pub mod pipeline;
+pub mod registry;
 
-pub use backend::{Backend, OptBackend, OverlayBackend};
-pub use batcher::{Batcher, BatchPolicy};
+pub use backend::{Backend, BitplaneBackend, GoldenBackend, OptBackend, OverlayBackend};
+pub use batcher::{Batcher, BatchPolicy, Priority};
+pub use gateway::{
+    serve_gateway, GatewayConfig, GatewayLane, GatewayReport, GatewayRequest, ModelReport, Router,
+};
 pub use metrics::{Histogram, Meter};
 pub use pipeline::{run_stream, serve_parallel, Frame, PipelineReport, StreamConfig};
+pub use registry::{parse_model_specs, AnyBackend, BackendKind, ModelRegistry, ModelSpec};

@@ -122,7 +122,7 @@ pub fn run_stream<B: Backend>(
         if let Some(l) = frame.label {
             labels.insert(frame.id, l);
         }
-        let accepted = batcher.push(Request { id: frame.id, enqueue_us: now_us, image: frame.image });
+        let accepted = batcher.push(Request::new(frame.id, now_us, frame.image));
         if !accepted {
             report.rejected += 1;
         }
@@ -190,7 +190,7 @@ pub fn serve_threaded<B: Backend>(
         match rx.recv_timeout(std::time::Duration::from_millis(5)) {
             Ok(frame) => {
                 let t = now_us(t_start);
-                if !batcher.push(Request { id: frame.id, enqueue_us: t, image: frame.image }) {
+                if !batcher.push(Request::new(frame.id, t, frame.image)) {
                     report.rejected += 1;
                 }
                 while let Some(batch) = batcher.poll(now_us(t_start)) {
@@ -310,7 +310,7 @@ pub fn serve_parallel<B: Backend + Send>(
         let mut batcher = Batcher::new(policy);
         for frame in frames {
             let now = t_start.elapsed().as_micros() as u64;
-            if !batcher.push(Request { id: frame.id, enqueue_us: now, image: frame.image }) {
+            if !batcher.push(Request::new(frame.id, now, frame.image)) {
                 report.rejected += 1;
             }
             while let Some(batch) = batcher.poll(t_start.elapsed().as_micros() as u64) {

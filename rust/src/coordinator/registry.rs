@@ -1,0 +1,275 @@
+//! Model registry for the multi-model serving gateway: named models,
+//! each bound to an inference engine ([`BackendKind`]) and a worker
+//! count, instantiated into per-worker backend pools.
+//!
+//! Spec syntax (CLI `serve --models`): a comma-separated list of
+//! `name:backend[:workers]`, e.g. `1cat:bitplane,10cat:opt:2`. Workers
+//! default to 1; the overlay backend is single-frame (the MDP has one
+//! camera and one scratchpad image slot), so overlay pools of any size
+//! still serve one frame per worker at a time.
+
+use std::collections::HashMap;
+
+use super::backend::{Backend, BitplaneBackend, GoldenBackend, OptBackend, OverlayBackend};
+use crate::compiler::lower::{compile, InputMode};
+use crate::model::NetParams;
+use crate::util::TinError;
+use crate::Result;
+
+/// Which inference engine a model is served on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// `nn::layers` — the oracle, slow by design.
+    Golden,
+    /// `nn::opt` — the bit-packed fast engine.
+    Opt,
+    /// `nn::bitplane` — the popcount engine (fastest CPU path).
+    Bitplane,
+    /// The cycle-accurate overlay simulator.
+    Overlay,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "golden" => Ok(BackendKind::Golden),
+            "opt" => Ok(BackendKind::Opt),
+            "bitplane" => Ok(BackendKind::Bitplane),
+            "overlay" => Ok(BackendKind::Overlay),
+            other => Err(TinError::Config(format!(
+                "unknown backend '{other}' (expected golden|opt|bitplane|overlay)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Golden => "golden",
+            BackendKind::Opt => "opt",
+            BackendKind::Bitplane => "bitplane",
+            BackendKind::Overlay => "overlay",
+        }
+    }
+}
+
+/// One parsed `name:backend[:workers]` entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub backend: BackendKind,
+    pub workers: usize,
+}
+
+/// Parse a `--models` spec list: `name:backend[:workers],...`.
+pub fn parse_model_specs(s: &str) -> Result<Vec<ModelSpec>> {
+    let mut specs: Vec<ModelSpec> = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() < 2 || fields.len() > 3 || fields[0].is_empty() {
+            return Err(TinError::Config(format!(
+                "bad model spec '{part}' (expected name:backend[:workers])"
+            )));
+        }
+        let backend = BackendKind::parse(fields[1])?;
+        let workers = match fields.get(2) {
+            Some(w) => w
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .ok_or_else(|| TinError::Config(format!("bad worker count in '{part}'")))?,
+            None => 1,
+        };
+        let name = fields[0].to_string();
+        if specs.iter().any(|sp| sp.name == name) {
+            return Err(TinError::Config(format!("duplicate model name '{name}'")));
+        }
+        specs.push(ModelSpec { name, backend, workers });
+    }
+    if specs.is_empty() {
+        return Err(TinError::Config("empty --models spec".into()));
+    }
+    Ok(specs)
+}
+
+/// A concrete backend instance behind one enum, so heterogeneous worker
+/// pools (`Vec<AnyBackend>`) stay `Send` without trait objects.
+pub enum AnyBackend {
+    Golden(GoldenBackend),
+    Opt(OptBackend),
+    Bitplane(BitplaneBackend),
+    Overlay(Box<OverlayBackend>),
+}
+
+impl Backend for AnyBackend {
+    fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+        match self {
+            AnyBackend::Golden(b) => b.infer_batch(images),
+            AnyBackend::Opt(b) => b.infer_batch(images),
+            AnyBackend::Bitplane(b) => b.infer_batch(images),
+            AnyBackend::Overlay(b) => b.infer_batch(images),
+        }
+    }
+
+    fn infer_batch_into(&mut self, images: &[&[u8]], out: &mut Vec<Vec<i32>>) -> Result<()> {
+        match self {
+            AnyBackend::Golden(b) => b.infer_batch_into(images, out),
+            AnyBackend::Opt(b) => b.infer_batch_into(images, out),
+            AnyBackend::Bitplane(b) => b.infer_batch_into(images, out),
+            AnyBackend::Overlay(b) => b.infer_batch_into(images, out),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBackend::Golden(b) => b.name(),
+            AnyBackend::Opt(b) => b.name(),
+            AnyBackend::Bitplane(b) => b.name(),
+            AnyBackend::Overlay(b) => b.name(),
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        match self {
+            AnyBackend::Golden(b) => b.max_batch(),
+            AnyBackend::Opt(b) => b.max_batch(),
+            AnyBackend::Bitplane(b) => b.max_batch(),
+            AnyBackend::Overlay(b) => b.max_batch(),
+        }
+    }
+}
+
+/// One registered model: its spec plus the trained (or synthetic)
+/// parameters it serves.
+pub struct ModelEntry {
+    pub spec: ModelSpec,
+    pub params: NetParams,
+}
+
+/// Named models bound to engines — the gateway's front-door inventory.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+    by_name: HashMap<String, usize>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// Register a model; names must be unique.
+    pub fn register(&mut self, spec: ModelSpec, params: NetParams) -> Result<()> {
+        if self.by_name.contains_key(&spec.name) {
+            return Err(TinError::Config(format!("model '{}' already registered", spec.name)));
+        }
+        self.by_name.insert(spec.name.clone(), self.entries.len());
+        self.entries.push(ModelEntry { spec, params });
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Instantiate the per-worker backend pool for one entry. Each
+    /// worker owns its engine instance (and scratch arena), so a pool
+    /// scales across cores exactly like `serve_parallel` workers.
+    pub fn build_pool(&self, entry: &ModelEntry) -> Result<Vec<AnyBackend>> {
+        let n = entry.spec.workers.max(1);
+        (0..n)
+            .map(|_| -> Result<AnyBackend> {
+                Ok(match entry.spec.backend {
+                    BackendKind::Golden => AnyBackend::Golden(GoldenBackend::new(&entry.params)),
+                    BackendKind::Opt => AnyBackend::Opt(OptBackend::new(&entry.params)?),
+                    BackendKind::Bitplane => {
+                        AnyBackend::Bitplane(BitplaneBackend::new(&entry.params)?)
+                    }
+                    BackendKind::Overlay => {
+                        let compiled = compile(&entry.params, InputMode::Direct)?;
+                        AnyBackend::Overlay(Box::new(OverlayBackend::new(compiled)))
+                    }
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::random_params;
+    use crate::model::zoo::{reduced_10cat, tiny_1cat};
+
+    #[test]
+    fn parses_spec_list() {
+        let specs = parse_model_specs("1cat:bitplane,10cat:opt:2").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 1 });
+        assert_eq!(specs[1], ModelSpec { name: "10cat".into(), backend: BackendKind::Opt, workers: 2 });
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(parse_model_specs("").is_err());
+        assert!(parse_model_specs("1cat").is_err());
+        assert!(parse_model_specs("1cat:warp").is_err());
+        assert!(parse_model_specs("1cat:opt:0").is_err());
+        assert!(parse_model_specs("1cat:opt:x").is_err());
+        assert!(parse_model_specs(":opt").is_err());
+        assert!(parse_model_specs("a:opt,a:bitplane").is_err(), "duplicate names");
+    }
+
+    #[test]
+    fn registry_builds_pools_on_every_backend() {
+        let np1 = random_params(&tiny_1cat(), 41);
+        let np10 = random_params(&reduced_10cat(), 42);
+        let mut reg = ModelRegistry::new();
+        for (name, backend, np) in [
+            ("g", BackendKind::Golden, &np1),
+            ("o", BackendKind::Opt, &np1),
+            ("b", BackendKind::Bitplane, &np10),
+            ("v", BackendKind::Overlay, &np1),
+        ] {
+            reg.register(
+                ModelSpec { name: name.into(), backend, workers: 2 },
+                np.clone(),
+            )
+            .unwrap();
+        }
+        assert_eq!(reg.len(), 4);
+        let mut rng = crate::util::Rng64::new(6);
+        let img: Vec<u8> = (0..3072).map(|_| rng.next_u8()).collect();
+        for entry in reg.entries() {
+            let mut pool = reg.build_pool(entry).unwrap();
+            assert_eq!(pool.len(), 2);
+            let golden = crate::nn::layers::forward(&entry.params, &img).unwrap();
+            for be in pool.iter_mut() {
+                let out = be.infer_batch(&[&img]).unwrap();
+                assert_eq!(out[0], golden, "{} on {}", entry.spec.name, be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn registry_rejects_duplicate_names() {
+        let np = random_params(&tiny_1cat(), 1);
+        let mut reg = ModelRegistry::new();
+        let spec = ModelSpec { name: "m".into(), backend: BackendKind::Opt, workers: 1 };
+        reg.register(spec.clone(), np.clone()).unwrap();
+        assert!(reg.register(spec, np).is_err());
+        assert!(reg.get("m").is_some());
+        assert!(reg.get("nope").is_none());
+    }
+}

@@ -9,6 +9,7 @@ use crate::util::TinError;
 use crate::Result;
 
 /// An in-memory labelled image set.
+#[derive(Clone)]
 pub struct Dataset {
     pub h: usize,
     pub w: usize,

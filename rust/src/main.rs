@@ -33,7 +33,10 @@ fn usage() -> ! {
            eval    [--task T] [--backend overlay|golden|opt|bitplane|pjrt] [--limit N]\n\
            serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
                    [--backend pjrt|opt|bitplane] [--workers W]\n\
-                   (opt/bitplane: W CPU-engine workers, batched via serve_parallel)\n\
+                   [--models name:backend[:workers],...]\n\
+                   (opt/bitplane: W CPU-engine workers, batched via serve_parallel;\n\
+                    --models: multi-model gateway, e.g. 1cat:bitplane,10cat:opt:2 —\n\
+                    falls back to synthetic fixtures when artifacts are missing)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
          \n\
          env: TINBINN_ARTIFACTS overrides the artifacts directory"
@@ -231,6 +234,9 @@ fn real_main() -> tinbinn::Result<()> {
             let wait = args.opt_usize("--wait-us", 2000) as u64;
             let backend_name = args.opt("--backend").unwrap_or_else(|| "pjrt".into());
             let workers = args.opt_usize("--workers", 4);
+            if let Some(models) = args.opt("--models") {
+                return serve_gateway_cli(&dir, &models, n, batch, wait);
+            }
             let ds = load_tbd(dir.join(format!("data_{task}_test.tbd")))?;
             let frames: Vec<Frame> = (0..n)
                 .map(|i| Frame {
@@ -304,6 +310,92 @@ fn real_main() -> tinbinn::Result<()> {
             }
         }
         _ => usage(),
+    }
+    Ok(())
+}
+
+/// `serve --models name:backend[:workers],...` — the multi-model
+/// gateway: every model gets its own engine + sharded worker pool, the
+/// request stream is tagged round-robin across models, and the report
+/// shows per-model accounting plus the merged fleet view.
+fn serve_gateway_cli(
+    dir: &std::path::Path,
+    models: &str,
+    n_frames: usize,
+    batch: usize,
+    wait_us: u64,
+) -> tinbinn::Result<()> {
+    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+    use tinbinn::coordinator::registry::{parse_model_specs, ModelRegistry};
+    use tinbinn::testkit::fixtures;
+
+    let specs = parse_model_specs(models)?;
+    let mut registry = ModelRegistry::new();
+    let mut datasets = Vec::new();
+    for spec in specs {
+        // trained artifacts when present, the synthetic fixture tier
+        // otherwise — same tiering as the integration suite
+        let (np, ds) = match (
+            tables::load_task(dir, &spec.name).ok(),
+            load_tbd(dir.join(format!("data_{}_test.tbd", spec.name))).ok(),
+        ) {
+            (Some(np), Some(ds)) => (np, ds),
+            _ => {
+                let (np, ds) = fixtures::synthetic_task(&spec.name)?;
+                eprintln!("({}: artifacts missing, serving the synthetic fixture)", spec.name);
+                (np.clone(), ds.clone())
+            }
+        };
+        datasets.push((spec.name.clone(), ds));
+        registry.register(spec, np)?;
+    }
+
+    let policy = BatchPolicy { max_batch: batch, max_wait_us: wait_us, queue_cap: 256 };
+    let mut lanes = Vec::new();
+    for entry in registry.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy,
+            workers: registry.build_pool(entry)?,
+        });
+    }
+
+    // tag requests round-robin across the registered models
+    let requests: Vec<GatewayRequest> = (0..n_frames)
+        .map(|i| {
+            let (name, ds) = &datasets[i % datasets.len()];
+            GatewayRequest::new(i as u64, name.clone(), ds.image(i % ds.len()).to_vec())
+        })
+        .collect();
+
+    let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig::default())?;
+    println!(
+        "gateway: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
+        report.submitted,
+        report.completed,
+        report.rejected,
+        report.unknown_model,
+        report.expired,
+        report.wall_s,
+        report.throughput_per_s
+    );
+    for m in &report.models {
+        println!(
+            "  {:8} on {:12} x{}: {:>5} done / {:>3} rej / {:>3} exp, mean batch {:.2}, p50 {}us p99 {}us, {:.0} fps",
+            m.name,
+            m.backend,
+            m.workers,
+            m.completed,
+            m.rejected,
+            m.expired,
+            m.mean_batch,
+            m.latency.p50_us,
+            m.latency.p99_us,
+            m.throughput_per_s
+        );
+    }
+    if !report.conserved() {
+        return Err(tinbinn::TinError::Config("gateway accounting violated".into()));
     }
     Ok(())
 }

@@ -313,6 +313,52 @@ fn bitplane_matches_golden_on_full_zoo_nets() {
     }
 }
 
+// ---- golden vs overlay-simulator differential suite --------------------
+//
+// The compile -> Board::infer path gets the same contract as the CPU
+// engines: bit-exact with the golden oracle on randomized small zoo
+// nets (arbitrary non-square inputs, single-channel maps, 1..4-category
+// heads) — not just the two paper networks.
+
+#[test]
+fn prop_overlay_forward_matches_golden() {
+    use crate::compiler::lower::{compile, InputMode};
+    use crate::soc::Board;
+    crate::testkit::check(20, |rng| {
+        let net = rand_net(rng);
+        let np = random_params(&net, rng.next_u64());
+        let (h, w, c) = net.input_hwc;
+        let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
+        let golden = forward(&np, &img).unwrap();
+        let compiled = compile(&np, InputMode::Direct).unwrap();
+        let mut board = Board::new(&compiled);
+        let (sim, report) = board.infer(&compiled, &img).unwrap();
+        assert_eq!(
+            golden, sim,
+            "overlay != golden: net {:?} input {h}x{w}x{c}",
+            net.layers
+        );
+        assert!(report.total_cycles > 0);
+    });
+}
+
+#[test]
+fn overlay_rejects_wrong_input_length_for_small_nets() {
+    use crate::compiler::lower::{compile, InputMode};
+    use crate::soc::Board;
+    let net = Net {
+        name: "prop".into(),
+        input_hwc: (4, 6, 2),
+        layers: vec![Layer::Conv3x3 { cout: 3 }, Layer::MaxPool2, Layer::Svm { nout: 2 }],
+    };
+    let np = random_params(&net, 5);
+    let compiled = compile(&np, InputMode::Direct).unwrap();
+    let mut board = Board::new(&compiled);
+    // the compiled net carries its own input geometry now
+    assert!(board.infer(&compiled, &[0u8; 3072]).is_err());
+    assert!(board.infer(&compiled, &vec![0u8; 4 * 6 * 2]).is_ok());
+}
+
 #[test]
 fn prop_bitplane_scratch_reuse_is_stateless() {
     // one arena across many different nets/images must never leak state

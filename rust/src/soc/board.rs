@@ -34,12 +34,14 @@ impl Board {
 
     /// Land an input in the IMG region.
     ///
-    /// * Direct mode: `image` is 32x32x3 HWC bytes (3072).
+    /// * Direct mode: `image` is h*w*c HWC bytes for the compiled
+    ///   network's input geometry (3072 for the 32x32x3 zoo nets).
     /// * Camera mode: `image` is 40x30x4 RGBA bytes (4800) — the output
     ///   of the hardware downscaler; charged as the frame DMA burst.
     pub fn load_input(&mut self, compiled: &CompiledNet, image: &[u8]) -> Result<()> {
+        let (ih, iw, ic) = compiled.input_hwc;
         let want = match compiled.input_mode {
-            InputMode::Direct => 32 * 32 * 3,
+            InputMode::Direct => ih * iw * ic,
             InputMode::Camera => 40 * 30 * 4,
         };
         if image.len() != want {

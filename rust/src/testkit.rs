@@ -1,9 +1,14 @@
 //! In-tree property-testing harness (the offline environment has no
-//! proptest crate; this provides the seeded-random-cases + replay core).
+//! proptest crate; this provides the seeded-random-cases + replay core)
+//! plus deterministic synthetic artifacts ([`fixtures`]).
 //!
 //! `check(n, f)` runs `f` against `n` independently seeded [`Rng64`]s.
 //! On panic the failing seed is printed; replay a single case with
-//! `TINBINN_PROP_SEED=<seed> cargo test <name>`.
+//! `TINBINN_PROP_SEED=<seed> cargo test <name>`. The CI fuzz lane
+//! raises case counts across every property at once with
+//! `TINBINN_PROP_CASES=<n>` (overrides the per-property default).
+
+pub mod fixtures;
 
 use crate::util::Rng64;
 
@@ -19,7 +24,16 @@ fn base_seed() -> (u64, bool) {
     }
 }
 
-/// Run `cases` random cases of property `f`.
+/// Case-count override: `TINBINN_PROP_CASES=<n>` replaces every
+/// property's default case count (the CI fuzz lane sets it high).
+fn case_override() -> Option<u32> {
+    std::env::var("TINBINN_PROP_CASES")
+        .ok()
+        .map(|s| s.parse().expect("TINBINN_PROP_CASES must be u32"))
+}
+
+/// Run `cases` random cases of property `f` (`TINBINN_PROP_CASES`
+/// overrides `cases`; `TINBINN_PROP_SEED` replays one case).
 pub fn check<F: Fn(&mut Rng64)>(cases: u32, f: F) {
     let (base, replay) = base_seed();
     if replay {
@@ -27,6 +41,7 @@ pub fn check<F: Fn(&mut Rng64)>(cases: u32, f: F) {
         f(&mut rng);
         return;
     }
+    let cases = case_override().unwrap_or(cases);
     for i in 0..cases {
         let seed = base ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -46,11 +61,13 @@ mod tests {
 
     #[test]
     fn check_runs_all_cases() {
+        // under the CI fuzz lane (TINBINN_PROP_CASES) the override wins
+        let want = case_override().unwrap_or(17);
         let count = std::cell::Cell::new(0u32);
         check(17, |_| {
             count.set(count.get() + 1);
         });
-        assert_eq!(count.get(), 17);
+        assert_eq!(count.get(), want);
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Deterministic synthetic "trained-like" artifacts, so every
+//! artifact-dependent test has a tier that runs without `make
+//! artifacts`.
+//!
+//! A fixture is a zoo network with structured random parameters plus a
+//! matching labelled dataset:
+//!
+//! * **Weights** are random packed bits, but the per-layer requant
+//!   shifts are gentler than `random_params` (which crushes deep
+//!   activations to constants) — activations stay input-sensitive all
+//!   the way to the SVM head while keeping the paper's grouped-i16
+//!   partial sums comfortably inside `i16` range (the
+//!   `task_nets_never_overflow_i16_partials` contract).
+//! * **The SVM head is calibrated** the way a trained detector's
+//!   threshold is: the 1-cat bias is set to the midpoint of the widest
+//!   score gap inside the interquartile range (balanced detections),
+//!   the 10-cat biases center each class's score distribution (argmax
+//!   spreads across classes).
+//! * **Labels are the model's own predictions**, so accuracy-accounting
+//!   tests see a self-consistent "perfectly trained" model, and any
+//!   engine divergence shows up as an accuracy drop.
+//!
+//! Everything derives from fixed seeds through [`crate::util::Rng64`];
+//! fixtures are built once per process and cached.
+
+use std::sync::OnceLock;
+
+use crate::data::tbd::Dataset;
+use crate::model::weights::{LayerParams, NetParams};
+use crate::model::zoo::{reduced_10cat, tiny_1cat, Layer, Net};
+use crate::nn::layers::classify;
+use crate::nn::opt::{OptModel, Scratch};
+use crate::util::{Rng64, TinError};
+use crate::Result;
+
+/// Parameter-stream seeds (1cat, 10cat).
+const PARAM_SEED_1CAT: u64 = 0x7153_BEEF;
+const PARAM_SEED_10CAT: u64 = 0x7153_BEF0;
+/// Dataset-stream seeds (1cat, 10cat).
+const DATA_SEED_1CAT: u64 = 0x0DA7_A5E7;
+const DATA_SEED_10CAT: u64 = 0x0DA7_A5E8;
+/// Images per synthetic dataset. The 10-cat net is ~8x the MACs, so its
+/// fixture carries fewer images to keep debug-mode `cargo test` fast;
+/// both counts cover every index the integration suite touches.
+pub const FIXTURE_IMAGES: usize = 64;
+pub const FIXTURE_IMAGES_10CAT: usize = 32;
+/// Requant shifts sit this far below `random_params`' log2(K) choice.
+const SHIFT_OFF: u8 = 5;
+/// Images are 4x4-pixel random blocks: input-sensitive but smooth
+/// enough that the camera path (RGB565 + 16x box filter) preserves
+/// structure.
+const BLOCK: usize = 4;
+
+/// Trained-like parameters for `net`: random packed weights, small
+/// biases, gentle shifts (pre-calibration; [`synthetic_task`] also
+/// calibrates the SVM head against the synthetic dataset).
+pub fn fixture_params(net: &Net, seed: u64) -> NetParams {
+    let mut rng = Rng64::new(seed);
+    let geom = net.weighted_geometry();
+    let mut params = Vec::new();
+    let mut gi = 0;
+    for ly in &net.layers {
+        let (k_in, n_out) = match *ly {
+            Layer::Conv3x3 { cout } => {
+                let (_, _, c) = geom[gi];
+                gi += 1;
+                (9 * c, cout)
+            }
+            Layer::MaxPool2 => continue,
+            Layer::Dense { nout } | Layer::Svm { nout } => {
+                let (h, w, c) = geom[gi];
+                gi += 1;
+                (h * w * c, nout)
+            }
+        };
+        let kw = (k_in + 31) / 32;
+        let words: Vec<u32> = (0..n_out * kw).map(|_| rng.next_u32()).collect();
+        let bias: Vec<i32> = (0..n_out).map(|_| rng.below(128) as i32 - 64).collect();
+        let shift = if matches!(ly, Layer::Svm { .. }) {
+            0
+        } else {
+            let log2k = (64 - (k_in as u64).leading_zeros()) as u8;
+            log2k.saturating_sub(SHIFT_OFF).max(1)
+        };
+        params.push(LayerParams { k_in, n_out, words, bias, shift });
+    }
+    NetParams { net: net.clone(), params }
+}
+
+/// Deterministic blocky images (4x4-pixel random blocks), `n` images of
+/// the net's input geometry, concatenated record-major like a TBD file.
+pub fn blocky_images(hwc: (usize, usize, usize), n: usize, seed: u64) -> Vec<u8> {
+    let (h, w, c) = hwc;
+    let (gh, gw) = ((h + BLOCK - 1) / BLOCK, (w + BLOCK - 1) / BLOCK);
+    let mut rng = Rng64::new(seed);
+    let sz = h * w * c;
+    let mut pixels = vec![0u8; n * sz];
+    let mut base = vec![0u8; gh * gw * c];
+    for img in 0..n {
+        for b in base.iter_mut() {
+            *b = rng.next_u8();
+        }
+        let off = img * sz;
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    pixels[off + (y * w + x) * c + ch] =
+                        base[((y / BLOCK) * gw + (x / BLOCK)) * c + ch];
+                }
+            }
+        }
+    }
+    pixels
+}
+
+/// Build one task fixture: params + calibrated SVM head + self-labelled
+/// dataset.
+fn build_task(net: &Net, param_seed: u64, data_seed: u64, n: usize) -> (NetParams, Dataset) {
+    let mut np = fixture_params(net, param_seed);
+    let svm_i = np.params.len() - 1;
+    for b in np.params[svm_i].bias.iter_mut() {
+        *b = 0;
+    }
+
+    let (h, w, c) = net.input_hwc;
+    let sz = h * w * c;
+    let pixels = blocky_images(net.input_hwc, n, data_seed);
+
+    // raw head accumulators with a zeroed SVM bias
+    let model = OptModel::new(&np).expect("fixture net must compile");
+    let mut scratch = Scratch::new();
+    let accs: Vec<Vec<i32>> = (0..n)
+        .map(|i| {
+            model
+                .forward(&pixels[i * sz..(i + 1) * sz], &mut scratch)
+                .expect("fixture forward")
+        })
+        .collect();
+
+    // calibrate the head like a trained detector
+    let ncat = net.n_categories();
+    if ncat == 1 {
+        // threshold at the widest score gap inside the IQR: balanced
+        // detections with the largest margin the distribution offers
+        let mut s: Vec<i32> = accs.iter().map(|v| v[0]).collect();
+        s.sort_unstable();
+        let (lo, hi) = (n / 4, 3 * n / 4);
+        let mut gi = lo;
+        let mut best = i64::MIN;
+        for i in lo..hi {
+            let gap = s[i + 1] as i64 - s[i] as i64;
+            if gap > best {
+                best = gap;
+                gi = i;
+            }
+        }
+        let thr = (s[gi] as i64 + s[gi + 1] as i64).div_euclid(2);
+        np.params[svm_i].bias[0] = -(thr as i32);
+    } else {
+        // center each class's score distribution
+        for j in 0..ncat {
+            let sum: i64 = accs.iter().map(|v| v[j] as i64).sum();
+            np.params[svm_i].bias[j] = -(sum.div_euclid(n as i64) as i32);
+        }
+    }
+
+    // labels = the calibrated model's own predictions
+    let model = OptModel::new(&np).expect("fixture net must compile");
+    let labels: Vec<u8> = (0..n)
+        .map(|i| {
+            let scores = model
+                .forward(&pixels[i * sz..(i + 1) * sz], &mut scratch)
+                .expect("fixture forward");
+            classify(&scores) as u8
+        })
+        .collect();
+
+    let ds = Dataset {
+        h,
+        w,
+        c,
+        n_classes: if ncat == 1 { 2 } else { ncat },
+        labels,
+        pixels,
+    };
+    (np, ds)
+}
+
+static FIX_1CAT: OnceLock<(NetParams, Dataset)> = OnceLock::new();
+static FIX_10CAT: OnceLock<(NetParams, Dataset)> = OnceLock::new();
+
+/// The synthetic tier for a task: `(params, dataset)`, built once per
+/// process. Tasks: `"1cat"`, `"10cat"`.
+pub fn synthetic_task(task: &str) -> Result<&'static (NetParams, Dataset)> {
+    match task {
+        "1cat" => Ok(FIX_1CAT
+            .get_or_init(|| build_task(&tiny_1cat(), PARAM_SEED_1CAT, DATA_SEED_1CAT, FIXTURE_IMAGES))),
+        "10cat" => Ok(FIX_10CAT.get_or_init(|| {
+            build_task(&reduced_10cat(), PARAM_SEED_10CAT, DATA_SEED_10CAT, FIXTURE_IMAGES_10CAT)
+        })),
+        other => Err(TinError::Config(format!("no synthetic fixture for task '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::forward;
+
+    #[test]
+    fn fixtures_are_deterministic() {
+        let (np, ds) = synthetic_task("1cat").unwrap();
+        let (np2, ds2) = {
+            let pair = build_task(&tiny_1cat(), PARAM_SEED_1CAT, DATA_SEED_1CAT, FIXTURE_IMAGES);
+            (pair.0, pair.1)
+        };
+        assert_eq!(np, &np2);
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.pixels, ds2.pixels);
+    }
+
+    #[test]
+    fn labels_are_the_models_own_predictions() {
+        for task in ["1cat", "10cat"] {
+            let (np, ds) = synthetic_task(task).unwrap();
+            for i in 0..4 {
+                let scores = forward(np, ds.image(i)).unwrap();
+                assert_eq!(
+                    classify(&scores),
+                    ds.labels[i] as usize,
+                    "{task} image {i}: label is not the golden prediction"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn one_cat_labels_are_mixed() {
+        let (_, ds) = synthetic_task("1cat").unwrap();
+        let ones: usize = ds.labels.iter().map(|&l| l as usize).sum();
+        assert!(ones > 0 && ones < ds.len(), "degenerate detector: {ones}/{}", ds.len());
+        assert_eq!(ds.n_classes, 2);
+    }
+
+    #[test]
+    fn ten_cat_labels_spread_across_classes() {
+        let (_, ds) = synthetic_task("10cat").unwrap();
+        let mut seen = [false; 10];
+        for &l in &ds.labels {
+            seen[l as usize] = true;
+        }
+        let distinct = seen.iter().filter(|&&s| s).count();
+        assert!(distinct >= 3, "only {distinct} classes predicted");
+        assert_eq!(ds.n_classes, 10);
+    }
+
+    #[test]
+    fn fixture_scores_are_input_sensitive() {
+        // the whole point of the gentler shifts: different images must
+        // produce different scores (random_params nets collapse to a
+        // constant, which would let broken image handling pass tests)
+        let (np, ds) = synthetic_task("1cat").unwrap();
+        let a = forward(np, ds.image(0)).unwrap();
+        let b = forward(np, ds.image(1)).unwrap();
+        assert_ne!(a, b, "fixture scores are input-independent");
+    }
+
+    #[test]
+    fn fixture_respects_i16_partial_headroom() {
+        // the paper's grouped-i16 accumulator contract must hold on the
+        // synthetic tier exactly as on trained weights
+        let (np, ds) = synthetic_task("1cat").unwrap();
+        let (_, audits) = crate::nn::grouped::audit_net(np, ds.image(0), 16);
+        for a in &audits {
+            assert!(!a.overflowed, "layer {} overflowed", a.layer_index);
+        }
+    }
+
+    #[test]
+    fn geometry_matches_the_zoo_nets() {
+        let (np, ds) = synthetic_task("10cat").unwrap();
+        assert_eq!(np.net, reduced_10cat());
+        assert_eq!(ds.len(), FIXTURE_IMAGES_10CAT);
+        assert_eq!(ds.image(0).len(), 32 * 32 * 3);
+        assert!(synthetic_task("nope").is_err());
+    }
+}

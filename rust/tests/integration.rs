@@ -1,36 +1,53 @@
-//! Cross-layer integration tests over the trained artifacts:
-//! golden model == overlay simulator == PJRT artifact, the paper's
-//! numeric contract on real trained weights, and the coordinator
-//! end-to-end on real dataset streams.
+//! Cross-layer integration tests: golden model == overlay simulator ==
+//! PJRT artifact, the paper's numeric contract, and the coordinator
+//! end-to-end on dataset streams.
 //!
-//! All tests skip gracefully when `make artifacts` has not run.
+//! Two tiers share every test:
+//!
+//! * **real** — trained artifacts from `make artifacts`, when present
+//!   (accuracy thresholds apply);
+//! * **synthetic** — `testkit::fixtures` otherwise: deterministic
+//!   trained-like weights + self-labelled datasets, so `cargo test -q`
+//!   exercises the full suite on a bare checkout instead of silently
+//!   skipping.
 
 use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::coordinator::backend::OverlayBackend;
 use tinbinn::coordinator::batcher::BatchPolicy;
 use tinbinn::coordinator::pipeline::{run_stream, Frame, StreamConfig};
-use tinbinn::data::tbd::load_tbd;
+use tinbinn::data::tbd::{load_tbd, Dataset};
 use tinbinn::model::weights::load_tbw;
 use tinbinn::model::NetParams;
 use tinbinn::nn::grouped::audit_net;
 use tinbinn::nn::layers::{classify, forward};
 use tinbinn::runtime::{artifacts_dir, ModelRuntime};
 use tinbinn::soc::Board;
+use tinbinn::testkit::fixtures;
 
 fn trained(task: &str) -> Option<NetParams> {
     load_tbw(artifacts_dir().join(format!("weights_{task}.tbw")), task).ok()
 }
 
-fn dataset(task: &str) -> Option<tinbinn::data::tbd::Dataset> {
+fn dataset(task: &str) -> Option<Dataset> {
     load_tbd(artifacts_dir().join(format!("data_{task}_test.tbd"))).ok()
 }
 
+/// Weights + dataset for a task: the real artifacts when `make
+/// artifacts` has run, the synthetic fixture tier otherwise. The bool
+/// is `true` for the real tier (trained-accuracy thresholds apply).
+fn task_data(task: &str) -> (NetParams, Dataset, bool) {
+    match (trained(task), dataset(task)) {
+        (Some(np), Some(ds)) => (np, ds, true),
+        _ => {
+            let (np, ds) = fixtures::synthetic_task(task).expect("synthetic fixture");
+            (np.clone(), ds.clone(), false)
+        }
+    }
+}
+
 #[test]
-fn opt_engine_matches_golden_on_trained_weights() {
-    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+fn opt_engine_matches_golden_on_task_weights() {
+    let (np, ds, _) = task_data("1cat");
     let model = tinbinn::nn::opt::OptModel::new(&np).unwrap();
     let mut scratch = tinbinn::nn::opt::Scratch::new();
     for i in 0..16 {
@@ -42,11 +59,8 @@ fn opt_engine_matches_golden_on_trained_weights() {
 }
 
 #[test]
-fn parallel_opt_serving_on_trained_weights() {
-    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+fn parallel_opt_serving_on_task_weights() {
+    let (np, ds, _) = task_data("1cat");
     let workers: Vec<_> = (0..3)
         .map(|_| tinbinn::coordinator::backend::OptBackend::new(&np).unwrap())
         .collect();
@@ -61,14 +75,62 @@ fn parallel_opt_serving_on_trained_weights() {
 }
 
 #[test]
-fn golden_overlay_pjrt_agree_on_trained_weights() {
-    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+fn gateway_serves_both_tasks_bit_exact() {
+    // the multi-model front door over both tasks at once, each on a
+    // different engine, pinned against serial inference
+    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+    use tinbinn::coordinator::registry::AnyBackend;
+    let (np1, ds1, _) = task_data("1cat");
+    let (np10, ds10, _) = task_data("10cat");
+    let requests: Vec<GatewayRequest> = (0..16)
+        .map(|i| {
+            let (model, ds) = if i % 2 == 0 { ("1cat", &ds1) } else { ("10cat", &ds10) };
+            GatewayRequest::new(i as u64, model, ds.image(i % ds.len()).to_vec())
+        })
+        .collect();
+    let lanes = vec![
+        GatewayLane {
+            name: "1cat".into(),
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 },
+            workers: (0..2)
+                .map(|_| {
+                    AnyBackend::Bitplane(
+                        tinbinn::coordinator::backend::BitplaneBackend::new(&np1).unwrap(),
+                    )
+                })
+                .collect(),
+        },
+        GatewayLane {
+            name: "10cat".into(),
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 },
+            workers: (0..2)
+                .map(|_| {
+                    AnyBackend::Opt(tinbinn::coordinator::backend::OptBackend::new(&np10).unwrap())
+                })
+                .collect(),
+        },
+    ];
+    let (report, _lanes) =
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+    assert!(report.conserved());
+    assert_eq!(report.completed, 16);
+    for m in &report.models {
+        let (np, ds) = if m.name == "1cat" { (&np1, &ds1) } else { (&np10, &ds10) };
+        for (id, scores) in &m.scores {
+            let img = ds.image(*id as usize % ds.len());
+            assert_eq!(scores, &forward(np, img).unwrap(), "model {} request {id}", m.name);
+        }
+    }
+}
+
+#[test]
+fn golden_overlay_pjrt_agree_on_task_weights() {
+    let (np, ds, real) = task_data("1cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
     let mut board = Board::new(&compiled);
-    let rt = ModelRuntime::load(artifacts_dir(), "1cat", 1).ok();
+    // PJRT artifacts only exist on the real tier (and only when a real
+    // PJRT is linked)
+    let rt = if real { ModelRuntime::load(artifacts_dir(), "1cat", 1).ok() } else { None };
     for i in 0..8 {
         let img = ds.image(i);
         let golden = forward(&np, img).unwrap();
@@ -83,13 +145,13 @@ fn golden_overlay_pjrt_agree_on_trained_weights() {
 
 #[test]
 fn ten_cat_overlay_matches_golden() {
-    let (Some(np), Some(ds)) = (trained("10cat"), dataset("10cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+    let (np, ds, real) = task_data("10cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
     let mut board = Board::new(&compiled);
-    for i in 0..3 {
+    // the 10-cat sim is the slowest path in the suite; two images pin
+    // the synthetic tier, trained runs keep the original three
+    let n = if real { 3 } else { 2 };
+    for i in 0..n {
         let img = ds.image(i);
         let golden = forward(&np, img).unwrap();
         let (sim, _) = board.infer(&compiled, img).unwrap();
@@ -97,17 +159,16 @@ fn ten_cat_overlay_matches_golden() {
     }
 }
 
-/// The paper's implicit numeric requirement: on trained nets the 16-bit
-/// partial sums (per 16 input maps) never wrap, which is what makes
-/// plain i32 accumulation == the hardware pipeline.
+/// The paper's implicit numeric requirement: the 16-bit partial sums
+/// (per 16 input maps) never wrap, which is what makes plain i32
+/// accumulation == the hardware pipeline. The synthetic fixtures are
+/// generated to honor the same contract.
 #[test]
-fn trained_nets_never_overflow_i16_partials() {
+fn task_nets_never_overflow_i16_partials() {
     for task in ["10cat", "1cat"] {
-        let (Some(np), Some(ds)) = (trained(task), dataset(task)) else {
-            eprintln!("skipping: artifacts missing");
-            return;
-        };
-        for i in 0..4 {
+        let (np, ds, real) = task_data(task);
+        let n = if real { 4 } else { 2 };
+        for i in 0..n {
             let img = ds.image(i);
             let (grouped_scores, audits) = audit_net(&np, img, 16);
             for a in &audits {
@@ -123,21 +184,31 @@ fn trained_nets_never_overflow_i16_partials() {
     }
 }
 
+/// The 32x32x3 image the camera-mode schedule effectively feeds the
+/// CNN: 40x30 RGBA rows land on image rows 1..31 (rows 0 and 31 fall
+/// into the black padding), columns crop 4..36.
+fn camera_effective_input(rgba: &[u8]) -> Vec<u8> {
+    let mut img = vec![0u8; 32 * 32 * 3];
+    for y in 1..31usize {
+        for x in 0..32usize {
+            for ch in 0..3usize {
+                img[(y * 32 + x) * 3 + ch] = rgba[((y - 1) * 40 + x + 4) * 4 + ch];
+            }
+        }
+    }
+    img
+}
+
 #[test]
-fn camera_mode_agrees_with_direct_mode_predictions() {
-    // The camera path loses two image rows to padding and quantizes
-    // through RGB565; predictions should still agree most of the time.
-    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+fn camera_mode_agrees_with_direct_mode() {
+    let (np, ds, real) = task_data("1cat");
     let direct = compile(&np, InputMode::Direct).unwrap();
     let cam = compile(&np, InputMode::Camera).unwrap();
     let mut b_direct = Board::new(&direct);
     let mut b_cam = Board::new(&cam);
     let camera = tinbinn::soc::Camera::new(3);
     let mut agree = 0;
-    let n = 12;
+    let n = if real { 12 } else { 6 };
     for i in 0..n {
         let img = ds.image(i);
         let (sd, _) = b_direct.infer(&direct, img).unwrap();
@@ -145,16 +216,23 @@ fn camera_mode_agrees_with_direct_mode_predictions() {
         let rgba = camera.downscale(&frame);
         let (sc, _) = b_cam.infer(&cam, &rgba).unwrap();
         agree += (classify(&sd) == classify(&sc)) as usize;
+        // every tier: the camera-mode overlay must be bit-exact with the
+        // golden model on the effective (cropped, quantized) input —
+        // pins the de-interleave/crop schedule itself
+        let golden_cam = forward(&np, &camera_effective_input(&rgba)).unwrap();
+        assert_eq!(sc, golden_cam, "camera-mode overlay != golden on effective input {i}");
     }
-    assert!(agree * 10 >= n * 8, "camera/direct agreement too low: {agree}/{n}");
+    if real {
+        // trained nets are robust to the camera's quantization loss;
+        // random-weight fixtures are deliberately input-sensitive, so
+        // prediction agreement is only a trained-tier claim
+        assert!(agree * 10 >= n * 8, "camera/direct agreement too low: {agree}/{n}");
+    }
 }
 
 #[test]
 fn coordinator_stream_over_overlay_backend() {
-    let (Some(np), Some(ds)) = (trained("1cat"), dataset("1cat")) else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+    let (np, ds, _) = task_data("1cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
     let mut be = OverlayBackend::new(compiled);
     let frames: Vec<Frame> = (0..20)
@@ -168,7 +246,8 @@ fn coordinator_stream_over_overlay_backend() {
     let r = run_stream(frames, &mut be, &cfg).unwrap();
     assert_eq!(r.completed, 20);
     assert_eq!(r.labelled, 20);
-    // trained detector beats chance comfortably
+    // trained detector beats chance comfortably; fixture labels are the
+    // model's own predictions, so the bound holds on both tiers
     assert!(r.correct >= 14, "correct = {}", r.correct);
     assert!(be.sim_cycles > 0);
 }
@@ -177,10 +256,7 @@ fn coordinator_stream_over_overlay_backend() {
 fn overlay_timing_is_stable_across_inputs() {
     // data-independent runtime (no data-dependent branches in the
     // datapath) — a property the real hardware has by construction.
-    let Some(np) = trained("1cat") else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+    let (np, _, _) = task_data("1cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
     let mut board = Board::new(&compiled);
     let (_, r1) = board.infer(&compiled, &vec![0u8; 3072]).unwrap();
@@ -190,13 +266,11 @@ fn overlay_timing_is_stable_across_inputs() {
 
 #[test]
 fn weight_bytes_match_flash_image() {
-    let Some(np) = trained("10cat") else {
-        eprintln!("skipping: artifacts missing");
-        return;
-    };
+    let (np, _, _) = task_data("10cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
     assert_eq!(compiled.flash_image.len(), np.weight_bytes());
-    // paper: ~270 kB flash image (ours is the pure weight payload)
+    // paper: ~270 kB flash image (ours is the pure weight payload); the
+    // synthetic fixture shares the zoo geometry, so the bound holds
     let kb = compiled.flash_image.len() as f64 / 1024.0;
     assert!((100.0..270.0).contains(&kb), "{kb} kB");
 }
