@@ -181,5 +181,67 @@ fn main() -> tinbinn::Result<()> {
         );
     }
     println!("    fleet: {:.0} fps over {} frames", report.throughput_per_s, report.completed);
+
+    // The native training loop: BinaryConnect-train the micro 1-category
+    // detector from scratch on the seeded synthetic task, export TBW1,
+    // run the cross-engine acceptance gate, and serve the freshly
+    // trained model through the same gateway under a new name — the full
+    // train -> TBW1 -> all-engines story with no python in the loop.
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::model::zoo::micro_1cat;
+    use tinbinn::testkit::fixtures;
+    use tinbinn::train::{self, TrainConfig};
+
+    println!("\n  native training (micro 1-cat detector, synthetic task):");
+    let micro = micro_1cat();
+    let (_, train_ds) = fixtures::eval_set(&micro, 32)?;
+    let cfg = TrainConfig { epochs: 80, ..TrainConfig::default() };
+    let t0 = std::time::Instant::now();
+    let outcome = train::fit(&micro, &train_ds, &cfg)?;
+    println!(
+        "    trained {} epochs in {:.1}s -> best integer accuracy {:.1}% (epoch {})",
+        outcome.epochs_run,
+        t0.elapsed().as_secs_f64(),
+        100.0 * outcome.best_acc,
+        outcome.best_epoch
+    );
+    let gate = train::export::acceptance_gate(&outcome.params, &train_ds, 4)?;
+    println!(
+        "    gate: golden/opt/bitplane/overlay bit-exact on {} images, accuracy {:.1}%",
+        gate.n_diff,
+        100.0 * gate.accuracy
+    );
+
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        ModelSpec { name: "micro-trained".into(), backend: BackendKind::Bitplane, workers: 2 },
+        outcome.params.clone(),
+    )?;
+    let entry = registry.get("micro-trained").expect("just registered");
+    let lanes = vec![GatewayLane {
+        name: "micro-trained".to_string(),
+        policy,
+        workers: registry.build_pool(entry)?,
+    }];
+    let requests: Vec<GatewayRequest> = (0..train_ds.len())
+        .map(|i| GatewayRequest::new(i as u64, "micro-trained", train_ds.image(i).to_vec()))
+        .collect();
+    let (tr_report, _lanes) =
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true })?;
+    assert!(tr_report.conserved(), "gateway accounting violated");
+    for m in &tr_report.models {
+        for (id, scores) in &m.scores {
+            let img = train_ds.image(*id as usize);
+            let want = tinbinn::nn::layers::forward(&outcome.params, img)?;
+            assert_eq!(
+                scores, &want,
+                "freshly trained model diverged in the gateway on request {id}"
+            );
+        }
+    }
+    println!(
+        "    served the freshly trained model: {} frames, {:.0} fps, bit-exact with golden",
+        tr_report.completed, tr_report.throughput_per_s
+    );
     Ok(())
 }

@@ -183,6 +183,22 @@ fn main() {
         suite.push(r);
     }
 
+    // L3g: native-training epoch rate (the train/ subsystem's hot loop:
+    // cached-feature BinaryConnect epochs on the micro detector)
+    {
+        use tinbinn::model::zoo::micro_1cat;
+        use tinbinn::testkit::fixtures;
+        use tinbinn::train::{fit, TrainConfig};
+        let net = micro_1cat();
+        let (_, ds) = fixtures::eval_set(&net, 16).unwrap();
+        let cfg = TrainConfig { epochs: 4, stop_acc: 2.0, ..TrainConfig::default() };
+        let r = bench::run("train_micro_4ep", 1, 3, || {
+            std::hint::black_box(fit(&net, &ds, &cfg).unwrap());
+        });
+        println!("   -> {:.2} training epochs/s (micro, frozen features)", 4.0 / r.mean_s);
+        suite.push(r);
+    }
+
     // perf-trajectory artifact at the repo root
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()

@@ -167,6 +167,22 @@ impl ModelRegistry {
         Ok(())
     }
 
+    /// Hot-swap the parameters behind an existing name (freshly trained
+    /// weights replacing the ones a lane was built from). Pools built
+    /// before the swap keep serving the old params; rebuild via
+    /// [`ModelRegistry::build_pool`] to pick up the new ones.
+    pub fn replace(&mut self, name: &str, params: NetParams) -> Result<()> {
+        match self.by_name.get(name) {
+            Some(&i) => {
+                self.entries[i].params = params;
+                Ok(())
+            }
+            None => Err(TinError::Config(format!(
+                "cannot replace unknown model '{name}'"
+            ))),
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -271,5 +287,26 @@ mod tests {
         assert!(reg.register(spec, np).is_err());
         assert!(reg.get("m").is_some());
         assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn replace_hot_swaps_params_in_place() {
+        let np_a = random_params(&tiny_1cat(), 1);
+        let np_b = random_params(&tiny_1cat(), 2);
+        assert_ne!(np_a.params, np_b.params);
+        let mut reg = ModelRegistry::new();
+        let spec = ModelSpec { name: "m".into(), backend: BackendKind::Opt, workers: 1 };
+        reg.register(spec, np_a).unwrap();
+        reg.replace("m", np_b.clone()).unwrap();
+        assert_eq!(reg.get("m").unwrap().params.params, np_b.params);
+        assert!(reg.replace("ghost", np_b).is_err());
+        // pools built after the swap serve the new params
+        let entry = reg.get("m").unwrap();
+        let mut pool = reg.build_pool(entry).unwrap();
+        let mut rng = crate::util::Rng64::new(3);
+        let img: Vec<u8> = (0..3072).map(|_| rng.next_u8()).collect();
+        let want = crate::nn::layers::forward(&reg.get("m").unwrap().params, &img).unwrap();
+        let got = pool[0].infer_batch(&[&img]).unwrap();
+        assert_eq!(got[0], want);
     }
 }

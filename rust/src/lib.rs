@@ -4,8 +4,10 @@
 //! - L3 (this crate): cycle-accurate simulator of the TinBiNN overlay
 //!   (ORCA RV32IM + LVE vector engine + binarized-CNN accelerator on a
 //!   Lattice iCE40 UltraPlus SoC model), overlay compiler, resource/power
-//!   models, PJRT runtime for the AOT-compiled JAX model, and the frame
-//!   pipeline coordinator.
+//!   models, PJRT runtime for the AOT-compiled JAX model, the frame
+//!   pipeline coordinator, and a native BinaryConnect trainer
+//!   ([`train`]) that closes the train→TBW1→all-engines loop without
+//!   the python layer.
 //! - L2 (python/compile/model.py): JAX fixed-point BinaryConnect model.
 //! - L1 (python/compile/kernels/*.py): Pallas binarized-conv kernels.
 //!
@@ -24,6 +26,7 @@ pub mod power;
 pub mod resources;
 pub mod runtime;
 pub mod soc;
+pub mod train;
 pub mod report;
 pub mod util;
 pub mod util_json;

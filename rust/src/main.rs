@@ -6,6 +6,7 @@
 //!   eval      classify a .tbd dataset on a chosen backend
 //!   serve     threaded serving demo with dynamic batching (PJRT)
 //!   desktop   E7 desktop-baseline timing via PJRT
+//!   train     native BinaryConnect training -> TBW1 + cross-engine gate
 //!
 //! (CLI arg parsing is hand-rolled: the offline build has no clap.)
 
@@ -38,6 +39,13 @@ fn usage() -> ! {
                     --models: multi-model gateway, e.g. 1cat:bitplane,10cat:opt:2 —\n\
                     falls back to synthetic fixtures when artifacts are missing)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
+           train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
+                   [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
+                   [--center-frac F] [--data path.tbd] [--out model.tbw] [--diff N]\n\
+                   [--bench-out path]\n\
+                   (BinaryConnect + QAT on the seeded synthetic task — or a real\n\
+                    TBD dataset — then the cross-engine bit-exact acceptance gate;\n\
+                    exits nonzero if engines diverge or accuracy < --min-acc)\n\
          \n\
          env: TINBINN_ARTIFACTS overrides the artifacts directory"
     );
@@ -85,6 +93,39 @@ impl Args {
 
     fn opt_usize(&mut self, name: &str, default: usize) -> usize {
         self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Like `opt`, but a present-yet-unparseable value is a hard error —
+    /// a typo in a gate threshold must not silently fall back to the
+    /// default and disarm the gate.
+    fn opt_f64_strict(&mut self, name: &str, default: f64) -> f64 {
+        match self.opt(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for {name}: '{v}' (expected a number)");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    fn opt_u64_strict(&mut self, name: &str, default: u64) -> u64 {
+        match self.opt(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for {name}: '{v}' (expected an integer)");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    fn opt_usize_strict(&mut self, name: &str, default: usize) -> usize {
+        match self.opt(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for {name}: '{v}' (expected an integer)");
+                std::process::exit(2);
+            }),
+        }
     }
 }
 
@@ -309,7 +350,138 @@ fn real_main() -> tinbinn::Result<()> {
                 );
             }
         }
+        "train" => return train_cli(&mut args),
         _ => usage(),
+    }
+    Ok(())
+}
+
+/// `tinbinn train` — BinaryConnect + QAT on the seeded synthetic task
+/// (or a TBD dataset), export to TBW1, then the cross-engine bit-exact
+/// acceptance gate. Nonzero exit when engines diverge or the gated
+/// accuracy misses `--min-acc`.
+fn train_cli(args: &mut Args) -> tinbinn::Result<()> {
+    use tinbinn::model::zoo::{micro_1cat, reduced_10cat, tiny_1cat};
+    use tinbinn::report::bench::BenchResult;
+    use tinbinn::train::{self, TrainConfig};
+
+    let net_name = args.opt("--net").unwrap_or_else(|| "1cat".into());
+    let net = match net_name.as_str() {
+        "1cat" => tiny_1cat(),
+        "10cat" => reduced_10cat(),
+        "micro" => micro_1cat(),
+        other => {
+            eprintln!("unknown net {other} (expected 1cat|10cat|micro)");
+            usage();
+        }
+    };
+    let images = args.opt_usize_strict("--images", 32);
+    let defaults = TrainConfig::default();
+    let cfg = TrainConfig {
+        epochs: args.opt_usize_strict("--epochs", defaults.epochs),
+        batch: args.opt_usize_strict("--batch", defaults.batch),
+        lr: args.opt_f64_strict("--lr", defaults.lr as f64) as f32,
+        seed: args.opt_u64_strict("--seed", defaults.seed),
+        conv_lr_mul: args.opt_f64_strict("--conv-lr-mul", defaults.conv_lr_mul as f64) as f32,
+        stop_acc: args.opt_f64_strict("--stop-acc", defaults.stop_acc),
+        center_frac: args.opt_f64_strict("--center-frac", defaults.center_frac),
+        ..defaults
+    };
+    let min_acc = args.opt_f64_strict("--min-acc", 0.0);
+    let n_diff = args.opt_usize_strict("--diff", 8);
+    let out_path = args.opt("--out");
+    let bench_out = args.opt("--bench-out");
+
+    let ds = match args.opt("--data") {
+        Some(path) => train::data::load_for(&net, path)?,
+        None => train::data::synthetic(&net, images)?,
+    };
+    println!(
+        "training {net_name}: {} images, {} epochs (batch {}, lr {}, seed {:#x}{})",
+        ds.len(),
+        cfg.epochs,
+        cfg.batch,
+        cfg.lr,
+        cfg.seed,
+        if cfg.conv_lr_mul == 0.0 { ", frozen conv features" } else { "" }
+    );
+
+    let t0 = std::time::Instant::now();
+    let outcome = train::fit(&net, &ds, &cfg)?;
+    let train_s = t0.elapsed().as_secs_f64();
+    let stride = (outcome.history.len() / 20).max(1);
+    for st in outcome
+        .history
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % stride == 0 || *i + 1 == outcome.history.len())
+        .map(|(_, s)| s)
+    {
+        println!(
+            "  epoch {:3}  loss {:9.4}  acc {:.3}  best {:.3}  lr {:.5}",
+            st.epoch, st.loss, st.acc, st.best, st.lr
+        );
+    }
+    println!(
+        "best integer accuracy {:.2}% at epoch {} ({} epochs in {:.1}s, {:.2} epochs/s)",
+        100.0 * outcome.best_acc,
+        outcome.best_epoch,
+        outcome.epochs_run,
+        train_s,
+        outcome.epochs_run as f64 / train_s.max(1e-9)
+    );
+
+    if let Some(path) = &out_path {
+        train::export::save(&outcome.params, path)?;
+        println!("wrote {path} ({} weight bytes)", outcome.params.weight_bytes());
+    }
+
+    // the acceptance gate: every engine bit-identical, accuracy measured
+    // on the integer fast path
+    let gate = train::export::acceptance_gate(&outcome.params, &ds, n_diff)?;
+    println!(
+        "gate: golden/opt/bitplane/overlay bit-exact on {} images; accuracy {:.2}% over {}",
+        gate.n_diff,
+        100.0 * gate.accuracy,
+        gate.n_eval
+    );
+
+    if let Some(path) = bench_out {
+        let rows = vec![
+            BenchResult {
+                name: format!("train_{net_name}_epoch"),
+                iters: outcome.epochs_run as u32,
+                mean_s: train_s / outcome.epochs_run.max(1) as f64,
+                stddev_s: 0.0,
+                min_s: train_s / outcome.epochs_run.max(1) as f64,
+            },
+            BenchResult {
+                name: format!("train_{net_name}_final_accuracy"),
+                iters: gate.n_eval as u32,
+                mean_s: gate.accuracy,
+                stddev_s: 0.0,
+                min_s: gate.accuracy,
+            },
+            // 1.0 only when the cross-engine differential actually
+            // compared images; --diff 0 must not publish a passing gate
+            BenchResult {
+                name: format!("train_{net_name}_gate_bit_exact"),
+                iters: gate.n_diff as u32,
+                mean_s: if gate.n_diff > 0 { 1.0 } else { 0.0 },
+                stddev_s: 0.0,
+                min_s: if gate.n_diff > 0 { 1.0 } else { 0.0 },
+            },
+        ];
+        tinbinn::report::bench::write_json(&path, "train", &rows)?;
+        println!("wrote {path} ({} rows)", rows.len());
+    }
+
+    if gate.accuracy < min_acc {
+        return Err(tinbinn::TinError::Config(format!(
+            "gated accuracy {:.2}% below --min-acc {:.2}%",
+            100.0 * gate.accuracy,
+            100.0 * min_acc
+        )));
     }
     Ok(())
 }

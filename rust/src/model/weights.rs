@@ -260,6 +260,54 @@ mod tests {
     }
 
     #[test]
+    fn prop_tbw1_roundtrip_identity() {
+        // save -> load is the identity over randomized nets: the zoo
+        // topologies with random params, plus randomized small nets
+        // whose channel counts force non-word-aligned K in every layer
+        // kind — the train/export path depends on this container being
+        // lossless
+        use crate::model::zoo::{micro_1cat, reduced_10cat, Layer, Net};
+        let dir = std::env::temp_dir().join("tinbinn_tbw_prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        crate::testkit::check(12, |rng| {
+            let pick = rng.below(3);
+            let net = match pick {
+                0 => tiny_1cat(),
+                1 => micro_1cat(),
+                _ => {
+                    // randomized small net: odd channels -> K % 32 != 0
+                    let c1 = 1 + rng.below(7) as usize;
+                    let c2 = 1 + rng.below(9) as usize;
+                    let d = 1 + rng.below(19) as usize;
+                    let ncat = 1 + rng.below(4) as usize;
+                    Net {
+                        name: "prop".into(),
+                        input_hwc: (8, 8, 3),
+                        layers: vec![
+                            Layer::Conv3x3 { cout: c1 },
+                            Layer::MaxPool2,
+                            Layer::Conv3x3 { cout: c2 },
+                            Layer::MaxPool2,
+                            Layer::Dense { nout: d },
+                            Layer::Svm { nout: ncat },
+                        ],
+                    }
+                }
+            };
+            // reduced_10cat params are large; use them sparingly
+            let net = if pick == 0 && rng.below(8) == 0 { reduced_10cat() } else { net };
+            let np = random_params(&net, rng.next_u64());
+            let path = dir.join(format!("rt_{}.tbw", rng.next_u64()));
+            save_tbw(&path, &np).unwrap();
+            let back = load_tbw(&path, &net.name).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(back.net.input_hwc, np.net.input_hwc);
+            assert_eq!(back.net.layers, np.net.layers);
+            assert_eq!(back.params, np.params, "TBW1 roundtrip not lossless");
+        });
+    }
+
+    #[test]
     fn hostile_shift_rejected() {
         // hand-built TBW1 with a dense layer whose shift would make
         // quant_scalar's `1 << (shift - 1)` overflow

@@ -184,6 +184,26 @@ pub fn tiny_1cat() -> Net {
     }
 }
 
+/// A deliberately small 1-category net for fast native-training demos
+/// and smokes (train/: the example and hot-swap paths train it from
+/// scratch in seconds). Shares the 32x32x3 input geometry with the
+/// paper nets so the camera/fixture infrastructure applies unchanged.
+pub fn micro_1cat() -> Net {
+    Net {
+        name: "micro".into(),
+        input_hwc: (32, 32, 3),
+        layers: vec![
+            Layer::Conv3x3 { cout: 8 },
+            Layer::MaxPool2,
+            Layer::Conv3x3 { cout: 12 },
+            Layer::MaxPool2,
+            Layer::MaxPool2,
+            Layer::Dense { nout: 32 },
+            Layer::Svm { nout: 1 },
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +246,17 @@ mod tests {
     fn categories() {
         assert_eq!(reduced_10cat().n_categories(), 10);
         assert_eq!(tiny_1cat().n_categories(), 1);
+        assert_eq!(micro_1cat().n_categories(), 1);
+    }
+
+    #[test]
+    fn micro_net_geometry() {
+        // 32 -> 16 -> 8 -> 4 spatial; dense sees 4x4x12 = 192 features
+        let geom = micro_1cat().weighted_geometry();
+        let (h, w, c) = geom[2];
+        assert_eq!(h * w * c, 192);
+        // much smaller than the paper's 1-cat detector
+        assert!(micro_1cat().op_count() * 10 < tiny_1cat().op_count());
     }
 
     #[test]

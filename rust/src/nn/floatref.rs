@@ -11,6 +11,18 @@ use crate::model::NetParams;
 use crate::Result;
 use crate::util::TinError;
 
+/// The float requant: `clip((acc + bias) * 2^-shift, 0, 255)` — the
+/// unrounded analogue of [`crate::nn::layers::quant_scalar`]. Shared
+/// with `train::qat`, which folds this into the training forward and
+/// differentiates through it with a straight-through estimator. The
+/// integer path rounds half-up after the shift, so on in-range values
+/// the two differ by at most 0.5; at the clamp boundaries they agree
+/// exactly.
+#[inline]
+pub fn requant_f32(acc: f32, bias: f32, shift: u8) -> f32 {
+    ((acc + bias) / (1u64 << shift) as f32).clamp(0.0, 255.0)
+}
+
 /// Float forward: u8 image → f32 SVM scores.
 pub fn forward_float(np: &NetParams, image: &[u8]) -> Result<Vec<f32>> {
     let (h0, w0, c0) = np.net.input_hwc;
@@ -49,8 +61,8 @@ pub fn forward_float(np: &NetParams, image: &[u8]) -> Result<Vec<f32>> {
                                     }
                                 }
                             }
-                            let q = (acc + p.bias[n] as f32) / (1u64 << p.shift) as f32;
-                            out[(y * w + xx) * cout + n] = q.clamp(0.0, 255.0);
+                            out[(y * w + xx) * cout + n] =
+                                requant_f32(acc, p.bias[n] as f32, p.shift);
                         }
                     }
                 }
@@ -84,7 +96,7 @@ pub fn forward_float(np: &NetParams, image: &[u8]) -> Result<Vec<f32>> {
                     for (k, &v) in x.iter().enumerate() {
                         acc += v * p.weight(n, k) as f32;
                     }
-                    *slot = ((acc + p.bias[n] as f32) / (1u64 << p.shift) as f32).clamp(0.0, 255.0);
+                    *slot = requant_f32(acc, p.bias[n] as f32, p.shift);
                 }
                 x = out;
                 h = 1;
@@ -137,6 +149,35 @@ mod tests {
             }
         }
         assert!(agree >= 5, "sign agreement {agree}/6");
+    }
+
+    #[test]
+    fn requant_f32_tracks_the_integer_path() {
+        use crate::nn::layers::quant_scalar;
+        // boundary values: both paths clamp identically
+        assert_eq!(requant_f32(-10.0, 0.0, 2), 0.0);
+        assert_eq!(quant_scalar(-10, 0, 2), 0);
+        assert_eq!(requant_f32(100_000.0, 0.0, 2), 255.0);
+        assert_eq!(quant_scalar(100_000, 0, 2), 255);
+        // shift 0: exact agreement (no rounding on either side)
+        assert_eq!(requant_f32(3.0, 1.0, 0), 4.0);
+        assert_eq!(quant_scalar(3, 1, 0), 4);
+        // rounding midpoint: integer rounds half up, float keeps .5
+        assert_eq!(requant_f32(6.0, 0.0, 2), 1.5);
+        assert_eq!(quant_scalar(6, 0, 2), 2);
+        // in-range values never diverge by more than the rounding gap
+        let mut rng = Rng64::new(33);
+        for _ in 0..500 {
+            let acc = rng.below(200_000) as i32 - 100_000;
+            let bias = rng.below(1024) as i32 - 512;
+            let shift = (rng.below(9) + 1) as u8;
+            let f = requant_f32(acc as f32, bias as f32, shift);
+            let q = quant_scalar(acc, bias, shift) as f32;
+            assert!(
+                (f - q).abs() <= 0.5,
+                "acc {acc} bias {bias} shift {shift}: float {f} vs int {q}"
+            );
+        }
     }
 
     #[test]

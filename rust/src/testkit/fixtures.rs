@@ -186,6 +186,46 @@ fn build_task(net: &Net, param_seed: u64, data_seed: u64, n: usize) -> (NetParam
     (np, ds)
 }
 
+/// FNV-1a over a net name — the seed-derivation hash for tasks beyond
+/// the two canonical fixtures.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0001_b3);
+    }
+    h
+}
+
+/// Parameter/dataset seeds for a task name. The two canonical tasks keep
+/// their original constants (so cached fixtures never change); any other
+/// net name derives deterministic seeds from its FNV-1a hash.
+fn task_seeds(name: &str) -> (u64, u64) {
+    match name {
+        "1cat" => (PARAM_SEED_1CAT, DATA_SEED_1CAT),
+        "10cat" => (PARAM_SEED_10CAT, DATA_SEED_10CAT),
+        other => {
+            let h = fnv1a(other.as_bytes());
+            (PARAM_SEED_1CAT ^ h, DATA_SEED_1CAT ^ h.rotate_left(17))
+        }
+    }
+}
+
+/// The shared eval-set definition: trained-like fixture params for `net`
+/// (SVM head calibrated against the synthetic images) plus the
+/// self-labelled dataset of `n` blocky images. The integration suite and
+/// the `train` accuracy gate both consume this, so the two tiers can
+/// never drift apart. `n >= 8` keeps the head's IQR calibration sane.
+pub fn eval_set(net: &Net, n: usize) -> Result<(NetParams, Dataset)> {
+    if n < 8 {
+        return Err(TinError::Config(format!(
+            "eval_set needs n >= 8 for head calibration (got {n})"
+        )));
+    }
+    let (ps, ds) = task_seeds(&net.name);
+    Ok(build_task(net, ps, ds, n))
+}
+
 static FIX_1CAT: OnceLock<(NetParams, Dataset)> = OnceLock::new();
 static FIX_10CAT: OnceLock<(NetParams, Dataset)> = OnceLock::new();
 
@@ -274,6 +314,35 @@ mod tests {
         for a in &audits {
             assert!(!a.overflowed, "layer {} overflowed", a.layer_index);
         }
+    }
+
+    #[test]
+    fn eval_set_is_the_synthetic_task_definition() {
+        // the canonical task and the public eval_set share one dataset
+        // definition — the trainer's gate and the integration tier see
+        // exactly the same images/labels
+        let (np, ds) = synthetic_task("1cat").unwrap();
+        let (np2, ds2) = eval_set(&tiny_1cat(), FIXTURE_IMAGES).unwrap();
+        assert_eq!(np, &np2);
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.pixels, ds2.pixels);
+    }
+
+    #[test]
+    fn eval_set_derives_seeds_for_other_nets() {
+        use crate::model::zoo::micro_1cat;
+        let (np, ds) = eval_set(&micro_1cat(), 16).unwrap();
+        assert_eq!(np.net, micro_1cat());
+        assert_eq!(ds.len(), 16);
+        // labels are mixed by construction (IQR threshold calibration)
+        let ones: usize = ds.labels.iter().map(|&l| l as usize).sum();
+        assert!(ones > 0 && ones < 16, "degenerate labels: {ones}/16");
+        // deterministic
+        let (np2, ds2) = eval_set(&micro_1cat(), 16).unwrap();
+        assert_eq!(np, np2);
+        assert_eq!(ds.labels, ds2.labels);
+        // and distinct from the 1cat stream
+        assert!(eval_set(&micro_1cat(), 4).is_err(), "n < 8 must be rejected");
     }
 
     #[test]

@@ -1,0 +1,210 @@
+//! BinaryConnect latent weights: every ±1 deploy weight keeps an fp32
+//! shadow in [-1, 1]. The forward pass sees only the binarized view
+//! (`sign`, with `w >= 0 -> +1` matching the TBW1 bit convention:
+//! bit set ⇔ +1); gradients flow to the shadows through the
+//! straight-through estimator and the shadows are clipped back into
+//! [-1, 1] after every update, exactly as in Courbariaux et al. 2015.
+
+use crate::model::zoo::{Layer, Net};
+use crate::util::Rng64;
+
+/// Which kind of weighted layer a latent layer binarizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LKind {
+    Conv,
+    Dense,
+    Svm,
+}
+
+/// One weighted layer's trainable state: latent weights, f32 bias, and
+/// the current requant shift (owned by QAT calibration).
+#[derive(Clone, Debug)]
+pub struct LatentLayer {
+    pub kind: LKind,
+    /// GEMM K (9*cin for conv, flattened features for dense/svm).
+    pub k_in: usize,
+    pub n_out: usize,
+    /// Latent fp32 shadows, row-major `[n_out][k_in]`, clipped to [-1, 1].
+    pub w: Vec<f32>,
+    /// Per-channel f32 bias (rounded to i32 at forward/export time).
+    pub bias: Vec<f32>,
+    /// Requant right shift (0 on the SVM head).
+    pub shift: u8,
+    /// Binarized ±1 view of `w`; refresh after every weight update.
+    pub wb: Vec<f32>,
+}
+
+impl LatentLayer {
+    /// Re-binarize the latent shadows: `w >= 0 -> +1`, else -1.
+    pub fn refresh_wb(&mut self) {
+        for (b, &v) in self.wb.iter_mut().zip(self.w.iter()) {
+            *b = if v >= 0.0 { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// BinaryConnect weight clipping: shadows stay in [-1, 1] so they
+    /// cannot drift arbitrarily far from their binarization threshold.
+    pub fn clip(&mut self) {
+        for v in self.w.iter_mut() {
+            *v = v.clamp(-1.0, 1.0);
+        }
+    }
+}
+
+/// A network's full trainable state, mirroring the weighted layers of a
+/// [`Net`] in order.
+#[derive(Clone, Debug)]
+pub struct LatentNet {
+    pub net: Net,
+    pub layers: Vec<LatentLayer>,
+}
+
+impl LatentNet {
+    /// Deterministic init: latent weights uniform in [-0.5, 0.5] from
+    /// one seeded [`Rng64`] stream, biases zero, shifts 1 (head 0) until
+    /// calibration sets them.
+    pub fn init(net: &Net, seed: u64) -> Self {
+        let mut rng = Rng64::new(seed);
+        let geom = net.weighted_geometry();
+        let mut layers = Vec::new();
+        let mut gi = 0;
+        for ly in &net.layers {
+            let (kind, k_in, n_out) = match *ly {
+                Layer::Conv3x3 { cout } => {
+                    let (_, _, c) = geom[gi];
+                    gi += 1;
+                    (LKind::Conv, 9 * c, cout)
+                }
+                Layer::MaxPool2 => continue,
+                Layer::Dense { nout } => {
+                    let (h, w, c) = geom[gi];
+                    gi += 1;
+                    (LKind::Dense, h * w * c, nout)
+                }
+                Layer::Svm { nout } => {
+                    let (h, w, c) = geom[gi];
+                    gi += 1;
+                    (LKind::Svm, h * w * c, nout)
+                }
+            };
+            let w: Vec<f32> =
+                (0..n_out * k_in).map(|_| rng.unit_f64() as f32 - 0.5).collect();
+            let wb = vec![0.0; n_out * k_in];
+            let mut layer = LatentLayer {
+                kind,
+                k_in,
+                n_out,
+                w,
+                bias: vec![0.0; n_out],
+                shift: if matches!(kind, LKind::Svm) { 0 } else { 1 },
+                wb,
+            };
+            layer.refresh_wb();
+            layers.push(layer);
+        }
+        LatentNet { net: net.clone(), layers }
+    }
+
+    /// Number of conv layers (the frozen-feature split point counts
+    /// these).
+    pub fn n_conv(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l.kind, LKind::Conv)).count()
+    }
+
+    /// Re-binarize every layer (call once per optimizer step).
+    pub fn refresh_wb(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.refresh_wb();
+        }
+    }
+}
+
+/// Straight-through window for the requant clip: the gradient passes
+/// where the *unrounded* requant value `v = (acc + bias) / 2^shift`
+/// lies inside the clip range widened by `win` on both sides
+/// (`win = 0` is the strict clipped-STE; `win = 1`, the trainer
+/// default, lets moderately saturated units keep learning — the
+/// hard-tanh-style relaxation binarized nets need to not go dead).
+#[inline]
+pub fn ste_pass(v: f32, win: f32) -> bool {
+    v > -win * 255.0 && v < (1.0 + win) * 255.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::LayerParams;
+    use crate::model::zoo::micro_1cat;
+
+    #[test]
+    fn init_is_deterministic_and_in_range() {
+        let a = LatentNet::init(&micro_1cat(), 7);
+        let b = LatentNet::init(&micro_1cat(), 7);
+        let c = LatentNet::init(&micro_1cat(), 8);
+        assert_eq!(a.layers.len(), 4); // conv, conv, dense, svm
+        assert_eq!(a.n_conv(), 2);
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.w, lb.w);
+        }
+        assert_ne!(a.layers[0].w, c.layers[0].w);
+        for l in &a.layers {
+            assert!(l.w.iter().all(|v| (-0.5..=0.5).contains(v)));
+            assert!(l.bias.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(a.layers[3].kind, LKind::Svm);
+        assert_eq!(a.layers[3].shift, 0);
+    }
+
+    #[test]
+    fn binarize_sign_matches_the_tbw_bit_convention() {
+        // w >= 0 packs as a set bit, which LayerParams::weight reads
+        // back as +1 — the export path and the training forward must
+        // agree on the zero case
+        let mut l = LatentLayer {
+            kind: LKind::Dense,
+            k_in: 3,
+            n_out: 1,
+            w: vec![0.0, -0.25, 0.75],
+            bias: vec![0.0],
+            shift: 1,
+            wb: vec![0.0; 3],
+        };
+        l.refresh_wb();
+        assert_eq!(l.wb, vec![1.0, -1.0, 1.0]);
+        // the packed equivalent
+        let words = vec![0b101u32];
+        let p = LayerParams { k_in: 3, n_out: 1, words, bias: vec![0], shift: 1 };
+        for k in 0..3 {
+            assert_eq!(p.weight(0, k) as f32, l.wb[k], "k {k}");
+        }
+    }
+
+    #[test]
+    fn clip_bounds_latent_shadows() {
+        let mut l = LatentLayer {
+            kind: LKind::Conv,
+            k_in: 2,
+            n_out: 1,
+            w: vec![1.7, -2.3],
+            bias: vec![0.0],
+            shift: 1,
+            wb: vec![0.0; 2],
+        };
+        l.clip();
+        assert_eq!(l.w, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn ste_window_gates_correctly() {
+        // strict clip mask
+        assert!(ste_pass(1.0, 0.0));
+        assert!(ste_pass(254.0, 0.0));
+        assert!(!ste_pass(-1.0, 0.0));
+        assert!(!ste_pass(256.0, 0.0));
+        // widened window keeps moderately saturated units alive
+        assert!(ste_pass(-200.0, 1.0));
+        assert!(ste_pass(400.0, 1.0));
+        assert!(!ste_pass(-300.0, 1.0));
+        assert!(!ste_pass(600.0, 1.0));
+    }
+}

@@ -1,0 +1,128 @@
+//! Training data plumbing: the deterministic synthetic task (seeded
+//! from [`crate::testkit::fixtures`], so the trainer, the integration
+//! suite and the serving gateway all share one dataset definition) plus
+//! the TBD1 loader for real CIFAR-style data when `make artifacts` has
+//! produced it.
+
+use std::path::Path;
+
+use crate::data::tbd::{load_tbd, Dataset};
+use crate::model::zoo::Net;
+use crate::testkit::fixtures;
+use crate::util::{Rng64, TinError};
+use crate::Result;
+
+/// The synthetic training task for `net`: `n` blocky images labelled by
+/// the calibrated fixture model of the same topology —
+/// [`fixtures::eval_set`], so the task is realizable by the
+/// architecture by construction.
+pub fn synthetic(net: &Net, n: usize) -> Result<Dataset> {
+    fixtures::eval_set(net, n).map(|(_, ds)| ds)
+}
+
+/// Load a TBD1 dataset from disk and check it against the net's input
+/// geometry and head width.
+pub fn load_for(net: &Net, path: impl AsRef<Path>) -> Result<Dataset> {
+    let ds = load_tbd(path)?;
+    validate(net, &ds)?;
+    Ok(ds)
+}
+
+/// Geometry/label agreement between a dataset and the net it trains.
+pub fn validate(net: &Net, ds: &Dataset) -> Result<()> {
+    let (h, w, c) = net.input_hwc;
+    if (ds.h, ds.w, ds.c) != (h, w, c) {
+        return Err(TinError::Config(format!(
+            "dataset {}x{}x{} != net input {h}x{w}x{c}",
+            ds.h, ds.w, ds.c
+        )));
+    }
+    if ds.len() < 4 {
+        return Err(TinError::Config(format!(
+            "training needs >= 4 images (got {})",
+            ds.len()
+        )));
+    }
+    let ncat = net.n_categories();
+    let n_classes = if ncat == 1 { 2 } else { ncat };
+    for (i, &l) in ds.labels.iter().enumerate() {
+        if l as usize >= n_classes {
+            return Err(TinError::Config(format!(
+                "label {l} at image {i} out of range for {n_classes} classes"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Image `i` as integer-valued f32 activations (the training dtype).
+pub fn image_f32(ds: &Dataset, i: usize) -> Vec<f32> {
+    ds.image(i).iter().map(|&b| b as f32).collect()
+}
+
+/// Deterministic in-place Fisher–Yates shuffle (one epoch's visit
+/// order).
+pub fn shuffle(idx: &mut [usize], rng: &mut Rng64) {
+    for i in (1..idx.len()).rev() {
+        let j = rng.below((i + 1) as u32) as usize;
+        idx.swap(i, j);
+    }
+}
+
+/// Positive-class count for the 1-category class-balanced loss.
+pub fn positives(ds: &Dataset) -> usize {
+    ds.labels.iter().filter(|&&l| l == 1).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::micro_1cat;
+
+    #[test]
+    fn synthetic_matches_the_fixture_eval_set() {
+        let net = micro_1cat();
+        let ds = synthetic(&net, 16).unwrap();
+        let (_, ds2) = fixtures::eval_set(&net, 16).unwrap();
+        assert_eq!(ds.labels, ds2.labels);
+        assert_eq!(ds.pixels, ds2.pixels);
+        validate(&net, &ds).unwrap();
+        assert!(positives(&ds) > 0 && positives(&ds) < ds.len());
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let net = micro_1cat();
+        let mut ds = synthetic(&net, 8).unwrap();
+        ds.labels[0] = 9; // out of range for a 1-cat (2-class) task
+        assert!(validate(&net, &ds).is_err());
+        let ds = Dataset { h: 8, w: 8, c: 3, n_classes: 2, labels: vec![0; 8], pixels: vec![0; 8 * 8 * 3 * 8] };
+        assert!(validate(&net, &ds).is_err(), "wrong geometry");
+    }
+
+    #[test]
+    fn shuffle_is_a_deterministic_permutation() {
+        let mut a: Vec<usize> = (0..10).collect();
+        let mut b: Vec<usize> = (0..10).collect();
+        let mut r1 = Rng64::new(4);
+        let mut r2 = Rng64::new(4);
+        shuffle(&mut a, &mut r1);
+        shuffle(&mut b, &mut r2);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+        let mut c: Vec<usize> = (0..10).collect();
+        let mut r3 = Rng64::new(5);
+        shuffle(&mut c, &mut r3);
+        assert_ne!(a, c, "different seeds should permute differently");
+    }
+
+    #[test]
+    fn image_f32_is_integer_valued() {
+        let ds = synthetic(&micro_1cat(), 8).unwrap();
+        let x = image_f32(&ds, 0);
+        assert_eq!(x.len(), 32 * 32 * 3);
+        assert!(x.iter().all(|&v| v >= 0.0 && v <= 255.0 && v.fract() == 0.0));
+    }
+}

@@ -1,0 +1,203 @@
+//! Export: binarize latent weights + learned biases/shifts into a
+//! bit-exact TBW1 container, and the cross-engine acceptance gate that
+//! makes "trained" mean "serves identically on every engine".
+
+use std::path::Path;
+
+use crate::compiler::lower::{compile, InputMode};
+use crate::data::tbd::Dataset;
+use crate::model::weights::{save_tbw, LayerParams, NetParams};
+use crate::nn::bitplane::BitplaneModel;
+use crate::nn::layers::{classify, forward};
+use crate::nn::opt::{OptModel, Scratch};
+use crate::soc::Board;
+use crate::util::TinError;
+use crate::Result;
+
+use super::binarize::{LKind, LatentLayer, LatentNet};
+
+/// One latent layer -> deploy parameters: `w >= 0` packs as a set bit
+/// (+1, the TBW1 convention), biases round to i32, the head's shift is
+/// pinned to 0.
+pub fn layer_params(l: &LatentLayer) -> LayerParams {
+    let kw = (l.k_in + 31) / 32;
+    let mut words = vec![0u32; l.n_out * kw];
+    for n in 0..l.n_out {
+        for k in 0..l.k_in {
+            if l.w[n * l.k_in + k] >= 0.0 {
+                words[n * kw + k / 32] |= 1 << (k % 32);
+            }
+        }
+    }
+    let bias: Vec<i32> = l.bias.iter().map(|&b| b.round() as i32).collect();
+    LayerParams {
+        k_in: l.k_in,
+        n_out: l.n_out,
+        words,
+        bias,
+        shift: if matches!(l.kind, LKind::Svm) { 0 } else { l.shift },
+    }
+}
+
+/// Snapshot the whole latent net as deployable [`NetParams`].
+pub fn to_netparams(lat: &LatentNet) -> NetParams {
+    NetParams {
+        net: lat.net.clone(),
+        params: lat.layers.iter().map(layer_params).collect(),
+    }
+}
+
+/// Write trained parameters as a TBW1 container (the same format `make
+/// artifacts` produces, loadable by every engine and the overlay
+/// compiler).
+pub fn save(np: &NetParams, path: impl AsRef<Path>) -> Result<()> {
+    save_tbw(path, np)
+}
+
+/// What the acceptance gate measured.
+pub struct GateReport {
+    /// Images checked for cross-engine bit-exactness.
+    pub n_diff: usize,
+    /// Eval-set accuracy on the integer fast path.
+    pub accuracy: f64,
+    /// Eval-set size.
+    pub n_eval: usize,
+}
+
+/// The differential acceptance gate: golden, opt, bitplane and the
+/// cycle-accurate overlay must produce bit-identical scores on the
+/// first `n_diff` eval images (any divergence is an error), and the
+/// dataset accuracy is measured on the integer fast path. Callers
+/// decide what accuracy threshold to enforce.
+pub fn acceptance_gate(np: &NetParams, ds: &Dataset, n_diff: usize) -> Result<GateReport> {
+    let opt = OptModel::new(np)?;
+    let mut scratch = Scratch::new();
+    let bp = BitplaneModel::new(np)?;
+    let mut bp_scratch = crate::nn::bitplane::Scratch::new();
+    let compiled = compile(np, InputMode::Direct)?;
+    let mut board = Board::new(&compiled);
+
+    let n_diff = n_diff.min(ds.len());
+    for i in 0..n_diff {
+        let img = ds.image(i);
+        let golden = forward(np, img)?;
+        let fast = opt.forward(img, &mut scratch)?;
+        if fast != golden {
+            return Err(TinError::Config(format!(
+                "gate: nn::opt diverged from golden on image {i}"
+            )));
+        }
+        let planes = bp.forward(img, &mut bp_scratch)?;
+        if planes != golden {
+            return Err(TinError::Config(format!(
+                "gate: nn::bitplane diverged from golden on image {i}"
+            )));
+        }
+        let (sim, _) = board.infer(&compiled, img)?;
+        if sim != golden {
+            return Err(TinError::Config(format!(
+                "gate: overlay diverged from golden on image {i}"
+            )));
+        }
+    }
+
+    let mut correct = 0usize;
+    for i in 0..ds.len() {
+        let scores = opt.forward(ds.image(i), &mut scratch)?;
+        if classify(&scores) == ds.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok(GateReport {
+        n_diff,
+        accuracy: correct as f64 / ds.len().max(1) as f64,
+        n_eval: ds.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::micro_1cat;
+    use crate::testkit::fixtures;
+    use crate::train::binarize::LatentNet;
+
+    #[test]
+    fn export_sign_convention_roundtrips() {
+        let l = LatentLayer {
+            kind: LKind::Dense,
+            k_in: 34, // non-word-aligned K
+            n_out: 2,
+            w: {
+                let mut w = vec![-0.5f32; 2 * 34];
+                w[0] = 0.0; // zero binarizes to +1
+                w[5] = 0.9;
+                w[33] = 0.2;
+                w[34 + 7] = 0.1;
+                w
+            },
+            bias: vec![3.4, -2.6],
+            shift: 5,
+            wb: vec![0.0; 2 * 34],
+        };
+        let p = layer_params(&l);
+        assert_eq!(p.weight(0, 0), 1, "w == 0 must export as +1");
+        assert_eq!(p.weight(0, 5), 1);
+        assert_eq!(p.weight(0, 33), 1);
+        assert_eq!(p.weight(0, 1), -1);
+        assert_eq!(p.weight(1, 7), 1);
+        assert_eq!(p.weight(1, 0), -1);
+        assert_eq!(p.bias, vec![3, -3], "biases round half away from zero");
+        assert_eq!(p.shift, 5);
+    }
+
+    #[test]
+    fn head_shift_is_pinned_to_zero() {
+        let net = micro_1cat();
+        let mut lat = LatentNet::init(&net, 2);
+        lat.layers.last_mut().unwrap().shift = 9; // hostile state
+        let np = to_netparams(&lat);
+        assert_eq!(np.params.last().unwrap().shift, 0);
+    }
+
+    #[test]
+    fn exported_netparams_compile_on_every_engine() {
+        let net = micro_1cat();
+        let lat = LatentNet::init(&net, 31);
+        let np = to_netparams(&lat);
+        assert!(OptModel::new(&np).is_ok());
+        assert!(BitplaneModel::new(&np).is_ok());
+        assert!(compile(&np, InputMode::Direct).is_ok());
+    }
+
+    #[test]
+    fn gate_passes_on_the_fixture_model() {
+        // the fixture's labels are its own predictions, so the gate on
+        // the fixture params must report 100% accuracy and bit-exact
+        // engines — a self-test of the gate itself
+        let (np, ds) = fixtures::eval_set(&micro_1cat(), 8).unwrap();
+        let report = acceptance_gate(&np, &ds, 2).unwrap();
+        assert_eq!(report.n_diff, 2);
+        assert_eq!(report.n_eval, 8);
+        assert!(
+            (report.accuracy - 1.0).abs() < 1e-9,
+            "self-labelled fixture must gate at 100% (got {})",
+            report.accuracy
+        );
+    }
+
+    #[test]
+    fn save_roundtrips_through_tbw1() {
+        let net = micro_1cat();
+        let lat = LatentNet::init(&net, 12);
+        let np = to_netparams(&lat);
+        let dir = std::env::temp_dir().join("tinbinn_train_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trained.tbw");
+        save(&np, &path).unwrap();
+        let back = crate::model::weights::load_tbw(&path, "micro").unwrap();
+        assert_eq!(back.params, np.params);
+        assert_eq!(back.net.layers, np.net.layers);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,568 @@
+//! Native BinaryConnect training — the subsystem that closes the
+//! train→TBW1→all-engines loop without leaving the repo.
+//!
+//! The paper's networks are shrunk BinaryConnect models (Courbariaux et
+//! al. 2015): ±1 weights in the forward pass, latent fp32 shadows
+//! updated through the straight-through estimator, weight clipping to
+//! [-1, 1], and an L2-SVM square-hinge head. This module reproduces
+//! that recipe against the repo's exact deploy semantics:
+//!
+//! * [`binarize`] — latent shadows, sign binarization, STE window;
+//! * [`tensor`] — f32 conv/pool/dense forward + adjoint backward;
+//! * [`qat`] — the quantization-aware core: the training forward *is*
+//!   the integer deploy forward (bit-identical to every engine), and
+//!   requant shifts/biases are calibrated from activation statistics
+//!   like folded batch-norm;
+//! * [`sgd`] — Adam (default) / momentum SGD, LR schedule, hinge losses;
+//! * [`data`] — the synthetic fixture task + TBD1 loading;
+//! * [`export`] — TBW1 export and the cross-engine acceptance gate.
+//!
+//! [`fit`] drives the loop. Two training modes:
+//!
+//! * **Feature-frozen (default, `conv_lr_mul == 0`)** — conv layers
+//!   keep their calibrated random binary weights as a fixed feature
+//!   extractor (their saturating requant keeps them input-sensitive
+//!   through depth) and BinaryConnect trains the dense+SVM stack over
+//!   *cached* conv features. This is the mode that reliably reaches
+//!   100% on the self-labelled synthetic tasks within a CI smoke
+//!   budget; conv activations are cached once, so epochs cost
+//!   milliseconds.
+//! * **Full-depth (`conv_lr_mul > 0`)** — every layer trains with the
+//!   given conv LR multiplier. Converges on shallow nets; on the deep
+//!   paper nets, from-scratch full-depth BNN training without real
+//!   batch-norm is noisy — expect to rely on the best-checkpoint
+//!   tracking.
+//!
+//! After every optimizer step the trainer exports the integer model
+//! and measures eval accuracy on the deploy path, keeping the best
+//! checkpoint — with a bit-exact train forward there is no float/int
+//! gap for this to hide.
+
+pub mod binarize;
+pub mod data;
+pub mod export;
+pub mod qat;
+pub mod sgd;
+pub mod tensor;
+
+use crate::data::tbd::Dataset;
+use crate::model::weights::{LayerParams, NetParams};
+use crate::model::zoo::{Layer, Net};
+use crate::nn::layers::{classify, dense_binary, quant_scalar};
+use crate::util::{Rng64, TinError};
+use crate::Result;
+
+use binarize::{LKind, LatentNet};
+use qat::Trace;
+use sgd::{clear_grads, hinge_binary, hinge_multi, lr_at, zero_grads, Adam, LayerGrad, Momentum, OptKind};
+
+/// Trainer knobs. The defaults are the validated synthetic-task recipe;
+/// see the module docs for what each phase does.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    /// Base LR for latent weights (bias LRs derive from it per layer).
+    pub lr: f32,
+    /// Per-epoch exponential LR decay.
+    pub lr_decay: f32,
+    /// Square-hinge margin in units of the calibrated score scale.
+    pub margin: f32,
+    /// STE clip-window widening (0 = strict clipped STE).
+    pub ste_window: f32,
+    /// Calibration target for pre-activation spread, in u8 units;
+    /// > 255 drives activations into the near-binary regime.
+    pub target_std: f32,
+    /// Calibration target for the median activation.
+    pub mid: f32,
+    /// Conv LR multiplier; 0 freezes convs and caches their features.
+    pub conv_lr_mul: f32,
+    /// Fraction of epochs with bias recentering (folded-BN warmup).
+    pub center_frac: f64,
+    pub seed: u64,
+    /// Early-stop once best eval accuracy reaches this.
+    pub stop_acc: f64,
+    pub optimizer: OptKind,
+    /// Momentum coefficient (only for `OptKind::Momentum`).
+    pub momentum: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 100,
+            batch: 4,
+            lr: 0.003,
+            lr_decay: 0.98,
+            margin: 1.0,
+            ste_window: 1.0,
+            target_std: 512.0,
+            mid: 128.0,
+            conv_lr_mul: 0.0,
+            center_frac: 0.6,
+            seed: 0x7E57,
+            stop_acc: 1.0,
+            optimizer: OptKind::Adam,
+            momentum: 0.9,
+        }
+    }
+}
+
+/// One epoch's record.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStat {
+    pub epoch: usize,
+    /// Mean per-sample hinge loss.
+    pub loss: f64,
+    /// Integer eval accuracy after the epoch's last step.
+    pub acc: f64,
+    /// Best integer eval accuracy so far.
+    pub best: f64,
+    pub lr: f32,
+}
+
+/// What [`fit`] hands back.
+pub struct TrainOutcome {
+    /// The best integer checkpoint (deployable as-is).
+    pub params: NetParams,
+    pub best_acc: f64,
+    pub best_epoch: usize,
+    pub epochs_run: usize,
+    pub history: Vec<EpochStat>,
+    /// Whether the feature-frozen fast path was active.
+    pub frozen_features: bool,
+}
+
+enum Optim {
+    Adam(Adam),
+    Momentum(Momentum),
+}
+
+impl Optim {
+    fn next_step(&mut self) {
+        if let Optim::Adam(a) = self {
+            a.next_step();
+        }
+    }
+
+    fn step_weights(&mut self, li: usize, w: &mut [f32], g: &[f32], lr: f32) {
+        match self {
+            Optim::Adam(a) => a.step_weights(li, w, g, lr),
+            Optim::Momentum(m) => m.step_weights(li, w, g, lr),
+        }
+    }
+
+    fn step_bias(&mut self, li: usize, b: &mut [f32], g: &[f32], lr: f32) {
+        match self {
+            Optim::Adam(a) => a.step_bias(li, b, g, lr),
+            Optim::Momentum(m) => m.step_bias(li, b, g, lr),
+        }
+    }
+}
+
+/// The frozen/trainable split: net-layer index and weighted index of
+/// the first non-conv weighted layer.
+fn split_point(net: &Net) -> (usize, usize) {
+    let mut wi = 0usize;
+    for (li, ly) in net.layers.iter().enumerate() {
+        match ly {
+            Layer::Conv3x3 { .. } => wi += 1,
+            Layer::MaxPool2 => {}
+            _ => return (li, wi),
+        }
+    }
+    (0, 0)
+}
+
+/// Integer scores of the dense/SVM tail over cached integer features.
+fn tail_scores(
+    kinds: &[LKind],
+    tail_params: &[LayerParams],
+    feat: &[i32],
+) -> Vec<i32> {
+    let mut x: Vec<i32> = feat.to_vec();
+    for (kind, p) in kinds.iter().zip(tail_params) {
+        match kind {
+            LKind::Svm => {
+                let acc = dense_binary(&x, p);
+                return acc
+                    .iter()
+                    .zip(&p.bias)
+                    .map(|(a, b)| a.wrapping_add(*b))
+                    .collect();
+            }
+            LKind::Dense => {
+                let acc = dense_binary(&x, p);
+                x = acc
+                    .iter()
+                    .enumerate()
+                    .map(|(n, a)| quant_scalar(*a, p.bias[n], p.shift))
+                    .collect();
+            }
+            LKind::Conv => unreachable!("tail_scores is dense/svm only"),
+        }
+    }
+    x
+}
+
+/// Train `net` on `ds` with BinaryConnect + QAT. Deterministic for a
+/// given config; returns the best integer checkpoint over the run.
+pub fn fit(net: &Net, ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    data::validate(net, ds)?;
+    if cfg.batch == 0 {
+        return Err(TinError::Config("batch must be >= 1".into()));
+    }
+    let n = ds.len();
+    let ncat = net.n_categories();
+
+    let mut lat = LatentNet::init(net, cfg.seed);
+    let imgs: Vec<Vec<f32>> = (0..n).map(|i| data::image_f32(ds, i)).collect();
+
+    // initial folded-BN calibration over the full net
+    let mut sigma =
+        qat::calibrate(&mut lat, &imgs, 0, 0, 3, cfg.target_std, cfg.mid, true)?;
+
+    // frozen-feature split
+    let (split_layer, split_wi) = split_point(net);
+    let frozen = cfg.conv_lr_mul == 0.0 && split_wi > 0;
+    let (start_layer, start_wi, inputs) = if frozen {
+        let mut feats = Vec::with_capacity(n);
+        for x in &imgs {
+            feats.push(qat::prefix_activations(&lat, split_layer, x)?);
+        }
+        (split_layer, split_wi, feats)
+    } else {
+        (0usize, 0usize, imgs)
+    };
+    // integer view of the cached features for the fast tail eval
+    let tail_kinds: Vec<LKind> = lat.layers[start_wi..].iter().map(|l| l.kind).collect();
+    let tail_is_mlp = frozen && !tail_kinds.iter().any(|k| matches!(k, LKind::Conv));
+    let feats_i32: Vec<Vec<i32>> = if tail_is_mlp {
+        inputs
+            .iter()
+            .map(|v| v.iter().map(|&f| f as i32).collect())
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // frozen prefix exported once
+    let prefix_params: Vec<LayerParams> =
+        lat.layers[..start_wi].iter().map(export::layer_params).collect();
+
+    let n_w = lat.layers.len();
+    let lrmul: Vec<f32> = lat
+        .layers
+        .iter()
+        .map(|l| if matches!(l.kind, LKind::Conv) { cfg.conv_lr_mul } else { 1.0 })
+        .collect();
+
+    let mut opt = match cfg.optimizer {
+        OptKind::Adam => Optim::Adam(Adam::new(&lat)),
+        OptKind::Momentum => Optim::Momentum(Momentum::new(&lat, cfg.momentum)),
+    };
+    let mut grads: Vec<LayerGrad> = zero_grads(&lat);
+    let mut trace = Trace::default();
+    let mut order_rng = Rng64::new(cfg.seed ^ 0xABCDEF);
+    let mut idx: Vec<usize> = (0..n).collect();
+    let center_until = (cfg.epochs as f64 * cfg.center_frac) as usize;
+
+    // class-balanced weights for the 1-cat hinge
+    let npos = data::positives(ds);
+    let (wpos, wneg) = if ncat == 1 {
+        (
+            n as f32 / (2.0 * npos.max(1) as f32),
+            n as f32 / (2.0 * (n - npos).max(1) as f32),
+        )
+    } else {
+        (1.0, 1.0)
+    };
+
+    let mut best_acc = -1.0f64;
+    let mut best_epoch = 0usize;
+    let mut best_np: Option<NetParams> = None;
+    let mut history: Vec<EpochStat> = Vec::new();
+    let mut epochs_run = 0usize;
+    let mut dscores: Vec<f32> = Vec::new();
+    let mut stop = false;
+    // Checkpoint cadence: per optimizer step on the cached-feature fast
+    // path with toy-sized eval sets (the validated smoke regime — the
+    // oscillating trajectory is sampled densely for ~free), once per
+    // epoch otherwise so large real datasets don't go quadratic.
+    let eval_every_step = tail_is_mlp && n <= 256;
+
+    for epoch in 0..cfg.epochs {
+        let cur_lr = lr_at(cfg.lr, cfg.lr_decay, epoch);
+        if epoch > 0 && epoch <= center_until {
+            // folded-BN warmup: recalibrate shifts/sigma each epoch,
+            // recentering biases until the freeze point
+            sigma = qat::calibrate(
+                &mut lat,
+                &inputs,
+                start_layer,
+                start_wi,
+                1,
+                cfg.target_std,
+                cfg.mid,
+                epoch < center_until,
+            )?;
+        }
+        data::shuffle(&mut idx, &mut order_rng);
+
+        let mut epoch_loss = 0.0f64;
+        let mut seen = 0usize;
+        let mut last_acc = 0.0f64;
+        let mut bi = 0usize;
+        while bi < n {
+            let bend = (bi + cfg.batch).min(n);
+            let bidx = &idx[bi..bend];
+            bi = bend;
+
+            clear_grads(&mut grads);
+            for l in lat.layers[start_wi..].iter_mut() {
+                l.refresh_wb();
+            }
+            for &i in bidx {
+                let scores =
+                    qat::forward(&lat, start_layer, start_wi, &inputs[i], Some(&mut trace))?;
+                let loss = if ncat == 1 {
+                    let positive = ds.labels[i] == 1;
+                    let cw = if positive { wpos } else { wneg };
+                    let (loss, d) =
+                        hinge_binary(scores[0], positive, sigma, cfg.margin, cw);
+                    dscores.clear();
+                    dscores.push(d);
+                    loss
+                } else {
+                    hinge_multi(&scores, ds.labels[i] as usize, sigma, cfg.margin, &mut dscores)
+                };
+                epoch_loss += loss as f64;
+                seen += 1;
+                qat::backward(&lat, &trace, &dscores, cfg.ste_window, &mut grads);
+            }
+            // mean gradient over the batch
+            let bn = bidx.len() as f32;
+            for g in grads.iter_mut() {
+                for v in g.w.iter_mut() {
+                    *v /= bn;
+                }
+                for v in g.b.iter_mut() {
+                    *v /= bn;
+                }
+            }
+
+            opt.next_step();
+            for wi in start_wi..n_w {
+                let llr = cur_lr * lrmul[wi];
+                if llr <= 0.0 {
+                    continue;
+                }
+                let l = &mut lat.layers[wi];
+                opt.step_weights(wi, &mut l.w, &grads[wi].w, llr);
+                l.clip();
+                let is_head = matches!(l.kind, LKind::Svm);
+                // biases live on the pre-activation scale; the head
+                // trains from step one, hidden biases only after the
+                // recentering warmup releases them
+                if is_head || epoch > center_until {
+                    let bl = if is_head {
+                        llr * sigma.max(1.0)
+                    } else {
+                        llr * (1u64 << l.shift) as f32 * 255.0
+                    };
+                    opt.step_bias(wi, &mut l.bias, &grads[wi].b, bl);
+                }
+            }
+
+            // integer checkpoint eval on the deploy path (every step on
+            // the fast path, at epoch end otherwise)
+            if !eval_every_step && bi < n {
+                continue;
+            }
+            let tail_params: Vec<LayerParams> =
+                lat.layers[start_wi..].iter().map(export::layer_params).collect();
+            let mut correct = 0usize;
+            if tail_is_mlp {
+                for i in 0..n {
+                    let scores = tail_scores(&tail_kinds, &tail_params, &feats_i32[i]);
+                    if classify(&scores) == ds.labels[i] as usize {
+                        correct += 1;
+                    }
+                }
+            } else {
+                let np = NetParams {
+                    net: net.clone(),
+                    params: prefix_params.iter().cloned().chain(tail_params.iter().cloned()).collect(),
+                };
+                for i in 0..n {
+                    let scores = crate::nn::layers::forward(&np, ds.image(i))?;
+                    if classify(&scores) == ds.labels[i] as usize {
+                        correct += 1;
+                    }
+                }
+            }
+            last_acc = correct as f64 / n as f64;
+            if last_acc > best_acc {
+                best_acc = last_acc;
+                best_epoch = epoch;
+                best_np = Some(NetParams {
+                    net: net.clone(),
+                    params: prefix_params
+                        .iter()
+                        .cloned()
+                        .chain(tail_params.into_iter())
+                        .collect(),
+                });
+            }
+            if best_acc >= cfg.stop_acc {
+                stop = true;
+                break;
+            }
+        }
+
+        epochs_run = epoch + 1;
+        history.push(EpochStat {
+            epoch,
+            loss: epoch_loss / seen.max(1) as f64,
+            acc: last_acc,
+            best: best_acc,
+            lr: cur_lr,
+        });
+        if stop {
+            break;
+        }
+    }
+
+    let params = match best_np {
+        Some(np) => np,
+        None => export::to_netparams(&lat),
+    };
+    Ok(TrainOutcome {
+        params,
+        best_acc: best_acc.max(0.0),
+        best_epoch,
+        epochs_run,
+        history,
+        frozen_features: frozen,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo::micro_1cat;
+    use crate::testkit::fixtures;
+
+    fn nano_net() -> Net {
+        Net {
+            name: "nano".into(),
+            input_hwc: (8, 8, 3),
+            layers: vec![
+                Layer::Conv3x3 { cout: 8 },
+                Layer::MaxPool2,
+                Layer::Dense { nout: 16 },
+                Layer::Svm { nout: 1 },
+            ],
+        }
+    }
+
+    #[test]
+    fn split_point_finds_the_first_dense() {
+        let (li, wi) = split_point(&micro_1cat());
+        assert_eq!((li, wi), (5, 2));
+        let (li, wi) = split_point(&nano_net());
+        assert_eq!((li, wi), (2, 1));
+    }
+
+    #[test]
+    fn full_depth_training_learns_the_nano_task() {
+        // the whole BinaryConnect loop, conv backward included, on a
+        // task realizable by construction (labels come from a fixture
+        // model of the same topology)
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&net, 24).unwrap();
+        let cfg = TrainConfig {
+            epochs: 60,
+            conv_lr_mul: 1.0,
+            ..TrainConfig::default()
+        };
+        let out = fit(&net, &ds, &cfg).unwrap();
+        assert!(!out.frozen_features);
+        assert!(
+            out.best_acc >= 0.75,
+            "full-depth nano training stalled at {:.3}",
+            out.best_acc
+        );
+        // the returned checkpoint reproduces the reported accuracy on
+        // the deploy path
+        let gate = export::acceptance_gate(&out.params, &ds, 4).unwrap();
+        assert!((gate.accuracy - out.best_acc).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frozen_feature_training_learns_the_nano_task() {
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&net, 24).unwrap();
+        let cfg = TrainConfig { epochs: 40, ..TrainConfig::default() };
+        let out = fit(&net, &ds, &cfg).unwrap();
+        assert!(out.frozen_features);
+        assert!(
+            out.best_acc >= 0.75,
+            "frozen-feature nano training stalled at {:.3}",
+            out.best_acc
+        );
+        assert!(out.epochs_run <= 40);
+        assert!(!out.history.is_empty());
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&net, 16).unwrap();
+        let cfg = TrainConfig { epochs: 4, stop_acc: 2.0, ..TrainConfig::default() };
+        let a = fit(&net, &ds, &cfg).unwrap();
+        let b = fit(&net, &ds, &cfg).unwrap();
+        assert_eq!(a.params.params, b.params.params);
+        assert_eq!(a.best_acc, b.best_acc);
+        assert_eq!(a.history.len(), b.history.len());
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.loss, y.loss);
+            assert_eq!(x.acc, y.acc);
+        }
+    }
+
+    #[test]
+    fn early_stop_honors_stop_acc() {
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&net, 16).unwrap();
+        // stop as soon as anything beats a weak bar (even a constant
+        // predictor clears 0.4 on a <= 3:1 label split, and the fixture
+        // head calibration guarantees the minority class is >= 25%)
+        let cfg = TrainConfig { epochs: 40, stop_acc: 0.4, ..TrainConfig::default() };
+        let out = fit(&net, &ds, &cfg).unwrap();
+        assert!(out.best_acc >= 0.4);
+        assert!(out.epochs_run < 40, "early stop never fired");
+    }
+
+    #[test]
+    fn rejects_mismatched_dataset() {
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&micro_1cat(), 8).unwrap();
+        assert!(fit(&net, &ds, &TrainConfig::default()).is_err());
+    }
+
+    #[test]
+    fn momentum_optimizer_runs() {
+        // the classic BinaryConnect optimizer stays wired end to end
+        let net = nano_net();
+        let (_, ds) = fixtures::eval_set(&net, 16).unwrap();
+        let cfg = TrainConfig {
+            epochs: 3,
+            optimizer: OptKind::Momentum,
+            lr: 0.0005,
+            stop_acc: 2.0,
+            ..TrainConfig::default()
+        };
+        let out = fit(&net, &ds, &cfg).unwrap();
+        assert_eq!(out.epochs_run, 3);
+    }
+}

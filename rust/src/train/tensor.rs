@@ -1,0 +1,352 @@
+//! Minimal f32 forward/backward primitives for the BinaryConnect
+//! trainer — conv3x3 (same, zero-padded) via im2col, 2x2/2 maxpool with
+//! argmax routing, and dense matmuls, all over flat HWC buffers.
+//!
+//! Everything here is a plain linear map (or, for the pool, piecewise
+//! linear), so the backward passes are exact adjoints; the
+//! finite-difference tests below pin them. The requant nonlinearity and
+//! its straight-through estimator live in [`crate::train::qat`].
+
+/// im2col: HWC input (h*w*c) -> one row of 9c taps per output position
+/// (h*w rows), zero padded, with the weight-k ordering shared with the
+/// inference engines: k = (ky*3 + kx)*c + ch.
+pub fn im2col(x: &[f32], h: usize, w: usize, c: usize, cols: &mut Vec<f32>) {
+    assert_eq!(x.len(), h * w * c, "im2col input size");
+    cols.clear();
+    cols.resize(h * w * 9 * c, 0.0);
+    for y in 0..h {
+        for xx in 0..w {
+            let row = (y * w + xx) * 9 * c;
+            for ky in 0..3usize {
+                let yy = y as isize + ky as isize - 1;
+                if yy < 0 || yy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let xc = xx as isize + kx as isize - 1;
+                    if xc < 0 || xc >= w as isize {
+                        continue;
+                    }
+                    let src = ((yy as usize) * w + xc as usize) * c;
+                    let dst = row + (ky * 3 + kx) * c;
+                    for ch in 0..c {
+                        cols[dst + ch] = x[src + ch];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add column gradients (h*w rows of 9c)
+/// back onto the input gradient map (h*w*c).
+pub fn col2im_add(dcols: &[f32], h: usize, w: usize, c: usize, dx: &mut [f32]) {
+    assert_eq!(dcols.len(), h * w * 9 * c, "col2im dcols size");
+    assert_eq!(dx.len(), h * w * c, "col2im dx size");
+    for y in 0..h {
+        for xx in 0..w {
+            let row = (y * w + xx) * 9 * c;
+            for ky in 0..3usize {
+                let yy = y as isize + ky as isize - 1;
+                if yy < 0 || yy >= h as isize {
+                    continue;
+                }
+                for kx in 0..3usize {
+                    let xc = xx as isize + kx as isize - 1;
+                    if xc < 0 || xc >= w as isize {
+                        continue;
+                    }
+                    let src = ((yy as usize) * w + xc as usize) * c;
+                    let dst = row + (ky * 3 + kx) * c;
+                    for ch in 0..c {
+                        dx[src + ch] += dcols[dst + ch];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `out[pos*n_out + n] = Σ_k feats[pos*k + kk] · wts[n*k + kk]` — the
+/// shared forward matmul (conv over im2col rows with n_pos = h*w, dense
+/// with n_pos = 1).
+pub fn matmul_nt(
+    feats: &[f32],
+    wts: &[f32],
+    n_pos: usize,
+    k: usize,
+    n_out: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(feats.len(), n_pos * k, "matmul feats size");
+    assert_eq!(wts.len(), n_out * k, "matmul wts size");
+    out.clear();
+    out.resize(n_pos * n_out, 0.0);
+    for pos in 0..n_pos {
+        let f = &feats[pos * k..(pos + 1) * k];
+        let o = &mut out[pos * n_out..(pos + 1) * n_out];
+        for (n, slot) in o.iter_mut().enumerate() {
+            let row = &wts[n * k..(n + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += f[kk] * row[kk];
+            }
+            *slot = acc;
+        }
+    }
+}
+
+/// Weight gradient: `dw[n*k + kk] += Σ_pos dacc[pos*n_out + n] ·
+/// feats[pos*k + kk]`. The gradient is w.r.t. the *binarized* weight;
+/// the straight-through estimator applies it to the latent shadow.
+pub fn grad_weights(
+    feats: &[f32],
+    dacc: &[f32],
+    n_pos: usize,
+    k: usize,
+    n_out: usize,
+    dw: &mut [f32],
+) {
+    assert_eq!(feats.len(), n_pos * k, "grad_weights feats size");
+    assert_eq!(dacc.len(), n_pos * n_out, "grad_weights dacc size");
+    assert_eq!(dw.len(), n_out * k, "grad_weights dw size");
+    for pos in 0..n_pos {
+        let f = &feats[pos * k..(pos + 1) * k];
+        let d = &dacc[pos * n_out..(pos + 1) * n_out];
+        for (n, &dn) in d.iter().enumerate() {
+            if dn == 0.0 {
+                continue;
+            }
+            let row = &mut dw[n * k..(n + 1) * k];
+            for kk in 0..k {
+                row[kk] += dn * f[kk];
+            }
+        }
+    }
+}
+
+/// Input gradient: `dfeats[pos*k + kk] = Σ_n dacc[pos*n_out + n] ·
+/// wts[n*k + kk]`.
+pub fn grad_inputs(
+    wts: &[f32],
+    dacc: &[f32],
+    n_pos: usize,
+    k: usize,
+    n_out: usize,
+    dfeats: &mut Vec<f32>,
+) {
+    assert_eq!(wts.len(), n_out * k, "grad_inputs wts size");
+    assert_eq!(dacc.len(), n_pos * n_out, "grad_inputs dacc size");
+    dfeats.clear();
+    dfeats.resize(n_pos * k, 0.0);
+    for pos in 0..n_pos {
+        let d = &dacc[pos * n_out..(pos + 1) * n_out];
+        let df = &mut dfeats[pos * k..(pos + 1) * k];
+        for (n, &dn) in d.iter().enumerate() {
+            if dn == 0.0 {
+                continue;
+            }
+            let row = &wts[n * k..(n + 1) * k];
+            for kk in 0..k {
+                df[kk] += dn * row[kk];
+            }
+        }
+    }
+}
+
+/// 2x2 stride-2 max pool over HWC (h, w even). `idx` records the winner
+/// offset (dy*2 + dx, first max wins) per output element for the
+/// backward routing.
+pub fn maxpool2_fwd(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut Vec<f32>,
+    idx: &mut Vec<u8>,
+) {
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool needs even h, w");
+    assert_eq!(x.len(), h * w * c, "maxpool input size");
+    let (oh, ow) = (h / 2, w / 2);
+    out.clear();
+    out.resize(oh * ow * c, 0.0);
+    idx.clear();
+    idx.resize(oh * ow * c, 0);
+    for y in 0..oh {
+        for xx in 0..ow {
+            for ch in 0..c {
+                let mut best = f32::NEG_INFINITY;
+                let mut bi = 0u8;
+                for dy in 0..2usize {
+                    for dx in 0..2usize {
+                        let v = x[((2 * y + dy) * w + 2 * xx + dx) * c + ch];
+                        if v > best {
+                            best = v;
+                            bi = (dy * 2 + dx) as u8;
+                        }
+                    }
+                }
+                let o = (y * ow + xx) * c + ch;
+                out[o] = best;
+                idx[o] = bi;
+            }
+        }
+    }
+}
+
+/// Backward of [`maxpool2_fwd`]: route each output gradient to the
+/// recorded winner. `h, w, c` are the *input* geometry.
+pub fn maxpool2_bwd(
+    dy: &[f32],
+    idx: &[u8],
+    h: usize,
+    w: usize,
+    c: usize,
+    dx: &mut Vec<f32>,
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    assert_eq!(dy.len(), oh * ow * c, "maxpool dy size");
+    assert_eq!(idx.len(), oh * ow * c, "maxpool idx size");
+    dx.clear();
+    dx.resize(h * w * c, 0.0);
+    for y in 0..oh {
+        for xx in 0..ow {
+            for ch in 0..c {
+                let o = (y * ow + xx) * c + ch;
+                let (dyo, dxo) = ((idx[o] / 2) as usize, (idx[o] % 2) as usize);
+                dx[((2 * y + dyo) * w + 2 * xx + dxo) * c + ch] += dy[o];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.unit_f64() as f32) * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn im2col_center_and_corner() {
+        // 3x3 single-channel ramp: center row holds the full window,
+        // the corner row zero-pads out-of-bounds taps
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut cols = Vec::new();
+        im2col(&x, 3, 3, 1, &mut cols);
+        assert_eq!(&cols[(1 * 3 + 1) * 9..(1 * 3 + 1) * 9 + 9], &x[..]);
+        let corner = &cols[0..9];
+        assert_eq!(corner, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), d> == <x, col2im(d)> for random x, d
+        let mut rng = Rng64::new(5);
+        let (h, w, c) = (4, 6, 3);
+        let x = rand_vec(&mut rng, h * w * c);
+        let d = rand_vec(&mut rng, h * w * 9 * c);
+        let mut cols = Vec::new();
+        im2col(&x, h, w, c, &mut cols);
+        let lhs: f64 = cols.iter().zip(&d).map(|(a, b)| (a * b) as f64).sum();
+        let mut dx = vec![0.0f32; h * w * c];
+        col2im_add(&d, h, w, c, &mut dx);
+        let rhs: f64 = x.iter().zip(&dx).map(|(a, b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn matmul_matches_hand_result() {
+        // 2 positions, k=3, 2 outputs
+        let feats = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let wts = [1.0, 0.0, -1.0, 2.0, 2.0, 2.0];
+        let mut out = Vec::new();
+        matmul_nt(&feats, &wts, 2, 3, 2, &mut out);
+        assert_eq!(out, vec![-2.0, 12.0, -2.0, 30.0]);
+    }
+
+    #[test]
+    fn weight_and_input_grads_are_adjoints() {
+        // d<matmul(feats, W), dacc>/dW == grad_weights; same for inputs
+        let mut rng = Rng64::new(9);
+        let (n_pos, k, n_out) = (5, 7, 3);
+        let feats = rand_vec(&mut rng, n_pos * k);
+        let wts = rand_vec(&mut rng, n_out * k);
+        let dacc = rand_vec(&mut rng, n_pos * n_out);
+        // <matmul(feats, wts), dacc>
+        let mut out = Vec::new();
+        matmul_nt(&feats, &wts, n_pos, k, n_out, &mut out);
+        let bilinear: f64 = out.iter().zip(&dacc).map(|(a, b)| (a * b) as f64).sum();
+        // == <wts, grad_weights(feats, dacc)>
+        let mut dw = vec![0.0f32; n_out * k];
+        grad_weights(&feats, &dacc, n_pos, k, n_out, &mut dw);
+        let via_w: f64 = wts.iter().zip(&dw).map(|(a, b)| (a * b) as f64).sum();
+        assert!((bilinear - via_w).abs() < 1e-3, "{bilinear} vs {via_w}");
+        // == <feats, grad_inputs(wts, dacc)>
+        let mut df = Vec::new();
+        grad_inputs(&wts, &dacc, n_pos, k, n_out, &mut df);
+        let via_f: f64 = feats.iter().zip(&df).map(|(a, b)| (a * b) as f64).sum();
+        assert!((bilinear - via_f).abs() < 1e-3, "{bilinear} vs {via_f}");
+    }
+
+    #[test]
+    fn conv_weight_grad_matches_finite_difference() {
+        // L(W) = <conv(x; W), coef>; dL/dW from grad_weights vs central FD
+        let mut rng = Rng64::new(21);
+        let (h, w, c, n_out) = (4, 4, 2, 2);
+        let k = 9 * c;
+        let x = rand_vec(&mut rng, h * w * c);
+        let mut wts = rand_vec(&mut rng, n_out * k);
+        let coef = rand_vec(&mut rng, h * w * n_out);
+        let mut cols = Vec::new();
+        im2col(&x, h, w, c, &mut cols);
+        let loss = |wts: &[f32]| -> f64 {
+            let mut out = Vec::new();
+            matmul_nt(&cols, wts, h * w, k, n_out, &mut out);
+            out.iter().zip(&coef).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let mut dw = vec![0.0f32; n_out * k];
+        grad_weights(&cols, &coef, h * w, k, n_out, &mut dw);
+        let eps = 1e-2f32;
+        for probe in [0usize, 3, k, n_out * k - 1] {
+            let orig = wts[probe];
+            wts[probe] = orig + eps;
+            let up = loss(&wts);
+            wts[probe] = orig - eps;
+            let dn = loss(&wts);
+            wts[probe] = orig;
+            let fd = (up - dn) / (2.0 * eps as f64);
+            assert!(
+                (fd - dw[probe] as f64).abs() < 1e-2 * (1.0 + fd.abs()),
+                "probe {probe}: fd {fd} vs analytic {}",
+                dw[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_the_winner() {
+        // 2x2 single channel: winner is position (1,0) = offset 2
+        let x = [1.0, 3.0, 9.0, 2.0];
+        let mut out = Vec::new();
+        let mut idx = Vec::new();
+        maxpool2_fwd(&x, 2, 2, 1, &mut out, &mut idx);
+        assert_eq!(out, vec![9.0]);
+        assert_eq!(idx, vec![2]);
+        let mut dx = Vec::new();
+        maxpool2_bwd(&[5.0], &idx, 2, 2, 1, &mut dx);
+        assert_eq!(dx, vec![0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_first_max_wins_on_ties() {
+        let x = [7.0, 7.0, 7.0, 7.0];
+        let mut out = Vec::new();
+        let mut idx = Vec::new();
+        maxpool2_fwd(&x, 2, 2, 1, &mut out, &mut idx);
+        assert_eq!(out, vec![7.0]);
+        assert_eq!(idx, vec![0], "ties must resolve to the first scanned tap");
+    }
+}

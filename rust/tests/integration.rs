@@ -124,6 +124,93 @@ fn gateway_serves_both_tasks_bit_exact() {
 }
 
 #[test]
+fn gateway_hot_swaps_a_freshly_trained_model() {
+    // the train->TBW1->serve loop: natively train a detector from
+    // scratch, register it under a new name via the ModelRegistry, and
+    // verify routing + accounting + scores stay exact alongside an
+    // existing model
+    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::model::zoo::{Layer, Net};
+    use tinbinn::train::{fit, TrainConfig};
+
+    let nano = Net {
+        name: "nano".into(),
+        input_hwc: (8, 8, 3),
+        layers: vec![
+            Layer::Conv3x3 { cout: 8 },
+            Layer::MaxPool2,
+            Layer::Dense { nout: 16 },
+            Layer::Svm { nout: 1 },
+        ],
+    };
+    let (np_fixture, ds) = fixtures::eval_set(&nano, 16).unwrap();
+    // a short budget: this test pins the swap mechanics, not accuracy
+    let cfg = TrainConfig { epochs: 8, stop_acc: 0.9, ..TrainConfig::default() };
+    let trained = fit(&nano, &ds, &cfg).unwrap();
+    assert_ne!(
+        trained.params.params, np_fixture.params,
+        "training must produce new parameters"
+    );
+
+    let mut reg = ModelRegistry::new();
+    reg.register(
+        ModelSpec { name: "stock".into(), backend: BackendKind::Opt, workers: 1 },
+        np_fixture.clone(),
+    )
+    .unwrap();
+    // register stale (fixture) params under the new name, then hot-swap
+    // in the freshly trained ones — the bit-exactness assertions below
+    // only pass if replace() actually stored the new params
+    reg.register(
+        ModelSpec { name: "fresh".into(), backend: BackendKind::Bitplane, workers: 2 },
+        np_fixture.clone(),
+    )
+    .unwrap();
+    reg.replace("fresh", trained.params.clone()).unwrap();
+
+    let policy = BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 };
+    let mut lanes = Vec::new();
+    for entry in reg.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy,
+            workers: reg.build_pool(entry).unwrap(),
+        });
+    }
+    // mixed traffic: both models plus an unknown name
+    let requests: Vec<GatewayRequest> = (0..24)
+        .map(|i| {
+            let model = match i % 3 {
+                0 => "stock",
+                1 => "fresh",
+                _ => "ghost",
+            };
+            GatewayRequest::new(i as u64, model, ds.image(i % ds.len()).to_vec())
+        })
+        .collect();
+    let (report, _lanes) =
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+    assert!(report.conserved(), "submitted != completed + rejected + expired");
+    assert_eq!(report.submitted, 24);
+    assert_eq!(report.unknown_model, 8);
+    assert_eq!(report.completed, 16);
+    for m in &report.models {
+        let np = if m.name == "stock" { &np_fixture } else { &trained.params };
+        assert_eq!(m.completed, 8, "model {}", m.name);
+        for (id, scores) in &m.scores {
+            let img = ds.image(*id as usize % ds.len());
+            assert_eq!(
+                scores,
+                &forward(np, img).unwrap(),
+                "model {} request {id} diverged from serial inference",
+                m.name
+            );
+        }
+    }
+}
+
+#[test]
 fn golden_overlay_pjrt_agree_on_task_weights() {
     let (np, ds, real) = task_data("1cat");
     let compiled = compile(&np, InputMode::Direct).unwrap();
