@@ -1,0 +1,112 @@
+//! Network serving end to end, no artifacts required: bring up the
+//! TBNP/1 TCP front-end over two fixture models on two different
+//! engines, verify wire scores are bit-exact with the golden oracle,
+//! run a closed-loop load burst, and drain with exact accounting.
+//!
+//! Run: `cargo run --release --example network_serving`
+//!
+//! This is the in-process twin of
+//! `tinbinn serve --listen 127.0.0.1:0` + `tinbinn bench-load`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use tinbinn::coordinator::batcher::BatchPolicy;
+use tinbinn::coordinator::gateway::GatewayLane;
+use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+use tinbinn::net::{
+    parse_mix, run_load, Client, LoadConfig, LoadMode, MonotonicClock, NetServer, ServerConfig,
+    Status,
+};
+use tinbinn::nn::layers::forward;
+use tinbinn::testkit::fixtures;
+
+fn main() -> tinbinn::Result<()> {
+    // 1. register both paper tasks on different engines (synthetic
+    //    trained-like fixtures, so this runs on a bare checkout)
+    let (np1, ds1) = fixtures::synthetic_task("1cat")?;
+    let (np10, ds10) = fixtures::synthetic_task("10cat")?;
+    let mut registry = ModelRegistry::new();
+    registry.register(
+        ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 2 },
+        np1.clone(),
+    )?;
+    registry.register(
+        ModelSpec { name: "10cat".into(), backend: BackendKind::Opt, workers: 2 },
+        np10.clone(),
+    )?;
+
+    // 2. lanes + the TCP front-end on an ephemeral port
+    let policy = BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 4096 };
+    let mut lanes = Vec::new();
+    for entry in registry.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy,
+            workers: registry.build_pool(entry)?,
+        });
+    }
+    let srv = NetServer::start(
+        "127.0.0.1:0",
+        lanes,
+        ServerConfig::default(),
+        Arc::new(MonotonicClock::new()),
+    )?;
+    let addr = srv.local_addr();
+    println!("serving 1cat:bitplane + 10cat:opt on {addr}");
+
+    // 3. one pipelined client: wire scores must equal the golden oracle
+    let mut client = Client::connect(addr)?;
+    for (name, np, ds) in [("1cat", np1, ds1), ("10cat", np10, ds10)] {
+        let imgs: Vec<&[u8]> = (0..4).map(|i| ds.image(i)).collect();
+        let resps = client.infer_pipelined(name, &imgs)?;
+        for (img, r) in imgs.iter().zip(&resps) {
+            assert_eq!(r.status, Status::Ok);
+            assert_eq!(r.scores, forward(np, img)?, "{name}: wire != golden");
+        }
+        println!(
+            "{name}: {} frames over TCP, bit-exact with the golden model (first scores {:?})",
+            resps.len(),
+            resps[0].scores
+        );
+    }
+
+    // 4. a closed-loop load burst across both models
+    let mut images: HashMap<String, Vec<Vec<u8>>> = HashMap::new();
+    images.insert("1cat".into(), (0..8).map(|i| ds1.image(i).to_vec()).collect());
+    images.insert("10cat".into(), (0..8).map(|i| ds10.image(i).to_vec()).collect());
+    let cfg = LoadConfig {
+        conns: 2,
+        requests: 64,
+        mix: parse_mix("1cat:bitplane=0.7,10cat:opt=0.3")?,
+        mode: LoadMode::Closed { inflight: 4 },
+        deadline_us: None,
+        low_frac: 0.0,
+        seed: 9,
+    };
+    let load = run_load(&addr.to_string(), &cfg, &images)?;
+    assert_eq!(load.lost, 0, "every request answered");
+    assert!(load.conserved());
+    println!(
+        "load: {} ok / {} rejected / {} expired in {:.2}s -> {:.0} fps",
+        load.ok, load.rejected, load.expired, load.wall_s, load.throughput_per_s
+    );
+    for m in &load.models {
+        println!(
+            "  {:6}: p50 {}us p99 {}us, {:.0} fps",
+            m.name,
+            m.latency.p50_us(),
+            m.latency.p99_us(),
+            m.throughput_per_s
+        );
+    }
+
+    // 5. graceful drain: the ledger must balance exactly
+    let report = srv.shutdown()?;
+    assert!(report.conserved(), "gateway accounting violated");
+    println!(
+        "drained: {} submitted == {} completed + {} rejected + {} expired (conserved)",
+        report.submitted, report.completed, report.rejected, report.expired
+    );
+    Ok(())
+}

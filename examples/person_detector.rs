@@ -161,7 +161,7 @@ fn main() -> tinbinn::Result<()> {
             GatewayRequest::new(i as u64, model, ds.image((i / 2) % ds.len()).to_vec())
         })
         .collect();
-    let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true })?;
+    let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None })?;
     assert!(report.conserved(), "gateway accounting violated");
     for m in &report.models {
         for (id, scores) in &m.scores {
@@ -227,7 +227,7 @@ fn main() -> tinbinn::Result<()> {
         .map(|i| GatewayRequest::new(i as u64, "micro-trained", train_ds.image(i).to_vec()))
         .collect();
     let (tr_report, _lanes) =
-        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true })?;
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None })?;
     assert!(tr_report.conserved(), "gateway accounting violated");
     for m in &tr_report.models {
         for (id, scores) in &m.scores {

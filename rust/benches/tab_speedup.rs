@@ -221,6 +221,70 @@ fn main() {
     }
     println!();
 
+    // the network front-end: the same engines behind a real TCP socket
+    // (loopback), driven by the closed-loop generator — how much the
+    // wire protocol + per-connection threads cost on top of the gateway
+    println!("-- TCP loopback serving (net::server + closed-loop loadgen, 1cat random weights) --");
+    {
+        use std::collections::HashMap;
+        use tinbinn::coordinator::gateway::GatewayLane;
+        use tinbinn::net::{parse_mix, run_load, LoadConfig, LoadMode, MonotonicClock, NetServer, ServerConfig};
+
+        let np = random_params(&tiny_1cat(), 11);
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(2);
+        let lanes = vec![GatewayLane {
+            name: "1cat".to_string(),
+            policy: BatchPolicy { max_batch: 16, max_wait_us: 200, queue_cap: 4096 },
+            workers: (0..workers).map(|_| BitplaneBackend::new(&np).unwrap()).collect(),
+        }];
+        let srv = NetServer::start(
+            "127.0.0.1:0",
+            lanes,
+            ServerConfig::default(),
+            std::sync::Arc::new(MonotonicClock::new()),
+        )
+        .unwrap();
+        let addr = srv.local_addr().to_string();
+        let mut rng = Rng64::new(33);
+        let mut images: HashMap<String, Vec<Vec<u8>>> = HashMap::new();
+        images.insert(
+            "1cat".to_string(),
+            (0..8).map(|_| (0..3072).map(|_| rng.next_u8()).collect()).collect(),
+        );
+        let n_req = 256usize;
+        let cfg = LoadConfig {
+            conns: 2,
+            requests: n_req,
+            mix: parse_mix("1cat").unwrap(),
+            mode: LoadMode::Closed { inflight: 8 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 34,
+        };
+        let load = run_load(&addr, &cfg, &images).unwrap();
+        assert_eq!(load.lost, 0, "tcp loopback bench lost requests");
+        assert_eq!(load.ok as usize, n_req, "tcp loopback bench shed requests");
+        let gw = srv.shutdown().unwrap();
+        assert!(gw.conserved(), "net server accounting violated in bench");
+        let spf = 1.0 / load.throughput_per_s.max(1e-12);
+        let row = bench::BenchResult {
+            name: format!("net_loopback_closed_x{workers}_1cat"),
+            iters: n_req as u32,
+            mean_s: spf,
+            stddev_s: 0.0,
+            min_s: spf,
+        };
+        bench::print_result(&row);
+        println!(
+            "   -> {:.0} fps over TCP loopback ({} engine workers, 2 conns x 8 in flight), p99 {}us",
+            load.throughput_per_s,
+            workers,
+            load.models[0].latency.p99_us()
+        );
+        suite.push(row);
+    }
+    println!();
+
     // ISS measurement itself, timed
     suite.push(bench::run("iss_measure_dense_k2048", 1, 5, || {
         measure_dense(2048, 11).unwrap();

@@ -29,6 +29,14 @@ pub trait Backend {
     fn name(&self) -> &'static str;
     /// Largest batch the backend accepts at once.
     fn max_batch(&self) -> usize;
+
+    /// Exact image byte length this backend accepts, when it has one.
+    /// The network front-end rejects wrong-size payloads at admission so
+    /// a malformed client frame can never poison a whole dispatched
+    /// batch. `None` = unvalidated (mock/test backends).
+    fn input_len(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// The overlay simulator: strictly one frame at a time (the real MDP has
@@ -65,6 +73,11 @@ impl Backend for OverlayBackend {
     fn max_batch(&self) -> usize {
         1
     }
+
+    fn input_len(&self) -> Option<usize> {
+        let (h, w, c) = self.compiled.input_hwc;
+        Some(h * w * c)
+    }
 }
 
 /// The fast-path CPU backend: golden semantics through the `nn::opt`
@@ -99,6 +112,11 @@ impl Backend for OptBackend {
 
     fn max_batch(&self) -> usize {
         64
+    }
+
+    fn input_len(&self) -> Option<usize> {
+        let (h, w, c) = self.model.input_hwc;
+        Some(h * w * c)
     }
 }
 
@@ -135,6 +153,11 @@ impl Backend for BitplaneBackend {
     fn max_batch(&self) -> usize {
         64
     }
+
+    fn input_len(&self) -> Option<usize> {
+        let (h, w, c) = self.model.compiled.input_hwc;
+        Some(h * w * c)
+    }
 }
 
 /// The golden-oracle backend: straight-line `nn::layers::forward`, never
@@ -163,6 +186,11 @@ impl Backend for GoldenBackend {
     fn max_batch(&self) -> usize {
         16
     }
+
+    fn input_len(&self) -> Option<usize> {
+        let (h, w, c) = self.np.net.input_hwc;
+        Some(h * w * c)
+    }
 }
 
 /// PJRT desktop backend (wraps runtime::ModelRuntime).
@@ -185,7 +213,9 @@ impl Backend for PjrtBackend {
 }
 
 /// A trivial backend for coordinator tests: returns the image checksum
-/// as the score, with a configurable per-image latency in microseconds.
+/// as the score, with a configurable per-image service time in
+/// microseconds (actually slept, so drain/backpressure tests can model
+/// a slow engine).
 pub struct MockBackend {
     pub per_image_us: u64,
     pub calls: u64,
@@ -202,6 +232,11 @@ impl Backend for MockBackend {
     fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
         self.calls += 1;
         self.seen += images.len() as u64;
+        if self.per_image_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(
+                self.per_image_us * images.len() as u64,
+            ));
+        }
         Ok(images
             .iter()
             .map(|img| vec![img.iter().map(|&b| b as i32).sum::<i32>()])

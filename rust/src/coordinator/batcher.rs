@@ -53,9 +53,13 @@ impl Request {
         Request { id, enqueue_us, image, deadline_us: None, priority: Priority::Normal }
     }
 
-    /// True once `now_us` has passed the request's deadline.
+    /// True once `now_us` has reached the request's deadline. The
+    /// boundary is inclusive: a request dispatched exactly at its
+    /// deadline has a zero-remaining budget and is expired, not served —
+    /// a deadline of "now" is a promise already broken. (Pinned by the
+    /// boundary tests here and in `coordinator::gateway`.)
     pub fn expired(&self, now_us: u64) -> bool {
-        matches!(self.deadline_us, Some(d) if now_us > d)
+        matches!(self.deadline_us, Some(d) if now_us >= d)
     }
 }
 
@@ -187,7 +191,8 @@ mod tests {
         let mut r = req(0, 100);
         assert!(!r.expired(u64::MAX));
         r.deadline_us = Some(500);
-        assert!(!r.expired(500)); // inclusive: exactly-at-deadline is live
+        assert!(!r.expired(499));
+        assert!(r.expired(500)); // inclusive boundary: at-deadline is expired
         assert!(r.expired(501));
     }
 

@@ -21,6 +21,8 @@
 //! (gateway scores bit-exact with serial per-model inference) pin it.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use super::backend::Backend;
 use super::batcher::{BatchPolicy, Batcher, Priority, Request};
@@ -93,12 +95,20 @@ struct RouterLane {
 }
 
 /// The admission + dispatch state machine (time injected, fully
-/// deterministic — the threaded front-end and the proptests share it).
+/// deterministic — the threaded front-end, the network server and the
+/// proptests share it).
 pub struct Router {
     lanes: Vec<RouterLane>,
     by_name: HashMap<String, usize>,
     /// Requests naming no registered model (fleet-level rejections).
     pub unknown_model: u64,
+    /// When set, `(lane, request id)` pairs dropped as expired are
+    /// appended to a log drained via [`Router::take_expired`] — the
+    /// network front-end needs them to answer each expired request on
+    /// the wire. Off by default so long-lived in-process callers that
+    /// never drain the log don't grow it unboundedly.
+    pub log_expired: bool,
+    expired_log: Vec<(usize, u64)>,
 }
 
 impl Router {
@@ -118,7 +128,7 @@ impl Router {
                 }
             })
             .collect();
-        Router { lanes, by_name, unknown_model: 0 }
+        Router { lanes, by_name, unknown_model: 0, log_expired: false, expired_log: Vec::new() }
     }
 
     pub fn n_lanes(&self) -> usize {
@@ -163,9 +173,17 @@ impl Router {
         let mut out = Vec::new();
         for (li, lane) in self.lanes.iter_mut().enumerate() {
             while let Some(batch) = lane.batcher.poll(now_us) {
-                let n_before = batch.len() as u64;
-                let live: Vec<Request> = batch.into_iter().filter(|r| !r.expired(now_us)).collect();
-                lane.counts.expired += n_before - live.len() as u64;
+                let mut live = Vec::with_capacity(batch.len());
+                for r in batch {
+                    if r.expired(now_us) {
+                        lane.counts.expired += 1;
+                        if self.log_expired {
+                            self.expired_log.push((li, r.id));
+                        }
+                    } else {
+                        live.push(r);
+                    }
+                }
                 if !live.is_empty() {
                     out.push((li, live));
                 }
@@ -179,10 +197,17 @@ impl Router {
     pub fn flush(&mut self, now_us: u64) -> Vec<(usize, Vec<Request>)> {
         let mut out = Vec::new();
         for (li, lane) in self.lanes.iter_mut().enumerate() {
-            let rest = lane.batcher.flush();
-            let n_before = rest.len() as u64;
-            let live: Vec<Request> = rest.into_iter().filter(|r| !r.expired(now_us)).collect();
-            lane.counts.expired += n_before - live.len() as u64;
+            let mut live = Vec::new();
+            for r in lane.batcher.flush() {
+                if r.expired(now_us) {
+                    lane.counts.expired += 1;
+                    if self.log_expired {
+                        self.expired_log.push((li, r.id));
+                    }
+                } else {
+                    live.push(r);
+                }
+            }
             for chunk in live.chunks(lane.policy.max_batch.max(1)) {
                 out.push((li, chunk.to_vec()));
             }
@@ -195,6 +220,41 @@ impl Router {
     pub fn note_completed(&mut self, li: usize, n: u64) {
         self.lanes[li].counts.completed += n;
     }
+
+    /// Record `n` post-admission rejections on a lane — the network
+    /// server's escape hatch when a dispatched batch fails in a worker
+    /// (every admitted request must still leave the ledger exactly once).
+    pub fn note_rejected(&mut self, li: usize, n: u64) {
+        self.lanes[li].counts.rejected += n;
+    }
+
+    /// Drain the `(lane, request id)` expiry log (see
+    /// [`Router::log_expired`]). Empty unless logging is enabled.
+    pub fn take_expired(&mut self) -> Vec<(usize, u64)> {
+        std::mem::take(&mut self.expired_log)
+    }
+}
+
+/// A cross-thread stop signal for [`serve_gateway`] (and the network
+/// front-end built on it): once [`DrainHandle::drain`] fires, the
+/// gateway stops admitting new work, flushes what is queued, answers
+/// everything in flight, and returns with exact accounting intact.
+#[derive(Clone, Debug, Default)]
+pub struct DrainHandle(Arc<AtomicBool>);
+
+impl DrainHandle {
+    pub fn new() -> Self {
+        DrainHandle::default()
+    }
+
+    /// Request a graceful drain (idempotent, callable from any thread).
+    pub fn drain(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
 }
 
 /// One model lane handed to [`serve_gateway`]: a name, a batching
@@ -206,12 +266,16 @@ pub struct GatewayLane<B> {
 }
 
 /// Gateway serving knobs.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct GatewayConfig {
     /// Collect `(request id, scores)` pairs per model — the hook the
     /// differential tests use to pin gateway results against serial
     /// inference. Off for throughput runs.
     pub collect_scores: bool,
+    /// Optional stop signal: once drained, the producer stops admitting
+    /// the rest of the workload (never-admitted requests are simply not
+    /// counted), flushes the queues, and the report stays conserved.
+    pub drain: Option<DrainHandle>,
 }
 
 /// Per-model serving results.
@@ -377,6 +441,11 @@ pub fn serve_gateway<B: Backend + Send>(
 
         // front door: admit, batch, expire, dispatch
         for gr in requests {
+            if let Some(d) = &cfg.drain {
+                if d.is_draining() {
+                    break; // stop admitting; fall through to the flush
+                }
+            }
             let now = t_start.elapsed().as_micros() as u64;
             router.admit(gr, now);
             for (li, batch) in router.poll(t_start.elapsed().as_micros() as u64) {
@@ -533,7 +602,7 @@ mod tests {
             },
         ];
         let (report, _lanes) =
-            serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+            serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
         assert!(report.conserved(), "accounting broken");
         assert_eq!(report.completed, 24);
         assert_eq!(report.rejected, 0);
@@ -628,6 +697,100 @@ mod tests {
         let c = router.counts(0);
         assert_eq!(c.rejected, 1);
         assert_eq!(c.submitted, 6);
+    }
+
+    #[test]
+    fn deadline_exactly_at_dispatch_is_expired_not_completed() {
+        // the boundary contract: a request dispatched at the very
+        // microsecond its budget runs out has nothing left to spend —
+        // it must be counted expired, never served
+        let policy = BatchPolicy { max_batch: 8, max_wait_us: 0, queue_cap: 8 };
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        assert_eq!(
+            router.admit(GatewayRequest::new(0, "m", vec![]).with_deadline(100), 0),
+            Admit::Queued
+        );
+        assert!(router.poll(100).is_empty(), "at-deadline dispatch must expire");
+        let c = router.counts(0);
+        assert_eq!(c.expired, 1);
+        assert_eq!(c.completed, 0);
+        assert_eq!(c.submitted, c.completed + c.rejected + c.expired);
+        // one microsecond earlier the same request is still live
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        router.admit(GatewayRequest::new(1, "m", vec![]).with_deadline(100), 0);
+        let batches = router.poll(99);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].1[0].id, 1);
+        // a zero budget is expired on the spot
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        router.admit(GatewayRequest::new(2, "m", vec![]).with_deadline(0), 50);
+        assert!(router.poll(50).is_empty());
+        assert_eq!(router.counts(0).expired, 1);
+    }
+
+    #[test]
+    fn expired_log_reports_dropped_ids_only_when_enabled() {
+        let policy = BatchPolicy { max_batch: 8, max_wait_us: 0, queue_cap: 8 };
+        let mut router = Router::new(&[("m".to_string(), policy)]);
+        router.admit(GatewayRequest::new(7, "m", vec![]).with_deadline(10), 0);
+        router.poll(10);
+        assert!(router.take_expired().is_empty(), "log off by default");
+        router.log_expired = true;
+        router.admit(GatewayRequest::new(8, "m", vec![]).with_deadline(10), 100);
+        router.admit(GatewayRequest::new(9, "m", vec![]), 100);
+        let batches = router.poll(110);
+        assert_eq!(batches.len(), 1, "the live request still dispatches");
+        assert_eq!(router.take_expired(), vec![(0, 8)]);
+        assert!(router.take_expired().is_empty(), "take drains the log");
+        // flush logs too
+        router.admit(GatewayRequest::new(10, "m", vec![]).with_deadline(5), 200);
+        let _ = router.flush(300);
+        assert_eq!(router.take_expired(), vec![(0, 10)]);
+    }
+
+    #[test]
+    fn mid_stream_drain_keeps_exact_accounting() {
+        // the satellite contract: a drain fired mid-workload stops
+        // admission, flushes the queues, and the ledger still balances
+        // exactly (submitted == completed + rejected + expired)
+        let n = 400u64;
+        let requests: Vec<GatewayRequest> =
+            (0..n).map(|id| GatewayRequest::new(id, "m", vec![(id % 251) as u8; 8])).collect();
+        let lanes = vec![GatewayLane {
+            name: "m".into(),
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 0, queue_cap: 64 },
+            // 2ms per image: the full workload would take ~800ms, so a
+            // 10ms drain reliably lands mid-stream even on a loaded box
+            workers: vec![MockBackend::new(2_000)],
+        }];
+        let handle = DrainHandle::new();
+        assert!(!handle.is_draining());
+        let cfg = GatewayConfig { collect_scores: false, drain: Some(handle.clone()) };
+        let trigger = handle.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            trigger.drain();
+        });
+        let (report, lanes) = serve_gateway(requests, lanes, &cfg).unwrap();
+        t.join().unwrap();
+        assert!(report.conserved(), "mid-stream drain broke the ledger");
+        assert!(report.submitted < n, "drain should cut admission short (submitted {})", report.submitted);
+        assert!(report.completed > 0, "work admitted before the drain still completes");
+        assert_eq!(report.completed, lanes[0].workers.iter().map(|w| w.seen).sum::<u64>());
+    }
+
+    #[test]
+    fn pre_drained_gateway_admits_nothing_and_stays_conserved() {
+        let handle = DrainHandle::new();
+        handle.drain();
+        let requests: Vec<GatewayRequest> =
+            (0..16).map(|id| GatewayRequest::new(id, "m", vec![1; 8])).collect();
+        let lanes = vec![mock_lane("m", 1, wide_policy())];
+        let cfg = GatewayConfig { collect_scores: false, drain: Some(handle) };
+        let (report, _lanes) = serve_gateway(requests, lanes, &cfg).unwrap();
+        assert_eq!(report.submitted, 0);
+        assert_eq!(report.completed, 0);
+        assert!(report.conserved());
     }
 
     #[test]

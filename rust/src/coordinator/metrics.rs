@@ -47,6 +47,16 @@ impl Histogram {
         self.max_us = self.max_us.max(other.max_us);
     }
 
+    /// Median latency bucket bound (shorthand used by report rows).
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.5)
+    }
+
+    /// Tail latency bucket bound (shorthand used by report rows).
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
     /// Upper bound of the bucket containing quantile `q` (0..1).
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -117,6 +127,8 @@ mod tests {
         }
         assert_eq!(h.count, 6);
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert_eq!(h.p50_us(), h.quantile_us(0.5));
+        assert_eq!(h.p99_us(), h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
         assert_eq!(h.max_us, 100_000);
     }

@@ -26,7 +26,8 @@ pub mod registry;
 pub use backend::{Backend, BitplaneBackend, GoldenBackend, OptBackend, OverlayBackend};
 pub use batcher::{Batcher, BatchPolicy, Priority};
 pub use gateway::{
-    serve_gateway, GatewayConfig, GatewayLane, GatewayReport, GatewayRequest, ModelReport, Router,
+    serve_gateway, DrainHandle, GatewayConfig, GatewayLane, GatewayReport, GatewayRequest,
+    ModelReport, Router,
 };
 pub use metrics::{Histogram, Meter};
 pub use pipeline::{run_stream, serve_parallel, Frame, PipelineReport, StreamConfig};

@@ -136,6 +136,15 @@ impl Backend for AnyBackend {
             AnyBackend::Overlay(b) => b.max_batch(),
         }
     }
+
+    fn input_len(&self) -> Option<usize> {
+        match self {
+            AnyBackend::Golden(b) => b.input_len(),
+            AnyBackend::Opt(b) => b.input_len(),
+            AnyBackend::Bitplane(b) => b.input_len(),
+            AnyBackend::Overlay(b) => b.input_len(),
+        }
+    }
 }
 
 /// One registered model: its spec plus the trained (or synthetic)

@@ -21,6 +21,7 @@ pub mod accel;
 pub mod compiler;
 pub mod coordinator;
 pub mod lve;
+pub mod net;
 pub mod nn;
 pub mod power;
 pub mod resources;

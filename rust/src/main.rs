@@ -1,12 +1,15 @@
 //! `tinbinn` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   report    regenerate the paper's tables/figures (E1..E10)
-//!   sim       run one overlay inference with a per-layer cycle table
-//!   eval      classify a .tbd dataset on a chosen backend
-//!   serve     threaded serving demo with dynamic batching (PJRT)
-//!   desktop   E7 desktop-baseline timing via PJRT
-//!   train     native BinaryConnect training -> TBW1 + cross-engine gate
+//!   report     regenerate the paper's tables/figures (E1..E10)
+//!   sim        run one overlay inference with a per-layer cycle table
+//!   eval       classify a .tbd dataset on a chosen backend
+//!   serve      threaded serving demo with dynamic batching — or, with
+//!              --listen, the TBNP/1 TCP gateway front-end
+//!   bench-load open-/closed-loop load generation against a --listen
+//!              server; writes BENCH_serve.json
+//!   desktop    E7 desktop-baseline timing via PJRT
+//!   train      native BinaryConnect training -> TBW1 + cross-engine gate
 //!
 //! (CLI arg parsing is hand-rolled: the offline build has no clap.)
 
@@ -35,9 +38,23 @@ fn usage() -> ! {
            serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
                    [--backend pjrt|opt|bitplane] [--workers W]\n\
                    [--models name:backend[:workers],...]\n\
+                   [--listen ADDR] [--serve-secs S] [--max-inflight K]\n\
                    (opt/bitplane: W CPU-engine workers, batched via serve_parallel;\n\
                     --models: multi-model gateway, e.g. 1cat:bitplane,10cat:opt:2 —\n\
-                    falls back to synthetic fixtures when artifacts are missing)\n\
+                    falls back to synthetic fixtures when artifacts are missing;\n\
+                    --listen: serve the gateway over TCP [TBNP/1], e.g.\n\
+                    127.0.0.1:0 for an ephemeral port — runs until a shutdown\n\
+                    control frame, or --serve-secs S; --max-inflight bounds\n\
+                    per-connection in-flight requests [Busy beyond it])\n\
+           bench-load --connect ADDR [--requests N] [--conns C]\n\
+                   [--qps Q | --inflight K] [--mix name[:backend]=w,...]\n\
+                   [--deadline-us D] [--low-frac F] [--seed S]\n\
+                   [--bench-out path] [--shutdown]\n\
+                   (load-generate against a --listen server: open loop at Q qps\n\
+                    or closed loop with K in-flight per connection; per-model\n\
+                    p50/p99 + throughput rows go to --bench-out [BENCH_serve.json];\n\
+                    --shutdown drains the server afterwards; exits nonzero if\n\
+                    any request went unanswered)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
            train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
                    [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
@@ -275,6 +292,13 @@ fn real_main() -> tinbinn::Result<()> {
             let wait = args.opt_usize("--wait-us", 2000) as u64;
             let backend_name = args.opt("--backend").unwrap_or_else(|| "pjrt".into());
             let workers = args.opt_usize("--workers", 4);
+            if let Some(listen) = args.opt("--listen") {
+                let serve_secs = args.opt_u64_strict("--serve-secs", 0);
+                let max_inflight = args.opt_usize_strict("--max-inflight", 64);
+                let models =
+                    args.opt("--models").unwrap_or_else(|| "1cat:bitplane,10cat:opt".into());
+                return serve_listen_cli(&dir, &listen, &models, batch, wait, serve_secs, max_inflight);
+            }
             if let Some(models) = args.opt("--models") {
                 return serve_gateway_cli(&dir, &models, n, batch, wait);
             }
@@ -351,6 +375,7 @@ fn real_main() -> tinbinn::Result<()> {
             }
         }
         "train" => return train_cli(&mut args),
+        "bench-load" => return bench_load_cli(&mut args, &dir),
         _ => usage(),
     }
     Ok(())
@@ -486,18 +511,17 @@ fn train_cli(args: &mut Args) -> tinbinn::Result<()> {
     Ok(())
 }
 
-/// `serve --models name:backend[:workers],...` — the multi-model
-/// gateway: every model gets its own engine + sharded worker pool, the
-/// request stream is tagged round-robin across models, and the report
-/// shows per-model accounting plus the merged fleet view.
-fn serve_gateway_cli(
+/// Load a `--models` spec into a registry: trained artifacts when
+/// present, the deterministic synthetic fixture tier otherwise — same
+/// tiering as the integration suite. Also returns each model's dataset
+/// (the request payload source for the demo/load paths).
+fn load_models(
     dir: &std::path::Path,
     models: &str,
-    n_frames: usize,
-    batch: usize,
-    wait_us: u64,
-) -> tinbinn::Result<()> {
-    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+) -> tinbinn::Result<(
+    tinbinn::coordinator::registry::ModelRegistry,
+    Vec<(String, tinbinn::data::tbd::Dataset)>,
+)> {
     use tinbinn::coordinator::registry::{parse_model_specs, ModelRegistry};
     use tinbinn::testkit::fixtures;
 
@@ -505,8 +529,6 @@ fn serve_gateway_cli(
     let mut registry = ModelRegistry::new();
     let mut datasets = Vec::new();
     for spec in specs {
-        // trained artifacts when present, the synthetic fixture tier
-        // otherwise — same tiering as the integration suite
         let (np, ds) = match (
             tables::load_task(dir, &spec.name).ok(),
             load_tbd(dir.join(format!("data_{}_test.tbd", spec.name))).ok(),
@@ -521,6 +543,23 @@ fn serve_gateway_cli(
         datasets.push((spec.name.clone(), ds));
         registry.register(spec, np)?;
     }
+    Ok((registry, datasets))
+}
+
+/// `serve --models name:backend[:workers],...` — the multi-model
+/// gateway: every model gets its own engine + sharded worker pool, the
+/// request stream is tagged round-robin across models, and the report
+/// shows per-model accounting plus the merged fleet view.
+fn serve_gateway_cli(
+    dir: &std::path::Path,
+    models: &str,
+    n_frames: usize,
+    batch: usize,
+    wait_us: u64,
+) -> tinbinn::Result<()> {
+    use tinbinn::coordinator::gateway::{serve_gateway, GatewayConfig, GatewayLane, GatewayRequest};
+
+    let (registry, datasets) = load_models(dir, models)?;
 
     let policy = BatchPolicy { max_batch: batch, max_wait_us: wait_us, queue_cap: 256 };
     let mut lanes = Vec::new();
@@ -568,6 +607,195 @@ fn serve_gateway_cli(
     }
     if !report.conserved() {
         return Err(tinbinn::TinError::Config("gateway accounting violated".into()));
+    }
+    Ok(())
+}
+
+/// `serve --listen ADDR` — the TBNP/1 TCP front-end over the same
+/// multi-model gateway. Runs until a shutdown control frame arrives
+/// (`bench-load --shutdown`, or any client's `shutdown_server`) or the
+/// optional `--serve-secs` timer fires, then drains gracefully and
+/// prints the fleet report with per-model latency quantiles. Exits
+/// nonzero if the exact-accounting invariant was violated.
+fn serve_listen_cli(
+    dir: &std::path::Path,
+    listen: &str,
+    models: &str,
+    batch: usize,
+    wait_us: u64,
+    serve_secs: u64,
+    max_inflight: usize,
+) -> tinbinn::Result<()> {
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::net::{MonotonicClock, NetServer, ServerConfig};
+
+    let (registry, _datasets) = load_models(dir, models)?;
+    let policy = BatchPolicy { max_batch: batch, max_wait_us: wait_us, queue_cap: 256 };
+    let mut lanes = Vec::new();
+    for entry in registry.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy,
+            workers: registry.build_pool(entry)?,
+        });
+    }
+    let cfg = ServerConfig {
+        max_inflight_per_conn: max_inflight.max(1),
+        ..ServerConfig::default()
+    };
+    let srv = NetServer::start(listen, lanes, cfg, std::sync::Arc::new(MonotonicClock::new()))?;
+    // the CI smoke and scripts parse this line for the ephemeral port
+    println!("tinbinn serve: listening on {}", srv.local_addr());
+    println!(
+        "  models {models}; drain via bench-load --shutdown{}",
+        if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() }
+    );
+    if serve_secs > 0 {
+        let trig = srv.drain_trigger();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_secs(serve_secs));
+            trig.trigger();
+        });
+    }
+    let report = srv.wait()?;
+    println!(
+        "gateway drained: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
+        report.submitted,
+        report.completed,
+        report.rejected,
+        report.unknown_model,
+        report.expired,
+        report.wall_s,
+        report.throughput_per_s
+    );
+    for m in &report.models {
+        println!(
+            "  {:8} on {:12} x{}: {:>5} done / {:>3} rej / {:>3} exp, mean batch {:.2}, p50 {}us p99 {}us, {:.0} fps",
+            m.name,
+            m.backend,
+            m.workers,
+            m.completed,
+            m.rejected,
+            m.expired,
+            m.mean_batch,
+            m.latency.p50_us,
+            m.latency.p99_us,
+            m.throughput_per_s
+        );
+    }
+    println!("conserved: {}", report.conserved());
+    if !report.conserved() {
+        return Err(tinbinn::TinError::Config("gateway accounting violated".into()));
+    }
+    Ok(())
+}
+
+/// `bench-load --connect ADDR` — drive a `serve --listen` front-end
+/// with open-loop (--qps) or closed-loop (--inflight) mixed-model
+/// traffic and write per-model p50/p99 + throughput rows to
+/// `BENCH_serve.json`. Nonzero exit when any request went unanswered.
+fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()> {
+    use std::collections::HashMap;
+    use tinbinn::net::{parse_mix, run_load, Client, LoadConfig, LoadMode};
+    use tinbinn::testkit::fixtures;
+
+    let Some(addr) = args.opt("--connect") else {
+        eprintln!("bench-load needs --connect ADDR (a serve --listen endpoint)");
+        usage();
+    };
+    let requests = args.opt_usize_strict("--requests", 512);
+    let conns = args.opt_usize_strict("--conns", 4).max(1);
+    let mix_spec = args.opt("--mix").unwrap_or_else(|| "1cat=0.5,10cat=0.5".into());
+    let mode = match args.opt("--qps") {
+        Some(q) => {
+            let qps: f64 = q.parse().ok().filter(|v: &f64| v.is_finite() && *v > 0.0).unwrap_or_else(|| {
+                eprintln!("bad value for --qps: '{q}' (expected a positive number)");
+                std::process::exit(2);
+            });
+            LoadMode::Open { qps }
+        }
+        None => LoadMode::Closed { inflight: args.opt_usize_strict("--inflight", 8).max(1) },
+    };
+    let deadline_us = args.opt("--deadline-us").map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            eprintln!("bad value for --deadline-us: '{v}' (expected an integer)");
+            std::process::exit(2);
+        })
+    });
+    let low_frac = args.opt_f64_strict("--low-frac", 0.0);
+    let seed = args.opt_u64_strict("--seed", 1);
+    let bench_out = args.opt("--bench-out");
+    let do_shutdown = args.flag("--shutdown");
+
+    let mix = parse_mix(&mix_spec)?;
+    // sample payloads per model: trained datasets when present, the
+    // synthetic fixture tier otherwise (mirrors the serve side)
+    let mut images: HashMap<String, Vec<Vec<u8>>> = HashMap::new();
+    for m in &mix {
+        let imgs: Vec<Vec<u8>> =
+            match load_tbd(dir.join(format!("data_{}_test.tbd", m.model))).ok() {
+                Some(ds) => (0..ds.len().min(32)).map(|i| ds.image(i).to_vec()).collect(),
+                None => {
+                    let (_np, ds) = fixtures::synthetic_task(&m.model)?;
+                    (0..ds.len().min(32)).map(|i| ds.image(i).to_vec()).collect()
+                }
+            };
+        images.insert(m.model.clone(), imgs);
+    }
+
+    let cfg = LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed };
+    match cfg.mode {
+        LoadMode::Open { qps } => println!(
+            "bench-load: open loop, {requests} requests at {qps} qps over {conns} conns -> {addr}"
+        ),
+        LoadMode::Closed { inflight } => println!(
+            "bench-load: closed loop, {requests} requests, {inflight} in-flight x {conns} conns -> {addr}"
+        ),
+    }
+    let report = run_load(&addr, &cfg, &images)?;
+    println!(
+        "sent {} | ok {} | rejected {} | expired {} | unknown {} | busy {} | lost {} in {:.2}s -> {:.0} fps",
+        report.sent,
+        report.ok,
+        report.rejected,
+        report.expired,
+        report.unknown,
+        report.busy,
+        report.lost,
+        report.wall_s,
+        report.throughput_per_s
+    );
+    for m in &report.models {
+        println!(
+            "  {:8}: {:>5} ok / {:>3} rej / {:>3} exp / {:>3} busy, e2e p50 {}us p99 {}us | gateway p50 {}us p99 {}us, {:.0} fps",
+            m.name,
+            m.ok,
+            m.rejected,
+            m.expired,
+            m.busy,
+            m.latency.p50_us(),
+            m.latency.p99_us(),
+            m.gateway_latency.p50_us(),
+            m.gateway_latency.p99_us(),
+            m.throughput_per_s
+        );
+    }
+
+    if let Some(path) = bench_out {
+        let rows = report.bench_rows();
+        tinbinn::report::bench::write_json(&path, "bench_load", &rows)?;
+        println!("wrote {path} ({} rows)", rows.len());
+    }
+    if do_shutdown {
+        let mut c = Client::connect(addr.as_str())?;
+        c.shutdown_server()?;
+        println!("sent shutdown control to {addr}");
+    }
+    if report.lost > 0 {
+        return Err(tinbinn::TinError::Config(format!(
+            "{} requests went unanswered",
+            report.lost
+        )));
     }
     Ok(())
 }

@@ -1,0 +1,149 @@
+//! A small blocking TBNP/1 client with pipelining: many requests may be
+//! in flight on one socket; responses come back tagged with the request
+//! id (not necessarily in send order once multiple models or priorities
+//! are involved), so callers match on [`ResponseFrame::id`].
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::coordinator::batcher::Priority;
+use crate::net::proto::{read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame};
+use crate::util::TinError;
+use crate::Result;
+
+/// One connection to a serving front-end.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    /// Data responses consumed while waiting for a pong; handed back by
+    /// the next [`Client::recv`] calls in arrival order.
+    pending: VecDeque<ResponseFrame>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let rstream = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(rstream),
+            writer: BufWriter::new(stream),
+            next_id: 0,
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Bound how long a blocked [`Client::recv`] waits before erroring
+    /// (load generators use this so a lost response can't hang a run).
+    pub fn set_recv_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Queue one request (buffered — call [`Client::flush`] to put it on
+    /// the wire, or use [`Client::infer`]). Returns the assigned id.
+    pub fn send(
+        &mut self,
+        model: &str,
+        image: Vec<u8>,
+        priority: Priority,
+        deadline_budget_us: Option<u64>,
+    ) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(
+            &mut self.writer,
+            &Frame::Request(RequestFrame {
+                id,
+                model: model.to_string(),
+                priority,
+                deadline_budget_us,
+                image,
+            }),
+        )?;
+        Ok(id)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Block for the next response. The server closing the connection is
+    /// an error here: every request is owed exactly one response first.
+    pub fn recv(&mut self) -> Result<ResponseFrame> {
+        if let Some(r) = self.pending.pop_front() {
+            return Ok(r);
+        }
+        self.recv_raw()
+    }
+
+    fn recv_raw(&mut self) -> Result<ResponseFrame> {
+        match read_frame(&mut self.reader)? {
+            Some(Frame::Response(r)) => Ok(r),
+            Some(_) => Err(TinError::Format("server sent a non-response frame".into())),
+            None => Err(TinError::Io("connection closed by server".into())),
+        }
+    }
+
+    /// One synchronous round trip.
+    pub fn infer(&mut self, model: &str, image: &[u8]) -> Result<ResponseFrame> {
+        self.send(model, image.to_vec(), Priority::Normal, None)?;
+        self.flush()?;
+        self.recv()
+    }
+
+    /// Pipelined batch: send every image, then collect every response,
+    /// returned sorted by request send order. Responses map 1:1 to
+    /// `images` (the i-th result answers the i-th image).
+    pub fn infer_pipelined(&mut self, model: &str, images: &[&[u8]]) -> Result<Vec<ResponseFrame>> {
+        let mut first_id = None;
+        for img in images {
+            let id = self.send(model, img.to_vec(), Priority::Normal, None)?;
+            if first_id.is_none() {
+                first_id = Some(id);
+            }
+        }
+        self.flush()?;
+        let base = first_id.unwrap_or(0);
+        let mut out: Vec<Option<ResponseFrame>> = (0..images.len()).map(|_| None).collect();
+        for _ in 0..images.len() {
+            let resp = self.recv()?;
+            let idx = resp.id.checked_sub(base).map(|d| d as usize);
+            match idx {
+                Some(i) if i < out.len() && out[i].is_none() => out[i] = Some(resp),
+                _ => {
+                    return Err(TinError::Format(format!(
+                        "unexpected response id {} (batch base {base})",
+                        resp.id
+                    )))
+                }
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+
+    /// Liveness probe: a ping control frame, answered with an empty Ok
+    /// carrying id `u64::MAX`. Safe with requests in flight: data
+    /// responses that arrive before the pong are buffered and returned
+    /// by subsequent [`Client::recv`] calls.
+    pub fn ping(&mut self) -> Result<()> {
+        write_frame(&mut self.writer, &Frame::Control(ControlOp::Ping))?;
+        self.flush()?;
+        loop {
+            let r = self.recv_raw()?;
+            if r.id == u64::MAX && r.scores.is_empty() {
+                return Ok(());
+            }
+            self.pending.push_back(r);
+        }
+    }
+
+    /// Ask the server to drain gracefully and exit.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        write_frame(&mut self.writer, &Frame::Control(ControlOp::Shutdown))?;
+        self.flush()
+    }
+}

@@ -1,0 +1,623 @@
+//! Load generators for the TCP serving front-end: open-loop (target
+//! QPS, arrivals independent of completions — the honest way to measure
+//! tail latency) and closed-loop (fixed in-flight window per
+//! connection — the throughput-ceiling probe). Mixed-model traffic with
+//! optional deadline budgets and low-priority fractions, deterministic
+//! per-connection schedules from [`Rng64`], and per-model
+//! p50/p99/throughput rows for `BENCH_serve.json`.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::Priority;
+use crate::coordinator::metrics::Histogram;
+use crate::net::client::Client;
+use crate::net::proto::{read_frame, write_frame, Frame, RequestFrame, ResponseFrame, Status};
+use crate::report::bench::BenchResult;
+use crate::util::{Rng64, TinError};
+use crate::Result;
+
+/// One entry of a `--mix` spec: a model name and its traffic weight.
+/// The spec grammar is `name[:backend]=weight` — the optional backend
+/// segment is informational (the server binds backends), only `name`
+/// goes on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixEntry {
+    pub model: String,
+    pub weight: f64,
+}
+
+/// Parse `1cat:bitplane=0.8,10cat:opt=0.2` (weights need not sum to 1;
+/// they are normalized). `name` alone means weight 1.
+pub fn parse_mix(s: &str) -> Result<Vec<MixEntry>> {
+    let mut out: Vec<MixEntry> = Vec::new();
+    for part in s.split(',').filter(|p| !p.is_empty()) {
+        let (lhs, weight) = match part.split_once('=') {
+            Some((l, w)) => {
+                let weight: f64 = w
+                    .parse()
+                    .ok()
+                    .filter(|v: &f64| v.is_finite() && *v > 0.0)
+                    .ok_or_else(|| {
+                        TinError::Config(format!("bad mix weight in '{part}' (want a positive number)"))
+                    })?;
+                (l, weight)
+            }
+            None => (part, 1.0),
+        };
+        let model = lhs.split(':').next().unwrap_or("").to_string();
+        if model.is_empty() {
+            return Err(TinError::Config(format!("bad mix entry '{part}' (empty model name)")));
+        }
+        if out.iter().any(|m| m.model == model) {
+            return Err(TinError::Config(format!("duplicate model '{model}' in mix")));
+        }
+        out.push(MixEntry { model, weight });
+    }
+    if out.is_empty() {
+        return Err(TinError::Config("empty --mix spec".into()));
+    }
+    Ok(out)
+}
+
+/// How arrivals are paced.
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// Fixed aggregate arrival rate; senders never wait for responses.
+    Open { qps: f64 },
+    /// Each connection keeps `inflight` requests outstanding.
+    Closed { inflight: usize },
+}
+
+/// One load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub conns: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    pub mix: Vec<MixEntry>,
+    pub mode: LoadMode,
+    /// Deadline budget stamped on every request (`None` = no deadline).
+    pub deadline_us: Option<u64>,
+    /// Fraction of requests sent at [`Priority::Low`].
+    pub low_frac: f64,
+    pub seed: u64,
+}
+
+/// Per-model client-observed results.
+#[derive(Clone, Debug)]
+pub struct ModelLoad {
+    pub name: String,
+    pub sent: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub unknown: u64,
+    pub busy: u64,
+    /// Completed-request latency (client-observed, includes the wire).
+    pub latency: Histogram,
+    /// Server-side latency per completed request, from the response's
+    /// own `completed_us - admitted_us` stamps — the gateway quantiles,
+    /// with wire and client time excluded.
+    pub gateway_latency: Histogram,
+    pub throughput_per_s: f64,
+}
+
+/// The merged run report. Conservation holds client-side too: every
+/// sent request is answered exactly once or counted in `lost`.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub models: Vec<ModelLoad>,
+    pub sent: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub unknown: u64,
+    pub busy: u64,
+    /// Requests that never got a response (receive timeout or the
+    /// connection dying) — always 0 on a healthy server.
+    pub lost: u64,
+    pub wall_s: f64,
+    pub throughput_per_s: f64,
+}
+
+impl LoadReport {
+    pub fn answered(&self) -> u64 {
+        self.ok + self.rejected + self.expired + self.unknown + self.busy
+    }
+
+    /// Client-side conservation: answered + lost == sent.
+    pub fn conserved(&self) -> bool {
+        self.answered() + self.lost == self.sent
+    }
+
+    /// Rows for `BENCH_serve.json`. Conventions follow the other BENCH
+    /// artifacts: `net_load*` throughput rows store seconds-per-frame in
+    /// `mean_s` (fps = 1/mean_s); `*_us` rows store raw microseconds in
+    /// `mean_s`; count rows (`net_load_unanswered`, ...) store the count.
+    /// `gateway_*` quantiles come from the server's own response stamps
+    /// (queueing + inference), `net_load_*_us` from the client's clock
+    /// (adds the wire and client-side queueing).
+    pub fn bench_rows(&self) -> Vec<BenchResult> {
+        fn row(name: String, iters: u32, v: f64) -> BenchResult {
+            BenchResult { name, iters, mean_s: v, stddev_s: 0.0, min_s: v }
+        }
+        let mut rows = Vec::new();
+        let spf = 1.0 / self.throughput_per_s.max(1e-12);
+        rows.push(row("net_load_fleet".into(), self.ok as u32, spf));
+        for m in &self.models {
+            let m_spf = 1.0 / m.throughput_per_s.max(1e-12);
+            rows.push(row(format!("net_load_{}", m.name), m.ok as u32, m_spf));
+            rows.push(row(
+                format!("gateway_{}_p50_us", m.name),
+                m.ok as u32,
+                m.gateway_latency.p50_us() as f64,
+            ));
+            rows.push(row(
+                format!("gateway_{}_p99_us", m.name),
+                m.ok as u32,
+                m.gateway_latency.p99_us() as f64,
+            ));
+            rows.push(row(
+                format!("net_load_{}_p99_us", m.name),
+                m.ok as u32,
+                m.latency.p99_us() as f64,
+            ));
+        }
+        rows.push(row("net_load_unanswered".into(), 1, self.lost as f64));
+        rows.push(row("net_load_busy".into(), 1, self.busy as f64));
+        rows.push(row("net_load_rejected".into(), 1, self.rejected as f64));
+        rows.push(row("net_load_expired".into(), 1, self.expired as f64));
+        rows
+    }
+}
+
+/// One request in a connection's precomputed schedule.
+#[derive(Clone, Copy)]
+struct PlanItem {
+    mix_idx: usize,
+    low: bool,
+}
+
+/// Per-mix-entry tallies accumulated by one connection.
+struct Counts {
+    sent: u64,
+    ok: u64,
+    rejected: u64,
+    expired: u64,
+    unknown: u64,
+    busy: u64,
+    latency: Histogram,
+    gateway_latency: Histogram,
+}
+
+impl Counts {
+    fn new() -> Self {
+        Counts {
+            sent: 0,
+            ok: 0,
+            rejected: 0,
+            expired: 0,
+            unknown: 0,
+            busy: 0,
+            latency: Histogram::new(),
+            gateway_latency: Histogram::new(),
+        }
+    }
+
+    fn record(&mut self, resp: &ResponseFrame, client_latency_us: u64) {
+        match resp.status {
+            Status::Ok => {
+                self.ok += 1;
+                self.latency.record(client_latency_us);
+                self.gateway_latency.record(resp.completed_us.saturating_sub(resp.admitted_us));
+            }
+            Status::Rejected => self.rejected += 1,
+            Status::Expired => self.expired += 1,
+            Status::UnknownModel => self.unknown += 1,
+            Status::Busy => self.busy += 1,
+        }
+    }
+}
+
+struct ConnResult {
+    per_mix: Vec<Counts>,
+    lost: u64,
+}
+
+/// Deterministic per-connection schedule: mix choice by normalized
+/// weight, low-priority coin by `low_frac`.
+fn make_plan(cfg: &LoadConfig, n: usize, rng: &mut Rng64) -> Vec<PlanItem> {
+    let total: f64 = cfg.mix.iter().map(|m| m.weight).sum();
+    (0..n)
+        .map(|_| {
+            let mut x = rng.unit_f64() * total;
+            let mut mix_idx = cfg.mix.len() - 1;
+            for (i, m) in cfg.mix.iter().enumerate() {
+                if x < m.weight {
+                    mix_idx = i;
+                    break;
+                }
+                x -= m.weight;
+            }
+            let low = cfg.low_frac > 0.0 && rng.unit_f64() < cfg.low_frac;
+            PlanItem { mix_idx, low }
+        })
+        .collect()
+}
+
+fn request_frame(cfg: &LoadConfig, plan: &PlanItem, id: u64, model: &str, image: Vec<u8>) -> RequestFrame {
+    RequestFrame {
+        id,
+        model: model.to_string(),
+        priority: if plan.low { Priority::Low } else { Priority::Normal },
+        deadline_budget_us: cfg.deadline_us,
+        image,
+    }
+}
+
+/// How long a receiver waits for one response before declaring the rest
+/// of its requests lost.
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Closed loop: one thread, `inflight` requests outstanding, send-next
+/// on every response.
+fn run_conn_closed(
+    addr: &str,
+    cfg: &LoadConfig,
+    images: &HashMap<String, Vec<Vec<u8>>>,
+    n: usize,
+    seed: u64,
+    inflight: usize,
+) -> Result<ConnResult> {
+    let mut rng = Rng64::new(seed);
+    let plan = make_plan(cfg, n, &mut rng);
+    let mut client = Client::connect(addr)?;
+    client.set_recv_timeout(Some(RECV_TIMEOUT))?;
+    let mut per_mix: Vec<Counts> = cfg.mix.iter().map(|_| Counts::new()).collect();
+    let mut send_us: Vec<u64> = vec![0; n];
+    let t0 = Instant::now();
+
+    let window = inflight.max(1).min(n.max(1));
+    let mut next = 0usize;
+    let send_one = |next: &mut usize, client: &mut Client, per_mix: &mut Vec<Counts>, send_us: &mut Vec<u64>| -> Result<()> {
+        let j = *next;
+        *next += 1;
+        let item = &plan[j];
+        let model = &cfg.mix[item.mix_idx].model;
+        let pool = &images[model];
+        let img = pool[j % pool.len()].clone();
+        send_us[j] = t0.elapsed().as_micros() as u64;
+        let id = client.send(
+            model,
+            img,
+            if item.low { Priority::Low } else { Priority::Normal },
+            cfg.deadline_us,
+        )?;
+        debug_assert_eq!(id as usize, j);
+        client.flush()?;
+        per_mix[item.mix_idx].sent += 1;
+        Ok(())
+    };
+
+    for _ in 0..window {
+        send_one(&mut next, &mut client, &mut per_mix, &mut send_us)?;
+    }
+    let mut lost = 0u64;
+    let mut outstanding = window as u64;
+    for _ in 0..n {
+        let resp = match client.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                // timeout / dead server: everything still outstanding is lost
+                lost += outstanding;
+                break;
+            }
+        };
+        outstanding -= 1;
+        let j = resp.id as usize;
+        if j < n {
+            let now = t0.elapsed().as_micros() as u64;
+            per_mix[plan[j].mix_idx].record(&resp, now.saturating_sub(send_us[j]));
+        }
+        if next < n {
+            send_one(&mut next, &mut client, &mut per_mix, &mut send_us)?;
+            outstanding += 1;
+        }
+    }
+    Ok(ConnResult { per_mix, lost })
+}
+
+/// Open loop: a sender thread pacing arrivals at the target rate and a
+/// receiver thread draining responses, sharing the schedule and the
+/// send timestamps.
+fn run_conn_open(
+    addr: &str,
+    cfg: &LoadConfig,
+    images: &HashMap<String, Vec<Vec<u8>>>,
+    n: usize,
+    seed: u64,
+    interval_us: f64,
+) -> Result<ConnResult> {
+    let mut rng = Rng64::new(seed);
+    let plan = make_plan(cfg, n, &mut rng);
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let rstream = stream.try_clone()?;
+    rstream.set_read_timeout(Some(RECV_TIMEOUT))?;
+    let send_us: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let t0 = Instant::now();
+
+    let plan_ref = &plan;
+    let send_ref = &send_us;
+    let recv_result = std::thread::scope(|s| -> Result<(Vec<Counts>, u64)> {
+        let cfg_ref = &cfg;
+        let receiver = s.spawn(move || {
+            let mut r = BufReader::new(rstream);
+            let mut per_mix: Vec<Counts> = cfg_ref.mix.iter().map(|_| Counts::new()).collect();
+            let mut lost = 0u64;
+            for k in 0..n {
+                match read_frame(&mut r) {
+                    Ok(Some(Frame::Response(resp))) => {
+                        let j = resp.id as usize;
+                        if j < n {
+                            let now = t0.elapsed().as_micros() as u64;
+                            let sent_at = send_ref[j].load(Ordering::Acquire);
+                            per_mix[plan_ref[j].mix_idx]
+                                .record(&resp, now.saturating_sub(sent_at));
+                        }
+                    }
+                    _ => {
+                        lost += (n - k) as u64;
+                        break;
+                    }
+                }
+            }
+            (per_mix, lost)
+        });
+
+        // sender: fixed arrival schedule, independent of completions
+        let mut w = BufWriter::new(stream);
+        let mut sent_per_mix = vec![0u64; cfg.mix.len()];
+        for (j, item) in plan.iter().enumerate() {
+            let target_us = (j as f64 * interval_us) as u64;
+            let now = t0.elapsed().as_micros() as u64;
+            if now < target_us {
+                std::thread::sleep(Duration::from_micros(target_us - now));
+            }
+            let model = &cfg.mix[item.mix_idx].model;
+            let pool = &images[model];
+            let img = pool[j % pool.len()].clone();
+            send_us[j].store(t0.elapsed().as_micros() as u64, Ordering::Release);
+            write_frame(&mut w, &Frame::Request(request_frame(cfg, item, j as u64, model, img)))?;
+            w.flush()?;
+            sent_per_mix[item.mix_idx] += 1;
+        }
+        let (mut per_mix, lost) = receiver.join().expect("open-loop receiver panicked");
+        for (c, &sent) in per_mix.iter_mut().zip(&sent_per_mix) {
+            c.sent = sent;
+        }
+        Ok((per_mix, lost))
+    })?;
+    let (per_mix, lost) = recv_result;
+    Ok(ConnResult { per_mix, lost })
+}
+
+/// Run one load-generation campaign against `addr`. `images` supplies
+/// sample payloads per mix model (cycled); every model in the mix must
+/// have at least one image.
+pub fn run_load(
+    addr: &str,
+    cfg: &LoadConfig,
+    images: &HashMap<String, Vec<Vec<u8>>>,
+) -> Result<LoadReport> {
+    if cfg.conns == 0 || cfg.requests == 0 {
+        return Err(TinError::Config("load run needs >= 1 connection and >= 1 request".into()));
+    }
+    for m in &cfg.mix {
+        if images.get(&m.model).map_or(true, |v| v.is_empty()) {
+            return Err(TinError::Config(format!("no sample images for mix model '{}'", m.model)));
+        }
+    }
+
+    let t0 = Instant::now();
+    let conn_results: Vec<Result<ConnResult>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(cfg.conns);
+        for ci in 0..cfg.conns {
+            let n = cfg.requests / cfg.conns + usize::from(ci < cfg.requests % cfg.conns);
+            let seed = cfg.seed ^ (ci as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            handles.push(s.spawn(move || -> Result<ConnResult> {
+                if n == 0 {
+                    return Ok(ConnResult {
+                        per_mix: cfg.mix.iter().map(|_| Counts::new()).collect(),
+                        lost: 0,
+                    });
+                }
+                match cfg.mode {
+                    LoadMode::Closed { inflight } => {
+                        run_conn_closed(addr, cfg, images, n, seed, inflight)
+                    }
+                    LoadMode::Open { qps } => {
+                        let rate = (qps / cfg.conns as f64).max(1e-3);
+                        run_conn_open(addr, cfg, images, n, seed, 1e6 / rate)
+                    }
+                }
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("load conn panicked")).collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut merged: Vec<Counts> = cfg.mix.iter().map(|_| Counts::new()).collect();
+    let mut lost = 0u64;
+    for cr in conn_results {
+        let cr = cr?;
+        lost += cr.lost;
+        for (a, b) in merged.iter_mut().zip(cr.per_mix.iter()) {
+            a.sent += b.sent;
+            a.ok += b.ok;
+            a.rejected += b.rejected;
+            a.expired += b.expired;
+            a.unknown += b.unknown;
+            a.busy += b.busy;
+            a.latency.merge(&b.latency);
+            a.gateway_latency.merge(&b.gateway_latency);
+        }
+    }
+
+    let mut report = LoadReport {
+        models: Vec::with_capacity(cfg.mix.len()),
+        sent: 0,
+        ok: 0,
+        rejected: 0,
+        expired: 0,
+        unknown: 0,
+        busy: 0,
+        lost,
+        wall_s,
+        throughput_per_s: 0.0,
+    };
+    for (m, c) in cfg.mix.iter().zip(merged.into_iter()) {
+        report.sent += c.sent;
+        report.ok += c.ok;
+        report.rejected += c.rejected;
+        report.expired += c.expired;
+        report.unknown += c.unknown;
+        report.busy += c.busy;
+        report.models.push(ModelLoad {
+            name: m.model.clone(),
+            sent: c.sent,
+            ok: c.ok,
+            rejected: c.rejected,
+            expired: c.expired,
+            unknown: c.unknown,
+            busy: c.busy,
+            throughput_per_s: c.ok as f64 / wall_s.max(1e-9),
+            latency: c.latency,
+            gateway_latency: c.gateway_latency,
+        });
+    }
+    report.throughput_per_s = report.ok as f64 / wall_s.max(1e-9);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::gateway::GatewayLane;
+    use crate::net::server::{MonotonicClock, NetServer, ServerConfig};
+    use std::sync::Arc;
+
+    fn mock_server(models: &[&str]) -> NetServer {
+        let lanes: Vec<GatewayLane<MockBackend>> = models
+            .iter()
+            .map(|m| GatewayLane {
+                name: (*m).to_string(),
+                policy: BatchPolicy { max_batch: 4, max_wait_us: 200, queue_cap: 4096 },
+                workers: (0..2).map(|_| MockBackend::new(0)).collect(),
+            })
+            .collect();
+        NetServer::start("127.0.0.1:0", lanes, ServerConfig::default(), Arc::new(MonotonicClock::new()))
+            .unwrap()
+    }
+
+    fn image_map(models: &[&str]) -> HashMap<String, Vec<Vec<u8>>> {
+        models
+            .iter()
+            .enumerate()
+            .map(|(i, m)| ((*m).to_string(), vec![vec![i as u8 + 1; 16], vec![i as u8 + 2; 16]]))
+            .collect()
+    }
+
+    #[test]
+    fn parses_mix_specs() {
+        let mix = parse_mix("1cat:bitplane=0.8,10cat:opt=0.2").unwrap();
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix[0], MixEntry { model: "1cat".into(), weight: 0.8 });
+        assert_eq!(mix[1], MixEntry { model: "10cat".into(), weight: 0.2 });
+        assert_eq!(parse_mix("a").unwrap(), vec![MixEntry { model: "a".into(), weight: 1.0 }]);
+        assert_eq!(parse_mix("a=2").unwrap()[0].weight, 2.0);
+        assert!(parse_mix("").is_err());
+        assert!(parse_mix("a=0").is_err());
+        assert!(parse_mix("a=-1").is_err());
+        assert!(parse_mix("a=x").is_err());
+        assert!(parse_mix("=1").is_err());
+        assert!(parse_mix("a=1,a=2").is_err(), "duplicate model");
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_respect_weights() {
+        let cfg = LoadConfig {
+            conns: 1,
+            requests: 512,
+            mix: parse_mix("a=0.9,b=0.1").unwrap(),
+            mode: LoadMode::Closed { inflight: 1 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 7,
+        };
+        let mut r1 = Rng64::new(1);
+        let mut r2 = Rng64::new(1);
+        let p1 = make_plan(&cfg, 512, &mut r1);
+        let p2 = make_plan(&cfg, 512, &mut r2);
+        assert!(p1.iter().zip(&p2).all(|(a, b)| a.mix_idx == b.mix_idx && a.low == b.low));
+        let a_count = p1.iter().filter(|p| p.mix_idx == 0).count();
+        assert!(a_count > 350, "weight 0.9 should dominate (got {a_count}/512)");
+    }
+
+    #[test]
+    fn closed_loop_against_a_live_server_loses_nothing() {
+        let srv = mock_server(&["a", "b"]);
+        let addr = srv.local_addr().to_string();
+        let cfg = LoadConfig {
+            conns: 2,
+            requests: 48,
+            mix: parse_mix("a=0.5,b=0.5").unwrap(),
+            mode: LoadMode::Closed { inflight: 4 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 11,
+        };
+        let report = run_load(&addr, &cfg, &image_map(&["a", "b"])).unwrap();
+        assert_eq!(report.sent, 48);
+        assert_eq!(report.lost, 0);
+        assert!(report.conserved());
+        assert_eq!(report.ok, 48, "idle mock server should serve everything");
+        let gw = srv.shutdown().unwrap();
+        assert!(gw.conserved(), "server-side ledger broken under load");
+        assert_eq!(gw.completed, 48);
+        let rows = report.bench_rows();
+        assert!(rows.iter().any(|r| r.name == "gateway_a_p50_us"));
+        assert!(rows.iter().any(|r| r.name == "gateway_b_p99_us"));
+        assert!(rows.iter().any(|r| r.name == "net_load_unanswered" && r.mean_s == 0.0));
+    }
+
+    #[test]
+    fn open_loop_against_a_live_server_loses_nothing() {
+        let srv = mock_server(&["a"]);
+        let addr = srv.local_addr().to_string();
+        let cfg = LoadConfig {
+            conns: 2,
+            requests: 32,
+            mix: parse_mix("a").unwrap(),
+            mode: LoadMode::Open { qps: 4000.0 },
+            deadline_us: Some(2_000_000),
+            low_frac: 0.25,
+            seed: 5,
+        };
+        let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.lost, 0);
+        assert!(report.conserved());
+        // generous deadlines on an idle server: everything completes
+        assert_eq!(report.ok + report.rejected + report.expired, 32);
+        assert!(report.ok > 0);
+        let gw = srv.shutdown().unwrap();
+        assert!(gw.conserved());
+    }
+}

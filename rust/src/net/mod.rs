@@ -1,0 +1,26 @@
+//! S12: the wire-protocol serving front-end — the network layer that
+//! makes the multi-model gateway reachable from other processes.
+//!
+//! Four pieces, all std-only:
+//!
+//! * [`proto`] — TBNP/1, a versioned length-prefixed binary protocol
+//!   (requests with model tag / priority / deadline budget / image;
+//!   responses with status, server timestamps and scores).
+//! * [`server`] — a `TcpListener` front-end bridging connections into
+//!   the gateway [`Router`](crate::coordinator::gateway::Router):
+//!   per-connection reader/writer threads, one dispatcher owning the
+//!   router, per-(model, worker) engine threads, connection-level
+//!   backpressure (`Busy`), and graceful drain with exact accounting.
+//! * [`client`] — a small blocking client with pipelining.
+//! * [`loadgen`] — open-/closed-loop load generators producing the
+//!   per-model p50/p99/throughput rows in `BENCH_serve.json`.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::Client;
+pub use loadgen::{parse_mix, run_load, LoadConfig, LoadMode, LoadReport, MixEntry};
+pub use proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status};
+pub use server::{Clock, DrainTrigger, ManualClock, MonotonicClock, NetServer, ServerConfig};

@@ -1,0 +1,629 @@
+//! TBNP/1 — the versioned, length-prefixed binary wire protocol for the
+//! serving front-end.
+//!
+//! Every frame on the wire is a `u32` little-endian body length followed
+//! by that many body bytes. A body starts with a fixed header (magic,
+//! version, kind) and continues with the kind-specific payload; all
+//! integers are little-endian:
+//!
+//! | kind     | payload                                                        |
+//! |----------|----------------------------------------------------------------|
+//! | request  | id:u64, priority:u8, has_deadline:u8, deadline_budget_us:u64,  |
+//! |          | name_len:u16 + name bytes, image_len:u32 + image bytes         |
+//! | response | id:u64, status:u8, admitted_us:u64, completed_us:u64,          |
+//! |          | n_scores:u16 + n_scores x i32                                  |
+//! | control  | op:u8 (0 = shutdown-and-drain, 1 = ping)                       |
+//!
+//! Declared lengths are capped ([`MAX_NAME`], [`MAX_IMAGE`],
+//! [`MAX_SCORES`]) so a malicious length prefix cannot make the peer
+//! allocate unboundedly, and every decode path returns a
+//! [`TinError::Format`] on truncation instead of panicking — the
+//! roundtrip/truncation properties in this module pin both.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::batcher::Priority;
+use crate::util::TinError;
+use crate::Result;
+
+/// Frame-body magic: `b"TBNP"` little-endian.
+pub const MAGIC: u32 = 0x504e_4254;
+/// Protocol version; bumped on any wire-format change.
+pub const VERSION: u8 = 1;
+/// Longest model name accepted on the wire.
+pub const MAX_NAME: usize = 256;
+/// Largest image payload accepted on the wire (1 MiB; a 32x32x3 frame
+/// is 3072 bytes, so this leaves generous headroom for future inputs).
+pub const MAX_IMAGE: usize = 1 << 20;
+/// Most scores a response may carry.
+pub const MAX_SCORES: usize = 4096;
+/// Hard cap on a declared frame-body length (anti-DoS bound for the
+/// length prefix itself).
+pub const MAX_BODY: usize = MAX_IMAGE + MAX_NAME + 64;
+
+/// Terminal outcome of one request, as carried on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Scored; `scores` is populated.
+    Ok,
+    /// Shed by backpressure (queue full / low-priority shedding /
+    /// malformed payload such as a wrong-size image).
+    Rejected,
+    /// Still queued past its deadline budget; dropped at dispatch.
+    Expired,
+    /// No registered model with that name.
+    UnknownModel,
+    /// Connection-level backpressure: too many requests in flight on
+    /// this connection; retry after a response arrives.
+    Busy,
+}
+
+impl Status {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Rejected => 1,
+            Status::Expired => 2,
+            Status::UnknownModel => 3,
+            Status::Busy => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Status> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::Rejected,
+            2 => Status::Expired,
+            3 => Status::UnknownModel,
+            4 => Status::Busy,
+            other => return Err(TinError::Format(format!("bad status byte {other}"))),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Rejected => "rejected",
+            Status::Expired => "expired",
+            Status::UnknownModel => "unknown-model",
+            Status::Busy => "busy",
+        }
+    }
+}
+
+/// One inference request as it crosses the wire. `id` is chosen by the
+/// client and echoed verbatim in the response (pipelining key); it only
+/// needs to be unique per connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub model: String,
+    pub priority: Priority,
+    /// Latency budget in microseconds from server admission; `None`
+    /// never expires.
+    pub deadline_budget_us: Option<u64>,
+    pub image: Vec<u8>,
+}
+
+/// One response. `admitted_us`/`completed_us` are server-side monotonic
+/// timestamps (same clock), so a client can split queueing from network
+/// time without trusting wall clocks to agree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub status: Status,
+    pub admitted_us: u64,
+    pub completed_us: u64,
+    pub scores: Vec<i32>,
+}
+
+impl ResponseFrame {
+    /// A scoreless response carrying only a status (rejection paths).
+    pub fn status_only(id: u64, status: Status, now_us: u64) -> Self {
+        ResponseFrame { id, status, admitted_us: now_us, completed_us: now_us, scores: Vec::new() }
+    }
+}
+
+/// Out-of-band server control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControlOp {
+    /// Graceful drain: finish everything admitted, answer everything
+    /// else, then exit.
+    Shutdown,
+    /// Liveness probe; answered with an empty `Ok` response carrying
+    /// id `u64::MAX` (never collides with a request id).
+    Ping,
+}
+
+impl ControlOp {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            ControlOp::Shutdown => 0,
+            ControlOp::Ping => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<ControlOp> {
+        Ok(match v {
+            0 => ControlOp::Shutdown,
+            1 => ControlOp::Ping,
+            other => return Err(TinError::Format(format!("bad control op {other}"))),
+        })
+    }
+}
+
+/// Any frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Frame {
+    Request(RequestFrame),
+    Response(ResponseFrame),
+    Control(ControlOp),
+}
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+const KIND_CONTROL: u8 = 3;
+
+fn priority_to_u8(p: Priority) -> u8 {
+    match p {
+        Priority::Low => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    }
+}
+
+fn priority_from_u8(v: u8) -> Result<Priority> {
+    Ok(match v {
+        0 => Priority::Low,
+        1 => Priority::Normal,
+        2 => Priority::High,
+        other => return Err(TinError::Format(format!("bad priority byte {other}"))),
+    })
+}
+
+// ---- encoding -----------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode one frame body (without the outer length prefix). Errors if a
+/// field exceeds its wire cap.
+pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(64);
+    put_u32(&mut out, MAGIC);
+    out.push(VERSION);
+    match frame {
+        Frame::Request(r) => {
+            if r.model.len() > MAX_NAME {
+                return Err(TinError::Format(format!(
+                    "model name too long for the wire ({} > {MAX_NAME})",
+                    r.model.len()
+                )));
+            }
+            if r.image.len() > MAX_IMAGE {
+                return Err(TinError::Format(format!(
+                    "image too large for the wire ({} > {MAX_IMAGE})",
+                    r.image.len()
+                )));
+            }
+            out.push(KIND_REQUEST);
+            put_u64(&mut out, r.id);
+            out.push(priority_to_u8(r.priority));
+            out.push(r.deadline_budget_us.is_some() as u8);
+            put_u64(&mut out, r.deadline_budget_us.unwrap_or(0));
+            put_u16(&mut out, r.model.len() as u16);
+            out.extend_from_slice(r.model.as_bytes());
+            put_u32(&mut out, r.image.len() as u32);
+            out.extend_from_slice(&r.image);
+        }
+        Frame::Response(r) => {
+            if r.scores.len() > MAX_SCORES {
+                return Err(TinError::Format(format!(
+                    "too many scores for the wire ({} > {MAX_SCORES})",
+                    r.scores.len()
+                )));
+            }
+            out.push(KIND_RESPONSE);
+            put_u64(&mut out, r.id);
+            out.push(r.status.as_u8());
+            put_u64(&mut out, r.admitted_us);
+            put_u64(&mut out, r.completed_us);
+            put_u16(&mut out, r.scores.len() as u16);
+            for s in &r.scores {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        Frame::Control(op) => {
+            out.push(KIND_CONTROL);
+            out.push(op.as_u8());
+        }
+    }
+    Ok(out)
+}
+
+// ---- decoding -----------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over one frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.off < n {
+            return Err(TinError::Format(format!(
+                "truncated frame: wanted {n} bytes at offset {}, body is {}",
+                self.off,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn done(&self) -> bool {
+        self.off == self.buf.len()
+    }
+}
+
+/// Decode one frame body (without the outer length prefix). Rejects bad
+/// magic/version/kind, truncated bodies, over-cap declared lengths, and
+/// trailing garbage.
+pub fn decode_frame(body: &[u8]) -> Result<Frame> {
+    let mut c = Cur { buf: body, off: 0 };
+    let magic = c.u32()?;
+    if magic != MAGIC {
+        return Err(TinError::Format(format!("bad magic {magic:#x} (want {MAGIC:#x})")));
+    }
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(TinError::Format(format!("unsupported protocol version {version}")));
+    }
+    let kind = c.u8()?;
+    let frame = match kind {
+        KIND_REQUEST => {
+            let id = c.u64()?;
+            let priority = priority_from_u8(c.u8()?)?;
+            let has_deadline = c.u8()?;
+            let deadline_raw = c.u64()?;
+            let deadline_budget_us = match has_deadline {
+                0 => None,
+                1 => Some(deadline_raw),
+                other => {
+                    return Err(TinError::Format(format!("bad deadline flag {other}")));
+                }
+            };
+            let name_len = c.u16()? as usize;
+            if name_len > MAX_NAME {
+                return Err(TinError::Format(format!("model name length {name_len} over cap")));
+            }
+            let name = c.take(name_len)?;
+            let model = std::str::from_utf8(name)
+                .map_err(|_| TinError::Format("model name is not UTF-8".into()))?
+                .to_string();
+            let image_len = c.u32()? as usize;
+            if image_len > MAX_IMAGE {
+                return Err(TinError::Format(format!("image length {image_len} over cap")));
+            }
+            let image = c.take(image_len)?.to_vec();
+            Frame::Request(RequestFrame { id, model, priority, deadline_budget_us, image })
+        }
+        KIND_RESPONSE => {
+            let id = c.u64()?;
+            let status = Status::from_u8(c.u8()?)?;
+            let admitted_us = c.u64()?;
+            let completed_us = c.u64()?;
+            let n = c.u16()? as usize;
+            if n > MAX_SCORES {
+                return Err(TinError::Format(format!("score count {n} over cap")));
+            }
+            let mut scores = Vec::with_capacity(n);
+            for _ in 0..n {
+                scores.push(c.i32()?);
+            }
+            Frame::Response(ResponseFrame { id, status, admitted_us, completed_us, scores })
+        }
+        KIND_CONTROL => Frame::Control(ControlOp::from_u8(c.u8()?)?),
+        other => return Err(TinError::Format(format!("bad frame kind {other}"))),
+    };
+    if !c.done() {
+        return Err(TinError::Format(format!(
+            "trailing garbage: {} bytes past the end of the frame",
+            body.len() - c.off
+        )));
+    }
+    Ok(frame)
+}
+
+// ---- stream io ----------------------------------------------------------
+
+/// Write one length-prefixed frame. The caller owns buffering/flushing.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let body = encode_frame(frame)?;
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Returns `Ok(None)` on a clean EOF
+/// (the peer closed between frames); an EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    // hand-rolled first read so EOF-before-any-byte is clean, not an error
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(TinError::Format("eof inside a frame length prefix".into()));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_BODY {
+        return Err(TinError::Format(format!("frame body length {len} over cap {MAX_BODY}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| TinError::Format(format!("eof inside a frame body: {e}")))?;
+    Some(decode_frame(&body)).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn sample_request() -> Frame {
+        Frame::Request(RequestFrame {
+            id: 42,
+            model: "1cat".into(),
+            priority: Priority::High,
+            deadline_budget_us: Some(1500),
+            image: vec![7u8; 3072],
+        })
+    }
+
+    fn sample_response() -> Frame {
+        Frame::Response(ResponseFrame {
+            id: 42,
+            status: Status::Ok,
+            admitted_us: 10,
+            completed_us: 250,
+            scores: vec![-5, 0, 123456, i32::MIN, i32::MAX],
+        })
+    }
+
+    #[test]
+    fn roundtrips_all_kinds() {
+        for f in [sample_request(), sample_response(), Frame::Control(ControlOp::Shutdown), Frame::Control(ControlOp::Ping)] {
+            let body = encode_frame(&f).unwrap();
+            assert_eq!(decode_frame(&body).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_a_stream() {
+        let mut buf: Vec<u8> = Vec::new();
+        let frames = [sample_request(), sample_response(), Frame::Control(ControlOp::Ping)];
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(read_frame(&mut r).unwrap().unwrap(), *f);
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF after the last frame");
+    }
+
+    #[test]
+    fn max_size_image_roundtrips_and_one_over_is_rejected() {
+        let mut r = RequestFrame {
+            id: 1,
+            model: "m".into(),
+            priority: Priority::Normal,
+            deadline_budget_us: None,
+            image: vec![0xAB; MAX_IMAGE],
+        };
+        let body = encode_frame(&Frame::Request(r.clone())).unwrap();
+        assert_eq!(decode_frame(&body).unwrap(), Frame::Request(r.clone()));
+        r.image.push(0);
+        assert!(encode_frame(&Frame::Request(r)).is_err(), "over-cap image must not encode");
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_kind_and_status() {
+        let good = encode_frame(&sample_request()).unwrap();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_frame(&bad).is_err(), "bad magic");
+        let mut bad = good.clone();
+        bad[4] = VERSION + 1;
+        assert!(decode_frame(&bad).is_err(), "bad version");
+        let mut bad = good.clone();
+        bad[5] = 99;
+        assert!(decode_frame(&bad).is_err(), "bad kind");
+        assert!(Status::from_u8(200).is_err());
+        assert!(ControlOp::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut body = encode_frame(&Frame::Control(ControlOp::Ping)).unwrap();
+        body.push(0);
+        assert!(decode_frame(&body).is_err());
+    }
+
+    #[test]
+    fn every_truncation_of_a_valid_body_errors_cleanly() {
+        for f in [sample_request(), sample_response(), Frame::Control(ControlOp::Shutdown)] {
+            let body = encode_frame(&f).unwrap();
+            for k in 0..body.len() {
+                assert!(
+                    decode_frame(&body[..k]).is_err(),
+                    "truncation to {k}/{} bytes must error",
+                    body.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stream_reader_rejects_eof_inside_a_frame() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &sample_response()).unwrap();
+        // chop inside the length prefix and inside the body
+        for cut in [2usize, 4, buf.len() - 1] {
+            let mut r = &buf[..cut];
+            assert!(read_frame(&mut r).is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn stream_reader_caps_the_declared_length() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err(), "absurd length prefix must not allocate");
+    }
+
+    fn random_frame(rng: &mut Rng64) -> Frame {
+        match rng.below(3) {
+            0 => {
+                let name_len = rng.below(12) as usize;
+                let img_len = match rng.below(4) {
+                    0 => 0,
+                    1 => rng.below(16) as usize,
+                    2 => 3072,
+                    _ => rng.below(20_000) as usize,
+                };
+                Frame::Request(RequestFrame {
+                    id: rng.next_u64(),
+                    model: (0..name_len).map(|_| (b'a' + rng.below(26) as u8) as char).collect(),
+                    priority: match rng.below(3) {
+                        0 => Priority::Low,
+                        1 => Priority::Normal,
+                        _ => Priority::High,
+                    },
+                    deadline_budget_us: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(rng.next_u64())
+                    },
+                    image: (0..img_len).map(|_| rng.next_u8()).collect(),
+                })
+            }
+            1 => {
+                let n = rng.below(32) as usize;
+                Frame::Response(ResponseFrame {
+                    id: rng.next_u64(),
+                    status: Status::from_u8(rng.below(5) as u8).unwrap(),
+                    admitted_us: rng.next_u64(),
+                    completed_us: rng.next_u64(),
+                    scores: (0..n).map(|_| rng.next_u32() as i32).collect(),
+                })
+            }
+            _ => Frame::Control(if rng.below(2) == 0 {
+                ControlOp::Shutdown
+            } else {
+                ControlOp::Ping
+            }),
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_identity() {
+        // randomized frames: decode(encode(f)) == f, byte-for-byte fields
+        crate::testkit::check(80, |rng| {
+            let f = random_frame(rng);
+            let body = encode_frame(&f).unwrap();
+            assert_eq!(decode_frame(&body).unwrap(), f);
+        });
+    }
+
+    #[test]
+    fn prop_truncated_reads_never_panic() {
+        // random truncation point of a random frame: always a clean error
+        crate::testkit::check(60, |rng| {
+            let f = random_frame(rng);
+            let body = encode_frame(&f).unwrap();
+            if body.is_empty() {
+                return;
+            }
+            let k = rng.below(body.len() as u32) as usize;
+            assert!(decode_frame(&body[..k]).is_err());
+        });
+    }
+
+    #[test]
+    fn prop_stream_roundtrip_across_arbitrary_chunking() {
+        // a reader that returns one byte at a time must still reassemble
+        // frames exactly (no alignment assumptions in read_frame)
+        struct Dribble<'a> {
+            buf: &'a [u8],
+            off: usize,
+        }
+        impl<'a> std::io::Read for Dribble<'a> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.off >= self.buf.len() || out.is_empty() {
+                    return Ok(0);
+                }
+                out[0] = self.buf[self.off];
+                self.off += 1;
+                Ok(1)
+            }
+        }
+        crate::testkit::check(30, |rng| {
+            let frames: Vec<Frame> = (0..1 + rng.below(5)).map(|_| random_frame(rng)).collect();
+            let mut buf = Vec::new();
+            for f in &frames {
+                write_frame(&mut buf, f).unwrap();
+            }
+            let mut r = Dribble { buf: &buf, off: 0 };
+            for f in &frames {
+                assert_eq!(read_frame(&mut r).unwrap().unwrap(), *f);
+            }
+            assert!(read_frame(&mut r).unwrap().is_none());
+        });
+    }
+}

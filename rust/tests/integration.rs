@@ -111,7 +111,7 @@ fn gateway_serves_both_tasks_bit_exact() {
         },
     ];
     let (report, _lanes) =
-        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
     assert!(report.conserved());
     assert_eq!(report.completed, 16);
     for m in &report.models {
@@ -190,7 +190,7 @@ fn gateway_hot_swaps_a_freshly_trained_model() {
         })
         .collect();
     let (report, _lanes) =
-        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true }).unwrap();
+        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
     assert!(report.conserved(), "submitted != completed + rejected + expired");
     assert_eq!(report.submitted, 24);
     assert_eq!(report.unknown_model, 8);
@@ -360,4 +360,155 @@ fn weight_bytes_match_flash_image() {
     // synthetic fixture shares the zoo geometry, so the bound holds
     let kb = compiled.flash_image.len() as f64 / 1024.0;
     assert!((100.0..270.0).contains(&kb), "{kb} kB");
+}
+
+#[test]
+fn net_loopback_scores_bit_exact_on_every_backend() {
+    // the PR-5 acceptance criterion: scores served over TCP (TBNP/1)
+    // are identical to direct Backend::infer for the same images on
+    // every registered engine — golden, opt, bitplane, and the
+    // cycle-accurate overlay — all behind one listening socket
+    use tinbinn::coordinator::backend::Backend;
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::net::{Client, MonotonicClock, NetServer, ServerConfig, Status};
+
+    let (np1, ds1, _) = task_data("1cat");
+    let (np10, ds10, _) = task_data("10cat");
+    let mut reg = ModelRegistry::new();
+    for (name, backend, np) in [
+        ("golden1", BackendKind::Golden, &np1),
+        ("opt10", BackendKind::Opt, &np10),
+        ("bitplane1", BackendKind::Bitplane, &np1),
+        ("overlay1", BackendKind::Overlay, &np1),
+    ] {
+        reg.register(ModelSpec { name: name.into(), backend, workers: 1 }, np.clone())
+            .unwrap();
+    }
+    let mut lanes = Vec::new();
+    for entry in reg.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 },
+            workers: reg.build_pool(entry).unwrap(),
+        });
+    }
+    let srv = NetServer::start(
+        "127.0.0.1:0",
+        lanes,
+        ServerConfig::default(),
+        std::sync::Arc::new(MonotonicClock::new()),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+
+    let n = 4usize;
+    let mut checked = 0usize;
+    for entry in reg.entries() {
+        let (np, ds) = if entry.spec.name == "opt10" { (&np10, &ds10) } else { (&np1, &ds1) };
+        let imgs: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+        // the direct leg: the same registry entry, Backend::infer_batch
+        let mut direct = reg.build_pool(entry).unwrap();
+        let want = direct[0].infer_batch(&imgs).unwrap();
+        let resps = client.infer_pipelined(&entry.spec.name, &imgs).unwrap();
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.status, Status::Ok, "{} image {i}", entry.spec.name);
+            assert_eq!(
+                r.scores, want[i],
+                "wire scores diverged from direct Backend::infer ({} image {i})",
+                entry.spec.name
+            );
+            assert_eq!(
+                r.scores,
+                forward(np, imgs[i]).unwrap(),
+                "wire scores diverged from the golden oracle ({} image {i})",
+                entry.spec.name
+            );
+            assert!(r.completed_us >= r.admitted_us);
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 4 * n, "every backend verified over the wire");
+
+    let report = srv.shutdown().unwrap();
+    assert!(report.conserved(), "loopback serving broke the ledger");
+    assert_eq!(report.completed, (4 * n) as u64);
+    for m in &report.models {
+        assert_eq!(m.completed, n as u64, "model {}", m.name);
+        assert!(m.latency.p99_us > 0, "per-model quantiles populated ({})", m.name);
+    }
+}
+
+#[test]
+fn net_load_generator_over_two_real_models_conserves_and_reports_quantiles() {
+    // bench-load's library path against two engines at once: no request
+    // lost, client and server ledgers both balance, and the
+    // BENCH_serve.json row set carries p50/p99 for both models
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::net::{parse_mix, run_load, LoadConfig, LoadMode, MonotonicClock, NetServer, ServerConfig};
+
+    let (np1, ds1, _) = task_data("1cat");
+    let (np10, ds10, _) = task_data("10cat");
+    let mut reg = ModelRegistry::new();
+    reg.register(
+        ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 2 },
+        np1,
+    )
+    .unwrap();
+    reg.register(ModelSpec { name: "10cat".into(), backend: BackendKind::Opt, workers: 2 }, np10)
+        .unwrap();
+    let mut lanes = Vec::new();
+    for entry in reg.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy: BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 4096 },
+            workers: reg.build_pool(entry).unwrap(),
+        });
+    }
+    let srv = NetServer::start(
+        "127.0.0.1:0",
+        lanes,
+        ServerConfig::default(),
+        std::sync::Arc::new(MonotonicClock::new()),
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+
+    let mut images = std::collections::HashMap::new();
+    images.insert("1cat".to_string(), (0..8).map(|i| ds1.image(i).to_vec()).collect::<Vec<_>>());
+    images.insert("10cat".to_string(), (0..8).map(|i| ds10.image(i).to_vec()).collect::<Vec<_>>());
+    let cfg = LoadConfig {
+        conns: 2,
+        requests: 16,
+        mix: parse_mix("1cat:bitplane=0.5,10cat:opt=0.5").unwrap(),
+        mode: LoadMode::Closed { inflight: 4 },
+        deadline_us: None,
+        low_frac: 0.0,
+        seed: 3,
+    };
+    let load = run_load(&addr, &cfg, &images).unwrap();
+    assert_eq!(load.sent, 16);
+    assert_eq!(load.lost, 0, "every request answered");
+    assert!(load.conserved());
+    assert_eq!(load.ok, 16, "an unloaded server completes everything");
+
+    let rows = load.bench_rows();
+    for want in [
+        "net_load_fleet",
+        "net_load_1cat",
+        "net_load_10cat",
+        "gateway_1cat_p50_us",
+        "gateway_1cat_p99_us",
+        "gateway_10cat_p50_us",
+        "gateway_10cat_p99_us",
+        "net_load_unanswered",
+    ] {
+        assert!(rows.iter().any(|r| r.name == want), "missing bench row {want}");
+    }
+
+    let report = srv.shutdown().unwrap();
+    assert!(report.conserved(), "server ledger broken under generated load");
+    assert_eq!(report.completed, 16);
+    assert_eq!(report.models.len(), 2);
 }
