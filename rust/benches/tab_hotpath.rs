@@ -4,6 +4,10 @@
 //!   * golden conv layer vs nn::opt fused conv vs nn::bitplane popcount
 //!     conv (oracle vs both fast engines),
 //!   * full forward golden vs nn::opt vs nn::bitplane on both nets,
+//!   * SIMD kernel tiers: scalar reference vs every dispatchable tier on
+//!     the popcount hot kernels, plus per-engine scalar-vs-active-tier
+//!     forward ratios (`scalar_vs_simd_*` rows; speedup is stored in
+//!     mean_s/min_s, computed from best-of times),
 //!   * ISS retirement rate (scalar-baseline measurement speed),
 //!   * dense DotSel op,
 //!   * full-schedule execution overhead (ops/s through the sequencer).
@@ -16,15 +20,31 @@ use tinbinn::compiler::lower::{compile, InputMode};
 use tinbinn::isa::asm::Asm;
 use tinbinn::isa::cpu::{Cpu, FlatMem};
 use tinbinn::lve::{Lve, VectorOp};
-use tinbinn::model::weights::random_params;
+use tinbinn::model::weights::{random_params, LayerParams};
 use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
 use tinbinn::nn::bitplane::{conv3x3_bitplane, BitplaneModel};
 use tinbinn::nn::layers::{conv3x3_binary, Tensor3};
 use tinbinn::nn::opt::{conv3x3_requant, OptModel, Scratch};
-use tinbinn::nn::pack::PackedLayer;
+use tinbinn::nn::pack::{pack_planes, PackedLayer};
+use tinbinn::nn::simd::{Kernels, KernelTier};
 use tinbinn::report::bench;
 use tinbinn::soc::Board;
 use tinbinn::util::Rng64;
+
+/// Speedup row: `base` time over `fast` time, computed from best-of
+/// (min) samples so one scheduler hiccup can't sink a CI gate. The
+/// ratio is stored in mean_s AND min_s (these rows are ratios, not
+/// times).
+fn ratio_row(name: &str, base: &bench::BenchResult, fast: &bench::BenchResult) -> bench::BenchResult {
+    let ratio = base.min_s / fast.min_s;
+    bench::BenchResult {
+        name: name.to_string(),
+        iters: fast.iters,
+        mean_s: ratio,
+        stddev_s: 0.0,
+        min_s: ratio,
+    }
+}
 
 fn main() {
     println!("== tab_hotpath: per-layer inner-loop microbenchmarks ==");
@@ -63,12 +83,13 @@ fn main() {
         println!("   -> {:.0} M MAC/s golden", macs / r_gold.mean_s / 1e6);
 
         let pl = PackedLayer::prepare(p).unwrap();
+        let kern = Kernels::active().unwrap();
         let src: Vec<i32> = img.iter().map(|&b| b as i32).collect();
         let mut win = vec![0i32; 9 * 48];
         let mut cols = vec![0i32; 32];
         let mut dst = vec![0i32; 32 * 32 * 48];
         let r_opt = bench::run("opt_conv_48to48_32x32", 1, 10, || {
-            conv3x3_requant(&src, 32, 32, 48, &pl, &mut win, &mut cols, &mut dst);
+            conv3x3_requant(&src, 32, 32, 48, &pl, &mut win, &mut cols, &mut dst, &kern);
             std::hint::black_box(&dst);
         });
         println!(
@@ -78,7 +99,7 @@ fn main() {
         );
         let mut planes = vec![0u32; 8 * pl.kw];
         let r_bp = bench::run("bitplane_conv_48to48_32x32", 1, 10, || {
-            conv3x3_bitplane(&src, 32, 32, 48, &pl, &mut win, &mut planes, &mut dst);
+            conv3x3_bitplane(&src, 32, 32, 48, &pl, &mut win, &mut planes, &mut dst, &kern);
             std::hint::black_box(&dst);
         });
         println!(
@@ -134,6 +155,157 @@ fn main() {
             suite.push(r_opt);
             suite.push(r_bp);
         }
+    }
+
+    // L3c2: SIMD kernel tiers — the scalar reference vs every tier the
+    // host can dispatch, on the three popcount hot kernels (conv-sized
+    // K = 9*48, 48 output rows per timed pass), plus per-engine
+    // scalar-vs-active forward ratios on the 10cat net. The
+    // `scalar_vs_simd_*` rows carry the measured speedup (CI gates them
+    // at >= 1.0); the per-tier `kernel_*_<tier>` rows are raw times.
+    {
+        println!("-- SIMD kernel tiers ({}) --", tinbinn::nn::simd::describe_host().replace('\n', "; "));
+        let mut rng = Rng64::new(8);
+        let k_in = 9 * 48;
+        let n_out = 48;
+        let kw = (k_in + 31) / 32;
+        let p = LayerParams {
+            k_in,
+            n_out,
+            words: (0..n_out * kw).map(|_| rng.next_u32()).collect(),
+            bias: vec![0; n_out],
+            shift: 0,
+        };
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let vals: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+        let mut planes = vec![0u32; 8 * pl.kw];
+        pack_planes(&vals, &mut planes);
+        let scalar = Kernels::scalar();
+        let pops = (scalar.plane_popcounts)(&planes);
+
+        // time one tier's three kernels (a pass over all rows per iter)
+        let time_tier = |k: &Kernels| {
+            let t = k.tier.name();
+            // correctness gate before timing: every tier must match the
+            // scalar reference on this input
+            assert_eq!((k.plane_popcounts)(&planes), pops, "{t} plane_popcounts diverged");
+            for n in 0..n_out {
+                assert_eq!(
+                    (k.plus_sum)(pl.row(n), &vals),
+                    (scalar.plus_sum)(pl.row(n), &vals),
+                    "{t} plus_sum diverged on row {n}"
+                );
+                assert_eq!(
+                    (k.bitplane_dot)(pl.row(n), &planes, &pops),
+                    (scalar.bitplane_dot)(pl.row(n), &planes, &pops),
+                    "{t} bitplane_dot diverged on row {n}"
+                );
+            }
+            let r_ps = bench::run(&format!("kernel_plus_sum_{t}"), 20, 400, || {
+                let mut acc = 0i32;
+                for n in 0..n_out {
+                    acc = acc.wrapping_add((k.plus_sum)(pl.row(n), &vals));
+                }
+                std::hint::black_box(acc);
+            });
+            let r_pp = bench::run(&format!("kernel_plane_popcounts_{t}"), 20, 400, || {
+                for _ in 0..n_out {
+                    std::hint::black_box((k.plane_popcounts)(&planes));
+                }
+            });
+            let r_bd = bench::run(&format!("kernel_bitplane_dot_{t}"), 20, 400, || {
+                let mut acc = 0i32;
+                for n in 0..n_out {
+                    acc = acc.wrapping_add((k.bitplane_dot)(pl.row(n), &planes, &pops));
+                }
+                std::hint::black_box(acc);
+            });
+            (r_ps, r_pp, r_bd)
+        };
+
+        let (s_ps, s_pp, s_bd) = time_tier(&scalar);
+        suite.push(s_ps.clone());
+        suite.push(s_pp.clone());
+        suite.push(s_bd.clone());
+        let active = Kernels::active().unwrap();
+        for tier in KernelTier::available() {
+            if tier == KernelTier::Scalar {
+                continue;
+            }
+            let k = Kernels::for_tier(tier).unwrap();
+            let (r_ps, r_pp, r_bd) = time_tier(&k);
+            // informational per-tier speedup rows
+            suite.push(ratio_row(&format!("scalar_vs_simd_plus_sum_{tier}"), &s_ps, &r_ps));
+            suite.push(ratio_row(&format!("scalar_vs_simd_plane_popcounts_{tier}"), &s_pp, &r_pp));
+            suite.push(ratio_row(&format!("scalar_vs_simd_bitplane_dot_{tier}"), &s_bd, &r_bd));
+            if tier == active.tier {
+                // the fixed-name rows CI gates at >= 1.0: scalar vs the
+                // tier dispatch actually selects on this host
+                suite.push(ratio_row("scalar_vs_simd_plus_sum", &s_ps, &r_ps));
+                suite.push(ratio_row("scalar_vs_simd_plane_popcounts", &s_pp, &r_pp));
+                suite.push(ratio_row("scalar_vs_simd_bitplane_dot", &s_bd, &r_bd));
+            }
+            suite.push(r_ps);
+            suite.push(r_pp);
+            suite.push(r_bd);
+        }
+        if active.tier == KernelTier::Scalar {
+            // degenerate host: active == scalar, the gated rows are 1.0
+            suite.push(ratio_row("scalar_vs_simd_plus_sum", &s_ps, &s_ps));
+            suite.push(ratio_row("scalar_vs_simd_plane_popcounts", &s_pp, &s_pp));
+            suite.push(ratio_row("scalar_vs_simd_bitplane_dot", &s_bd, &s_bd));
+        }
+
+        // per-engine forward ratio on the 10cat net: scalar-pinned model
+        // vs the active-tier model (identical outputs asserted first)
+        let np = random_params(&reduced_10cat(), 5);
+        let mut rng = Rng64::new(9);
+        let img: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.next_u8()).collect();
+        let opt_scalar = OptModel::with_tier(&np, KernelTier::Scalar).unwrap();
+        let opt_active = OptModel::new(&np).unwrap();
+        let mut scratch = Scratch::new();
+        assert_eq!(
+            opt_scalar.forward(&img, &mut scratch).unwrap(),
+            opt_active.forward(&img, &mut scratch).unwrap(),
+            "opt engine tiers diverged"
+        );
+        let r_s = bench::run("opt_forward_10cat_scalar", 1, 10, || {
+            std::hint::black_box(opt_scalar.forward(&img, &mut scratch).unwrap());
+        });
+        let r_a = bench::run(&format!("opt_forward_10cat_{}", opt_active.tier()), 1, 10, || {
+            std::hint::black_box(opt_active.forward(&img, &mut scratch).unwrap());
+        });
+        suite.push(ratio_row("scalar_vs_simd_opt_forward_10cat", &r_s, &r_a));
+        println!(
+            "   -> opt forward 10cat: {:.2}x ({} tier vs scalar)",
+            r_s.min_s / r_a.min_s,
+            opt_active.tier()
+        );
+        suite.push(r_s);
+        suite.push(r_a);
+
+        let bp_scalar = BitplaneModel::with_tier(&np, KernelTier::Scalar).unwrap();
+        let bp_active = BitplaneModel::new(&np).unwrap();
+        let mut bp_scratch = tinbinn::nn::bitplane::Scratch::new();
+        assert_eq!(
+            bp_scalar.forward(&img, &mut bp_scratch).unwrap(),
+            bp_active.forward(&img, &mut bp_scratch).unwrap(),
+            "bitplane engine tiers diverged"
+        );
+        let r_s = bench::run("bitplane_forward_10cat_scalar", 1, 10, || {
+            std::hint::black_box(bp_scalar.forward(&img, &mut bp_scratch).unwrap());
+        });
+        let r_a = bench::run(&format!("bitplane_forward_10cat_{}", bp_active.tier()), 1, 10, || {
+            std::hint::black_box(bp_active.forward(&img, &mut bp_scratch).unwrap());
+        });
+        suite.push(ratio_row("scalar_vs_simd_bitplane_forward_10cat", &r_s, &r_a));
+        println!(
+            "   -> bitplane forward 10cat: {:.2}x ({} tier vs scalar)",
+            r_s.min_s / r_a.min_s,
+            bp_active.tier()
+        );
+        suite.push(r_s);
+        suite.push(r_a);
     }
 
     // L3d: ISS retirement rate

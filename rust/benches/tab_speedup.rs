@@ -23,10 +23,25 @@ use tinbinn::model::weights::{load_tbw, random_params};
 use tinbinn::model::zoo::{reduced_10cat, tiny_1cat};
 use tinbinn::nn::bitplane::BitplaneModel;
 use tinbinn::nn::opt::{OptModel, Scratch};
+use tinbinn::nn::KernelTier;
 use tinbinn::report::bench;
 use tinbinn::runtime::artifacts_dir;
 use tinbinn::soc::Board;
 use tinbinn::util::Rng64;
+
+/// Speedup row: how much faster `fast` ran than `base`, from best-of
+/// (`min_s`) times so CI noise cannot flip the ratio. Stored in both
+/// `mean_s` and `min_s` so downstream tooling reads either field.
+fn ratio_row(name: &str, base: &bench::BenchResult, fast: &bench::BenchResult) -> bench::BenchResult {
+    let ratio = base.min_s / fast.min_s.max(1e-12);
+    bench::BenchResult {
+        name: name.to_string(),
+        iters: fast.iters,
+        mean_s: ratio,
+        stddev_s: 0.0,
+        min_s: ratio,
+    }
+}
 
 /// Serve `n_frames` random frames through `serve_parallel` on a pool of
 /// `workers` backends and record the result as a throughput row:
@@ -113,8 +128,36 @@ fn main() {
             r_gold.mean_s / r_bp.mean_s
         );
         suite.push(r_gold);
+
+        // scalar-pinned engines vs the auto-detected SIMD tier: the
+        // per-engine speedup the kernel dispatch buys on this host
+        let sc_model = OptModel::with_tier(&np, KernelTier::Scalar).unwrap();
+        let sc_bp = BitplaneModel::with_tier(&np, KernelTier::Scalar).unwrap();
+        let mut sc_scratch = Scratch::new();
+        let mut sc_bp_scratch = tinbinn::nn::bitplane::Scratch::new();
+        assert_eq!(golden, sc_model.forward(&img, &mut sc_scratch).unwrap());
+        assert_eq!(golden, sc_bp.forward(&img, &mut sc_bp_scratch).unwrap());
+        let r_opt_sc = bench::bench(&format!("opt_forward_{task}_scalar"), 1, 8, || {
+            std::hint::black_box(sc_model.forward(&img, &mut sc_scratch).unwrap());
+        });
+        let r_bp_sc = bench::bench(&format!("bitplane_forward_{task}_scalar"), 1, 8, || {
+            std::hint::black_box(sc_bp.forward(&img, &mut sc_bp_scratch).unwrap());
+        });
+        let opt_ratio = ratio_row(&format!("scalar_vs_simd_opt_forward_{task}"), &r_opt_sc, &r_opt);
+        let bp_ratio =
+            ratio_row(&format!("scalar_vs_simd_bitplane_forward_{task}"), &r_bp_sc, &r_bp);
+        println!(
+            "{task}: scalar-vs-{} kernels: opt {:.2}x, bitplane {:.2}x",
+            model.tier(),
+            opt_ratio.min_s,
+            bp_ratio.min_s
+        );
         suite.push(r_opt);
         suite.push(r_bp);
+        suite.push(r_opt_sc);
+        suite.push(r_bp_sc);
+        suite.push(opt_ratio);
+        suite.push(bp_ratio);
     }
     println!();
 

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   report     regenerate the paper's tables/figures (E1..E10)
+//!   info       detected CPU features + selected SIMD kernel tier
 //!   sim        run one overlay inference with a per-layer cycle table
 //!   eval       classify a .tbd dataset on a chosen backend
 //!   serve      threaded serving demo with dynamic batching — or, with
@@ -33,6 +34,8 @@ fn usage() -> ! {
          commands:\n\
            report [--all|--ops|--accuracy|--timing|--speedup|--resources|--power|--fig4|--train]\n\
                   [--limit N]            accuracy sample size (default 200)\n\
+           info    detected CPU features + the SIMD kernel tier the fast\n\
+                   engines will select (see env below)\n\
            sim     [--task 10cat|1cat]   one overlay inference + layer table\n\
            eval    [--task T] [--backend overlay|golden|opt|bitplane|pjrt] [--limit N]\n\
            serve   [--task T] [--frames N] [--batch B] [--wait-us U]\n\
@@ -64,7 +67,8 @@ fn usage() -> ! {
                     TBD dataset — then the cross-engine bit-exact acceptance gate;\n\
                     exits nonzero if engines diverge or accuracy < --min-acc)\n\
          \n\
-         env: TINBINN_ARTIFACTS overrides the artifacts directory"
+         env: TINBINN_ARTIFACTS overrides the artifacts directory\n\
+              TINBINN_SIMD forces a kernel tier (scalar|portable|avx2|neon)"
     );
     std::process::exit(2);
 }
@@ -146,6 +150,15 @@ impl Args {
     }
 }
 
+/// One-line SIMD context for backend error messages, so users can tell
+/// which kernel tier the CPU engines would have run with.
+fn active_tier_note() -> String {
+    match tinbinn::nn::Kernels::active() {
+        Ok(k) => format!("(CPU engines would use SIMD kernel tier: {})", k.tier),
+        Err(e) => format!("(SIMD kernel tier unresolved: {e})"),
+    }
+}
+
 fn ncat_for(task: &str) -> usize {
     if task == "10cat" {
         10
@@ -194,6 +207,9 @@ fn real_main() -> tinbinn::Result<()> {
             if all || args.flag("--train") {
                 print!("{}", tables::report_train(&dir)?);
             }
+        }
+        "info" => {
+            println!("{}", tinbinn::nn::simd::describe_host());
         }
         "sim" => {
             let task = args.opt("--task").unwrap_or_else(|| "10cat".into());
@@ -273,8 +289,11 @@ fn real_main() -> tinbinn::Result<()> {
                     }
                 }
                 other => {
-                    eprintln!("unknown backend {other}");
-                    usage();
+                    eprintln!(
+                        "unknown backend '{other}' for eval (valid: golden|opt|bitplane|overlay|pjrt)"
+                    );
+                    eprintln!("{}", active_tier_note());
+                    std::process::exit(2);
                 }
             }
             println!(
@@ -328,10 +347,15 @@ fn real_main() -> tinbinn::Result<()> {
                     let (report, _pool) = serve_parallel(frames, pool?, policy)?;
                     (report, format!("nn-bitplane x{}", workers.max(1)))
                 }
-                _ => {
+                "pjrt" => {
                     let rt = ModelRuntime::load(&dir, &task, ncat_for(&task))?;
                     let (report, be) = serve_threaded(frames, PjrtBackend { rt }, policy)?;
                     (report, be.name().to_string())
+                }
+                other => {
+                    eprintln!("unknown backend '{other}' for serve (valid: pjrt|opt|bitplane)");
+                    eprintln!("{}", active_tier_note());
+                    std::process::exit(2);
                 }
             };
             let lat = report.latency.unwrap_or_default();

@@ -21,12 +21,18 @@
 //! ([`crate::nn::layers`]), pinned by the differential proptests in
 //! `nn/proptests.rs`; zero allocations in steady state via a reusable
 //! [`Scratch`] arena. Stage compilation and validation are shared with
-//! [`OptModel`] — one compiled form, three engines.
+//! [`OptModel`] — one compiled form, three engines — and so is the
+//! [`crate::nn::simd::Kernels`] dispatch table: the AND+popcount
+//! reductions go through whichever SIMD tier the compiled model
+//! resolved (`TINBINN_SIMD` override or auto-detect). Batched forwards
+//! run image-major in blocks of [`crate::nn::opt::BATCH_BLOCK`], one
+//! packed-weight fetch per stage per block.
 
 use crate::model::NetParams;
 use crate::nn::layers::quant_scalar;
-use crate::nn::opt::{gather_window, maxpool2_into, OptModel, Stage};
-use crate::nn::pack::{bitplane_dot, pack_planes, plane_popcounts, PackedLayer};
+use crate::nn::opt::{gather_window, maxpool2_into, OptModel, Stage, BATCH_BLOCK};
+use crate::nn::pack::{pack_planes, PackedLayer};
+use crate::nn::simd::{Kernels, KernelTier};
 use crate::util::TinError;
 use crate::Result;
 
@@ -52,13 +58,16 @@ impl Scratch {
         Scratch::default()
     }
 
-    fn ensure(&mut self, model: &BitplaneModel) {
+    /// Grow to hold `batch` images' ping/pong maps (one `buf_elems`
+    /// stride per image). Grow-only.
+    fn ensure(&mut self, model: &BitplaneModel, batch: usize) {
         let m = &model.compiled;
-        if self.ping.len() < m.buf_elems {
-            self.ping.resize(m.buf_elems, 0);
+        let need = m.buf_elems * batch.max(1);
+        if self.ping.len() < need {
+            self.ping.resize(need, 0);
         }
-        if self.pong.len() < m.buf_elems {
-            self.pong.resize(m.buf_elems, 0);
+        if self.pong.len() < need {
+            self.pong.resize(need, 0);
         }
         if self.win.len() < m.win_elems {
             self.win.resize(m.win_elems, 0);
@@ -71,9 +80,20 @@ impl Scratch {
 
 impl BitplaneModel {
     /// Prepare a network: same validation and packing as
-    /// [`OptModel::new`].
+    /// [`OptModel::new`], same kernel-tier resolution.
     pub fn new(np: &NetParams) -> Result<Self> {
         Ok(BitplaneModel { compiled: OptModel::new(np)? })
+    }
+
+    /// Prepare a network pinned to a specific kernel tier (errors if the
+    /// host can't run it).
+    pub fn with_tier(np: &NetParams, tier: KernelTier) -> Result<Self> {
+        Ok(BitplaneModel { compiled: OptModel::with_tier(np, tier)? })
+    }
+
+    /// Kernel tier this model dispatches to.
+    pub fn tier(&self) -> KernelTier {
+        self.compiled.tier()
     }
 
     /// Output category count (SVM head width).
@@ -96,18 +116,49 @@ impl BitplaneModel {
         scratch: &mut Scratch,
         scores: &mut Vec<i32>,
     ) -> Result<()> {
-        let (h0, w0, c0) = self.compiled.input_hwc;
-        if image.len() != h0 * w0 * c0 {
-            return Err(TinError::Config(format!(
-                "image len {} != {h0}x{w0}x{c0}",
-                image.len()
-            )));
+        // Single image = a block of one; the buffer is moved in and out
+        // so its allocation is still reused across calls.
+        let mut block = [std::mem::take(scores)];
+        let res = self.forward_block(&[image], scratch, &mut block);
+        *scores = std::mem::take(&mut block[0]);
+        res
+    }
+
+    /// Run one block of images through every stage image-major: all
+    /// images advance one stage at a time so the stage's packed weights
+    /// are fetched once per block (same layout as the opt engine's
+    /// block forward). `out.len()` must equal `images.len()`.
+    fn forward_block(
+        &self,
+        images: &[&[u8]],
+        scratch: &mut Scratch,
+        out: &mut [Vec<i32>],
+    ) -> Result<()> {
+        debug_assert_eq!(images.len(), out.len());
+        let nb = images.len();
+        if nb == 0 {
+            return Ok(());
         }
-        scratch.ensure(self);
-        for (dst, &b) in scratch.ping.iter_mut().zip(image.iter()) {
-            *dst = b as i32;
+        let (h0, w0, c0) = self.compiled.input_hwc;
+        let in_len = h0 * w0 * c0;
+        for image in images {
+            if image.len() != in_len {
+                return Err(TinError::Config(format!(
+                    "image len {} != {h0}x{w0}x{c0}",
+                    image.len()
+                )));
+            }
+        }
+        scratch.ensure(self, nb);
+        let stride = self.compiled.buf_elems;
+        for (i, image) in images.iter().enumerate() {
+            let ping = &mut scratch.ping[i * stride..i * stride + in_len];
+            for (dst, &b) in ping.iter_mut().zip(image.iter()) {
+                *dst = b as i32;
+            }
         }
 
+        let k = &self.compiled.kernels;
         let mut src_is_ping = true;
         for stage in &self.compiled.stages {
             let Scratch { ping, pong, win, planes } = &mut *scratch;
@@ -118,32 +169,60 @@ impl BitplaneModel {
             };
             match stage {
                 Stage::Conv { p, h, w, cin } => {
-                    conv3x3_bitplane(
-                        &src[..h * w * cin],
-                        *h,
-                        *w,
-                        *cin,
-                        p,
-                        &mut win[..9 * cin],
-                        &mut planes[..8 * p.kw],
-                        &mut dst[..h * w * p.n_out],
-                    );
+                    for i in 0..nb {
+                        conv3x3_bitplane(
+                            &src[i * stride..i * stride + h * w * cin],
+                            *h,
+                            *w,
+                            *cin,
+                            p,
+                            &mut win[..9 * cin],
+                            &mut planes[..8 * p.kw],
+                            &mut dst[i * stride..i * stride + h * w * p.n_out],
+                            k,
+                        );
+                    }
                 }
                 Stage::Pool { h, w, c } => {
-                    maxpool2_into(&src[..h * w * c], *h, *w, *c, &mut dst[..(h / 2) * (w / 2) * c]);
+                    for i in 0..nb {
+                        maxpool2_into(
+                            &src[i * stride..i * stride + h * w * c],
+                            *h,
+                            *w,
+                            *c,
+                            &mut dst[i * stride..i * stride + (h / 2) * (w / 2) * c],
+                        );
+                    }
                 }
                 Stage::Dense(p) => {
-                    dense_bitplane(&src[..p.k_in], p, &mut planes[..8 * p.kw], &mut dst[..p.n_out]);
-                    for (v, &b) in dst[..p.n_out].iter_mut().zip(p.bias.iter()) {
-                        *v = quant_scalar(*v, b, p.shift);
+                    for i in 0..nb {
+                        let d = &mut dst[i * stride..i * stride + p.n_out];
+                        dense_bitplane(
+                            &src[i * stride..i * stride + p.k_in],
+                            p,
+                            &mut planes[..8 * p.kw],
+                            d,
+                            k,
+                        );
+                        for (v, &b) in d.iter_mut().zip(p.bias.iter()) {
+                            *v = quant_scalar(*v, b, p.shift);
+                        }
                     }
                 }
                 Stage::Svm(p) => {
-                    scores.clear();
-                    scores.resize(p.n_out, 0);
-                    dense_bitplane(&src[..p.k_in], p, &mut planes[..8 * p.kw], &mut scores[..]);
-                    for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
-                        *v = v.wrapping_add(b);
+                    for (i, scores) in out.iter_mut().enumerate() {
+                        scores.clear();
+                        scores.resize(p.n_out, 0);
+                        dense_bitplane(
+                            &src[i * stride..i * stride + p.k_in],
+                            p,
+                            &mut planes[..8 * p.kw],
+                            &mut scores[..],
+                            k,
+                        );
+                        for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
+                            *v = v.wrapping_add(b);
+                        }
                     }
                     return Ok(());
                 }
@@ -155,7 +234,8 @@ impl BitplaneModel {
 
     /// Batched forward pass: one score vector per image, reusing the
     /// inner vectors of `out` across calls — zero steady-state
-    /// allocations once the buffers have grown.
+    /// allocations once the buffers have grown. Images run in
+    /// image-major blocks of [`BATCH_BLOCK`].
     pub fn forward_batch_into(
         &self,
         images: &[&[u8]],
@@ -166,8 +246,8 @@ impl BitplaneModel {
         while out.len() < images.len() {
             out.push(Vec::new());
         }
-        for (img, scores) in images.iter().zip(out.iter_mut()) {
-            self.forward_into(img, scratch, scores)?;
+        for (block, outs) in images.chunks(BATCH_BLOCK).zip(out.chunks_mut(BATCH_BLOCK)) {
+            self.forward_block(block, scratch, outs)?;
         }
         Ok(())
     }
@@ -195,7 +275,9 @@ pub fn forward(np: &NetParams, image: &[u8]) -> Result<Vec<i32>> {
 /// 8 bit-planes, and every output channel consumes the planes with
 /// word-wide AND+popcount. `win` must hold 9*c elements, `planes`
 /// 8*⌈9c/32⌉ words. `src` values must be in `0..=255` (see
-/// [`crate::nn::pack::pack_planes`]).
+/// [`crate::nn::pack::pack_planes`]). The popcount reductions go
+/// through the caller's [`Kernels`] table.
+#[allow(clippy::too_many_arguments)]
 pub fn conv3x3_bitplane(
     src: &[i32],
     h: usize,
@@ -205,6 +287,7 @@ pub fn conv3x3_bitplane(
     win: &mut [i32],
     planes: &mut [u32],
     dst: &mut [i32],
+    k: &Kernels,
 ) {
     assert_eq!(p.k_in, 9 * c, "conv K mismatch");
     assert_eq!(win.len(), 9 * c);
@@ -216,10 +299,10 @@ pub fn conv3x3_bitplane(
         for x in 0..w {
             gather_window(src, h, w, c, y, x, win);
             pack_planes(win, planes);
-            let pops = plane_popcounts(planes);
+            let pops = (k.plane_popcounts)(planes);
             let out_base = (y * w + x) * nout;
             for n in 0..nout {
-                let acc = bitplane_dot(p.row(n), planes, &pops);
+                let acc = (k.bitplane_dot)(p.row(n), planes, &pops);
                 dst[out_base + n] = quant_scalar(acc, p.bias[n], p.shift);
             }
         }
@@ -232,15 +315,22 @@ pub fn conv3x3_bitplane(
 /// [`crate::nn::layers::dense_binary`] for contract activations —
 /// `flat` values must be in `0..=255` (see
 /// [`crate::nn::pack::pack_planes`]; the golden dense accepts any i32,
-/// this kernel does not).
-pub fn dense_bitplane(flat: &[i32], p: &PackedLayer, planes: &mut [u32], out: &mut [i32]) {
+/// this kernel does not). The popcount reductions go through the
+/// caller's [`Kernels`] table.
+pub fn dense_bitplane(
+    flat: &[i32],
+    p: &PackedLayer,
+    planes: &mut [u32],
+    out: &mut [i32],
+    k: &Kernels,
+) {
     assert_eq!(flat.len(), p.k_in, "dense K mismatch");
     assert_eq!(planes.len(), 8 * p.kw);
     assert_eq!(out.len(), p.n_out);
     pack_planes(flat, planes);
-    let pops = plane_popcounts(planes);
+    let pops = (k.plane_popcounts)(planes);
     for (n, slot) in out.iter_mut().enumerate() {
-        *slot = bitplane_dot(p.row(n), planes, &pops);
+        *slot = (k.bitplane_dot)(p.row(n), planes, &pops);
     }
 }
 
@@ -306,7 +396,7 @@ mod tests {
         let mut win = vec![0i32; 9];
         let mut planes = vec![0u32; 8];
         let mut dst = vec![0i32; 9 * 2];
-        conv3x3_bitplane(&src, 3, 3, 1, &pl, &mut win, &mut planes, &mut dst);
+        conv3x3_bitplane(&src, 3, 3, 1, &pl, &mut win, &mut planes, &mut dst, &Kernels::scalar());
         assert_eq!(dst, golden.data);
     }
 
@@ -326,7 +416,7 @@ mod tests {
         let pl = PackedLayer::prepare(&p).unwrap();
         let mut planes = vec![0u32; 8 * 2];
         let mut out = vec![0i32; 3];
-        dense_bitplane(&flat, &pl, &mut planes, &mut out);
+        dense_bitplane(&flat, &pl, &mut planes, &mut out, &Kernels::scalar());
         assert_eq!(out, golden);
     }
 
@@ -351,13 +441,15 @@ mod tests {
         let model = BitplaneModel::new(&np).unwrap();
         let mut scratch = Scratch::new();
         let mut rng = Rng64::new(10);
-        let imgs: Vec<Vec<u8>> = (0..4)
+        // crosses the BATCH_BLOCK boundary (full block + partial block)
+        let n = BATCH_BLOCK + 3;
+        let imgs: Vec<Vec<u8>> = (0..n)
             .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
             .collect();
         let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
         let mut out = Vec::new();
         model.forward_batch_into(&refs, &mut scratch, &mut out).unwrap();
-        assert_eq!(out.len(), 4);
+        assert_eq!(out.len(), n);
         for (img, scores) in imgs.iter().zip(&out) {
             assert_eq!(scores, &model.forward(img, &mut scratch).unwrap());
             assert_eq!(scores, &layers::forward(&np, img).unwrap());

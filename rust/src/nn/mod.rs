@@ -14,7 +14,12 @@
 //!   Shares stage compilation with [`opt`]; bit-exact with the golden
 //!   model under the same differential-proptest contract.
 //! * [`pack`] — packed-weight preparation and the bit-plane/popcount
-//!   primitives shared by both fast engines.
+//!   primitives shared by both fast engines (the **scalar reference
+//!   tier** of the kernel dispatch).
+//! * [`simd`] — runtime-dispatched SIMD tiers (AVX2 / NEON / portable)
+//!   for the popcount hot kernels, resolved once per compiled model via
+//!   a [`Kernels`] table and overridable with `TINBINN_SIMD`. Every
+//!   tier is pinned bit-exact to the scalar reference by `proptests`.
 //!
 //! Numeric contract (DESIGN.md): u8 activations, ±1 weights, i32
 //! accumulation, per-channel i32 bias, per-layer round-half-up right
@@ -28,11 +33,13 @@ pub mod grouped;
 pub mod layers;
 pub mod opt;
 pub mod pack;
+pub mod simd;
 
 pub use bitplane::BitplaneModel;
 pub use layers::{conv3x3_binary, dense_binary, forward, maxpool2, quant_act, Tensor3};
 pub use opt::{OptModel, Scratch};
 pub use pack::PackedLayer;
+pub use simd::{Kernels, KernelTier};
 
 #[cfg(test)]
 mod proptests;

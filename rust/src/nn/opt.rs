@@ -19,6 +19,15 @@
 //! * **Zero per-layer allocations.** A reusable [`Scratch`] arena holds
 //!   the ping/pong feature maps and the window buffer; a full
 //!   [`OptModel::forward`] allocates only the returned score vector.
+//! * **SIMD-dispatched kernels.** The Σ₊ / popcount primitives go
+//!   through a [`crate::nn::simd::Kernels`] table resolved once at
+//!   model compile (AVX2 / NEON / portable / scalar, overridable with
+//!   `TINBINN_SIMD`), so the hot loops run at the host's native logic
+//!   width while staying bit-exact with the scalar reference.
+//! * **Image-major batched forward.** [`OptModel::forward_batch_into`]
+//!   advances a block of [`BATCH_BLOCK`] images one stage at a time, so
+//!   each stage's packed weights are fetched once per block instead of
+//!   once per image.
 //!
 //! The golden model stays the obvious oracle; `nn/proptests.rs` pins the
 //! two together over randomized shapes, weights and images. Perf work
@@ -27,9 +36,15 @@
 use crate::model::zoo::Layer;
 use crate::model::NetParams;
 use crate::nn::layers::quant_scalar;
-use crate::nn::pack::{plus_sum, PackedLayer};
+use crate::nn::pack::PackedLayer;
+use crate::nn::simd::{Kernels, KernelTier};
 use crate::util::TinError;
 use crate::Result;
+
+/// Images per block of the image-major batched forward: small enough
+/// that a block's ping/pong maps stay cache-resident, large enough to
+/// amortize each stage's packed-weight fetch across the block.
+pub const BATCH_BLOCK: usize = 8;
 
 /// One compiled stage of the fast path. Crate-visible so the
 /// bit-plane engine ([`crate::nn::bitplane`]) can reuse the compiled
@@ -56,6 +71,8 @@ pub struct OptModel {
     /// buffer sizing).
     pub(crate) kw_max: usize,
     pub(crate) ncat: usize,
+    /// Hot-kernel dispatch table, resolved once at model compile.
+    pub(crate) kernels: Kernels,
 }
 
 /// Reusable scratch arena: two feature-map buffers (ping/pong), the
@@ -75,12 +92,16 @@ impl Scratch {
         Scratch::default()
     }
 
-    fn ensure(&mut self, model: &OptModel) {
-        if self.ping.len() < model.buf_elems {
-            self.ping.resize(model.buf_elems, 0);
+    /// Grow to hold `batch` images' ping/pong maps (one `buf_elems`
+    /// stride per image). Grow-only, so steady-state batched serving
+    /// never reallocates.
+    fn ensure(&mut self, model: &OptModel, batch: usize) {
+        let need = model.buf_elems * batch.max(1);
+        if self.ping.len() < need {
+            self.ping.resize(need, 0);
         }
-        if self.pong.len() < model.buf_elems {
-            self.pong.resize(model.buf_elems, 0);
+        if self.pong.len() < need {
+            self.pong.resize(need, 0);
         }
         if self.win.len() < model.win_elems {
             self.win.resize(model.win_elems, 0);
@@ -92,10 +113,28 @@ impl Scratch {
 }
 
 impl OptModel {
+    /// Prepare a network with the host's active kernel tier
+    /// (`TINBINN_SIMD` override if set, best detected tier otherwise).
+    pub fn new(np: &NetParams) -> Result<Self> {
+        Self::with_kernels(np, Kernels::active()?)
+    }
+
+    /// Prepare a network pinned to a specific kernel tier (errors if the
+    /// host can't run it). Used by the differential tests and the
+    /// `scalar_vs_simd` benches.
+    pub fn with_tier(np: &NetParams, tier: KernelTier) -> Result<Self> {
+        Self::with_kernels(np, Kernels::for_tier(tier)?)
+    }
+
+    /// Kernel tier this model dispatches to.
+    pub fn tier(&self) -> KernelTier {
+        self.kernels.tier
+    }
+
     /// Prepare a network: validates every layer's parameters (shift
     /// range, word/bias geometry, K against the feature-map geometry)
     /// and tail-masks the packed rows.
-    pub fn new(np: &NetParams) -> Result<Self> {
+    pub fn with_kernels(np: &NetParams, kernels: Kernels) -> Result<Self> {
         let (h0, w0, c0) = np.net.input_hwc;
         let (mut h, mut w, mut c) = (h0, w0, c0);
         let mut stages = Vec::new();
@@ -175,6 +214,7 @@ impl OptModel {
             conv_w_max,
             kw_max,
             ncat,
+            kernels,
         })
     }
 
@@ -199,18 +239,51 @@ impl OptModel {
         scratch: &mut Scratch,
         scores: &mut Vec<i32>,
     ) -> Result<()> {
-        let (h0, w0, c0) = self.input_hwc;
-        if image.len() != h0 * w0 * c0 {
-            return Err(TinError::Config(format!(
-                "image len {} != {h0}x{w0}x{c0}",
-                image.len()
-            )));
+        // Single image = a block of one; the buffer is moved in and out
+        // so its allocation is still reused across calls.
+        let mut block = [std::mem::take(scores)];
+        let res = self.forward_block(&[image], scratch, &mut block);
+        *scores = std::mem::take(&mut block[0]);
+        res
+    }
+
+    /// Run one block of images through every stage image-major: all
+    /// images advance one stage at a time, so the stage's packed weights
+    /// are fetched once per block instead of once per image. Per-image
+    /// compute is identical to the single-image path — only the loop
+    /// order over images changes — so bit-exactness is preserved by
+    /// construction. `out.len()` must equal `images.len()`.
+    fn forward_block(
+        &self,
+        images: &[&[u8]],
+        scratch: &mut Scratch,
+        out: &mut [Vec<i32>],
+    ) -> Result<()> {
+        debug_assert_eq!(images.len(), out.len());
+        let nb = images.len();
+        if nb == 0 {
+            return Ok(());
         }
-        scratch.ensure(self);
-        for (dst, &b) in scratch.ping.iter_mut().zip(image.iter()) {
-            *dst = b as i32;
+        let (h0, w0, c0) = self.input_hwc;
+        let in_len = h0 * w0 * c0;
+        for image in images {
+            if image.len() != in_len {
+                return Err(TinError::Config(format!(
+                    "image len {} != {h0}x{w0}x{c0}",
+                    image.len()
+                )));
+            }
+        }
+        scratch.ensure(self, nb);
+        let stride = self.buf_elems;
+        for (i, image) in images.iter().enumerate() {
+            let ping = &mut scratch.ping[i * stride..i * stride + in_len];
+            for (dst, &b) in ping.iter_mut().zip(image.iter()) {
+                *dst = b as i32;
+            }
         }
 
+        let k = &self.kernels;
         let mut src_is_ping = true;
         for stage in &self.stages {
             let Scratch { ping, pong, win, cols } = &mut *scratch;
@@ -221,32 +294,53 @@ impl OptModel {
             };
             match stage {
                 Stage::Conv { p, h, w, cin } => {
-                    conv3x3_requant(
-                        &src[..h * w * cin],
-                        *h,
-                        *w,
-                        *cin,
-                        p,
-                        &mut win[..9 * cin],
-                        &mut cols[..*w],
-                        &mut dst[..h * w * p.n_out],
-                    );
+                    for i in 0..nb {
+                        conv3x3_requant(
+                            &src[i * stride..i * stride + h * w * cin],
+                            *h,
+                            *w,
+                            *cin,
+                            p,
+                            &mut win[..9 * cin],
+                            &mut cols[..*w],
+                            &mut dst[i * stride..i * stride + h * w * p.n_out],
+                            k,
+                        );
+                    }
                 }
                 Stage::Pool { h, w, c } => {
-                    maxpool2_into(&src[..h * w * c], *h, *w, *c, &mut dst[..(h / 2) * (w / 2) * c]);
+                    for i in 0..nb {
+                        maxpool2_into(
+                            &src[i * stride..i * stride + h * w * c],
+                            *h,
+                            *w,
+                            *c,
+                            &mut dst[i * stride..i * stride + (h / 2) * (w / 2) * c],
+                        );
+                    }
                 }
                 Stage::Dense(p) => {
-                    dense_binary_fast(&src[..p.k_in], p, &mut dst[..p.n_out]);
-                    for (v, &b) in dst[..p.n_out].iter_mut().zip(p.bias.iter()) {
-                        *v = quant_scalar(*v, b, p.shift);
+                    for i in 0..nb {
+                        let d = &mut dst[i * stride..i * stride + p.n_out];
+                        dense_binary_fast(&src[i * stride..i * stride + p.k_in], p, d, k);
+                        for (v, &b) in d.iter_mut().zip(p.bias.iter()) {
+                            *v = quant_scalar(*v, b, p.shift);
+                        }
                     }
                 }
                 Stage::Svm(p) => {
-                    scores.clear();
-                    scores.resize(p.n_out, 0);
-                    dense_binary_fast(&src[..p.k_in], p, &mut scores[..]);
-                    for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
-                        *v = v.wrapping_add(b);
+                    for (i, scores) in out.iter_mut().enumerate() {
+                        scores.clear();
+                        scores.resize(p.n_out, 0);
+                        dense_binary_fast(
+                            &src[i * stride..i * stride + p.k_in],
+                            p,
+                            &mut scores[..],
+                            k,
+                        );
+                        for (v, &b) in scores.iter_mut().zip(p.bias.iter()) {
+                            *v = v.wrapping_add(b);
+                        }
                     }
                     return Ok(());
                 }
@@ -259,7 +353,8 @@ impl OptModel {
     /// Batched forward pass: one score vector per image, reusing the
     /// inner vectors of `out` across calls — zero steady-state
     /// allocations once the buffers have grown. `out` is resized to
-    /// `images.len()`.
+    /// `images.len()`. Images run in image-major blocks of
+    /// [`BATCH_BLOCK`] (see [`Self::forward_block`] for the layout).
     pub fn forward_batch_into(
         &self,
         images: &[&[u8]],
@@ -270,8 +365,8 @@ impl OptModel {
         while out.len() < images.len() {
             out.push(Vec::new());
         }
-        for (img, scores) in images.iter().zip(out.iter_mut()) {
-            self.forward_into(img, scratch, scores)?;
+        for (block, outs) in images.chunks(BATCH_BLOCK).zip(out.chunks_mut(BATCH_BLOCK)) {
+            self.forward_block(block, scratch, outs)?;
         }
         Ok(())
     }
@@ -343,7 +438,8 @@ pub fn gather_window(
 /// incrementally along each row: `cols[x]` holds the 3-row column sum,
 /// and stepping right exchanges one leaving column for one entering
 /// column — 3·C adds per pixel (amortized) instead of the 9·C full
-/// re-sum.
+/// re-sum. The Σ₊ walk goes through the caller's [`Kernels`] table.
+#[allow(clippy::too_many_arguments)]
 pub fn conv3x3_requant(
     src: &[i32],
     h: usize,
@@ -353,6 +449,7 @@ pub fn conv3x3_requant(
     win: &mut [i32],
     cols: &mut [i32],
     dst: &mut [i32],
+    k: &Kernels,
 ) {
     assert_eq!(p.k_in, 9 * c, "conv K mismatch");
     assert_eq!(win.len(), 9 * c);
@@ -383,7 +480,7 @@ pub fn conv3x3_requant(
             gather_window(src, h, w, c, y, x, win);
             let out_base = (y * w + x) * nout;
             for n in 0..nout {
-                let acc = 2 * plus_sum(p.row(n), win) - total;
+                let acc = 2 * (k.plus_sum)(p.row(n), win) - total;
                 dst[out_base + n] = quant_scalar(acc, p.bias[n], p.shift);
             }
             // slide: drop the leaving column, add the entering one
@@ -401,8 +498,9 @@ pub fn conv3x3_requant(
 
 /// Word-at-a-time binarized dense layer: raw i32 accumulators (bias NOT
 /// applied), walking packed rows without sign expansion. Bit-exact with
-/// [`crate::nn::layers::dense_binary`].
-pub fn dense_binary_fast(flat: &[i32], p: &PackedLayer, out: &mut [i32]) {
+/// [`crate::nn::layers::dense_binary`]. The Σ₊ walk goes through the
+/// caller's [`Kernels`] table.
+pub fn dense_binary_fast(flat: &[i32], p: &PackedLayer, out: &mut [i32], k: &Kernels) {
     assert_eq!(flat.len(), p.k_in, "dense K mismatch");
     assert_eq!(out.len(), p.n_out);
     let mut total = 0i32;
@@ -410,7 +508,7 @@ pub fn dense_binary_fast(flat: &[i32], p: &PackedLayer, out: &mut [i32]) {
         total += v;
     }
     for (n, slot) in out.iter_mut().enumerate() {
-        *slot = 2 * plus_sum(p.row(n), flat) - total;
+        *slot = 2 * (k.plus_sum)(p.row(n), flat) - total;
     }
 }
 
@@ -478,19 +576,23 @@ mod tests {
         let model = OptModel::new(&np).unwrap();
         let mut scratch = Scratch::new();
         let mut rng = Rng64::new(10);
-        let imgs: Vec<Vec<u8>> = (0..4)
+        // crosses the BATCH_BLOCK boundary (full block + partial block)
+        let n = BATCH_BLOCK + 3;
+        let imgs: Vec<Vec<u8>> = (0..n)
             .map(|_| (0..3072).map(|_| rng.next_u8()).collect())
             .collect();
         let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
         let mut out = Vec::new();
         model.forward_batch_into(&refs, &mut scratch, &mut out).unwrap();
-        assert_eq!(out.len(), 4);
+        assert_eq!(out.len(), n);
         for (img, scores) in imgs.iter().zip(&out) {
             assert_eq!(scores, &model.forward(img, &mut scratch).unwrap());
         }
         // a failing image mid-batch propagates the error
         let bad: &[u8] = &[0u8; 3];
         assert!(model.forward_batch(&[refs[0], bad], &mut scratch).is_err());
+        // empty batches are fine
+        assert_eq!(model.forward_batch(&[], &mut scratch).unwrap().len(), 0);
     }
 
     #[test]
@@ -541,7 +643,7 @@ mod tests {
         let mut win = vec![0i32; 9];
         let mut cols = vec![0i32; 3];
         let mut dst = vec![0i32; 9 * 2];
-        conv3x3_requant(&src, 3, 3, 1, &pl, &mut win, &mut cols, &mut dst);
+        conv3x3_requant(&src, 3, 3, 1, &pl, &mut win, &mut cols, &mut dst, &Kernels::scalar());
         assert_eq!(dst, golden.data);
     }
 
@@ -560,7 +662,7 @@ mod tests {
         let golden = layers::dense_binary(&flat, &p);
         let pl = PackedLayer::prepare(&p).unwrap();
         let mut out = vec![0i32; 3];
-        dense_binary_fast(&flat, &pl, &mut out);
+        dense_binary_fast(&flat, &pl, &mut out, &Kernels::scalar());
         assert_eq!(out, golden);
     }
 

@@ -19,6 +19,12 @@
 //! activations transpose into 8 packed planes and every dot product
 //! becomes word-wide AND+popcount — the software shape of the FINN/
 //! LUTNet XNOR-popcount datapath.
+//!
+//! The kernels here ([`plus_sum`], [`plane_popcounts`],
+//! [`bitplane_dot`]) are the **scalar reference tier** of the
+//! [`crate::nn::simd::Kernels`] dispatch table: deliberately simple,
+//! never vectorized, the baseline every wider tier must match bit for
+//! bit (and the denominator of the `scalar_vs_simd` bench rows).
 
 use crate::model::weights::LayerParams;
 use crate::util::TinError;

@@ -1,14 +1,18 @@
 //! Property tests on the golden NN (in-tree generator — see testkit),
 //! including the differential suites pinning the nn::opt fast path AND
 //! the nn::bitplane popcount engine to the golden oracle over
-//! randomized shapes, weights and images.
+//! randomized shapes, weights and images. The engine differentials run
+//! under **every kernel tier the host supports** (scalar / portable /
+//! avx2 / neon), so each SIMD path is pinned bit-exact to the oracle,
+//! not just whichever tier auto-detection picked.
 
 use crate::model::weights::{random_params, LayerParams};
 use crate::model::zoo::{Layer, Net};
 use crate::nn::bitplane;
 use crate::nn::layers::*;
 use crate::nn::opt;
-use crate::nn::pack::PackedLayer;
+use crate::nn::pack::{pack_planes, PackedLayer};
+use crate::nn::simd::{Kernels, KernelTier};
 use crate::testkit::Arbitrary;
 use crate::util::Rng64;
 
@@ -177,8 +181,12 @@ fn prop_opt_forward_matches_golden() {
         let (h, w, c) = net.input_hwc;
         let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
         let golden = forward(&np, &img).unwrap();
-        let fast = opt::forward(&np, &img).unwrap();
-        assert_eq!(golden, fast, "net {:?} input {h}x{w}x{c}", net.layers);
+        let mut scratch = opt::Scratch::new();
+        for tier in KernelTier::available() {
+            let model = opt::OptModel::with_tier(&np, tier).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(golden, fast, "tier {tier} net {:?} input {h}x{w}x{c}", net.layers);
+        }
     });
 }
 
@@ -198,8 +206,11 @@ fn prop_opt_conv_kernel_matches_golden() {
         let mut win = vec![0i32; 9 * c];
         let mut cols = vec![0i32; w];
         let mut dst = vec![0i32; h * w * n_out];
-        opt::conv3x3_requant(&src, h, w, c, &pl, &mut win, &mut cols, &mut dst);
-        assert_eq!(dst, golden.data, "{h}x{w}x{c} -> {n_out}");
+        for tier in KernelTier::available() {
+            let k = Kernels::for_tier(tier).unwrap();
+            opt::conv3x3_requant(&src, h, w, c, &pl, &mut win, &mut cols, &mut dst, &k);
+            assert_eq!(dst, golden.data, "tier {tier} {h}x{w}x{c} -> {n_out}");
+        }
     });
 }
 
@@ -214,8 +225,11 @@ fn prop_opt_dense_matches_golden() {
         let golden = dense_binary(&flat, &p);
         let pl = PackedLayer::prepare(&p).unwrap();
         let mut out = vec![0i32; n_out];
-        opt::dense_binary_fast(&flat, &pl, &mut out);
-        assert_eq!(out, golden);
+        for tier in KernelTier::available() {
+            let k = Kernels::for_tier(tier).unwrap();
+            opt::dense_binary_fast(&flat, &pl, &mut out, &k);
+            assert_eq!(out, golden, "tier {tier}");
+        }
     });
 }
 
@@ -234,8 +248,12 @@ fn prop_bitplane_forward_matches_golden() {
         let (h, w, c) = net.input_hwc;
         let img: Vec<u8> = (0..h * w * c).map(|_| rng.next_u8()).collect();
         let golden = forward(&np, &img).unwrap();
-        let fast = bitplane::forward(&np, &img).unwrap();
-        assert_eq!(golden, fast, "net {:?} input {h}x{w}x{c}", net.layers);
+        let mut scratch = bitplane::Scratch::new();
+        for tier in KernelTier::available() {
+            let model = bitplane::BitplaneModel::with_tier(&np, tier).unwrap();
+            let fast = model.forward(&img, &mut scratch).unwrap();
+            assert_eq!(golden, fast, "tier {tier} net {:?} input {h}x{w}x{c}", net.layers);
+        }
     });
 }
 
@@ -255,8 +273,11 @@ fn prop_bitplane_conv_kernel_matches_golden() {
         let mut win = vec![0i32; 9 * c];
         let mut planes = vec![0u32; 8 * pl.kw];
         let mut dst = vec![0i32; h * w * n_out];
-        bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst);
-        assert_eq!(dst, golden.data, "{h}x{w}x{c} -> {n_out}");
+        for tier in KernelTier::available() {
+            let k = Kernels::for_tier(tier).unwrap();
+            bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst, &k);
+            assert_eq!(dst, golden.data, "tier {tier} {h}x{w}x{c} -> {n_out}");
+        }
     });
 }
 
@@ -277,8 +298,11 @@ fn prop_bitplane_conv_all_border_maps() {
         let mut win = vec![0i32; 9 * c];
         let mut planes = vec![0u32; 8 * pl.kw];
         let mut dst = vec![0i32; h * w * n_out];
-        bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst);
-        assert_eq!(dst, golden.data, "all-border {h}x{w}x{c} -> {n_out}");
+        for tier in KernelTier::available() {
+            let k = Kernels::for_tier(tier).unwrap();
+            bitplane::conv3x3_bitplane(&src, h, w, c, &pl, &mut win, &mut planes, &mut dst, &k);
+            assert_eq!(dst, golden.data, "tier {tier} all-border {h}x{w}x{c} -> {n_out}");
+        }
     });
 }
 
@@ -294,8 +318,11 @@ fn prop_bitplane_dense_matches_golden() {
         let pl = PackedLayer::prepare(&p).unwrap();
         let mut planes = vec![0u32; 8 * pl.kw];
         let mut out = vec![0i32; n_out];
-        bitplane::dense_bitplane(&flat, &pl, &mut planes, &mut out);
-        assert_eq!(out, golden);
+        for tier in KernelTier::available() {
+            let k = Kernels::for_tier(tier).unwrap();
+            bitplane::dense_bitplane(&flat, &pl, &mut planes, &mut out, &k);
+            assert_eq!(out, golden, "tier {tier}");
+        }
     });
 }
 
@@ -390,6 +417,81 @@ fn prop_opt_scratch_reuse_is_stateless() {
             let fast = model.forward(&img, &mut scratch).unwrap();
             assert_eq!(fast, forward(&np, &img).unwrap());
         }
+    });
+}
+
+// ---- kernel-tier agreement + batched-forward suite ---------------------
+//
+// The SIMD dispatch contract: every tier is a drop-in for the scalar
+// reference (same outputs on every input, including ragged K where the
+// vector path hands the tail to a scalar walk), and the image-major
+// batched forward is a pure reordering of the single-image path.
+
+#[test]
+fn prop_kernel_tiers_agree_on_tail_masked_planes() {
+    // forced-portable vs auto-detected tier on randomized ragged K:
+    // identical plane_popcounts / bitplane_dot / plus_sum, always.
+    let portable = Kernels::for_tier(KernelTier::Portable).unwrap();
+    let detected = Kernels::for_tier(KernelTier::detect()).unwrap();
+    crate::testkit::check(150, |rng| {
+        // deliberately non-word-aligned K most of the time
+        let k_in = 1 + rng.below(300) as usize;
+        let n_out = 1 + rng.below(5) as usize;
+        let p = rand_layer(rng, k_in, n_out);
+        let pl = PackedLayer::prepare(&p).unwrap();
+        let vals: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+        let mut planes = vec![0u32; 8 * pl.kw];
+        pack_planes(&vals, &mut planes);
+        let pops_p = (portable.plane_popcounts)(&planes);
+        let pops_d = (detected.plane_popcounts)(&planes);
+        assert_eq!(pops_p, pops_d, "plane_popcounts K={k_in}");
+        for n in 0..n_out {
+            assert_eq!(
+                (portable.plus_sum)(pl.row(n), &vals),
+                (detected.plus_sum)(pl.row(n), &vals),
+                "plus_sum K={k_in} row={n}"
+            );
+            assert_eq!(
+                (portable.bitplane_dot)(pl.row(n), &planes, &pops_p),
+                (detected.bitplane_dot)(pl.row(n), &planes, &pops_d),
+                "bitplane_dot K={k_in} row={n}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batched_forward_matches_single_image() {
+    // image-major blocked batches (sizes crossing BATCH_BLOCK) must be
+    // bit-exact with serial single-image forwards and with the oracle,
+    // on both fast engines.
+    crate::testkit::check(15, |rng| {
+        let net = rand_net(rng);
+        let np = random_params(&net, rng.next_u64());
+        let (h, w, c) = net.input_hwc;
+        // 1..=2*BATCH_BLOCK+2: partial, exact, and multi-block batches
+        let nimg = 1 + rng.below(2 * opt::BATCH_BLOCK as u32 + 2) as usize;
+        let imgs: Vec<Vec<u8>> = (0..nimg)
+            .map(|_| (0..h * w * c).map(|_| rng.next_u8()).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let golden: Vec<Vec<i32>> =
+            imgs.iter().map(|img| forward(&np, img).unwrap()).collect();
+
+        let opt_model = opt::OptModel::new(&np).unwrap();
+        let mut opt_scratch = opt::Scratch::new();
+        let mut batched = Vec::new();
+        opt_model.forward_batch_into(&refs, &mut opt_scratch, &mut batched).unwrap();
+        assert_eq!(batched, golden, "opt batch of {nimg}");
+        for (img, want) in imgs.iter().zip(&golden) {
+            assert_eq!(&opt_model.forward(img, &mut opt_scratch).unwrap(), want);
+        }
+
+        let bp_model = bitplane::BitplaneModel::new(&np).unwrap();
+        let mut bp_scratch = bitplane::Scratch::new();
+        let mut bp_batched = Vec::new();
+        bp_model.forward_batch_into(&refs, &mut bp_scratch, &mut bp_batched).unwrap();
+        assert_eq!(bp_batched, golden, "bitplane batch of {nimg}");
     });
 }
 

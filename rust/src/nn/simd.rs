@@ -1,0 +1,692 @@
+//! Runtime-dispatched SIMD tiers for the popcount hot kernels.
+//!
+//! The fast engines ([`crate::nn::opt`], [`crate::nn::bitplane`]) spend
+//! nearly all of their time in three primitives from [`crate::nn::pack`]:
+//! the Σ₊ bit-walk [`crate::nn::pack::plus_sum`], the per-plane popcount
+//! [`crate::nn::pack::plane_popcounts`], and the AND+popcount reduction
+//! [`crate::nn::pack::bitplane_dot`]. Those scalar loops are the
+//! *reference tier*; this module provides wider implementations of the
+//! same contracts and a [`Kernels`] dispatch table that a model resolves
+//! **once at compile time** (model compile, not process start), so the
+//! per-call cost is one indirect call amortized over a whole row/window:
+//!
+//! - **avx2** (`x86_64`, gated on `is_x86_feature_detected!("avx2")`):
+//!   SSSE3-style nibble-LUT popcount over 256-bit lanes accumulated with
+//!   `_mm256_sad_epu8`, and a mask-expand Σ₊ that turns each packed
+//!   weight byte into eight 32-lane select masks.
+//! - **neon** (`aarch64`, unconditionally available): `vcnt` byte
+//!   popcounts folded with widening pairwise adds, and `vtst` mask
+//!   selects for Σ₊.
+//! - **portable** (any arch): pairs `u32` words into `u64` before
+//!   `count_ones` and unrolls four words per step with independent
+//!   accumulators — measurably faster than the reference loop even
+//!   where no vector unit is reachable.
+//! - **scalar**: the untouched reference loops from `pack`, kept
+//!   addressable so differential tests and the `scalar_vs_simd` bench
+//!   rows always have the baseline in hand.
+//!
+//! Selection order is `TINBINN_SIMD` override (exact tier or error) →
+//! best tier the host supports. Every tier is pinned bit-exact to the
+//! scalar reference by the differential proptests in
+//! [`crate::nn::proptests`].
+
+use crate::nn::pack;
+use crate::util::TinError;
+use crate::Result;
+
+/// Environment variable forcing a specific kernel tier
+/// (`scalar|portable|avx2|neon`). Unset or empty means auto-detect.
+pub const SIMD_ENV: &str = "TINBINN_SIMD";
+
+/// One selectable kernel implementation level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Reference word-at-a-time loops from [`crate::nn::pack`].
+    Scalar,
+    /// u64-paired, 4-word-unrolled loops; available everywhere.
+    Portable,
+    /// 256-bit nibble-LUT popcount path (x86_64 with AVX2).
+    Avx2,
+    /// 128-bit `vcnt` path (aarch64).
+    Neon,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (used by `TINBINN_SIMD`, `tinbinn info`,
+    /// and bench row suffixes).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Portable => "portable",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+
+    /// Parse a tier name as accepted by `TINBINN_SIMD`.
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        match s {
+            "scalar" => Ok(KernelTier::Scalar),
+            "portable" => Ok(KernelTier::Portable),
+            "avx2" => Ok(KernelTier::Avx2),
+            "neon" => Ok(KernelTier::Neon),
+            other => Err(TinError::Config(format!(
+                "unknown kernel tier {other:?} (valid: scalar|portable|avx2|neon)"
+            ))),
+        }
+    }
+
+    /// Whether this tier can run on the current host.
+    pub fn is_available(self) -> bool {
+        match self {
+            KernelTier::Scalar | KernelTier::Portable => true,
+            KernelTier::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelTier::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// All tiers runnable on this host, in ascending preference order
+    /// (scalar first, best vector tier last).
+    pub fn available() -> Vec<KernelTier> {
+        [KernelTier::Scalar, KernelTier::Portable, KernelTier::Avx2, KernelTier::Neon]
+            .into_iter()
+            .filter(|t| t.is_available())
+            .collect()
+    }
+
+    /// Best tier the host hardware supports (ignores the env override).
+    pub fn detect() -> KernelTier {
+        *Self::available().last().expect("scalar tier is always available")
+    }
+
+    /// Interpret a `TINBINN_SIMD`-style override value. `None` or an
+    /// empty string means "no override"; a tier name must both parse and
+    /// be available on this host, otherwise model compile fails with a
+    /// Config error instead of silently ignoring the request.
+    pub fn from_override(val: Option<&str>) -> Result<Option<KernelTier>> {
+        let Some(s) = val else { return Ok(None) };
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(None);
+        }
+        let tier = KernelTier::parse(s)?;
+        if !tier.is_available() {
+            return Err(TinError::Config(format!(
+                "{SIMD_ENV}={} requested but this host does not support it (available: {})",
+                tier.name(),
+                Self::available().iter().map(|t| t.name()).collect::<Vec<_>>().join("|")
+            )));
+        }
+        Ok(Some(tier))
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Dispatch table of the three hot kernels, resolved once per model.
+///
+/// Every pointer honors the exact contract of its scalar counterpart in
+/// [`crate::nn::pack`] (same preconditions, bit-identical results), so
+/// engines call through the table without caring which tier is live.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    pub tier: KernelTier,
+    /// Σ₊ of one tail-masked packed row over `vals`
+    /// (see [`crate::nn::pack::plus_sum`]).
+    pub plus_sum: fn(&[u32], &[i32]) -> i32,
+    /// Per-plane popcounts of an 8-plane set
+    /// (see [`crate::nn::pack::plane_popcounts`]).
+    pub plane_popcounts: fn(&[u32]) -> [i32; 8],
+    /// ±1 dot of a packed row against a plane set
+    /// (see [`crate::nn::pack::bitplane_dot`]).
+    pub bitplane_dot: fn(&[u32], &[u32], &[i32; 8]) -> i32,
+}
+
+impl Kernels {
+    /// The reference tier (exactly the `pack` scalar loops).
+    pub fn scalar() -> Kernels {
+        Kernels {
+            tier: KernelTier::Scalar,
+            plus_sum: pack::plus_sum,
+            plane_popcounts: pack::plane_popcounts,
+            bitplane_dot: pack::bitplane_dot,
+        }
+    }
+
+    /// Table for a specific tier; errors if the host can't run it.
+    pub fn for_tier(tier: KernelTier) -> Result<Kernels> {
+        if !tier.is_available() {
+            return Err(TinError::Config(format!(
+                "kernel tier {} unavailable on this host (available: {})",
+                tier.name(),
+                KernelTier::available().iter().map(|t| t.name()).collect::<Vec<_>>().join("|")
+            )));
+        }
+        Ok(match tier {
+            KernelTier::Scalar => Kernels::scalar(),
+            KernelTier::Portable => Kernels {
+                tier,
+                plus_sum: portable::plus_sum,
+                plane_popcounts: portable::plane_popcounts,
+                bitplane_dot: portable::bitplane_dot,
+            },
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => Kernels {
+                tier,
+                plus_sum: avx2::plus_sum,
+                plane_popcounts: avx2::plane_popcounts,
+                bitplane_dot: avx2::bitplane_dot,
+            },
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => Kernels {
+                tier,
+                plus_sum: neon::plus_sum,
+                plane_popcounts: neon::plane_popcounts,
+                bitplane_dot: neon::bitplane_dot,
+            },
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelTier::Avx2 => unreachable!("availability checked above"),
+            #[cfg(not(target_arch = "aarch64"))]
+            KernelTier::Neon => unreachable!("availability checked above"),
+        })
+    }
+
+    /// Resolve the active table: `TINBINN_SIMD` override if set (error
+    /// if unknown or unavailable), otherwise the best detected tier.
+    pub fn active() -> Result<Kernels> {
+        let env = std::env::var(SIMD_ENV).ok();
+        match KernelTier::from_override(env.as_deref())? {
+            Some(tier) => Kernels::for_tier(tier),
+            None => Kernels::for_tier(KernelTier::detect()),
+        }
+    }
+}
+
+/// Human-readable description of the host's kernel situation, printed by
+/// `tinbinn info` so BENCH rows are attributable to hardware.
+pub fn describe_host() -> String {
+    let mut lines = Vec::new();
+    lines.push(format!("arch: {}", std::env::consts::ARCH));
+    #[cfg(target_arch = "x86_64")]
+    {
+        let feats = [
+            ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+            ("ssse3", std::arch::is_x86_feature_detected!("ssse3")),
+            ("popcnt", std::arch::is_x86_feature_detected!("popcnt")),
+            ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+        ];
+        let on: Vec<&str> = feats.iter().filter(|(_, d)| *d).map(|(n, _)| *n).collect();
+        lines.push(format!("cpu features: {}", if on.is_empty() { "none".into() } else { on.join(" ") }));
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        lines.push("cpu features: neon".to_string());
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        lines.push("cpu features: (no vector detection on this arch)".to_string());
+    }
+    lines.push(format!(
+        "kernel tiers available: {}",
+        KernelTier::available().iter().map(|t| t.name()).collect::<Vec<_>>().join(" ")
+    ));
+    let over = std::env::var(SIMD_ENV).ok();
+    match over.as_deref() {
+        Some(s) if !s.trim().is_empty() => lines.push(format!("{SIMD_ENV} override: {s}")),
+        _ => lines.push(format!("{SIMD_ENV} override: (unset)")),
+    }
+    match Kernels::active() {
+        Ok(k) => lines.push(format!("active tier: {}", k.tier.name())),
+        Err(e) => lines.push(format!("active tier: error ({e})")),
+    }
+    lines.join("\n")
+}
+
+/// Portable wide tier: no intrinsics, but pairs `u32` words into `u64`
+/// before `count_ones` (one hardware popcount — or one SWAR chain —
+/// per 64 bits instead of per 32) and unrolls with independent
+/// accumulators so the adds pipeline.
+mod portable {
+    /// Popcount of a word slice, 4 words (2 u64 pairs) per step.
+    #[inline]
+    fn popcount_words(words: &[u32]) -> i32 {
+        let mut a = 0u32;
+        let mut b = 0u32;
+        let mut it = words.chunks_exact(4);
+        for c in &mut it {
+            a += ((c[0] as u64) | ((c[1] as u64) << 32)).count_ones();
+            b += ((c[2] as u64) | ((c[3] as u64) << 32)).count_ones();
+        }
+        let mut rest = 0u32;
+        for &w in it.remainder() {
+            rest += w.count_ones();
+        }
+        (a + b + rest) as i32
+    }
+
+    /// Popcount of `x[i] & y[i]` over two equal-length word slices.
+    #[inline]
+    fn and_popcount(x: &[u32], y: &[u32]) -> i32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut a = 0u32;
+        let mut b = 0u32;
+        let mut ix = x.chunks_exact(4);
+        let mut iy = y.chunks_exact(4);
+        for (cx, cy) in (&mut ix).zip(&mut iy) {
+            a += (((cx[0] & cy[0]) as u64) | (((cx[1] & cy[1]) as u64) << 32)).count_ones();
+            b += (((cx[2] & cy[2]) as u64) | (((cx[3] & cy[3]) as u64) << 32)).count_ones();
+        }
+        let mut rest = 0u32;
+        for (&wx, &wy) in ix.remainder().iter().zip(iy.remainder()) {
+            rest += (wx & wy).count_ones();
+        }
+        (a + b + rest) as i32
+    }
+
+    /// Σ₊ with each word split into two independent 16-bit bit-walk
+    /// chains, halving the serial `w &= w - 1` dependency depth.
+    pub fn plus_sum(row: &[u32], vals: &[i32]) -> i32 {
+        let mut lo_acc = 0i32;
+        let mut hi_acc = 0i32;
+        let mut base = 0usize;
+        for &word in row {
+            let mut lo = word & 0xFFFF;
+            let mut hi = word >> 16;
+            while lo != 0 {
+                let j = lo.trailing_zeros() as usize;
+                lo_acc += vals[base + j];
+                lo &= lo - 1;
+            }
+            while hi != 0 {
+                let j = hi.trailing_zeros() as usize;
+                hi_acc += vals[base + 16 + j];
+                hi &= hi - 1;
+            }
+            base += 32;
+        }
+        lo_acc + hi_acc
+    }
+
+    pub fn plane_popcounts(planes: &[u32]) -> [i32; 8] {
+        assert!(planes.len() % 8 == 0, "planes buffer must be 8 x kw words");
+        let kw = planes.len() / 8;
+        let mut out = [0i32; 8];
+        for (b, slot) in out.iter_mut().enumerate() {
+            *slot = popcount_words(&planes[b * kw..(b + 1) * kw]);
+        }
+        out
+    }
+
+    pub fn bitplane_dot(row: &[u32], planes: &[u32], pops: &[i32; 8]) -> i32 {
+        let kw = row.len();
+        debug_assert_eq!(planes.len(), 8 * kw, "planes/row word-count mismatch");
+        let mut acc = 0i32;
+        for (b, &pop) in pops.iter().enumerate() {
+            let pos = and_popcount(row, &planes[b * kw..(b + 1) * kw]);
+            acc += (2 * pos - pop) << b;
+        }
+        acc
+    }
+}
+
+/// AVX2 tier: 256-bit nibble-LUT popcount (the SSSE3 shuffle trick lifted
+/// to 32-byte lanes) with `_mm256_sad_epu8` accumulation, plus a
+/// mask-expand Σ₊ that processes eight activations per vector step.
+///
+/// All `unsafe fn`s here are `#[target_feature(enable = "avx2")]`; the
+/// public wrappers are safe because [`super::Kernels::for_tier`] only
+/// installs these pointers after `is_x86_feature_detected!("avx2")`
+/// reported the feature present.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-byte popcounts of a 256-bit vector via two nibble-LUT
+    /// shuffles.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn nibble_counts(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+    }
+
+    /// Horizontal sum of the four epi64 lanes of an accumulator.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi64(v: __m256i) -> i64 {
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// Popcount of a word slice: 8 u32s (one 256-bit load) per step.
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_words_avx2(words: &[u32]) -> i32 {
+        let mut acc = _mm256_setzero_si256();
+        let mut it = words.chunks_exact(8);
+        for c in &mut it {
+            let v = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(nibble_counts(v), _mm256_setzero_si256()));
+        }
+        let mut total = hsum_epi64(acc) as i32;
+        for &w in it.remainder() {
+            total += w.count_ones() as i32;
+        }
+        total
+    }
+
+    /// Popcount of `x[i] & y[i]`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn and_popcount_avx2(x: &[u32], y: &[u32]) -> i32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut ix = x.chunks_exact(8);
+        let mut iy = y.chunks_exact(8);
+        for (cx, cy) in (&mut ix).zip(&mut iy) {
+            let v = _mm256_and_si256(
+                _mm256_loadu_si256(cx.as_ptr() as *const __m256i),
+                _mm256_loadu_si256(cy.as_ptr() as *const __m256i),
+            );
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(nibble_counts(v), _mm256_setzero_si256()));
+        }
+        let mut total = hsum_epi64(acc) as i32;
+        for (&wx, &wy) in ix.remainder().iter().zip(iy.remainder()) {
+            total += (wx & wy).count_ones() as i32;
+        }
+        total
+    }
+
+    /// Σ₊ via mask expansion: each weight byte becomes eight 32-bit
+    /// select masks (`(byte & 2^l) != 0`), which gate a masked add of
+    /// the corresponding eight activations.
+    #[target_feature(enable = "avx2")]
+    unsafe fn plus_sum_avx2(row: &[u32], vals: &[i32]) -> i32 {
+        // Bit-select constants: lane l tests bit l of the broadcast byte.
+        let bitsel = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let mut acc = _mm256_setzero_si256();
+        // Vector path only for words whose 32 activations all exist;
+        // vals.len() == k_in, which may be < 32*row.len() on tail rows.
+        let full = (vals.len() / 32).min(row.len());
+        for (t, &word) in row[..full].iter().enumerate() {
+            let base = t * 32;
+            for byte in 0..4 {
+                let b = (word >> (8 * byte)) & 0xFF;
+                if b == 0 {
+                    continue;
+                }
+                let mask =
+                    _mm256_cmpeq_epi32(_mm256_and_si256(_mm256_set1_epi32(b as i32), bitsel), bitsel);
+                let v = _mm256_loadu_si256(vals.as_ptr().add(base + 8 * byte) as *const __m256i);
+                acc = _mm256_add_epi32(acc, _mm256_and_si256(v, mask));
+            }
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut total: i32 = lanes.iter().sum();
+        // Scalar bit-walk for tail words (tail-masked rows guarantee
+        // every set bit indexes a real activation).
+        for (t, &word) in row.iter().enumerate().skip(full) {
+            let base = t * 32;
+            let mut w = word;
+            while w != 0 {
+                let j = w.trailing_zeros() as usize;
+                total += vals[base + j];
+                w &= w - 1;
+            }
+        }
+        total
+    }
+
+    pub fn plus_sum(row: &[u32], vals: &[i32]) -> i32 {
+        // SAFETY: this pointer is only installed after AVX2 detection.
+        unsafe { plus_sum_avx2(row, vals) }
+    }
+
+    pub fn plane_popcounts(planes: &[u32]) -> [i32; 8] {
+        assert!(planes.len() % 8 == 0, "planes buffer must be 8 x kw words");
+        let kw = planes.len() / 8;
+        let mut out = [0i32; 8];
+        for (b, slot) in out.iter_mut().enumerate() {
+            // SAFETY: pointer installed only after AVX2 detection.
+            *slot = unsafe { popcount_words_avx2(&planes[b * kw..(b + 1) * kw]) };
+        }
+        out
+    }
+
+    pub fn bitplane_dot(row: &[u32], planes: &[u32], pops: &[i32; 8]) -> i32 {
+        let kw = row.len();
+        debug_assert_eq!(planes.len(), 8 * kw, "planes/row word-count mismatch");
+        let mut acc = 0i32;
+        for (b, &pop) in pops.iter().enumerate() {
+            // SAFETY: pointer installed only after AVX2 detection.
+            let pos = unsafe { and_popcount_avx2(row, &planes[b * kw..(b + 1) * kw]) };
+            acc += (2 * pos - pop) << b;
+        }
+        acc
+    }
+}
+
+/// NEON tier: `vcnt` byte popcounts with widening reductions, `vtst`
+/// mask selects for Σ₊. NEON is baseline on aarch64, so no runtime
+/// detection is needed — availability is the compile target itself.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Popcount of a word slice, 4 u32s (one 128-bit load) per step.
+    #[inline]
+    fn popcount_words_neon(words: &[u32]) -> i32 {
+        let mut total = 0u32;
+        let mut it = words.chunks_exact(4);
+        for c in &mut it {
+            // SAFETY: NEON is mandatory on aarch64; the load covers
+            // exactly the 4 words of this chunk.
+            unsafe {
+                let v = vld1q_u8(c.as_ptr() as *const u8);
+                total += vaddlvq_u8(vcntq_u8(v)) as u32;
+            }
+        }
+        for &w in it.remainder() {
+            total += w.count_ones();
+        }
+        total as i32
+    }
+
+    /// Popcount of `x[i] & y[i]`.
+    #[inline]
+    fn and_popcount_neon(x: &[u32], y: &[u32]) -> i32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut total = 0u32;
+        let mut ix = x.chunks_exact(4);
+        let mut iy = y.chunks_exact(4);
+        for (cx, cy) in (&mut ix).zip(&mut iy) {
+            // SAFETY: NEON is mandatory on aarch64; loads cover the chunks.
+            unsafe {
+                let v = vandq_u8(
+                    vld1q_u8(cx.as_ptr() as *const u8),
+                    vld1q_u8(cy.as_ptr() as *const u8),
+                );
+                total += vaddlvq_u8(vcntq_u8(v)) as u32;
+            }
+        }
+        for (&wx, &wy) in ix.remainder().iter().zip(iy.remainder()) {
+            total += (wx & wy).count_ones();
+        }
+        total as i32
+    }
+
+    /// Σ₊ via `vtst` nibble masks: each weight nibble gates a masked add
+    /// of four activations.
+    pub fn plus_sum(row: &[u32], vals: &[i32]) -> i32 {
+        let mut total = 0i32;
+        let full = (vals.len() / 32).min(row.len());
+        for (t, &word) in row[..full].iter().enumerate() {
+            let base = t * 32;
+            // SAFETY: NEON mandatory on aarch64; each load reads 4 i32s
+            // at base + 4*nib + {0..3} < vals.len() because the word is
+            // fully covered (base + 32 <= vals.len()).
+            unsafe {
+                let bitsel = vld1q_u32([1u32, 2, 4, 8].as_ptr());
+                let mut acc = vdupq_n_s32(0);
+                for nib in 0..8 {
+                    let n = (word >> (4 * nib)) & 0xF;
+                    if n == 0 {
+                        continue;
+                    }
+                    let mask = vtstq_u32(vdupq_n_u32(n), bitsel);
+                    let v = vld1q_s32(vals.as_ptr().add(base + 4 * nib as usize));
+                    acc = vaddq_s32(acc, vandq_s32(v, vreinterpretq_s32_u32(mask)));
+                }
+                total += vaddvq_s32(acc);
+            }
+        }
+        for (t, &word) in row.iter().enumerate().skip(full) {
+            let base = t * 32;
+            let mut w = word;
+            while w != 0 {
+                let j = w.trailing_zeros() as usize;
+                total += vals[base + j];
+                w &= w - 1;
+            }
+        }
+        total
+    }
+
+    pub fn plane_popcounts(planes: &[u32]) -> [i32; 8] {
+        assert!(planes.len() % 8 == 0, "planes buffer must be 8 x kw words");
+        let kw = planes.len() / 8;
+        let mut out = [0i32; 8];
+        for (b, slot) in out.iter_mut().enumerate() {
+            *slot = popcount_words_neon(&planes[b * kw..(b + 1) * kw]);
+        }
+        out
+    }
+
+    pub fn bitplane_dot(row: &[u32], planes: &[u32], pops: &[i32; 8]) -> i32 {
+        let kw = row.len();
+        debug_assert_eq!(planes.len(), 8 * kw, "planes/row word-count mismatch");
+        let mut acc = 0i32;
+        for (b, &pop) in pops.iter().enumerate() {
+            let pos = and_popcount_neon(row, &planes[b * kw..(b + 1) * kw]);
+            acc += (2 * pos - pop) << b;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::pack::{pack_planes, PackedLayer};
+    use crate::model::weights::LayerParams;
+    use crate::util::Rng64;
+
+    fn rand_layer(k_in: usize, n_out: usize, seed: u64) -> PackedLayer {
+        let mut rng = Rng64::new(seed);
+        let kw = (k_in + 31) / 32;
+        PackedLayer::prepare(&LayerParams {
+            k_in,
+            n_out,
+            words: (0..n_out * kw).map(|_| rng.next_u32()).collect(),
+            bias: vec![0; n_out],
+            shift: 0,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn tier_names_roundtrip() {
+        for t in [KernelTier::Scalar, KernelTier::Portable, KernelTier::Avx2, KernelTier::Neon] {
+            assert_eq!(KernelTier::parse(t.name()).unwrap(), t);
+        }
+        assert!(KernelTier::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn override_parsing() {
+        assert_eq!(KernelTier::from_override(None).unwrap(), None);
+        assert_eq!(KernelTier::from_override(Some("")).unwrap(), None);
+        assert_eq!(KernelTier::from_override(Some("  ")).unwrap(), None);
+        assert_eq!(
+            KernelTier::from_override(Some("portable")).unwrap(),
+            Some(KernelTier::Portable)
+        );
+        assert!(KernelTier::from_override(Some("turbo")).is_err());
+        // A real tier that this host can't run must be a Config error,
+        // not a silent fallback.
+        let foreign = if cfg!(target_arch = "x86_64") { "neon" } else { "avx2" };
+        assert!(KernelTier::from_override(Some(foreign)).is_err());
+    }
+
+    #[test]
+    fn available_always_has_scalar_and_portable_in_order() {
+        let avail = KernelTier::available();
+        assert_eq!(avail[0], KernelTier::Scalar);
+        assert_eq!(avail[1], KernelTier::Portable);
+        assert!(avail.contains(&KernelTier::detect()));
+        assert_eq!(*avail.last().unwrap(), KernelTier::detect());
+    }
+
+    #[test]
+    fn for_tier_rejects_unavailable() {
+        let foreign =
+            if cfg!(target_arch = "x86_64") { KernelTier::Neon } else { KernelTier::Avx2 };
+        assert!(Kernels::for_tier(foreign).is_err());
+        assert!(Kernels::for_tier(KernelTier::Portable).is_ok());
+    }
+
+    #[test]
+    fn all_tiers_match_scalar_on_random_inputs() {
+        let scalar = Kernels::scalar();
+        for &k_in in &[1usize, 31, 32, 33, 64, 70, 129, 432] {
+            let pl = rand_layer(k_in, 6, 0xC0FFEE ^ k_in as u64);
+            let mut rng = Rng64::new(0xBEEF ^ k_in as u64);
+            let vals: Vec<i32> = (0..k_in).map(|_| rng.next_u8() as i32).collect();
+            let mut planes = vec![0u32; 8 * pl.kw];
+            pack_planes(&vals, &mut planes);
+            let want_pops = (scalar.plane_popcounts)(&planes);
+            for tier in KernelTier::available() {
+                let k = Kernels::for_tier(tier).unwrap();
+                assert_eq!((k.plane_popcounts)(&planes), want_pops, "{tier} pops k={k_in}");
+                for n in 0..pl.n_out {
+                    assert_eq!(
+                        (k.plus_sum)(pl.row(n), &vals),
+                        (scalar.plus_sum)(pl.row(n), &vals),
+                        "{tier} plus_sum k={k_in} row={n}"
+                    );
+                    assert_eq!(
+                        (k.bitplane_dot)(pl.row(n), &planes, &want_pops),
+                        (scalar.bitplane_dot)(pl.row(n), &planes, &want_pops),
+                        "{tier} bitplane_dot k={k_in} row={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn describe_host_names_active_tier() {
+        let s = describe_host();
+        assert!(s.contains("active tier: "), "{s}");
+        assert!(s.contains("kernel tiers available: scalar portable"), "{s}");
+    }
+}
