@@ -296,6 +296,27 @@ pub struct ModelReport {
     pub scores: Vec<(u64, Vec<i32>)>,
 }
 
+impl ModelReport {
+    /// One aligned per-model line, shared by every serving CLI
+    /// (`serve --models`, `serve --listen`, replica logs) so the
+    /// formats can't drift apart.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "  {:8} on {:12} x{}: {:>5} done / {:>3} rej / {:>3} exp, mean batch {:.2}, p50 {}us p99 {}us, {:.0} fps",
+            self.name,
+            self.backend,
+            self.workers,
+            self.completed,
+            self.rejected,
+            self.expired,
+            self.mean_batch,
+            self.latency.p50_us,
+            self.latency.p99_us,
+            self.throughput_per_s
+        )
+    }
+}
+
 /// The merged fleet report.
 pub struct GatewayReport {
     pub models: Vec<ModelReport>,
@@ -319,6 +340,21 @@ impl GatewayReport {
                 .models
                 .iter()
                 .all(|m| m.submitted == m.completed + m.rejected + m.expired)
+    }
+
+    /// The fleet header line, with a caller-chosen verb ("gateway",
+    /// "gateway drained") — shared by the serving CLIs.
+    pub fn summary_line(&self, label: &str) -> String {
+        format!(
+            "{label}: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.unknown_model,
+            self.expired,
+            self.wall_s,
+            self.throughput_per_s
+        )
     }
 }
 

@@ -49,15 +49,26 @@ fn usage() -> ! {
                     127.0.0.1:0 for an ephemeral port — runs until a shutdown\n\
                     control frame, or --serve-secs S; --max-inflight bounds\n\
                     per-connection in-flight requests [Busy beyond it])\n\
+           serve --router --replicas A1,A2,... [--listen ADDR] [--replication R]\n\
+                   [--probe-ms P] [--eject-after K] [--probation-ms M]\n\
+                   [--retries N] [--backoff-us B] [--serve-secs S]\n\
+                   (fault-tolerant cluster tier: TBNP/1 on both sides,\n\
+                    consistent-hash placement over the replicas, ping probes\n\
+                    with ejection + probation, retry-on-another-replica with\n\
+                    capped backoff; exhausted budget answers Unavailable)\n\
            bench-load --connect ADDR [--requests N] [--conns C]\n\
                    [--qps Q | --inflight K] [--mix name[:backend]=w,...]\n\
-                   [--deadline-us D] [--low-frac F] [--seed S]\n\
+                   [--deadline-us D] [--low-frac F] [--seed S] [--reconnect]\n\
                    [--bench-out path] [--shutdown]\n\
+                   [--cluster --replicas A1,A2,... [--kill ADDR] [--kill-after-ms T]]\n\
                    (load-generate against a --listen server: open loop at Q qps\n\
                     or closed loop with K in-flight per connection; per-model\n\
                     p50/p99 + throughput rows go to --bench-out [BENCH_serve.json];\n\
                     --shutdown drains the server afterwards; exits nonzero if\n\
-                    any request went unanswered)\n\
+                    any request went unanswered; --reconnect re-dials a dead\n\
+                    target with backoff; --cluster benchmarks 1-replica vs\n\
+                    routed-N throughput, then re-runs while killing --kill\n\
+                    mid-run — cluster_* rows land in BENCH_serve.json)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
            train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
                    [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
@@ -311,6 +322,10 @@ fn real_main() -> tinbinn::Result<()> {
             let wait = args.opt_usize("--wait-us", 2000) as u64;
             let backend_name = args.opt("--backend").unwrap_or_else(|| "pjrt".into());
             let workers = args.opt_usize("--workers", 4);
+            if args.flag("--router") {
+                let listen = args.opt("--listen").unwrap_or_else(|| "127.0.0.1:0".into());
+                return serve_router_cli(&mut args, &listen);
+            }
             if let Some(listen) = args.opt("--listen") {
                 let serve_secs = args.opt_u64_strict("--serve-secs", 0);
                 let max_inflight = args.opt_usize_strict("--max-inflight", 64);
@@ -604,30 +619,9 @@ fn serve_gateway_cli(
         .collect();
 
     let (report, _lanes) = serve_gateway(requests, lanes, &GatewayConfig::default())?;
-    println!(
-        "gateway: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
-        report.submitted,
-        report.completed,
-        report.rejected,
-        report.unknown_model,
-        report.expired,
-        report.wall_s,
-        report.throughput_per_s
-    );
+    println!("{}", report.summary_line("gateway"));
     for m in &report.models {
-        println!(
-            "  {:8} on {:12} x{}: {:>5} done / {:>3} rej / {:>3} exp, mean batch {:.2}, p50 {}us p99 {}us, {:.0} fps",
-            m.name,
-            m.backend,
-            m.workers,
-            m.completed,
-            m.rejected,
-            m.expired,
-            m.mean_batch,
-            m.latency.p50_us,
-            m.latency.p99_us,
-            m.throughput_per_s
-        );
+        println!("{}", m.summary_line());
     }
     if !report.conserved() {
         return Err(tinbinn::TinError::Config("gateway accounting violated".into()));
@@ -682,30 +676,9 @@ fn serve_listen_cli(
         });
     }
     let report = srv.wait()?;
-    println!(
-        "gateway drained: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
-        report.submitted,
-        report.completed,
-        report.rejected,
-        report.unknown_model,
-        report.expired,
-        report.wall_s,
-        report.throughput_per_s
-    );
+    println!("{}", report.summary_line("gateway drained"));
     for m in &report.models {
-        println!(
-            "  {:8} on {:12} x{}: {:>5} done / {:>3} rej / {:>3} exp, mean batch {:.2}, p50 {}us p99 {}us, {:.0} fps",
-            m.name,
-            m.backend,
-            m.workers,
-            m.completed,
-            m.rejected,
-            m.expired,
-            m.mean_batch,
-            m.latency.p50_us,
-            m.latency.p99_us,
-            m.throughput_per_s
-        );
+        println!("{}", m.summary_line());
     }
     println!("conserved: {}", report.conserved());
     if !report.conserved() {
@@ -720,7 +693,9 @@ fn serve_listen_cli(
 /// `BENCH_serve.json`. Nonzero exit when any request went unanswered.
 fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()> {
     use std::collections::HashMap;
-    use tinbinn::net::{parse_mix, run_load, Client, LoadConfig, LoadMode};
+    use tinbinn::net::{
+        parse_mix, run_load, Client, LoadConfig, LoadMode, NetTimeouts, ReconnectPolicy,
+    };
     use tinbinn::testkit::fixtures;
 
     let Some(addr) = args.opt("--connect") else {
@@ -750,6 +725,21 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     let seed = args.opt_u64_strict("--seed", 1);
     let bench_out = args.opt("--bench-out");
     let do_shutdown = args.flag("--shutdown");
+    let reconnect = args.flag("--reconnect").then(ReconnectPolicy::default);
+    let cluster = args.flag("--cluster");
+    let replicas_spec = args.opt("--replicas");
+    let kill = args.opt("--kill");
+    let kill_after_ms = args.opt_u64_strict("--kill-after-ms", 200);
+
+    // fail fast with a clear message when the target is unreachable,
+    // instead of every connection timing out in its own thread
+    if let Err(e) = Client::connect_with(
+        addr.as_str(),
+        NetTimeouts::all(std::time::Duration::from_secs(3)),
+    ) {
+        eprintln!("bench-load: cannot reach {addr}: {e}");
+        std::process::exit(1);
+    }
 
     let mix = parse_mix(&mix_spec)?;
     // sample payloads per model: trained datasets when present, the
@@ -767,7 +757,19 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         images.insert(m.model.clone(), imgs);
     }
 
-    let cfg = LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed };
+    let cfg = LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed, reconnect };
+    if cluster {
+        return bench_cluster_cli(
+            &addr,
+            &cfg,
+            &images,
+            replicas_spec,
+            kill,
+            kill_after_ms,
+            bench_out,
+            do_shutdown,
+        );
+    }
     match cfg.mode {
         LoadMode::Open { qps } => println!(
             "bench-load: open loop, {requests} requests at {qps} qps over {conns} conns -> {addr}"
@@ -778,13 +780,14 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     }
     let report = run_load(&addr, &cfg, &images)?;
     println!(
-        "sent {} | ok {} | rejected {} | expired {} | unknown {} | busy {} | lost {} in {:.2}s -> {:.0} fps",
+        "sent {} | ok {} | rejected {} | expired {} | unknown {} | busy {} | unavailable {} | lost {} in {:.2}s -> {:.0} fps",
         report.sent,
         report.ok,
         report.rejected,
         report.expired,
         report.unknown,
         report.busy,
+        report.unavailable,
         report.lost,
         report.wall_s,
         report.throughput_per_s
@@ -821,5 +824,175 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
             report.lost
         )));
     }
+    Ok(())
+}
+
+/// Parse `--replicas host:port,host:port,...` into resolved addresses.
+fn parse_replicas(spec: &str) -> tinbinn::Result<Vec<std::net::SocketAddr>> {
+    use std::net::ToSocketAddrs;
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let addr = part.to_socket_addrs()?.next().ok_or_else(|| {
+            tinbinn::TinError::Config(format!("replica '{part}' resolved to no address"))
+        })?;
+        out.push(addr);
+    }
+    if out.is_empty() {
+        return Err(tinbinn::TinError::Config("empty --replicas list".into()));
+    }
+    Ok(out)
+}
+
+/// `serve --router` — the fault-tolerant cluster tier: TBNP/1 on both
+/// sides, consistent-hash model placement over the replica servers,
+/// ping health probes with ejection and probation, and
+/// retry-on-another-replica with capped exponential backoff. Runs until
+/// a client sends the shutdown control (propagated to every reachable
+/// replica) or `--serve-secs` fires, then prints its conserved ledger.
+fn serve_router_cli(args: &mut Args, listen: &str) -> tinbinn::Result<()> {
+    use tinbinn::net::{ClusterConfig, ClusterRouter, MonotonicClock};
+
+    let spec = match args.opt("--replicas") {
+        Some(s) => s,
+        None => {
+            eprintln!("serve --router needs --replicas ADDR1,ADDR2,... (serve --listen endpoints)");
+            usage();
+        }
+    };
+    let replicas = parse_replicas(&spec)?;
+    let n = replicas.len();
+    let mut cfg = ClusterConfig::new(replicas);
+    cfg.replication = args.opt_usize_strict("--replication", 2).max(1);
+    cfg.probe.interval_us = args.opt_u64_strict("--probe-ms", 100).max(1) * 1000;
+    cfg.probe.fail_threshold = args.opt_usize_strict("--eject-after", 3).max(1) as u32;
+    cfg.probe.probation_us = args.opt_u64_strict("--probation-ms", 1000).max(1) * 1000;
+    cfg.retry.max_retries = args.opt_usize_strict("--retries", 3) as u32;
+    cfg.retry.base_backoff_us = args.opt_u64_strict("--backoff-us", 5000).max(1);
+    let serve_secs = args.opt_u64_strict("--serve-secs", 0);
+    let replication = cfg.replication;
+    let probe_ms = cfg.probe.interval_us / 1000;
+    let eject_after = cfg.probe.fail_threshold;
+    let retries = cfg.retry.max_retries;
+
+    let router = ClusterRouter::start(listen, cfg, std::sync::Arc::new(MonotonicClock::new()))?;
+    // the CI smoke and scripts parse this line for the ephemeral port
+    println!("tinbinn serve: listening on {}", router.local_addr());
+    println!(
+        "  router over {n} replicas: replication {replication}, probe every {probe_ms}ms, \
+         eject after {eject_after} failures, {retries} retries; drain via bench-load --shutdown{}",
+        if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() }
+    );
+
+    let limit =
+        if serve_secs > 0 { Some(std::time::Duration::from_secs(serve_secs)) } else { None };
+    let report = router.wait_timeout(limit)?;
+    println!("{}", report.summary_line());
+    println!("conserved: {}", report.conserved());
+    if !report.conserved() {
+        return Err(tinbinn::TinError::Config("cluster router accounting violated".into()));
+    }
+    Ok(())
+}
+
+/// `bench-load --cluster` — the three-phase cluster benchmark:
+/// (A) direct load on one replica, (B) the same load through the
+/// router over all replicas, (C) through the router again while
+/// `--kill` dies mid-run. Scaling and kill-window rows land next to
+/// the phase-B load rows in `--bench-out`.
+#[allow(clippy::too_many_arguments)]
+fn bench_cluster_cli(
+    addr: &str,
+    cfg: &tinbinn::net::LoadConfig,
+    images: &std::collections::HashMap<String, Vec<Vec<u8>>>,
+    replicas_spec: Option<String>,
+    kill: Option<String>,
+    kill_after_ms: u64,
+    bench_out: Option<String>,
+    do_shutdown: bool,
+) -> tinbinn::Result<()> {
+    use tinbinn::net::{run_cluster_load, run_load, Client, ClusterScenario};
+    use tinbinn::report::bench::BenchResult;
+
+    let spec = match replicas_spec {
+        Some(s) => s,
+        None => {
+            eprintln!("bench-load --cluster needs --replicas ADDR1,ADDR2,... (the set behind the router)");
+            std::process::exit(2);
+        }
+    };
+    let replicas = parse_replicas(&spec)?;
+    fn row(name: &str, iters: u32, v: f64) -> BenchResult {
+        BenchResult { name: name.into(), iters: iters.max(1), mean_s: v, stddev_s: 0.0, min_s: v }
+    }
+
+    // phase A: one replica dialed directly — the scaling baseline
+    let direct = replicas[0].to_string();
+    println!("cluster phase A: {} requests direct -> {direct} (1 replica)", cfg.requests);
+    let a = run_load(&direct, cfg, images)?;
+    println!("  {:.0} fps, lost {}", a.throughput_per_s, a.lost);
+
+    // phase B: the same load through the router over all replicas
+    println!(
+        "cluster phase B: {} requests via router {addr} ({} replicas)",
+        cfg.requests,
+        replicas.len()
+    );
+    let b = run_load(addr, cfg, images)?;
+    println!("  {:.0} fps, lost {}", b.throughput_per_s, b.lost);
+
+    // phase C: through the router again while a replica dies mid-run
+    match &kill {
+        Some(v) => println!("cluster phase C: killing {v} after {kill_after_ms}ms mid-run"),
+        None => println!("cluster phase C: no --kill target given, plain re-run"),
+    }
+    let scenario = ClusterScenario {
+        victim: kill,
+        kill_after: std::time::Duration::from_millis(kill_after_ms),
+    };
+    let c = run_cluster_load(addr, cfg, images, &scenario)?;
+    let kill_p99 = c.models.iter().map(|m| m.latency.p99_us()).max().unwrap_or(0);
+    println!(
+        "  {:.0} fps, p99 {}us, lost {} | answered {} of {} sent (unavailable {})",
+        c.throughput_per_s,
+        kill_p99,
+        c.lost,
+        c.answered(),
+        c.sent,
+        c.unavailable
+    );
+
+    let mut rows = b.bench_rows();
+    rows.push(row("cluster_1replica", a.ok as u32, 1.0 / a.throughput_per_s.max(1e-12)));
+    rows.push(row("cluster_nreplica", b.ok as u32, 1.0 / b.throughput_per_s.max(1e-12)));
+    rows.push(row("cluster_kill_p99_us", c.ok as u32, kill_p99 as f64));
+    rows.push(row("cluster_kill_unanswered", 1, c.lost as f64));
+    rows.push(row("cluster_kill_unavailable", 1, c.unavailable as f64));
+    if let Some(path) = bench_out {
+        tinbinn::report::bench::write_json(&path, "bench_load_cluster", &rows)?;
+        println!("wrote {path} ({} rows)", rows.len());
+    }
+
+    if do_shutdown {
+        let mut cl = Client::connect(addr)?;
+        cl.shutdown_server()?;
+        println!("sent shutdown control to {addr} (the router propagates it to the replicas)");
+    }
+    for (phase, rep) in [("A", &a), ("B", &b), ("C", &c)] {
+        if !rep.conserved() {
+            return Err(tinbinn::TinError::Config(format!(
+                "cluster phase {phase}: client ledger violated (answered {} + lost {} != sent {})",
+                rep.answered(),
+                rep.lost,
+                rep.sent
+            )));
+        }
+    }
+    let lost = a.lost + b.lost + c.lost;
+    if lost > 0 {
+        return Err(tinbinn::TinError::Config(format!(
+            "{lost} requests went unanswered across the cluster phases"
+        )));
+    }
+    println!("cluster phases conserved: true");
     Ok(())
 }

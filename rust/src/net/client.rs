@@ -2,15 +2,87 @@
 //! in flight on one socket; responses come back tagged with the request
 //! id (not necessarily in send order once multiple models or priorities
 //! are involved), so callers match on [`ResponseFrame::id`].
+//!
+//! Hardened for unreliable peers: every connect/read/write phase takes
+//! an optional timeout ([`NetTimeouts`]), connection-refused and
+//! mid-stream-EOF surface as typed errors on every path (never a panic
+//! or an indefinite block once timeouts are set), and
+//! [`Client::infer_pipelined_reconnect`] survives a server restart by
+//! re-dialing with capped exponential backoff while counting the
+//! in-flight requests the outage swallowed into an explicit `lost`
+//! tally — the load generator folds that into its conserved ledger.
 
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 use crate::coordinator::batcher::Priority;
 use crate::net::proto::{read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame};
 use crate::util::TinError;
 use crate::Result;
+
+/// Socket timeout knobs for [`Client::connect_with`]. `None` anywhere
+/// means "block indefinitely" (the legacy default, fine on loopback).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetTimeouts {
+    pub connect: Option<Duration>,
+    pub read: Option<Duration>,
+    pub write: Option<Duration>,
+}
+
+impl NetTimeouts {
+    /// One bound for all three phases.
+    pub fn all(d: Duration) -> Self {
+        NetTimeouts { connect: Some(d), read: Some(d), write: Some(d) }
+    }
+}
+
+/// Capped exponential backoff for re-dialing a restarted server:
+/// attempt `k` sleeps `min(base << k, max)` before connecting.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectPolicy {
+    /// Connect attempts per outage before giving up.
+    pub attempts: u32,
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            attempts: 5,
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(500),
+        }
+    }
+}
+
+impl ReconnectPolicy {
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        self.base_backoff.saturating_mul(1u32 << attempt.min(16)).min(self.max_backoff)
+    }
+}
+
+/// Resolve to one concrete address (needed for `connect_timeout`, and
+/// remembered so [`Client::reconnect_with_backoff`] can re-dial).
+pub(crate) fn resolve_addr(addr: impl ToSocketAddrs) -> Result<SocketAddr> {
+    addr.to_socket_addrs()?
+        .next()
+        .ok_or_else(|| TinError::Io("address resolved to no socket address".into()))
+}
+
+/// Dial with the configured timeouts applied to every phase.
+pub(crate) fn connect_stream(addr: &SocketAddr, t: &NetTimeouts) -> Result<TcpStream> {
+    let stream = match t.connect {
+        Some(d) => TcpStream::connect_timeout(addr, d)?,
+        None => TcpStream::connect(addr)?,
+    };
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(t.read)?;
+    stream.set_write_timeout(t.write)?;
+    Ok(stream)
+}
 
 /// One connection to a serving front-end.
 pub struct Client {
@@ -20,26 +92,77 @@ pub struct Client {
     /// Data responses consumed while waiting for a pong; handed back by
     /// the next [`Client::recv`] calls in arrival order.
     pending: VecDeque<ResponseFrame>,
+    addr: SocketAddr,
+    timeouts: NetTimeouts,
+    reconnects: u64,
 }
 
 impl Client {
+    /// Connect with no timeouts (blocks indefinitely — loopback use).
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        let _ = stream.set_nodelay(true);
+        Client::connect_with(addr, NetTimeouts::default())
+    }
+
+    /// Connect with explicit connect/read/write timeouts. A refused or
+    /// unreachable target surfaces as a typed error, never a hang.
+    pub fn connect_with(addr: impl ToSocketAddrs, timeouts: NetTimeouts) -> Result<Client> {
+        let addr = resolve_addr(addr)?;
+        let stream = connect_stream(&addr, &timeouts)?;
         let rstream = stream.try_clone()?;
         Ok(Client {
             reader: BufReader::new(rstream),
             writer: BufWriter::new(stream),
             next_id: 0,
             pending: VecDeque::new(),
+            addr,
+            timeouts,
+            reconnects: 0,
         })
+    }
+
+    /// The resolved peer address this client dials.
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Times this client re-dialed after an outage.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
     }
 
     /// Bound how long a blocked [`Client::recv`] waits before erroring
     /// (load generators use this so a lost response can't hang a run).
+    /// Remembered across reconnects.
     pub fn set_recv_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.timeouts.read = timeout;
         self.reader.get_ref().set_read_timeout(timeout)?;
         Ok(())
+    }
+
+    /// Tear down the current socket and re-dial the same address with
+    /// capped exponential backoff. Request ids keep counting up (ids
+    /// stay unique across the outage) and already-buffered responses
+    /// stay deliverable; only the socket is replaced.
+    pub fn reconnect_with_backoff(&mut self, policy: &ReconnectPolicy) -> Result<()> {
+        let mut last: Option<TinError> = None;
+        for attempt in 0..policy.attempts.max(1) {
+            std::thread::sleep(policy.backoff_for(attempt));
+            match connect_stream(&self.addr, &self.timeouts) {
+                Ok(stream) => match stream.try_clone() {
+                    Ok(r) => {
+                        self.reader = BufReader::new(r);
+                        self.writer = BufWriter::new(stream);
+                        self.reconnects += 1;
+                        return Ok(());
+                    }
+                    Err(e) => last = Some(e.into()),
+                },
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            TinError::Io(format!("reconnect to {} failed with zero attempts", self.addr))
+        }))
     }
 
     /// Queue one request (buffered — call [`Client::flush`] to put it on
@@ -122,13 +245,108 @@ impl Client {
                 }
             }
         }
-        Ok(out.into_iter().map(|r| r.expect("all slots filled")).collect())
+        out.into_iter()
+            .map(|r| r.ok_or_else(|| TinError::Runtime("a response slot went unfilled".into())))
+            .collect()
+    }
+
+    /// Pipelined batch that survives the server dying mid-run: on a
+    /// transport error every in-flight (sent, unanswered) request is
+    /// counted into the returned `lost` tally, the connection is
+    /// re-dialed with `policy`'s capped exponential backoff, and the
+    /// unsent tail continues on the new socket. Lost requests are NOT
+    /// resent (the server may have scored them; resending would
+    /// double-count) — slot `i` is `None` when image `i`'s answer was
+    /// swallowed by an outage, and `answered + lost == images.len()`
+    /// always holds. Errors only when reconnecting itself keeps failing
+    /// or repeated outages make no progress.
+    pub fn infer_pipelined_reconnect(
+        &mut self,
+        model: &str,
+        images: &[&[u8]],
+        window: usize,
+        policy: &ReconnectPolicy,
+    ) -> Result<(Vec<Option<ResponseFrame>>, u64)> {
+        let n = images.len();
+        let window = window.max(1);
+        let mut out: Vec<Option<ResponseFrame>> = (0..n).map(|_| None).collect();
+        let mut lost: u64 = 0;
+        let mut answered: u64 = 0;
+        let mut next = 0usize;
+        let mut inflight: VecDeque<(u64, usize)> = VecDeque::new();
+        // progress guard: an outage that repeats with identical state
+        // (nothing sent, answered, or newly lost since the last one)
+        // means the peer accepts dials but serves nothing — bail instead
+        // of reconnect-looping forever
+        let mut last_outage = (usize::MAX, u64::MAX, u64::MAX);
+        let mut barren = 0u32;
+        loop {
+            let mut io_err = false;
+            while next < n && inflight.len() < window {
+                match self.send(model, images[next].to_vec(), Priority::Normal, None) {
+                    Ok(id) => {
+                        inflight.push_back((id, next));
+                        next += 1;
+                    }
+                    Err(_) => {
+                        io_err = true;
+                        break;
+                    }
+                }
+            }
+            if !io_err && self.flush().is_err() {
+                io_err = true;
+            }
+            if !io_err {
+                if inflight.is_empty() {
+                    break; // everything sent and settled
+                }
+                match self.recv() {
+                    Ok(resp) => {
+                        if let Some(pos) = inflight.iter().position(|&(id, _)| id == resp.id) {
+                            if let Some((_, idx)) = inflight.remove(pos) {
+                                out[idx] = Some(resp);
+                                answered += 1;
+                            }
+                        }
+                        // unknown ids (a stale pong, a pre-outage
+                        // straggler) are ignored, not fatal
+                        continue;
+                    }
+                    Err(_) => io_err = true,
+                }
+            }
+            debug_assert!(io_err);
+            // transport outage: in-flight requests are gone for good
+            lost += inflight.len() as u64;
+            inflight.clear();
+            if next >= n {
+                break; // nothing left to send; the losses are final
+            }
+            let state = (next, answered, lost);
+            if state == last_outage {
+                barren += 1;
+                if barren >= policy.attempts.max(1) {
+                    return Err(TinError::Io(format!(
+                        "server at {} accepts connections but serves nothing",
+                        self.addr
+                    )));
+                }
+            } else {
+                barren = 0;
+                last_outage = state;
+            }
+            self.reconnect_with_backoff(policy)?;
+        }
+        debug_assert_eq!(answered + lost, n as u64, "pipelined ledger must balance");
+        Ok((out, lost))
     }
 
     /// Liveness probe: a ping control frame, answered with an empty Ok
     /// carrying id `u64::MAX`. Safe with requests in flight: data
     /// responses that arrive before the pong are buffered and returned
-    /// by subsequent [`Client::recv`] calls.
+    /// by subsequent [`Client::recv`] calls. With a read timeout set, a
+    /// pong that never comes is a timeout error, not a hang.
     pub fn ping(&mut self) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Control(ControlOp::Ping))?;
         self.flush()?;
@@ -145,5 +363,34 @@ impl Client {
     pub fn shutdown_server(&mut self) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Control(ControlOp::Shutdown))?;
         self.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_refused_is_a_typed_error_not_a_panic() {
+        // bind then drop a listener: nothing listens on that port now
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        let r = Client::connect_with(addr, NetTimeouts::all(Duration::from_millis(300)));
+        assert!(r.is_err(), "dialing a dead port must error, not hang or panic");
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let p = ReconnectPolicy {
+            attempts: 8,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(45),
+        };
+        assert_eq!(p.backoff_for(0), Duration::from_millis(10));
+        assert_eq!(p.backoff_for(1), Duration::from_millis(20));
+        assert_eq!(p.backoff_for(2), Duration::from_millis(40));
+        assert_eq!(p.backoff_for(3), Duration::from_millis(45));
+        assert_eq!(p.backoff_for(30), Duration::from_millis(45), "shift is clamped");
     }
 }

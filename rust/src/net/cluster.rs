@@ -1,0 +1,967 @@
+//! Fault-tolerant cluster router: replicated TBNP/1 serving.
+//!
+//! A [`ClusterRouter`] speaks TBNP/1 on both sides. Clients dial it like
+//! any single server; behind it sit N replica servers (each a
+//! [`NetServer`](crate::net::server::NetServer) or `tinbinn serve
+//! --listen` process). Three mechanisms make the tier survive replica
+//! death without losing the exact accounting the single-process ledger
+//! established:
+//!
+//! * **Placement** — a consistent-hash [`Ring`] (FNV-1a over virtual
+//!   nodes) maps each model name to its owner replicas, `replication`
+//!   of them (default 2). Removal of one replica reshuffles only that
+//!   replica's share: the surviving owners of every model are unchanged
+//!   (pinned by a proptest below).
+//! * **Failure detection** — a probe thread pings every replica each
+//!   `interval_us`; [`ReplicaHealth`] ejects a replica after
+//!   `fail_threshold` consecutive failures and, once `probation_us` has
+//!   elapsed, lets it serve a half-open trial: one good probe
+//!   reinstates it, one bad probe re-ejects it. Routing errors feed the
+//!   same state machine, so a dead replica is usually ejected by the
+//!   requests that discover it, faster than the probe cadence.
+//! * **Retries** — a transport failure (connect refused, mid-stream
+//!   EOF, timeout, corrupt frame) moves the request to another owner
+//!   with capped exponential backoff, up to `max_retries` extra
+//!   attempts. An exhausted budget answers the client with the typed
+//!   [`Status::Unavailable`] — the router never hangs a request.
+//!   Replica *verdicts* (`Rejected`, `Busy`, `Expired`, ...) are relayed
+//!   verbatim, never retried: the replica answered, and re-running a
+//!   scored request could double-count it.
+//!
+//! The router keeps its own conserved ledger, per attempt:
+//! `forwarded == answered + retried_away + failed`, and per request:
+//! `received == answered + failed`. Both are checked by
+//! [`ClusterReport::conserved`] and printed by `serve --router`.
+//!
+//! Deterministic fault injection reuses the server's
+//! [`FaultPlan`](crate::net::server::FaultPlan) on the router's own
+//! client-facing side (refuse accepts, drop after K frames, stall,
+//! corrupt), which is how the reconnecting-client test below simulates
+//! a router restart without wall-clock races.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::net::client::{Client, NetTimeouts};
+use crate::net::proto::{read_frame, write_frame, Frame, ControlOp, RequestFrame, ResponseFrame, Status};
+use crate::net::server::{write_response_frame, Clock, FaultPlan};
+use crate::util::TinError;
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// consistent-hash ring
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Consistent-hash ring over replica indices. Each replica contributes
+/// `vnodes` points; a model's owners are the first `want` *distinct*
+/// replicas met walking clockwise from the model's hash. Placement is
+/// a pure function of (replica count, vnodes, model name) — every
+/// router instance over the same replica list computes the same owners.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// (hash, replica) points, sorted by hash.
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn new(n_replicas: usize, vnodes: usize) -> Ring {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(n_replicas * vnodes);
+        for r in 0..n_replicas {
+            for v in 0..vnodes {
+                let key = format!("replica-{r}-vnode-{v}");
+                points.push((fnv1a(key.as_bytes()), r));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// The first `want` distinct replicas clockwise from `model`'s hash
+    /// (fewer when the ring holds fewer distinct replicas).
+    pub fn owners(&self, model: &str, want: usize) -> Vec<usize> {
+        let mut owners = Vec::new();
+        if self.points.is_empty() || want == 0 {
+            return owners;
+        }
+        let h = fnv1a(model.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for k in 0..self.points.len() {
+            let (_, r) = self.points[(start + k) % self.points.len()];
+            if !owners.contains(&r) {
+                owners.push(r);
+                if owners.len() >= want {
+                    break;
+                }
+            }
+        }
+        owners
+    }
+
+    /// The ring with one replica's points deleted (what ejection looks
+    /// like structurally). Kept for tests/analysis: the router itself
+    /// filters by liveness instead, so a recovered replica's share
+    /// comes straight back.
+    pub fn without(&self, replica: usize) -> Ring {
+        Ring { points: self.points.iter().copied().filter(|&(_, r)| r != replica).collect() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica health state machine
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving; routed to.
+    Up,
+    /// Ejected until the probation deadline; neither routed to (unless
+    /// every owner is down) nor probed.
+    Ejected { until_us: u64 },
+    /// Probation (half-open): probed again, not yet routed to. One good
+    /// probe reinstates, one failure re-ejects.
+    Probation,
+}
+
+/// Per-replica failure detector, driven by an injected clock (pure
+/// state machine — the `ManualClock` unit test below steps it without
+/// sleeping). Both probe results and routing transport errors feed it.
+#[derive(Clone, Debug)]
+pub struct ReplicaHealth {
+    state: HealthState,
+    consecutive_failures: u32,
+    pub ejections: u64,
+    pub reinstatements: u64,
+}
+
+impl Default for ReplicaHealth {
+    fn default() -> Self {
+        ReplicaHealth::new()
+    }
+}
+
+impl ReplicaHealth {
+    pub fn new() -> ReplicaHealth {
+        ReplicaHealth {
+            state: HealthState::Up,
+            consecutive_failures: 0,
+            ejections: 0,
+            reinstatements: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Routed to under normal placement?
+    pub fn is_live(&self) -> bool {
+        matches!(self.state, HealthState::Up)
+    }
+
+    /// Worth probing? (Ejected replicas are left alone until probation
+    /// elapses — hammering a dead host teaches nothing.)
+    pub fn wants_probe(&self) -> bool {
+        !matches!(self.state, HealthState::Ejected { .. })
+    }
+
+    /// Advance time: an elapsed probation turns Ejected into Probation.
+    pub fn tick(&mut self, now_us: u64) {
+        if let HealthState::Ejected { until_us } = self.state {
+            if now_us >= until_us {
+                self.state = HealthState::Probation;
+            }
+        }
+    }
+
+    /// A successful probe or forwarded request.
+    pub fn on_success(&mut self) {
+        if !matches!(self.state, HealthState::Up) {
+            self.reinstatements += 1;
+        }
+        self.state = HealthState::Up;
+        self.consecutive_failures = 0;
+    }
+
+    /// A failed probe or a transport error while forwarding.
+    pub fn on_failure(&mut self, now_us: u64, cfg: &ProbeConfig) {
+        match self.state {
+            HealthState::Up => {
+                self.consecutive_failures += 1;
+                if self.consecutive_failures >= cfg.fail_threshold.max(1) {
+                    self.state = HealthState::Ejected { until_us: now_us + cfg.probation_us };
+                    self.ejections += 1;
+                }
+            }
+            HealthState::Probation => {
+                // the half-open trial failed: straight back out
+                self.state = HealthState::Ejected { until_us: now_us + cfg.probation_us };
+                self.ejections += 1;
+            }
+            // already out; a desperation-fallback failure changes nothing
+            HealthState::Ejected { .. } => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// configuration
+
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeConfig {
+    /// Pause between probe sweeps over the replica set.
+    pub interval_us: u64,
+    /// Consecutive failures before ejection.
+    pub fail_threshold: u32,
+    /// How long an ejected replica sits out before its half-open trial.
+    pub probation_us: u64,
+    /// Connect/read bound on one probe dial.
+    pub probe_timeout_us: u64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        ProbeConfig {
+            interval_us: 100_000,
+            fail_threshold: 3,
+            probation_us: 1_000_000,
+            probe_timeout_us: 250_000,
+        }
+    }
+}
+
+/// Per-request retry budget with capped exponential backoff: retry `k`
+/// (1-based) sleeps `min(base << (k-1), max)` first.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryConfig {
+    /// Extra attempts after the first (total attempts = `max_retries + 1`).
+    pub max_retries: u32,
+    pub base_backoff_us: u64,
+    pub max_backoff_us: u64,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig { max_retries: 3, base_backoff_us: 5_000, max_backoff_us: 100_000 }
+    }
+}
+
+impl RetryConfig {
+    pub fn backoff_us(&self, retry: u32) -> u64 {
+        let shift = retry.saturating_sub(1).min(16);
+        self.base_backoff_us.saturating_mul(1u64 << shift).min(self.max_backoff_us)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub replicas: Vec<SocketAddr>,
+    /// Owners per model (clamped to the replica count).
+    pub replication: usize,
+    /// Virtual nodes per replica on the ring.
+    pub vnodes: usize,
+    pub probe: ProbeConfig,
+    pub retry: RetryConfig,
+    /// Timeouts on every upstream (router→replica) socket; the read
+    /// timeout is what turns a stalled replica into a retryable error.
+    pub timeouts: NetTimeouts,
+    /// Fault injection on the router's own client-facing side.
+    pub fault: FaultPlan,
+}
+
+impl ClusterConfig {
+    pub fn new(replicas: Vec<SocketAddr>) -> ClusterConfig {
+        ClusterConfig {
+            replicas,
+            replication: 2,
+            vnodes: 32,
+            probe: ProbeConfig::default(),
+            retry: RetryConfig::default(),
+            timeouts: NetTimeouts::all(Duration::from_secs(2)),
+            fault: FaultPlan::none(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ledger
+
+#[derive(Default)]
+struct ClusterStats {
+    received: AtomicU64,
+    forwarded: AtomicU64,
+    answered: AtomicU64,
+    retried_away: AtomicU64,
+    failed: AtomicU64,
+    probes_ok: AtomicU64,
+    probes_failed: AtomicU64,
+}
+
+/// The router's conserved ledger. Per attempt:
+/// `forwarded == answered + retried_away + failed`; per request:
+/// `received == answered + failed` (every request read off a client
+/// socket gets exactly one terminal answer — a relayed replica response
+/// or a typed `Unavailable`).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub replicas: usize,
+    /// Requests read from client connections.
+    pub received: u64,
+    /// Forwarding attempts opened against replicas.
+    pub forwarded: u64,
+    /// Attempts a replica answered (any status — verdicts relay).
+    pub answered: u64,
+    /// Attempts that failed in transport with retry budget remaining.
+    pub retried_away: u64,
+    /// Requests whose whole budget failed → answered `Unavailable`.
+    pub failed: u64,
+    pub probes_ok: u64,
+    pub probes_failed: u64,
+    pub ejections: u64,
+    pub reinstatements: u64,
+}
+
+impl ClusterReport {
+    pub fn conserved(&self) -> bool {
+        self.forwarded == self.answered + self.retried_away + self.failed
+            && self.received == self.answered + self.failed
+    }
+
+    /// One grep-friendly line (CI asserts on it).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "cluster ledger: replicas={} received={} forwarded={} answered={} \
+             retried_away={} failed={} probes_ok={} probes_failed={} ejections={} \
+             reinstatements={}",
+            self.replicas,
+            self.received,
+            self.forwarded,
+            self.answered,
+            self.retried_away,
+            self.failed,
+            self.probes_ok,
+            self.probes_failed,
+            self.ejections,
+            self.reinstatements,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// router
+
+struct Shared {
+    cfg: ClusterConfig,
+    ring: Ring,
+    health: Mutex<Vec<ReplicaHealth>>,
+    stats: ClusterStats,
+    clock: Arc<dyn Clock>,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    fn is_live(&self, idx: usize) -> bool {
+        self.health.lock().unwrap()[idx].is_live()
+    }
+
+    fn report(&self) -> ClusterReport {
+        let (ejections, reinstatements) = {
+            let h = self.health.lock().unwrap();
+            h.iter().fold((0, 0), |(e, r), x| (e + x.ejections, r + x.reinstatements))
+        };
+        ClusterReport {
+            replicas: self.cfg.replicas.len(),
+            received: self.stats.received.load(Ordering::Relaxed),
+            forwarded: self.stats.forwarded.load(Ordering::Relaxed),
+            answered: self.stats.answered.load(Ordering::Relaxed),
+            retried_away: self.stats.retried_away.load(Ordering::Relaxed),
+            failed: self.stats.failed.load(Ordering::Relaxed),
+            probes_ok: self.stats.probes_ok.load(Ordering::Relaxed),
+            probes_failed: self.stats.probes_failed.load(Ordering::Relaxed),
+            ejections,
+            reinstatements,
+        }
+    }
+}
+
+/// The serving tier: accept loop + one synchronous handler thread per
+/// client connection (each with its own upstream connection pool) + a
+/// probe thread. Requests on one connection forward one at a time —
+/// concurrency comes from client connections, same as the replicas'
+/// own per-connection backpressure model.
+pub struct ClusterRouter {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_join: JoinHandle<()>,
+    probe_join: JoinHandle<()>,
+    handler_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    client_streams: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl ClusterRouter {
+    pub fn start(
+        addr: impl ToSocketAddrs,
+        cfg: ClusterConfig,
+        clock: Arc<dyn Clock>,
+    ) -> Result<ClusterRouter> {
+        if cfg.replicas.is_empty() {
+            return Err(TinError::Config("cluster router needs >= 1 replica".into()));
+        }
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+
+        let ring = Ring::new(cfg.replicas.len(), cfg.vnodes);
+        let n = cfg.replicas.len();
+        let shared = Arc::new(Shared {
+            ring,
+            health: Mutex::new(vec![ReplicaHealth::new(); n]),
+            stats: ClusterStats::default(),
+            clock,
+            stop: AtomicBool::new(false),
+            cfg,
+        });
+
+        let client_streams: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let handler_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let a_shared = Arc::clone(&shared);
+        let a_streams = Arc::clone(&client_streams);
+        let a_joins = Arc::clone(&handler_joins);
+        let accept_join = thread::spawn(move || loop {
+            if a_shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if a_shared.cfg.fault.refuse_accepts {
+                        drop(stream);
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                    if let Ok(c) = stream.try_clone() {
+                        a_streams.lock().unwrap().push(c);
+                    }
+                    let h_shared = Arc::clone(&a_shared);
+                    let j = thread::spawn(move || handle_client(stream, h_shared));
+                    a_joins.lock().unwrap().push(j);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => thread::sleep(Duration::from_millis(2)),
+            }
+        });
+
+        let p_shared = Arc::clone(&shared);
+        let probe_join = thread::spawn(move || probe_loop(&p_shared));
+
+        Ok(ClusterRouter {
+            local_addr,
+            shared,
+            accept_join,
+            probe_join,
+            handler_joins,
+            client_streams,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop now: close every client connection, join all threads,
+    /// return the ledger.
+    pub fn shutdown(self) -> Result<ClusterReport> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.finish()
+    }
+
+    /// Block until a client sends the Shutdown control (which also
+    /// propagates the shutdown to every reachable replica), then join
+    /// and return the ledger.
+    pub fn wait(self) -> Result<ClusterReport> {
+        self.wait_timeout(None)
+    }
+
+    /// [`ClusterRouter::wait`] with a safety limit: after `limit` the
+    /// router stops on its own (the `serve --router --serve-secs` CLI
+    /// backstop, so an orphaned router can't outlive its CI job).
+    pub fn wait_timeout(self, limit: Option<Duration>) -> Result<ClusterReport> {
+        let start = std::time::Instant::now();
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            if let Some(l) = limit {
+                if start.elapsed() >= l {
+                    self.shared.stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        self.finish()
+    }
+
+    fn finish(self) -> Result<ClusterReport> {
+        for s in self.client_streams.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let _ = self.accept_join.join();
+        let _ = self.probe_join.join();
+        let joins = {
+            let mut g = self.handler_joins.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        for j in joins {
+            let _ = j.join();
+        }
+        Ok(self.shared.report())
+    }
+}
+
+fn probe_loop(shared: &Arc<Shared>) {
+    let t = NetTimeouts::all(Duration::from_micros(shared.cfg.probe.probe_timeout_us.max(1)));
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        for idx in 0..shared.cfg.replicas.len() {
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let wants = {
+                let mut h = shared.health.lock().unwrap();
+                h[idx].tick(shared.clock.now_us());
+                h[idx].wants_probe()
+            };
+            if !wants {
+                continue;
+            }
+            let ok = probe_once(&shared.cfg.replicas[idx], &t);
+            let now = shared.clock.now_us();
+            let mut h = shared.health.lock().unwrap();
+            if ok {
+                shared.stats.probes_ok.fetch_add(1, Ordering::Relaxed);
+                h[idx].on_success();
+            } else {
+                shared.stats.probes_failed.fetch_add(1, Ordering::Relaxed);
+                h[idx].on_failure(now, &shared.cfg.probe);
+            }
+        }
+        // sleep the interval in slices so shutdown stays prompt
+        let interval = shared.cfg.probe.interval_us.max(1_000);
+        let mut slept = 0u64;
+        while slept < interval && !shared.stop.load(Ordering::SeqCst) {
+            let step = (interval - slept).min(20_000);
+            thread::sleep(Duration::from_micros(step));
+            slept += step;
+        }
+    }
+}
+
+fn probe_once(addr: &SocketAddr, t: &NetTimeouts) -> bool {
+    match Client::connect_with(*addr, *t) {
+        Ok(mut c) => c.ping().is_ok(),
+        Err(_) => false,
+    }
+}
+
+fn handle_client(stream: TcpStream, shared: Arc<Shared>) {
+    let fault = shared.cfg.fault;
+    let r_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(r_stream);
+    let mut writer = BufWriter::new(stream);
+    // upstream pool, lazily dialed; a transport error poisons the entry
+    let mut pool: HashMap<usize, Client> = HashMap::new();
+    let mut frames_read: u64 = 0;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            // clean close, mid-frame EOF, or our own finish() cutting
+            // the socket — nothing owed in any case
+            Ok(None) | Err(_) => break,
+        };
+        frames_read += 1;
+        match frame {
+            Frame::Request(req) => {
+                shared.stats.received.fetch_add(1, Ordering::Relaxed);
+                let resp = forward_with_retries(&shared, &mut pool, &req);
+                if !fault.stall_responses {
+                    if write_response_frame(&mut writer, &resp, fault.corrupt_frames).is_err() {
+                        break;
+                    }
+                    if writer.flush().is_err() {
+                        break;
+                    }
+                }
+            }
+            Frame::Control(ControlOp::Ping) => {
+                let pong =
+                    ResponseFrame::status_only(u64::MAX, Status::Ok, shared.clock.now_us());
+                if write_frame(&mut writer, &Frame::Response(pong)).is_err()
+                    || writer.flush().is_err()
+                {
+                    break;
+                }
+            }
+            Frame::Control(ControlOp::Shutdown) => {
+                // propagate the drain to every reachable replica, then
+                // bring the router itself down
+                for &addr in &shared.cfg.replicas {
+                    if let Ok(mut c) = Client::connect_with(addr, shared.cfg.timeouts) {
+                        let _ = c.shutdown_server();
+                    }
+                }
+                shared.stop.store(true, Ordering::SeqCst);
+                break;
+            }
+            // clients don't send responses
+            Frame::Response(_) => break,
+        }
+        if let Some(k) = fault.drop_after_frames {
+            if frames_read >= k {
+                let _ = reader.get_ref().shutdown(Shutdown::Both);
+                break;
+            }
+        }
+    }
+}
+
+/// Forward one request, rotating over the model's owners (live ones
+/// preferred, any owner as a last resort) until a replica answers or
+/// the retry budget is spent. Always returns a terminal response.
+fn forward_with_retries(
+    shared: &Shared,
+    pool: &mut HashMap<usize, Client>,
+    req: &RequestFrame,
+) -> ResponseFrame {
+    let want = shared.cfg.replication.max(1);
+    let owners = shared.ring.owners(&req.model, want);
+    debug_assert!(!owners.is_empty(), "start() guarantees >= 1 replica");
+    let budget = shared.cfg.retry.max_retries;
+    let mut attempt: u32 = 0;
+    loop {
+        let live: Vec<usize> = owners.iter().copied().filter(|&i| shared.is_live(i)).collect();
+        let pick = if live.is_empty() { &owners } else { &live };
+        let idx = pick[(req.id as usize).wrapping_add(attempt as usize) % pick.len()];
+        shared.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+        match try_one(shared, pool, idx, req) {
+            Ok(mut resp) => {
+                shared.health.lock().unwrap()[idx].on_success();
+                shared.stats.answered.fetch_add(1, Ordering::Relaxed);
+                resp.id = req.id;
+                return resp;
+            }
+            Err(_) => {
+                pool.remove(&idx); // the connection is poisoned
+                let now = shared.clock.now_us();
+                shared.health.lock().unwrap()[idx].on_failure(now, &shared.cfg.probe);
+                if attempt >= budget {
+                    shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    return ResponseFrame::status_only(req.id, Status::Unavailable, now);
+                }
+                shared.stats.retried_away.fetch_add(1, Ordering::Relaxed);
+                attempt += 1;
+                thread::sleep(Duration::from_micros(shared.cfg.retry.backoff_us(attempt)));
+            }
+        }
+    }
+}
+
+/// One synchronous attempt against replica `idx` over its pooled
+/// connection (dialed on demand). Any transport or protocol fault is an
+/// `Err` (→ retry path); a decoded response is an answer.
+fn try_one(
+    shared: &Shared,
+    pool: &mut HashMap<usize, Client>,
+    idx: usize,
+    req: &RequestFrame,
+) -> Result<ResponseFrame> {
+    if !pool.contains_key(&idx) {
+        let c = Client::connect_with(shared.cfg.replicas[idx], shared.cfg.timeouts)?;
+        pool.insert(idx, c);
+    }
+    let c = pool.get_mut(&idx).expect("just inserted");
+    let sent_id = c.send(&req.model, req.image.clone(), req.priority, req.deadline_budget_us)?;
+    c.flush()?;
+    let resp = c.recv()?;
+    if resp.id != sent_id {
+        return Err(TinError::Format(format!(
+            "replica answered id {} to request id {sent_id}",
+            resp.id
+        )));
+    }
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::gateway::GatewayLane;
+    use crate::net::client::ReconnectPolicy;
+    use crate::net::server::{ManualClock, MonotonicClock, NetServer, ServerConfig};
+    use crate::testkit;
+
+    fn mock_replica(models: &[&str]) -> NetServer {
+        let lanes = models
+            .iter()
+            .map(|m| GatewayLane {
+                name: m.to_string(),
+                policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 4096 },
+                workers: vec![MockBackend::new(0), MockBackend::new(0)],
+            })
+            .collect();
+        NetServer::start("127.0.0.1:0", lanes, ServerConfig::default(), Arc::new(MonotonicClock::new()))
+            .unwrap()
+    }
+
+    /// Bind then drop a listener: an address guaranteed to refuse.
+    fn dead_addr() -> SocketAddr {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap();
+        drop(l);
+        a
+    }
+
+    fn fast_cfg(replicas: Vec<SocketAddr>) -> ClusterConfig {
+        let mut cfg = ClusterConfig::new(replicas);
+        cfg.retry = RetryConfig { max_retries: 2, base_backoff_us: 1_000, max_backoff_us: 5_000 };
+        cfg.timeouts = NetTimeouts::all(Duration::from_millis(800));
+        cfg
+    }
+
+    // -- ring properties ---------------------------------------------------
+
+    #[test]
+    fn ring_always_yields_min_replication_distinct_owners() {
+        testkit::check(200, |rng| {
+            let n = 1 + rng.below(8) as usize;
+            let vnodes = 1 + rng.below(64) as usize;
+            let want = 1 + rng.below(4) as usize;
+            let ring = Ring::new(n, vnodes);
+            let model = format!("model-{}", rng.next_u64());
+            let owners = ring.owners(&model, want);
+            assert_eq!(owners.len(), want.min(n), "n={n} vnodes={vnodes} want={want}");
+            for (i, &a) in owners.iter().enumerate() {
+                assert!(a < n);
+                assert!(!owners[..i].contains(&a), "owners must be distinct: {owners:?}");
+            }
+            assert_eq!(owners, ring.owners(&model, want), "placement is deterministic");
+        });
+    }
+
+    #[test]
+    fn ring_placement_is_stable_under_replica_removal() {
+        testkit::check(200, |rng| {
+            let n = 2 + rng.below(6) as usize;
+            let vnodes = 4 + rng.below(29) as usize;
+            let want = 1 + rng.below(3) as usize;
+            let ring = Ring::new(n, vnodes);
+            let model = format!("m{}", rng.next_u64());
+            let dead = rng.below(n as u64) as usize;
+            let full = ring.owners(&model, want);
+            let sub = ring.without(dead).owners(&model, want);
+            // only the dead replica's share moves: survivors keep their
+            // slots (and order), and the gap is filled from the tail
+            let survivors: Vec<usize> = full.iter().copied().filter(|&r| r != dead).collect();
+            assert!(sub.len() >= survivors.len());
+            assert_eq!(&sub[..survivors.len()], &survivors[..], "n={n} vnodes={vnodes} want={want} dead={dead}");
+            assert_eq!(sub.len(), want.min(n - 1));
+            assert!(!sub.contains(&dead));
+        });
+    }
+
+    // -- probe state machine ----------------------------------------------
+
+    #[test]
+    fn probe_state_machine_ejects_and_reinstates_on_manual_clock() {
+        let clock = ManualClock::new(0);
+        let cfg = ProbeConfig {
+            interval_us: 1_000,
+            fail_threshold: 3,
+            probation_us: 50_000,
+            probe_timeout_us: 1_000,
+        };
+        let mut h = ReplicaHealth::new();
+        assert!(h.is_live() && h.wants_probe());
+
+        // below the threshold nothing happens
+        h.on_failure(clock.now_us(), &cfg);
+        h.on_failure(clock.now_us(), &cfg);
+        assert!(h.is_live());
+
+        // third consecutive failure ejects; ejected replicas aren't probed
+        h.on_failure(clock.now_us(), &cfg);
+        assert!(!h.is_live() && !h.wants_probe());
+        assert_eq!(h.ejections, 1);
+
+        // probation hasn't elapsed: still out
+        clock.advance(49_999);
+        h.tick(clock.now_us());
+        assert!(!h.wants_probe());
+
+        // probation elapses: half-open — probed again but not routed to
+        clock.advance(1);
+        h.tick(clock.now_us());
+        assert!(h.wants_probe() && !h.is_live());
+        assert_eq!(h.state(), HealthState::Probation);
+
+        // a failed half-open trial goes straight back out
+        h.on_failure(clock.now_us(), &cfg);
+        assert!(!h.wants_probe());
+        assert_eq!(h.ejections, 2);
+
+        // wait out probation again; one good probe reinstates
+        clock.advance(50_000);
+        h.tick(clock.now_us());
+        h.on_success();
+        assert!(h.is_live());
+        assert_eq!(h.reinstatements, 1);
+
+        // reinstatement reset the failure count: two fresh failures
+        // stay below the threshold
+        h.on_failure(clock.now_us(), &cfg);
+        h.on_failure(clock.now_us(), &cfg);
+        assert!(h.is_live());
+    }
+
+    // -- end-to-end --------------------------------------------------------
+
+    #[test]
+    fn router_relays_scores_bit_exact_and_conserves() {
+        let r1 = mock_replica(&["m"]);
+        let r2 = mock_replica(&["m"]);
+        let cfg = fast_cfg(vec![r1.local_addr(), r2.local_addr()]);
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut c = Client::connect(router.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..8u8 {
+            let resp = c.infer("m", &[i, 1, 2]).unwrap();
+            assert_eq!(resp.status, Status::Ok);
+            assert_eq!(resp.scores, vec![i as i32 + 3], "mock scores the byte sum");
+        }
+        assert!(c.ping().is_ok(), "the router answers pings itself");
+        drop(c);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        assert_eq!(rep.received, 8);
+        assert_eq!(rep.answered, 8);
+        assert_eq!(rep.failed, 0);
+        r1.shutdown().unwrap();
+        r2.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_replica_is_retried_away_and_every_request_answers() {
+        let r1 = mock_replica(&["m"]);
+        let mut cfg = fast_cfg(vec![r1.local_addr(), dead_addr()]);
+        // isolate the retry path: probes too slow to run, threshold too
+        // high for routing errors to eject — the dead owner stays in
+        // rotation the whole test, so the counts are exact
+        cfg.probe =
+            ProbeConfig { interval_us: 10_000_000, fail_threshold: 1_000, probation_us: 1_000_000, probe_timeout_us: 100_000 };
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut c = Client::connect(router.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..6u8 {
+            let resp = c.infer("m", &[1, i]).unwrap();
+            assert_eq!(resp.status, Status::Ok, "retry must rescue every request");
+        }
+        drop(c);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        assert_eq!(rep.answered, 6);
+        assert_eq!(rep.failed, 0);
+        // ids 0..6 rotate over 2 owners: exactly 3 first attempts hit
+        // the dead one and get retried onto the live one
+        assert_eq!(rep.retried_away, 3, "{rep:?}");
+        assert_eq!(rep.forwarded, 9, "{rep:?}");
+        r1.shutdown().unwrap();
+    }
+
+    #[test]
+    fn all_replicas_dead_yields_typed_unavailable_not_a_hang() {
+        let cfg = fast_cfg(vec![dead_addr(), dead_addr()]);
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut c = Client::connect(router.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        let resp = c.infer("m", &[1, 2, 3]).unwrap();
+        assert_eq!(resp.status, Status::Unavailable);
+        assert!(resp.scores.is_empty());
+        drop(c);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        assert_eq!(rep.answered, 0);
+        assert_eq!(rep.failed, 1);
+        assert_eq!(rep.retried_away, 2, "budget of 2 retries was spent: {rep:?}");
+        assert_eq!(rep.forwarded, 3, "{rep:?}");
+    }
+
+    #[test]
+    fn reconnecting_client_survives_router_conn_drops_with_conserved_losses() {
+        let r1 = mock_replica(&["m"]);
+        let mut cfg = fast_cfg(vec![r1.local_addr()]);
+        cfg.replication = 1;
+        // simulate a flaky router: every client connection dies after 3 frames
+        cfg.fault.drop_after_frames = Some(3);
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut c = Client::connect_with(
+            router.local_addr(),
+            NetTimeouts::all(Duration::from_secs(2)),
+        )
+        .unwrap();
+        let images: Vec<Vec<u8>> = (0..10u8).map(|i| vec![i, 1]).collect();
+        let refs: Vec<&[u8]> = images.iter().map(|v| v.as_slice()).collect();
+        let policy = ReconnectPolicy {
+            attempts: 5,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(50),
+        };
+        let (out, lost) = c.infer_pipelined_reconnect("m", &refs, 2, &policy).unwrap();
+        let answered = out.iter().filter(|o| o.is_some()).count() as u64;
+        assert_eq!(answered + lost, 10, "client ledger must balance");
+        assert!(c.reconnects() >= 1, "3-frame connections can't carry 10 requests");
+        for (i, o) in out.iter().enumerate() {
+            if let Some(r) = o {
+                assert_eq!(r.status, Status::Ok);
+                assert_eq!(r.scores, vec![i as i32 + 1], "slot {i} answers image {i}");
+            }
+        }
+        drop(c);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        r1.shutdown().unwrap();
+    }
+}

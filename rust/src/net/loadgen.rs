@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::batcher::Priority;
 use crate::coordinator::metrics::Histogram;
-use crate::net::client::Client;
+use crate::net::client::{Client, NetTimeouts, ReconnectPolicy};
 use crate::net::proto::{read_frame, write_frame, Frame, RequestFrame, ResponseFrame, Status};
 use crate::report::bench::BenchResult;
 use crate::util::{Rng64, TinError};
@@ -85,6 +85,11 @@ pub struct LoadConfig {
     /// Fraction of requests sent at [`Priority::Low`].
     pub low_frac: f64,
     pub seed: u64,
+    /// Closed-loop connections re-dial a dead target with this policy
+    /// instead of abandoning their unsent tail; in-flight requests the
+    /// outage swallowed still land in `lost` (never resent — the server
+    /// may have scored them). `None` = legacy give-up-on-error.
+    pub reconnect: Option<ReconnectPolicy>,
 }
 
 /// Per-model client-observed results.
@@ -97,6 +102,9 @@ pub struct ModelLoad {
     pub expired: u64,
     pub unknown: u64,
     pub busy: u64,
+    /// Typed `Unavailable` answers from a cluster router whose whole
+    /// retry budget failed for the request.
+    pub unavailable: u64,
     /// Completed-request latency (client-observed, includes the wire).
     pub latency: Histogram,
     /// Server-side latency per completed request, from the response's
@@ -117,6 +125,7 @@ pub struct LoadReport {
     pub expired: u64,
     pub unknown: u64,
     pub busy: u64,
+    pub unavailable: u64,
     /// Requests that never got a response (receive timeout or the
     /// connection dying) — always 0 on a healthy server.
     pub lost: u64,
@@ -126,7 +135,7 @@ pub struct LoadReport {
 
 impl LoadReport {
     pub fn answered(&self) -> u64 {
-        self.ok + self.rejected + self.expired + self.unknown + self.busy
+        self.ok + self.rejected + self.expired + self.unknown + self.busy + self.unavailable
     }
 
     /// Client-side conservation: answered + lost == sent.
@@ -168,6 +177,7 @@ impl LoadReport {
             ));
         }
         rows.push(row("net_load_unanswered".into(), 1, self.lost as f64));
+        rows.push(row("net_load_unavailable".into(), 1, self.unavailable as f64));
         rows.push(row("net_load_busy".into(), 1, self.busy as f64));
         rows.push(row("net_load_rejected".into(), 1, self.rejected as f64));
         rows.push(row("net_load_expired".into(), 1, self.expired as f64));
@@ -190,6 +200,7 @@ struct Counts {
     expired: u64,
     unknown: u64,
     busy: u64,
+    unavailable: u64,
     latency: Histogram,
     gateway_latency: Histogram,
 }
@@ -203,6 +214,7 @@ impl Counts {
             expired: 0,
             unknown: 0,
             busy: 0,
+            unavailable: 0,
             latency: Histogram::new(),
             gateway_latency: Histogram::new(),
         }
@@ -219,6 +231,7 @@ impl Counts {
             Status::Expired => self.expired += 1,
             Status::UnknownModel => self.unknown += 1,
             Status::Busy => self.busy += 1,
+            Status::Unavailable => self.unavailable += 1,
         }
     }
 }
@@ -308,13 +321,28 @@ fn run_conn_closed(
     }
     let mut lost = 0u64;
     let mut outstanding = window as u64;
-    for _ in 0..n {
+    while outstanding > 0 {
         let resp = match client.recv() {
             Ok(r) => r,
             Err(_) => {
-                // timeout / dead server: everything still outstanding is lost
+                // timeout / dead target: everything still in flight is
+                // lost (the server may have scored it — never resent)
                 lost += outstanding;
-                break;
+                outstanding = 0;
+                let policy = match cfg.reconnect {
+                    Some(p) if next < n => p,
+                    _ => break,
+                };
+                if client.reconnect_with_backoff(&policy).is_err() {
+                    break; // unsent tail stays unsent: conserved either way
+                }
+                while next < n && (outstanding as usize) < window {
+                    if send_one(&mut next, &mut client, &mut per_mix, &mut send_us).is_err() {
+                        break;
+                    }
+                    outstanding += 1;
+                }
+                continue;
             }
         };
         outstanding -= 1;
@@ -463,6 +491,7 @@ pub fn run_load(
             a.expired += b.expired;
             a.unknown += b.unknown;
             a.busy += b.busy;
+            a.unavailable += b.unavailable;
             a.latency.merge(&b.latency);
             a.gateway_latency.merge(&b.gateway_latency);
         }
@@ -476,6 +505,7 @@ pub fn run_load(
         expired: 0,
         unknown: 0,
         busy: 0,
+        unavailable: 0,
         lost,
         wall_s,
         throughput_per_s: 0.0,
@@ -487,6 +517,7 @@ pub fn run_load(
         report.expired += c.expired;
         report.unknown += c.unknown;
         report.busy += c.busy;
+        report.unavailable += c.unavailable;
         report.models.push(ModelLoad {
             name: m.model.clone(),
             sent: c.sent,
@@ -495,6 +526,7 @@ pub fn run_load(
             expired: c.expired,
             unknown: c.unknown,
             busy: c.busy,
+            unavailable: c.unavailable,
             throughput_per_s: c.ok as f64 / wall_s.max(1e-9),
             latency: c.latency,
             gateway_latency: c.gateway_latency,
@@ -502,6 +534,50 @@ pub fn run_load(
     }
     report.throughput_per_s = report.ok as f64 / wall_s.max(1e-9);
     Ok(report)
+}
+
+/// A scripted mid-run fault for `bench-load --cluster`: after
+/// `kill_after`, a Shutdown control goes straight to `victim` (not
+/// through the router), so one replica drains and dies while load is
+/// still flowing through the router tier.
+#[derive(Clone, Debug)]
+pub struct ClusterScenario {
+    /// Replica address to kill; `None` runs plain load (no fault).
+    pub victim: Option<String>,
+    pub kill_after: Duration,
+}
+
+/// [`run_load`] with the kill scenario riding alongside: a killer
+/// thread sleeps `kill_after`, then shuts the victim replica down
+/// directly. The returned report is the client-side ledger of the run;
+/// the cluster acceptance bar is `lost == 0` with the router's own
+/// ledger conserved — the router must absorb the death via retries.
+pub fn run_cluster_load(
+    addr: &str,
+    cfg: &LoadConfig,
+    images: &HashMap<String, Vec<Vec<u8>>>,
+    scenario: &ClusterScenario,
+) -> Result<LoadReport> {
+    std::thread::scope(|s| {
+        let killer = scenario.victim.clone().map(|victim| {
+            let kill_after = scenario.kill_after;
+            s.spawn(move || {
+                std::thread::sleep(kill_after);
+                match Client::connect_with(
+                    victim.as_str(),
+                    NetTimeouts::all(Duration::from_secs(2)),
+                ) {
+                    Ok(mut c) => c.shutdown_server().is_ok(),
+                    Err(_) => false,
+                }
+            })
+        });
+        let report = run_load(addr, cfg, images);
+        if let Some(k) = killer {
+            let _ = k.join();
+        }
+        report
+    })
 }
 
 #[cfg(test)]
@@ -560,6 +636,7 @@ mod tests {
             deadline_us: None,
             low_frac: 0.0,
             seed: 7,
+            reconnect: None,
         };
         let mut r1 = Rng64::new(1);
         let mut r2 = Rng64::new(1);
@@ -582,6 +659,7 @@ mod tests {
             deadline_us: None,
             low_frac: 0.0,
             seed: 11,
+            reconnect: None,
         };
         let report = run_load(&addr, &cfg, &image_map(&["a", "b"])).unwrap();
         assert_eq!(report.sent, 48);
@@ -609,6 +687,7 @@ mod tests {
             deadline_us: Some(2_000_000),
             low_frac: 0.25,
             seed: 5,
+            reconnect: None,
         };
         let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
         assert_eq!(report.sent, 32);
@@ -619,5 +698,57 @@ mod tests {
         assert!(report.ok > 0);
         let gw = srv.shutdown().unwrap();
         assert!(gw.conserved());
+    }
+
+    #[test]
+    fn cluster_kill_mid_run_conserves_both_ledgers_with_zero_lost() {
+        use crate::net::client::NetTimeouts;
+        use crate::net::cluster::{ClusterConfig, ClusterRouter, ProbeConfig, RetryConfig};
+
+        let survivor = mock_server(&["a"]);
+        let victim = mock_server(&["a"]);
+        let victim_addr = victim.local_addr();
+
+        let mut ccfg = ClusterConfig::new(vec![survivor.local_addr(), victim_addr]);
+        ccfg.retry = RetryConfig { max_retries: 3, base_backoff_us: 1_000, max_backoff_us: 10_000 };
+        ccfg.probe = ProbeConfig {
+            interval_us: 20_000,
+            fail_threshold: 2,
+            probation_us: 500_000,
+            probe_timeout_us: 100_000,
+        };
+        ccfg.timeouts = NetTimeouts::all(Duration::from_secs(2));
+        let router =
+            ClusterRouter::start("127.0.0.1:0", ccfg, Arc::new(MonotonicClock::new())).unwrap();
+        let addr = router.local_addr().to_string();
+
+        let cfg = LoadConfig {
+            conns: 2,
+            requests: 300,
+            mix: parse_mix("a").unwrap(),
+            mode: LoadMode::Closed { inflight: 2 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 3,
+            reconnect: None,
+        };
+        let scenario = ClusterScenario {
+            victim: Some(victim_addr.to_string()),
+            kill_after: Duration::from_millis(10),
+        };
+        let report = run_cluster_load(&addr, &cfg, &image_map(&["a"]), &scenario).unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.lost, 0, "the router must absorb the replica death: {report:?}");
+        assert_eq!(report.answered(), 300);
+        assert_eq!(report.unavailable, 0, "the survivor owned every retry: {report:?}");
+
+        let rrep = router.shutdown().unwrap();
+        assert!(rrep.conserved(), "{rrep:?}");
+        assert_eq!(rrep.received, 300);
+        // the victim was shut down directly; its drain still conserves
+        let vrep = victim.wait().unwrap();
+        assert!(vrep.conserved(), "victim ledger broken: drain mid-load must still balance");
+        let srep = survivor.shutdown().unwrap();
+        assert!(srep.conserved(), "survivor ledger broken");
     }
 }

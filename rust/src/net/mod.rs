@@ -1,7 +1,7 @@
 //! S12: the wire-protocol serving front-end — the network layer that
 //! makes the multi-model gateway reachable from other processes.
 //!
-//! Four pieces, all std-only:
+//! Five pieces, all std-only:
 //!
 //! * [`proto`] — TBNP/1, a versioned length-prefixed binary protocol
 //!   (requests with model tag / priority / deadline budget / image;
@@ -10,17 +10,33 @@
 //!   the gateway [`Router`](crate::coordinator::gateway::Router):
 //!   per-connection reader/writer threads, one dispatcher owning the
 //!   router, per-(model, worker) engine threads, connection-level
-//!   backpressure (`Busy`), and graceful drain with exact accounting.
-//! * [`client`] — a small blocking client with pipelining.
+//!   backpressure (`Busy`), graceful drain with exact accounting, and
+//!   a deterministic [`FaultPlan`] fault-injection layer.
+//! * [`cluster`] — the fault-tolerant router tier: consistent-hash
+//!   model placement over N replica servers, ping health probes with
+//!   ejection/probation, retry-on-another-replica with capped backoff,
+//!   and its own conserved ledger (`serve --router`).
+//! * [`client`] — a small blocking client with pipelining, typed
+//!   timeouts, and reconnect-with-backoff.
 //! * [`loadgen`] — open-/closed-loop load generators producing the
-//!   per-model p50/p99/throughput rows in `BENCH_serve.json`.
+//!   per-model p50/p99/throughput rows in `BENCH_serve.json`, plus the
+//!   kill-a-replica cluster scenario (`bench-load --cluster`).
 
 pub mod client;
+pub mod cluster;
 pub mod loadgen;
 pub mod proto;
 pub mod server;
 
-pub use client::Client;
-pub use loadgen::{parse_mix, run_load, LoadConfig, LoadMode, LoadReport, MixEntry};
+pub use client::{Client, NetTimeouts, ReconnectPolicy};
+pub use cluster::{
+    ClusterConfig, ClusterReport, ClusterRouter, ProbeConfig, ReplicaHealth, RetryConfig, Ring,
+};
+pub use loadgen::{
+    parse_mix, run_cluster_load, run_load, ClusterScenario, LoadConfig, LoadMode, LoadReport,
+    MixEntry,
+};
 pub use proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status};
-pub use server::{Clock, DrainTrigger, ManualClock, MonotonicClock, NetServer, ServerConfig};
+pub use server::{
+    Clock, DrainTrigger, FaultPlan, ManualClock, MonotonicClock, NetServer, ServerConfig,
+};

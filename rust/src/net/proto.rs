@@ -56,6 +56,10 @@ pub enum Status {
     /// Connection-level backpressure: too many requests in flight on
     /// this connection; retry after a response arrives.
     Busy,
+    /// Cluster routing gave up: every replica owning the model failed
+    /// (or was ejected) and the per-request retry budget is spent. A
+    /// typed terminal answer — the router never hangs a request.
+    Unavailable,
 }
 
 impl Status {
@@ -66,6 +70,7 @@ impl Status {
             Status::Expired => 2,
             Status::UnknownModel => 3,
             Status::Busy => 4,
+            Status::Unavailable => 5,
         }
     }
 
@@ -76,6 +81,7 @@ impl Status {
             2 => Status::Expired,
             3 => Status::UnknownModel,
             4 => Status::Busy,
+            5 => Status::Unavailable,
             other => return Err(TinError::Format(format!("bad status byte {other}"))),
         })
     }
@@ -87,6 +93,7 @@ impl Status {
             Status::Expired => "expired",
             Status::UnknownModel => "unknown-model",
             Status::Busy => "busy",
+            Status::Unavailable => "unavailable",
         }
     }
 }
@@ -557,7 +564,7 @@ mod tests {
                 let n = rng.below(32) as usize;
                 Frame::Response(ResponseFrame {
                     id: rng.next_u64(),
-                    status: Status::from_u8(rng.below(5) as u8).unwrap(),
+                    status: Status::from_u8(rng.below(6) as u8).unwrap(),
                     admitted_us: rng.next_u64(),
                     completed_us: rng.next_u64(),
                     scores: (0..n).map(|_| rng.next_u32() as i32).collect(),

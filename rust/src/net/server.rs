@@ -43,7 +43,9 @@ use crate::coordinator::gateway::{
 };
 use crate::coordinator::metrics::{Histogram, Meter};
 use crate::coordinator::pipeline::HistogramSummary;
-use crate::net::proto::{read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status};
+use crate::net::proto::{
+    encode_frame, read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status,
+};
 use crate::util::TinError;
 use crate::Result;
 
@@ -103,6 +105,56 @@ impl Clock for ManualClock {
     }
 }
 
+/// Deterministic socket-layer fault injection — all off by default.
+/// Injectable into both [`NetServer`] (a faulty replica) and the
+/// cluster router's client side, so failure handling is testable
+/// without real crashes. Faults act on sockets, never on the ledger:
+/// exact accounting must survive every one of them, and the tests here
+/// and in [`crate::net::cluster`] pin that.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Hard-close a connection (both halves) after reading this many
+    /// frames from it. `None` = never.
+    pub drop_after_frames: Option<u64>,
+    /// Accept traffic but never write a byte back: responses are
+    /// consumed and discarded, so peers see silence until they time out.
+    pub stall_responses: bool,
+    /// Close every accepted connection immediately — the peer's TCP
+    /// handshake succeeds, then the first read/write fails.
+    pub refuse_accepts: bool,
+    /// Corrupt the magic of every outgoing response body so the peer's
+    /// decoder rejects the frame (and the connection with it).
+    pub corrupt_frames: bool,
+}
+
+impl FaultPlan {
+    /// No injected faults (the production plan).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// Write one response frame, applying the corrupt-frame fault if armed.
+/// Shared by the server's connection writer and the cluster router.
+pub(crate) fn write_response_frame<W: std::io::Write>(
+    w: &mut W,
+    resp: &ResponseFrame,
+    corrupt: bool,
+) -> Result<()> {
+    if !corrupt {
+        return write_frame(w, &Frame::Response(resp.clone()));
+    }
+    let mut body = encode_frame(&Frame::Response(resp.clone()))?;
+    body[0] ^= 0xFF; // bad magic: the peer must reject this frame
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    Ok(())
+}
+
 /// Front-end knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
@@ -116,11 +168,18 @@ pub struct ServerConfig {
     /// Concurrent-connection cap (two threads + a bounded response
     /// queue per connection): accepts beyond it are closed immediately.
     pub max_conns: usize,
+    /// Injected socket faults (tests and the fault-tolerance harness).
+    pub fault: FaultPlan,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_inflight_per_conn: 64, poll_interval_us: 200, max_conns: 1024 }
+        ServerConfig {
+            max_inflight_per_conn: 64,
+            poll_interval_us: 200,
+            max_conns: 1024,
+            fault: FaultPlan::none(),
+        }
     }
 }
 
@@ -367,6 +426,7 @@ impl NetServer {
             let clock = Arc::clone(&clock);
             let max_inflight = cfg.max_inflight_per_conn.max(1) as u64;
             let max_conns = cfg.max_conns.max(1);
+            let fault = cfg.fault;
             let live_conns = Arc::new(AtomicU64::new(0));
             let listener2 = listener;
             std::thread::spawn(move || {
@@ -377,6 +437,11 @@ impl NetServer {
                     }
                     match listener2.accept() {
                         Ok((stream, _peer)) => {
+                            if fault.refuse_accepts {
+                                // injected fault: handshake, then slam the door
+                                drop(stream);
+                                continue;
+                            }
                             if live_conns.load(Ordering::Acquire) >= max_conns as u64 {
                                 // connection-count backpressure: close
                                 // immediately rather than grow threads and
@@ -405,6 +470,7 @@ impl NetServer {
                                 Arc::clone(&clock),
                                 max_inflight,
                                 Arc::clone(&live_conns),
+                                fault,
                             );
                             // prune handles of connections that already
                             // ended, so a long-running server's join list
@@ -785,6 +851,7 @@ fn spawn_connection(
     clock: Arc<dyn Clock>,
     max_inflight: u64,
     live_conns: Arc<AtomicU64>,
+    fault: FaultPlan,
 ) -> Vec<JoinHandle<()>> {
     let wstream = match stream.try_clone() {
         Ok(s) => s,
@@ -816,7 +883,10 @@ fn spawn_connection(
                     Err(_) => break,
                 },
             };
-            if write_frame(&mut w, &Frame::Response(resp)).is_err() {
+            // injected stall: consume and discard, the peer sees silence
+            if !fault.stall_responses
+                && write_response_frame(&mut w, &resp, fault.corrupt_frames).is_err()
+            {
                 break;
             }
             match wrx.try_recv() {
@@ -842,10 +912,15 @@ fn spawn_connection(
             return;
         }
         let mut r = BufReader::new(stream);
+        let mut frames_read: u64 = 0;
         loop {
-            match read_frame(&mut r) {
-                Ok(None) => break, // clean EOF
-                Ok(Some(Frame::Request(req))) => {
+            let frame = match read_frame(&mut r) {
+                Ok(None) => break,     // clean EOF
+                Ok(Some(f)) => f,
+                Err(_) => break, // malformed frame or read shutdown
+            };
+            match frame {
+                Frame::Request(req) => {
                     if inflight.load(Ordering::Acquire) >= max_inflight {
                         // connection-level backpressure: answer Busy now.
                         // try_send: if even the bounded response queue is
@@ -856,14 +931,14 @@ fn spawn_connection(
                             Status::Busy,
                             clock.now_us(),
                         ));
-                        continue;
-                    }
-                    inflight.fetch_add(1, Ordering::AcqRel);
-                    if event_tx.send(Event::Submit { conn, frame: req }).is_err() {
-                        break;
+                    } else {
+                        inflight.fetch_add(1, Ordering::AcqRel);
+                        if event_tx.send(Event::Submit { conn, frame: req }).is_err() {
+                            break;
+                        }
                     }
                 }
-                Ok(Some(Frame::Control(ControlOp::Ping))) => {
+                Frame::Control(ControlOp::Ping) => {
                     // pong id u64::MAX: never collides with a request id
                     let _ = wtx.try_send(ResponseFrame::status_only(
                         u64::MAX,
@@ -871,11 +946,21 @@ fn spawn_connection(
                         clock.now_us(),
                     ));
                 }
-                Ok(Some(Frame::Control(ControlOp::Shutdown))) => {
+                Frame::Control(ControlOp::Shutdown) => {
                     let _ = event_tx.send(Event::Shutdown);
                 }
-                Ok(Some(Frame::Response(_))) => break, // protocol violation
-                Err(_) => break, // malformed frame or read shutdown
+                Frame::Response(_) => break, // protocol violation
+            }
+            frames_read += 1;
+            if let Some(k) = fault.drop_after_frames {
+                if frames_read >= k {
+                    // injected fault: hard-kill the socket mid-stream; the
+                    // dispatcher still answers everything admitted (into a
+                    // dead writer), so the server ledger stays conserved
+                    // while the peer sees EOF with requests outstanding
+                    let _ = r.get_ref().shutdown(std::net::Shutdown::Both);
+                    break;
+                }
             }
         }
         let _ = event_tx.send(Event::ConnClosed { conn });
@@ -1144,5 +1229,66 @@ mod tests {
         // silence), so only an upper bound holds for responses
         assert!(ok + other <= n as u64);
         assert!(ok > 0, "work admitted before the drain still completes");
+    }
+
+    #[test]
+    fn fault_refuse_accepts_fails_the_first_use_not_the_handshake() {
+        let cfg = ServerConfig {
+            fault: FaultPlan { refuse_accepts: true, ..FaultPlan::none() },
+            ..ServerConfig::default()
+        };
+        let srv = start_mock(vec![lane("m", 1, fast_policy())], cfg);
+        // TCP connect may succeed (the listener accepts, then closes);
+        // the first round trip must fail cleanly instead of hanging
+        match Client::connect(srv.local_addr()) {
+            Ok(mut c) => {
+                let _ = c.set_recv_timeout(Some(Duration::from_millis(500)));
+                assert!(c.infer("m", &[1; 8]).is_err());
+            }
+            Err(_) => {} // also acceptable: the close won the race
+        }
+        let report = srv.shutdown().unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.submitted, 0, "no request ever reached the router");
+    }
+
+    #[test]
+    fn fault_drop_after_frames_kills_the_socket_but_not_the_ledger() {
+        let cfg = ServerConfig {
+            fault: FaultPlan { drop_after_frames: Some(2), ..FaultPlan::none() },
+            ..ServerConfig::default()
+        };
+        let srv = start_mock(vec![lane("m", 1, fast_policy())], cfg);
+        let mut c = Client::connect(srv.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(5))).unwrap();
+        for _ in 0..4 {
+            let _ = c.send("m", vec![1; 8], crate::coordinator::batcher::Priority::Normal, None);
+        }
+        let _ = c.flush();
+        // only the 2 frames read before the injected drop can be answered
+        let mut answered = 0u64;
+        while c.recv().is_ok() {
+            answered += 1;
+        }
+        assert!(answered <= 2, "server dropped after 2 frames (got {answered} answers)");
+        let report = srv.shutdown().unwrap();
+        assert!(report.conserved(), "injected drop must not break exact accounting");
+        assert!(report.submitted <= 2);
+    }
+
+    #[test]
+    fn fault_stall_and_corrupt_deny_responses_without_hanging_clients() {
+        for fault in [
+            FaultPlan { stall_responses: true, ..FaultPlan::none() },
+            FaultPlan { corrupt_frames: true, ..FaultPlan::none() },
+        ] {
+            let cfg = ServerConfig { fault, ..ServerConfig::default() };
+            let srv = start_mock(vec![lane("m", 1, fast_policy())], cfg);
+            let mut c = Client::connect(srv.local_addr()).unwrap();
+            c.set_recv_timeout(Some(Duration::from_millis(300))).unwrap();
+            assert!(c.infer("m", &[1; 8]).is_err(), "{fault:?} must deny the response");
+            let report = srv.shutdown().unwrap();
+            assert!(report.conserved(), "{fault:?} broke the ledger");
+        }
     }
 }

@@ -486,6 +486,7 @@ fn net_load_generator_over_two_real_models_conserves_and_reports_quantiles() {
         deadline_us: None,
         low_frac: 0.0,
         seed: 3,
+        reconnect: None,
     };
     let load = run_load(&addr, &cfg, &images).unwrap();
     assert_eq!(load.sent, 16);
@@ -511,4 +512,96 @@ fn net_load_generator_over_two_real_models_conserves_and_reports_quantiles() {
     assert!(report.conserved(), "server ledger broken under generated load");
     assert_eq!(report.completed, 16);
     assert_eq!(report.models.len(), 2);
+}
+
+#[test]
+fn cluster_router_over_real_replicas_is_bit_exact_and_survives_a_kill() {
+    // the PR-7 acceptance criterion end to end: two real-engine replica
+    // servers behind the cluster router — routed scores identical to
+    // the golden oracle, then one replica dies mid-load and every
+    // ledger (client, router, both replicas) still balances with zero
+    // requests lost
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::net::{
+        parse_mix, run_cluster_load, Client, ClusterConfig, ClusterRouter, ClusterScenario,
+        LoadConfig, LoadMode, MonotonicClock, NetServer, ServerConfig, Status,
+    };
+    use std::time::Duration;
+
+    let (np1, ds1, _) = task_data("1cat");
+    let start_replica = || {
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 2 },
+            np1.clone(),
+        )
+        .unwrap();
+        let mut lanes = Vec::new();
+        for entry in reg.entries() {
+            lanes.push(GatewayLane {
+                name: entry.spec.name.clone(),
+                policy: BatchPolicy { max_batch: 8, max_wait_us: 200, queue_cap: 4096 },
+                workers: reg.build_pool(entry).unwrap(),
+            });
+        }
+        NetServer::start(
+            "127.0.0.1:0",
+            lanes,
+            ServerConfig::default(),
+            std::sync::Arc::new(MonotonicClock::new()),
+        )
+        .unwrap()
+    };
+    let victim = start_replica();
+    let survivor = start_replica();
+
+    let mut ccfg = ClusterConfig::new(vec![victim.local_addr(), survivor.local_addr()]);
+    ccfg.retry.base_backoff_us = 1_000;
+    ccfg.probe.interval_us = 20_000;
+    ccfg.probe.fail_threshold = 2;
+    let router =
+        ClusterRouter::start("127.0.0.1:0", ccfg, std::sync::Arc::new(MonotonicClock::new()))
+            .unwrap();
+    let addr = router.local_addr().to_string();
+
+    // leg 1: routed scores are bit-exact against the golden oracle
+    let mut cl = Client::connect(router.local_addr()).unwrap();
+    for i in 0..4usize {
+        let img = ds1.image(i);
+        let r = cl.infer("1cat", img).unwrap();
+        assert_eq!(r.status, Status::Ok, "routed image {i}");
+        assert_eq!(r.scores, forward(&np1, img).unwrap(), "routed scores diverged (image {i})");
+    }
+    drop(cl);
+
+    // leg 2: a replica dies mid-load; the router must absorb the death
+    let mut images = std::collections::HashMap::new();
+    images.insert("1cat".to_string(), (0..8).map(|i| ds1.image(i).to_vec()).collect::<Vec<_>>());
+    let lcfg = LoadConfig {
+        conns: 2,
+        requests: 60,
+        mix: parse_mix("1cat=1").unwrap(),
+        mode: LoadMode::Closed { inflight: 2 },
+        deadline_us: None,
+        low_frac: 0.0,
+        seed: 9,
+        reconnect: None,
+    };
+    let scenario = ClusterScenario {
+        victim: Some(victim.local_addr().to_string()),
+        kill_after: Duration::from_millis(20),
+    };
+    let load = run_cluster_load(&addr, &lcfg, &images, &scenario).unwrap();
+    assert!(load.conserved(), "client ledger broken through the router");
+    assert_eq!(load.lost, 0, "the router must absorb the replica death (lost {})", load.lost);
+    assert_eq!(load.answered(), 60, "every request answered exactly once");
+
+    let rep = router.shutdown().unwrap();
+    assert!(rep.conserved(), "{}", rep.summary_line());
+    assert_eq!(rep.received, 64, "4 direct infers + 60 load requests");
+    let vrep = victim.wait().unwrap();
+    assert!(vrep.conserved(), "victim ledger broken by the mid-run kill");
+    let srep = survivor.shutdown().unwrap();
+    assert!(srep.conserved(), "survivor ledger broken under failover load");
 }
