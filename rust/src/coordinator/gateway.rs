@@ -330,12 +330,26 @@ pub struct GatewayReport {
     pub latency: HistogramSummary,
     pub throughput_per_s: f64,
     pub wall_s: f64,
+    /// Wire-layer response ledger (zero for in-process serving): every
+    /// response the network server settled — enqueued for a connection,
+    /// including busy/ping/reserved-id answers outside the gateway
+    /// request ledger above.
+    pub settled_responses: u64,
+    /// Settled responses actually handed to a connection's outbox.
+    pub answered_responses: u64,
+    /// Settled responses dropped because the connection's outbox/writer
+    /// queue was full or the connection was already gone. Nonzero means
+    /// a client flooded past its backpressure budget — accounted, never
+    /// silent.
+    pub dropped_responses: u64,
 }
 
 impl GatewayReport {
-    /// The exact-accounting invariant, per model and fleet-wide.
+    /// The exact-accounting invariant, per model and fleet-wide, plus
+    /// the wire-layer response ledger (answered + dropped == settled).
     pub fn conserved(&self) -> bool {
         self.submitted == self.completed + self.rejected + self.expired
+            && self.settled_responses == self.answered_responses + self.dropped_responses
             && self
                 .models
                 .iter()
@@ -345,7 +359,7 @@ impl GatewayReport {
     /// The fleet header line, with a caller-chosen verb ("gateway",
     /// "gateway drained") — shared by the serving CLIs.
     pub fn summary_line(&self, label: &str) -> String {
-        format!(
+        let mut line = format!(
             "{label}: {} submitted, {} completed, {} rejected ({} unknown-model), {} expired in {:.2} s -> {:.0} fps fleet-wide",
             self.submitted,
             self.completed,
@@ -354,7 +368,14 @@ impl GatewayReport {
             self.expired,
             self.wall_s,
             self.throughput_per_s
-        )
+        );
+        if self.settled_responses > 0 {
+            line.push_str(&format!(
+                "; wire: {} settled = {} answered + {} dropped",
+                self.settled_responses, self.answered_responses, self.dropped_responses
+            ));
+        }
+        line
     }
 }
 
@@ -575,6 +596,9 @@ pub fn serve_gateway<B: Backend + Send>(
         latency: HistogramSummary::from(&fleet_latency),
         throughput_per_s: completed as f64 / wall_s.max(1e-9),
         wall_s,
+        settled_responses: 0,
+        answered_responses: 0,
+        dropped_responses: 0,
     };
     Ok((report, lanes))
 }

@@ -42,13 +42,17 @@ fn usage() -> ! {
                    [--backend pjrt|opt|bitplane] [--workers W]\n\
                    [--models name:backend[:workers],...]\n\
                    [--listen ADDR] [--serve-secs S] [--max-inflight K]\n\
+                   [--shards N] [--max-conns M]\n\
                    (opt/bitplane: W CPU-engine workers, batched via serve_parallel;\n\
                     --models: multi-model gateway, e.g. 1cat:bitplane,10cat:opt:2 —\n\
                     falls back to synthetic fixtures when artifacts are missing;\n\
                     --listen: serve the gateway over TCP [TBNP/1], e.g.\n\
                     127.0.0.1:0 for an ephemeral port — runs until a shutdown\n\
                     control frame, or --serve-secs S; --max-inflight bounds\n\
-                    per-connection in-flight requests [Busy beyond it])\n\
+                    per-connection in-flight requests [Busy beyond it];\n\
+                    --shards N: serve all connections from N event-loop\n\
+                    shards [default 4; 0 = legacy 2 threads per conn];\n\
+                    --max-conns caps concurrent connections [default 1024])\n\
            serve --router --replicas A1,A2,... [--listen ADDR] [--replication R]\n\
                    [--probe-ms P] [--eject-after K] [--probation-ms M]\n\
                    [--retries N] [--backoff-us B] [--serve-secs S]\n\
@@ -61,6 +65,7 @@ fn usage() -> ! {
                    [--deadline-us D] [--low-frac F] [--seed S] [--reconnect]\n\
                    [--bench-out path] [--shutdown]\n\
                    [--cluster --replicas A1,A2,... [--kill ADDR] [--kill-after-ms T]]\n\
+                   [--conn-scale [--scales N1,N2,...] [--baseline ADDR2]]\n\
                    (load-generate against a --listen server: open loop at Q qps\n\
                     or closed loop with K in-flight per connection; per-model\n\
                     p50/p99 + throughput rows go to --bench-out [BENCH_serve.json];\n\
@@ -68,7 +73,11 @@ fn usage() -> ! {
                     any request went unanswered; --reconnect re-dials a dead\n\
                     target with backoff; --cluster benchmarks 1-replica vs\n\
                     routed-N throughput, then re-runs while killing --kill\n\
-                    mid-run — cluster_* rows land in BENCH_serve.json)\n\
+                    mid-run — cluster_* rows land in BENCH_serve.json;\n\
+                    --conn-scale parks N1,N2,... mostly-idle conns around the\n\
+                    hot load and ping-sweeps them [--baseline: same against a\n\
+                    serve --shards 0 endpoint] — conn_scale_* rows land in\n\
+                    BENCH_serve.json)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
            train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
                    [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
@@ -329,9 +338,21 @@ fn real_main() -> tinbinn::Result<()> {
             if let Some(listen) = args.opt("--listen") {
                 let serve_secs = args.opt_u64_strict("--serve-secs", 0);
                 let max_inflight = args.opt_usize_strict("--max-inflight", 64);
+                let shards = args.opt_usize_strict("--shards", 4);
+                let max_conns = args.opt_usize_strict("--max-conns", 1024);
                 let models =
                     args.opt("--models").unwrap_or_else(|| "1cat:bitplane,10cat:opt".into());
-                return serve_listen_cli(&dir, &listen, &models, batch, wait, serve_secs, max_inflight);
+                return serve_listen_cli(
+                    &dir,
+                    &listen,
+                    &models,
+                    batch,
+                    wait,
+                    serve_secs,
+                    max_inflight,
+                    shards,
+                    max_conns,
+                );
             }
             if let Some(models) = args.opt("--models") {
                 return serve_gateway_cli(&dir, &models, n, batch, wait);
@@ -635,6 +656,7 @@ fn serve_gateway_cli(
 /// optional `--serve-secs` timer fires, then drains gracefully and
 /// prints the fleet report with per-model latency quantiles. Exits
 /// nonzero if the exact-accounting invariant was violated.
+#[allow(clippy::too_many_arguments)]
 fn serve_listen_cli(
     dir: &std::path::Path,
     listen: &str,
@@ -643,6 +665,8 @@ fn serve_listen_cli(
     wait_us: u64,
     serve_secs: u64,
     max_inflight: usize,
+    shards: usize,
+    max_conns: usize,
 ) -> tinbinn::Result<()> {
     use tinbinn::coordinator::gateway::GatewayLane;
     use tinbinn::net::{MonotonicClock, NetServer, ServerConfig};
@@ -659,13 +683,20 @@ fn serve_listen_cli(
     }
     let cfg = ServerConfig {
         max_inflight_per_conn: max_inflight.max(1),
+        shards,
+        max_conns: max_conns.max(1),
         ..ServerConfig::default()
     };
     let srv = NetServer::start(listen, lanes, cfg, std::sync::Arc::new(MonotonicClock::new()))?;
     // the CI smoke and scripts parse this line for the ephemeral port
     println!("tinbinn serve: listening on {}", srv.local_addr());
+    let topology = if shards == 0 {
+        "legacy 2-threads-per-conn".to_string()
+    } else {
+        format!("{shards} event-loop shards")
+    };
     println!(
-        "  models {models}; drain via bench-load --shutdown{}",
+        "  models {models}; {topology}, max {max_conns} conns; drain via bench-load --shutdown{}",
         if serve_secs > 0 { format!(" or after {serve_secs}s") } else { String::new() }
     );
     if serve_secs > 0 {
@@ -730,6 +761,9 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     let replicas_spec = args.opt("--replicas");
     let kill = args.opt("--kill");
     let kill_after_ms = args.opt_u64_strict("--kill-after-ms", 200);
+    let conn_scale = args.flag("--conn-scale");
+    let scales_spec = args.opt("--scales").unwrap_or_else(|| "100,1000".into());
+    let baseline = args.opt("--baseline");
 
     // fail fast with a clear message when the target is unreachable,
     // instead of every connection timing out in its own thread
@@ -758,6 +792,20 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     }
 
     let cfg = LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed, reconnect };
+    if conn_scale {
+        let scales: Vec<usize> = scales_spec
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.parse().ok().filter(|&v: &usize| v > 0).unwrap_or_else(|| {
+                    eprintln!("bad value in --scales: '{p}' (expected positive integers)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+        return bench_conn_scale_cli(&addr, &cfg, &images, &scales, baseline, bench_out, do_shutdown);
+    }
     if cluster {
         return bench_cluster_cli(
             &addr,
@@ -792,6 +840,12 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         report.wall_s,
         report.throughput_per_s
     );
+    if let Some(target) = report.target_qps {
+        println!(
+            "pacing: target {target:.0} qps, achieved {:.0} qps over the send window",
+            report.achieved_qps
+        );
+    }
     for m in &report.models {
         println!(
             "  {:8}: {:>5} ok / {:>3} rej / {:>3} exp / {:>3} busy, e2e p50 {}us p99 {}us | gateway p50 {}us p99 {}us, {:.0} fps",
@@ -822,6 +876,94 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         return Err(tinbinn::TinError::Config(format!(
             "{} requests went unanswered",
             report.lost
+        )));
+    }
+    Ok(())
+}
+
+/// `bench-load --conn-scale` — the connection-scale benchmark: for each
+/// entry of `--scales`, park that many mostly-idle connections on the
+/// event-loop server at `--connect`, drive the hot subset through it,
+/// and sweep every idle connection with pings before and after. With
+/// `--baseline ADDR2` (a `serve --shards 0` endpoint) the same
+/// scenarios also run against the legacy thread-per-connection
+/// topology, so BENCH_serve.json carries `conn_scale_evloop_*` next to
+/// `conn_scale_threads_*` rows. Exits nonzero when the event-loop side
+/// starves an idle connection or loses a hot request; baseline
+/// degradation is reported, not fatal — measuring it is the point.
+fn bench_conn_scale_cli(
+    addr: &str,
+    cfg: &tinbinn::net::LoadConfig,
+    images: &std::collections::HashMap<String, Vec<Vec<u8>>>,
+    scales: &[usize],
+    baseline: Option<String>,
+    bench_out: Option<String>,
+    do_shutdown: bool,
+) -> tinbinn::Result<()> {
+    use tinbinn::net::{run_conn_scale, Client, ConnScaleConfig, ConnScaleReport};
+
+    fn one(
+        addr: &str,
+        label: String,
+        idle: usize,
+        cfg: &tinbinn::net::LoadConfig,
+        images: &std::collections::HashMap<String, Vec<Vec<u8>>>,
+    ) -> tinbinn::Result<ConnScaleReport> {
+        let cs = ConnScaleConfig { idle_conns: idle, hot: cfg.clone(), label };
+        let rep = run_conn_scale(addr, &cs, images)?;
+        println!(
+            "  {}: {}/{} idle conns up, idle unanswered {}, hot ok {} lost {} ({:.0} fps, hot p99 {}us)",
+            rep.label,
+            rep.idle_established,
+            rep.idle_target,
+            rep.idle_unanswered,
+            rep.hot.ok,
+            rep.hot.lost,
+            rep.hot.throughput_per_s,
+            rep.hot.models.iter().map(|m| m.latency.p99_us()).max().unwrap_or(0),
+        );
+        Ok(rep)
+    }
+
+    let mut rows = Vec::new();
+    let mut evloop_failures = 0u64;
+    println!("conn-scale: event-loop server {addr}, scales {scales:?}");
+    for &n in scales {
+        let rep = one(addr, format!("conn_scale_evloop_{n}"), n, cfg, images)?;
+        evloop_failures += rep.idle_unanswered
+            + rep.hot.lost
+            + (rep.idle_target - rep.idle_established) as u64;
+        rows.extend(rep.bench_rows());
+    }
+    if let Some(base) = &baseline {
+        println!("conn-scale: thread-per-conn baseline {base}, scales {scales:?}");
+        for &n in scales {
+            match one(base, format!("conn_scale_threads_{n}"), n, cfg, images) {
+                Ok(rep) => rows.extend(rep.bench_rows()),
+                // the baseline falling over at scale is a result, not
+                // an error in the benchmark itself
+                Err(e) => println!("  conn_scale_threads_{n}: baseline collapsed ({e})"),
+            }
+        }
+    }
+
+    if let Some(path) = bench_out {
+        tinbinn::report::bench::write_json(&path, "bench_load_conn_scale", &rows)?;
+        println!("wrote {path} ({} rows)", rows.len());
+    }
+    if do_shutdown {
+        let mut c = Client::connect(addr)?;
+        c.shutdown_server()?;
+        println!("sent shutdown control to {addr}");
+        if let Some(base) = &baseline {
+            let mut c = Client::connect(base.as_str())?;
+            c.shutdown_server()?;
+            println!("sent shutdown control to {base}");
+        }
+    }
+    if evloop_failures > 0 {
+        return Err(tinbinn::TinError::Config(format!(
+            "conn-scale: {evloop_failures} idle/hot failures on the event-loop server"
         )));
     }
     Ok(())

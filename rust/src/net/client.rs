@@ -18,7 +18,9 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::coordinator::batcher::Priority;
-use crate::net::proto::{read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame};
+use crate::net::proto::{
+    read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status, RESERVED_ID,
+};
 use crate::util::TinError;
 use crate::Result;
 
@@ -59,8 +61,13 @@ impl Default for ReconnectPolicy {
 }
 
 impl ReconnectPolicy {
+    /// Backoff before connect attempt `attempt` (0-based). The doubling
+    /// factor saturates instead of shifting past the u32 width, and the
+    /// product saturates before the `max` clamp — same fix as
+    /// `RetryConfig::backoff_us` on the router side.
     pub fn backoff_for(&self, attempt: u32) -> Duration {
-        self.base_backoff.saturating_mul(1u32 << attempt.min(16)).min(self.max_backoff)
+        let factor = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+        self.base_backoff.saturating_mul(factor).min(self.max_backoff)
     }
 }
 
@@ -343,16 +350,19 @@ impl Client {
     }
 
     /// Liveness probe: a ping control frame, answered with an empty Ok
-    /// carrying id `u64::MAX`. Safe with requests in flight: data
-    /// responses that arrive before the pong are buffered and returned
-    /// by subsequent [`Client::recv`] calls. With a read timeout set, a
-    /// pong that never comes is a timeout error, not a hang.
+    /// carrying the reserved id [`RESERVED_ID`] (`u64::MAX`). Only a
+    /// `Status::Ok` counts as the pong — servers also use the reserved
+    /// id on `Status::ReservedId` rejections, which must not satisfy a
+    /// ping. Safe with requests in flight: data responses that arrive
+    /// before the pong are buffered and returned by subsequent
+    /// [`Client::recv`] calls. With a read timeout set, a pong that
+    /// never comes is a timeout error, not a hang.
     pub fn ping(&mut self) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Control(ControlOp::Ping))?;
         self.flush()?;
         loop {
             let r = self.recv_raw()?;
-            if r.id == u64::MAX && r.scores.is_empty() {
+            if r.id == RESERVED_ID && r.status == Status::Ok && r.scores.is_empty() {
                 return Ok(());
             }
             self.pending.push_back(r);
@@ -391,6 +401,30 @@ mod tests {
         assert_eq!(p.backoff_for(1), Duration::from_millis(20));
         assert_eq!(p.backoff_for(2), Duration::from_millis(40));
         assert_eq!(p.backoff_for(3), Duration::from_millis(45));
-        assert_eq!(p.backoff_for(30), Duration::from_millis(45), "shift is clamped");
+        assert_eq!(p.backoff_for(30), Duration::from_millis(45), "deep attempts sit at the cap");
+    }
+
+    #[test]
+    fn backoff_saturates_past_the_shift_width_instead_of_wrapping() {
+        // regression: `1 << attempt` overflows the u32 width for
+        // attempt >= 32 (debug panic / release wrap to a 0ms backoff)
+        let p = ReconnectPolicy {
+            attempts: 8,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::MAX,
+        };
+        assert_eq!(p.backoff_for(31), Duration::from_millis(1u64 << 31));
+        assert_eq!(
+            p.backoff_for(32),
+            Duration::from_millis(u32::MAX as u64),
+            "factor saturates, never wraps to 0"
+        );
+        assert_eq!(p.backoff_for(1000), Duration::from_millis(u32::MAX as u64));
+        let mut prev = Duration::ZERO;
+        for attempt in 0..200u32 {
+            let b = p.backoff_for(attempt);
+            assert!(b >= prev, "attempt {attempt}: {b:?} < {prev:?}");
+            prev = b;
+        }
     }
 }

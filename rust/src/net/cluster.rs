@@ -33,6 +33,24 @@
 //! `received == answered + failed`. Both are checked by
 //! [`ClusterReport::conserved`] and printed by `serve --router`.
 //!
+//! **Front-side event loops.** The client-facing side runs
+//! `front_shards` non-blocking event loops over the shared
+//! [`ConnIo`](crate::net::evloop) primitive — the same incremental
+//! frame reassembly, capped outboxes, and partial-write cursors as the
+//! replica servers' shards — instead of one handler thread per
+//! connection. Parsed requests are handed to a small pool of
+//! `forwarders` threads (which own the blocking upstream connection
+//! pools and the retry/backoff sleeps); each connection's requests are
+//! pinned to one forwarder, so per-connection FIFO ordering survives
+//! the fan-out. Two non-conserved counters make front-side losses
+//! visible: `rejected_reserved` (requests arriving with the reserved
+//! id `u64::MAX`, bounced at the door with
+//! [`Status::ReservedId`] and never forwarded) and `dropped_responses`
+//! (terminal responses that could not be delivered — outbox full
+//! against a stalled reader, or the connection/shard was already
+//! gone). Neither enters the per-request equation, which counts
+//! *produced* terminal answers.
+//!
 //! Deterministic fault injection reuses the server's
 //! [`FaultPlan`](crate::net::server::FaultPlan) on the router's own
 //! client-facing side (refuse accepts, drop after K frames, stall,
@@ -40,16 +58,17 @@
 //! a router restart without wall-clock races.
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use crate::net::client::{Client, NetTimeouts};
-use crate::net::proto::{read_frame, write_frame, Frame, ControlOp, RequestFrame, ResponseFrame, Status};
-use crate::net::server::{write_response_frame, Clock, FaultPlan};
+use crate::net::evloop::{ConnIo, Enqueue};
+use crate::net::proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status, RESERVED_ID};
+use crate::net::server::{Clock, FaultPlan};
 use crate::util::TinError;
 use crate::Result;
 
@@ -259,9 +278,15 @@ impl Default for RetryConfig {
 }
 
 impl RetryConfig {
+    /// Backoff before retry `retry` (1-based). The doubling factor
+    /// saturates instead of shifting past the u64 width (retry ≥ 65
+    /// would be UB / a wrap-to-zero backoff as a plain `1 << (k-1)`)
+    /// and the product saturates before the `max` clamp, so the curve
+    /// is monotone non-decreasing for every `(base, max, retry)`.
     pub fn backoff_us(&self, retry: u32) -> u64 {
-        let shift = retry.saturating_sub(1).min(16);
-        self.base_backoff_us.saturating_mul(1u64 << shift).min(self.max_backoff_us)
+        let shift = retry.saturating_sub(1);
+        let factor = 1u64.checked_shl(shift).unwrap_or(u64::MAX);
+        self.base_backoff_us.saturating_mul(factor).min(self.max_backoff_us)
     }
 }
 
@@ -279,6 +304,15 @@ pub struct ClusterConfig {
     pub timeouts: NetTimeouts,
     /// Fault injection on the router's own client-facing side.
     pub fault: FaultPlan,
+    /// Client-facing event loops (each owns a slab of connections).
+    pub front_shards: usize,
+    /// Blocking upstream forwarder threads; a connection's requests are
+    /// pinned to one forwarder so its responses stay in order.
+    pub forwarders: usize,
+    /// Frames buffered per connection before further responses are
+    /// dropped (with a `dropped_responses` trace) against a stalled
+    /// reader.
+    pub front_outbox_cap: usize,
 }
 
 impl ClusterConfig {
@@ -291,6 +325,9 @@ impl ClusterConfig {
             retry: RetryConfig::default(),
             timeouts: NetTimeouts::all(Duration::from_secs(2)),
             fault: FaultPlan::none(),
+            front_shards: 2,
+            forwarders: 4,
+            front_outbox_cap: 1024,
         }
     }
 }
@@ -307,6 +344,8 @@ struct ClusterStats {
     failed: AtomicU64,
     probes_ok: AtomicU64,
     probes_failed: AtomicU64,
+    rejected_reserved: AtomicU64,
+    dropped_responses: AtomicU64,
 }
 
 /// The router's conserved ledger. Per attempt:
@@ -331,6 +370,14 @@ pub struct ClusterReport {
     pub probes_failed: u64,
     pub ejections: u64,
     pub reinstatements: u64,
+    /// Requests carrying the reserved id `u64::MAX`, bounced at the
+    /// door with `Status::ReservedId` — never forwarded, so outside the
+    /// conserved equations.
+    pub rejected_reserved: u64,
+    /// Terminal responses that could not be delivered to the client
+    /// (outbox full / connection gone). The answer was still produced
+    /// and counted, so this too stays outside the equations.
+    pub dropped_responses: u64,
 }
 
 impl ClusterReport {
@@ -344,7 +391,7 @@ impl ClusterReport {
         format!(
             "cluster ledger: replicas={} received={} forwarded={} answered={} \
              retried_away={} failed={} probes_ok={} probes_failed={} ejections={} \
-             reinstatements={}",
+             reinstatements={} rejected_reserved={} dropped_responses={}",
             self.replicas,
             self.received,
             self.forwarded,
@@ -355,6 +402,8 @@ impl ClusterReport {
             self.probes_failed,
             self.ejections,
             self.reinstatements,
+            self.rejected_reserved,
+            self.dropped_responses,
         )
     }
 }
@@ -392,22 +441,34 @@ impl Shared {
             probes_failed: self.stats.probes_failed.load(Ordering::Relaxed),
             ejections,
             reinstatements,
+            rejected_reserved: self.stats.rejected_reserved.load(Ordering::Relaxed),
+            dropped_responses: self.stats.dropped_responses.load(Ordering::Relaxed),
         }
     }
 }
 
-/// The serving tier: accept loop + one synchronous handler thread per
-/// client connection (each with its own upstream connection pool) + a
-/// probe thread. Requests on one connection forward one at a time —
-/// concurrency comes from client connections, same as the replicas'
-/// own per-connection backpressure model.
+/// The serving tier: accept loop + `front_shards` client-facing event
+/// loops + a pool of `forwarders` upstream threads + a probe thread.
+/// A connection's requests are pinned to one forwarder (by connection
+/// id), so per-connection responses stay FIFO — concurrency comes from
+/// client connections, same as the replicas' own backpressure model,
+/// but the thread count is now O(shards + forwarders), not
+/// O(connections).
 pub struct ClusterRouter {
     local_addr: SocketAddr,
     shared: Arc<Shared>,
     accept_join: JoinHandle<()>,
     probe_join: JoinHandle<()>,
-    handler_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    client_streams: Arc<Mutex<Vec<TcpStream>>>,
+    shard_joins: Vec<JoinHandle<()>>,
+    forwarder_joins: Vec<JoinHandle<()>>,
+}
+
+/// One parsed request travelling shard → forwarder, with the return
+/// path (the owning shard's response sender) riding along.
+struct FwdJob {
+    conn: u64,
+    req: RequestFrame,
+    resp_tx: Sender<(u64, ResponseFrame)>,
 }
 
 impl ClusterRouter {
@@ -425,6 +486,8 @@ impl ClusterRouter {
 
         let ring = Ring::new(cfg.replicas.len(), cfg.vnodes);
         let n = cfg.replicas.len();
+        let nshards = cfg.front_shards.max(1);
+        let nfwd = cfg.forwarders.max(1);
         let shared = Arc::new(Shared {
             ring,
             health: Mutex::new(vec![ReplicaHealth::new(); n]),
@@ -434,35 +497,52 @@ impl ClusterRouter {
             cfg,
         });
 
-        let client_streams: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-        let handler_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        // forwarder pool: each thread owns its upstream pool and drains
+        // its own job queue until every shard-side sender is gone
+        let mut fwd_txs = Vec::with_capacity(nfwd);
+        let mut forwarder_joins = Vec::with_capacity(nfwd);
+        for _ in 0..nfwd {
+            let (tx, rx) = mpsc::channel::<FwdJob>();
+            fwd_txs.push(tx);
+            let f_shared = Arc::clone(&shared);
+            forwarder_joins.push(thread::spawn(move || forwarder_loop(rx, f_shared)));
+        }
+
+        // front shards: non-blocking event loops over ConnIo
+        let mut shard_txs = Vec::with_capacity(nshards);
+        let mut shard_joins = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let (conn_tx, conn_rx) = mpsc::channel::<(u64, TcpStream)>();
+            shard_txs.push(conn_tx);
+            let s_shared = Arc::clone(&shared);
+            let s_fwd_txs = fwd_txs.clone();
+            shard_joins
+                .push(thread::spawn(move || run_front_shard(conn_rx, s_fwd_txs, s_shared)));
+        }
+        drop(fwd_txs); // shards hold the only senders now
 
         let a_shared = Arc::clone(&shared);
-        let a_streams = Arc::clone(&client_streams);
-        let a_joins = Arc::clone(&handler_joins);
-        let accept_join = thread::spawn(move || loop {
-            if a_shared.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    if a_shared.cfg.fault.refuse_accepts {
-                        drop(stream);
-                        continue;
-                    }
-                    let _ = stream.set_nodelay(true);
-                    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-                    if let Ok(c) = stream.try_clone() {
-                        a_streams.lock().unwrap().push(c);
-                    }
-                    let h_shared = Arc::clone(&a_shared);
-                    let j = thread::spawn(move || handle_client(stream, h_shared));
-                    a_joins.lock().unwrap().push(j);
+        let accept_join = thread::spawn(move || {
+            let mut next_conn: u64 = 0;
+            loop {
+                if a_shared.stop.load(Ordering::SeqCst) {
+                    break;
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    thread::sleep(Duration::from_millis(2));
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if a_shared.cfg.fault.refuse_accepts {
+                            drop(stream);
+                            continue;
+                        }
+                        let conn = next_conn;
+                        next_conn += 1;
+                        let _ = shard_txs[(conn as usize) % shard_txs.len()].send((conn, stream));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(2)),
                 }
-                Err(_) => thread::sleep(Duration::from_millis(2)),
             }
         });
 
@@ -474,8 +554,8 @@ impl ClusterRouter {
             shared,
             accept_join,
             probe_join,
-            handler_joins,
-            client_streams,
+            shard_joins,
+            forwarder_joins,
         })
     }
 
@@ -515,18 +595,19 @@ impl ClusterRouter {
     }
 
     fn finish(self) -> Result<ClusterReport> {
-        for s in self.client_streams.lock().unwrap().drain(..) {
-            let _ = s.shutdown(Shutdown::Both);
-        }
+        // joins cascade: the accept loop drops the shard conn senders,
+        // the shards drop the forwarder job senders (closing the client
+        // sockets as their slabs drop), and the forwarders drain what
+        // was already queued — every produced answer is counted before
+        // the report is read.
         let _ = self.accept_join.join();
-        let _ = self.probe_join.join();
-        let joins = {
-            let mut g = self.handler_joins.lock().unwrap();
-            std::mem::take(&mut *g)
-        };
-        for j in joins {
+        for j in self.shard_joins {
             let _ = j.join();
         }
+        for j in self.forwarder_joins {
+            let _ = j.join();
+        }
+        let _ = self.probe_join.join();
         Ok(self.shared.report())
     }
 }
@@ -578,69 +659,190 @@ fn probe_once(addr: &SocketAddr, t: &NetTimeouts) -> bool {
     }
 }
 
-fn handle_client(stream: TcpStream, shared: Arc<Shared>) {
+/// One client-facing connection owned by a front shard.
+struct FrontConn {
+    io: ConnIo,
+    /// Requests handed to a forwarder whose responses haven't come back
+    /// through this shard's response channel yet. Removal waits for
+    /// zero: responses route back through the same channel the shard
+    /// drains each sweep, so `pending == 0` means nothing is owed.
+    pending: u64,
+    /// The `drop_after_frames` fault tripped: stop reading, flush what
+    /// is owed, then cut the socket (the legacy per-thread front
+    /// answered the K-th frame before dropping; so do we).
+    doomed: bool,
+}
+
+/// One front event loop: adopt assigned connections, pump reads
+/// through the incremental assembler, hand parsed requests to the
+/// connection's pinned forwarder, drain returned responses into the
+/// capped outboxes, flush with partial-write resume.
+fn run_front_shard(
+    conn_rx: Receiver<(u64, TcpStream)>,
+    fwd_txs: Vec<Sender<FwdJob>>,
+    shared: Arc<Shared>,
+) {
     let fault = shared.cfg.fault;
-    let r_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(r_stream);
-    let mut writer = BufWriter::new(stream);
-    // upstream pool, lazily dialed; a transport error poisons the entry
-    let mut pool: HashMap<usize, Client> = HashMap::new();
-    let mut frames_read: u64 = 0;
+    let cap = shared.cfg.front_outbox_cap.max(1);
+    let (resp_tx, resp_rx) = mpsc::channel::<(u64, ResponseFrame)>();
+    let mut conns: HashMap<u64, FrontConn> = HashMap::new();
+    let mut scratch = vec![0u8; 64 * 1024];
     loop {
         if shared.stop.load(Ordering::SeqCst) {
             break;
         }
-        let frame = match read_frame(&mut reader) {
-            Ok(Some(f)) => f,
-            // clean close, mid-frame EOF, or our own finish() cutting
-            // the socket — nothing owed in any case
-            Ok(None) | Err(_) => break,
-        };
-        frames_read += 1;
-        match frame {
-            Frame::Request(req) => {
-                shared.stats.received.fetch_add(1, Ordering::Relaxed);
-                let resp = forward_with_retries(&shared, &mut pool, &req);
-                if !fault.stall_responses {
-                    if write_response_frame(&mut writer, &resp, fault.corrupt_frames).is_err() {
-                        break;
-                    }
-                    if writer.flush().is_err() {
-                        break;
-                    }
-                }
+        let mut progress = false;
+
+        while let Ok((conn, stream)) = conn_rx.try_recv() {
+            progress = true;
+            if let Ok(io) = ConnIo::new(stream) {
+                conns.insert(conn, FrontConn { io, pending: 0, doomed: false });
             }
-            Frame::Control(ControlOp::Ping) => {
-                let pong =
-                    ResponseFrame::status_only(u64::MAX, Status::Ok, shared.clock.now_us());
-                if write_frame(&mut writer, &Frame::Response(pong)).is_err()
-                    || writer.flush().is_err()
-                {
-                    break;
-                }
-            }
-            Frame::Control(ControlOp::Shutdown) => {
-                // propagate the drain to every reachable replica, then
-                // bring the router itself down
-                for &addr in &shared.cfg.replicas {
-                    if let Ok(mut c) = Client::connect_with(addr, shared.cfg.timeouts) {
-                        let _ = c.shutdown_server();
-                    }
-                }
-                shared.stop.store(true, Ordering::SeqCst);
-                break;
-            }
-            // clients don't send responses
-            Frame::Response(_) => break,
         }
-        if let Some(k) = fault.drop_after_frames {
-            if frames_read >= k {
-                let _ = reader.get_ref().shutdown(Shutdown::Both);
-                break;
+
+        while let Ok((conn, resp)) = resp_rx.try_recv() {
+            progress = true;
+            match conns.get_mut(&conn) {
+                Some(fc) => {
+                    fc.pending = fc.pending.saturating_sub(1);
+                    if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
+                        shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => {
+                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                }
             }
+        }
+
+        let mut to_remove: Vec<u64> = Vec::new();
+        for (&conn, fc) in conns.iter_mut() {
+            if !fc.doomed && fc.io.fill(&mut scratch) {
+                progress = true;
+            }
+            while !fc.io.dead && !fc.doomed {
+                match fc.io.asm.next_frame() {
+                    Ok(Some(frame)) => {
+                        progress = true;
+                        fc.io.frames_read += 1;
+                        handle_front_frame(frame, conn, fc, &fwd_txs, &resp_tx, &shared, cap);
+                        if let Some(k) = fault.drop_after_frames {
+                            if fc.io.frames_read >= k && !fc.doomed {
+                                fc.doomed = true;
+                                let _ = fc.io.stream.shutdown(Shutdown::Read);
+                            }
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(_) => {
+                        fc.io.kill();
+                        break;
+                    }
+                }
+            }
+            if fc.io.flush_writes() {
+                progress = true;
+            }
+            if fc.pending == 0 {
+                if fc.io.dead {
+                    to_remove.push(conn);
+                } else if fc.io.outbox_is_empty() && (fc.doomed || fc.io.read_closed) {
+                    fc.io.kill();
+                    to_remove.push(conn);
+                }
+            }
+        }
+        for conn in to_remove {
+            conns.remove(&conn);
+        }
+
+        if !progress {
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+    // exit: dropping the slab closes every client socket; responses
+    // still in flight bounce off the dropped resp_rx and the forwarder
+    // counts them dropped
+}
+
+/// Dispatch one parsed client frame inside a front shard sweep.
+fn handle_front_frame(
+    frame: Frame,
+    conn: u64,
+    fc: &mut FrontConn,
+    fwd_txs: &[Sender<FwdJob>],
+    resp_tx: &Sender<(u64, ResponseFrame)>,
+    shared: &Arc<Shared>,
+    cap: usize,
+) {
+    let fault = shared.cfg.fault;
+    match frame {
+        Frame::Request(req) => {
+            if req.id == RESERVED_ID {
+                // the pong id: admitting it would make the response
+                // indistinguishable from a ping reply
+                shared.stats.rejected_reserved.fetch_add(1, Ordering::Relaxed);
+                let resp = ResponseFrame::status_only(
+                    RESERVED_ID,
+                    Status::ReservedId,
+                    shared.clock.now_us(),
+                );
+                if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
+                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+            shared.stats.received.fetch_add(1, Ordering::Relaxed);
+            fc.pending += 1;
+            let job = FwdJob { conn, req, resp_tx: resp_tx.clone() };
+            let fwd = (conn as usize) % fwd_txs.len();
+            if let Err(mpsc::SendError(job)) = fwd_txs[fwd].send(job) {
+                // forwarders are gone (shutdown): answer terminally here
+                fc.pending -= 1;
+                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                let resp = ResponseFrame::status_only(
+                    job.req.id,
+                    Status::Unavailable,
+                    shared.clock.now_us(),
+                );
+                if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
+                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        Frame::Control(ControlOp::Ping) => {
+            let pong =
+                ResponseFrame::status_only(RESERVED_ID, Status::Ok, shared.clock.now_us());
+            if fc.io.enqueue_response(&pong, &fault, cap) == Enqueue::Dropped {
+                shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Frame::Control(ControlOp::Shutdown) => {
+            // propagate the drain to every reachable replica, then
+            // bring the router itself down
+            for &addr in &shared.cfg.replicas {
+                if let Ok(mut c) = Client::connect_with(addr, shared.cfg.timeouts) {
+                    let _ = c.shutdown_server();
+                }
+            }
+            shared.stop.store(true, Ordering::SeqCst);
+        }
+        // clients don't send responses
+        Frame::Response(_) => fc.io.kill(),
+    }
+}
+
+/// One forwarder thread: owns a lazily-dialed upstream pool, drains its
+/// job queue until every shard-side sender is gone. All blocking I/O
+/// and retry/backoff sleeps live here, never in a shard sweep.
+fn forwarder_loop(rx: Receiver<FwdJob>, shared: Arc<Shared>) {
+    let mut pool: HashMap<usize, Client> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        let resp = forward_with_retries(&shared, &mut pool, &job.req);
+        if job.resp_tx.send((job.conn, resp)).is_err() {
+            // the owning shard exited first; the answer was produced
+            // and counted, only delivery is lost
+            shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -791,6 +993,36 @@ mod tests {
         });
     }
 
+    // -- retry backoff -----------------------------------------------------
+
+    #[test]
+    fn backoff_saturates_past_the_shift_width_instead_of_wrapping() {
+        // regression: `base << (retry-1)` overflows the u64 width for
+        // retry >= 65 (debug panic / release wrap to a 0µs backoff)
+        let r = RetryConfig { max_retries: 0, base_backoff_us: 1, max_backoff_us: u64::MAX };
+        assert_eq!(r.backoff_us(63), 1u64 << 62);
+        assert_eq!(r.backoff_us(64), 1u64 << 63);
+        assert_eq!(r.backoff_us(65), u64::MAX, "factor saturates, never wraps");
+        assert_eq!(r.backoff_us(1000), u64::MAX);
+
+        // with a finite cap every deep retry sits exactly at the cap
+        let r = RetryConfig { max_retries: 0, base_backoff_us: 5_000, max_backoff_us: 100_000 };
+        assert_eq!(r.backoff_us(63), 100_000);
+        assert_eq!(r.backoff_us(64), 100_000);
+        assert_eq!(r.backoff_us(1000), 100_000);
+
+        // the whole curve is monotone non-decreasing (the old clamped
+        // shift plateaued below max for tiny bases; saturation doesn't)
+        let r = RetryConfig { max_retries: 0, base_backoff_us: 1, max_backoff_us: u64::MAX };
+        let mut prev = 0u64;
+        for retry in 1..=200u32 {
+            let b = r.backoff_us(retry);
+            assert!(b >= prev, "retry {retry}: {b} < {prev}");
+            prev = b;
+        }
+        assert_eq!(r.backoff_us(1), 1, "first retry sleeps exactly base");
+    }
+
     // -- probe state machine ----------------------------------------------
 
     #[test]
@@ -924,6 +1156,61 @@ mod tests {
         assert_eq!(rep.failed, 1);
         assert_eq!(rep.retried_away, 2, "budget of 2 retries was spent: {rep:?}");
         assert_eq!(rep.forwarded, 3, "{rep:?}");
+    }
+
+    #[test]
+    fn router_rejects_reserved_id_requests_at_the_door() {
+        use crate::coordinator::batcher::Priority;
+        use crate::net::proto::{read_frame, write_frame};
+
+        let r1 = mock_replica(&["m"]);
+        let cfg = fast_cfg(vec![r1.local_addr()]);
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut s = TcpStream::connect(router.local_addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let req = RequestFrame {
+            id: RESERVED_ID,
+            model: "m".into(),
+            priority: Priority::Normal,
+            deadline_budget_us: None,
+            image: vec![1, 2, 3],
+        };
+        write_frame(&mut s, &Frame::Request(req)).unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Response(r) => {
+                assert_eq!(r.status, Status::ReservedId, "typed rejection, not a relay");
+                assert!(r.scores.is_empty());
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+
+        // the same connection still serves normal ids afterwards
+        let req = RequestFrame {
+            id: 7,
+            model: "m".into(),
+            priority: Priority::Normal,
+            deadline_budget_us: None,
+            image: vec![1, 2, 3],
+        };
+        write_frame(&mut s, &Frame::Request(req)).unwrap();
+        match read_frame(&mut s).unwrap().unwrap() {
+            Frame::Response(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.status, Status::Ok);
+                assert_eq!(r.scores, vec![6], "mock scores the byte sum");
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+        drop(s);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        assert_eq!(rep.rejected_reserved, 1, "{rep:?}");
+        assert_eq!(rep.received, 1, "the rejected request was never counted received");
+        assert_eq!(rep.answered, 1);
+        r1.shutdown().unwrap();
     }
 
     #[test]

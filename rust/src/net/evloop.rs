@@ -1,0 +1,288 @@
+//! Shared non-blocking connection I/O for the sharded event loops.
+//!
+//! One [`ConnIo`] wraps a non-blocking `TcpStream` with an incremental
+//! [`FrameAssembler`] on the read side and a buffered outbox with a
+//! partial-write cursor on the write side. The server's shard loops
+//! ([`crate::net::server`]) and the cluster router's front loops
+//! ([`crate::net::cluster`]) both drive it, so framing, backpressure,
+//! and fault handling cannot drift between the two tiers.
+//!
+//! The outbox is frame-capped: a peer that stops reading its socket
+//! fills the kernel send buffer, then the outbox, and further responses
+//! are *dropped with an accounting trace* ([`Enqueue::Dropped`]) rather
+//! than growing server memory or blocking the shard — the wire ledger
+//! (`settled == answered + dropped`) makes the loss visible.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::net::proto::{encode_frame, Frame, FrameAssembler, ResponseFrame};
+use crate::net::server::FaultPlan;
+
+/// What happened to a response handed to [`ConnIo::enqueue_response`].
+/// `Answered` includes the stall fault (the response was consumed, the
+/// peer just never sees the bytes) — the wire ledger counts exactly one
+/// of these two outcomes per settled response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Enqueue {
+    Answered,
+    Dropped,
+}
+
+/// One event-loop connection: non-blocking stream, incremental frame
+/// reassembly, and a bounded outbound frame queue with partial-write
+/// resume.
+pub(crate) struct ConnIo {
+    pub stream: TcpStream,
+    pub asm: FrameAssembler,
+    outbox: VecDeque<Vec<u8>>,
+    /// Bytes of `outbox.front()` already written to the socket.
+    out_pos: usize,
+    /// The peer's request stream is finished (EOF, read error, or drain
+    /// shutdown); the outbox still flushes.
+    pub read_closed: bool,
+    /// The socket is unusable in both directions; enqueues drop.
+    pub dead: bool,
+    pub frames_read: u64,
+    pub shut_for_drain: bool,
+}
+
+impl ConnIo {
+    pub fn new(stream: TcpStream) -> std::io::Result<ConnIo> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(ConnIo {
+            stream,
+            asm: FrameAssembler::new(),
+            outbox: VecDeque::new(),
+            out_pos: 0,
+            read_closed: false,
+            dead: false,
+            frames_read: 0,
+            shut_for_drain: false,
+        })
+    }
+
+    pub fn outbox_is_empty(&self) -> bool {
+        self.outbox.is_empty()
+    }
+
+    /// Encode and buffer one response, applying the fault plan and the
+    /// outbox frame cap.
+    pub fn enqueue_response(
+        &mut self,
+        resp: &ResponseFrame,
+        fault: &FaultPlan,
+        cap: usize,
+    ) -> Enqueue {
+        if self.dead {
+            return Enqueue::Dropped;
+        }
+        if fault.stall_responses {
+            // injected stall: consume and discard, the peer sees silence
+            return Enqueue::Answered;
+        }
+        if self.outbox.len() >= cap.max(1) {
+            return Enqueue::Dropped;
+        }
+        let body = match encode_frame(&Frame::Response(resp.clone())) {
+            Ok(b) => b,
+            Err(_) => return Enqueue::Dropped, // over-cap scores: unencodable
+        };
+        let mut bytes = Vec::with_capacity(4 + body.len());
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&body);
+        if fault.corrupt_frames {
+            bytes[4] ^= 0xFF; // first magic byte: the peer must reject it
+        }
+        self.outbox.push_back(bytes);
+        Enqueue::Answered
+    }
+
+    /// Pull whatever the socket has ready into the assembler, bounded
+    /// per call so one firehose connection cannot starve its shard
+    /// siblings. Returns true if any bytes arrived.
+    pub fn fill(&mut self, scratch: &mut [u8]) -> bool {
+        if self.read_closed || self.dead {
+            return false;
+        }
+        let mut progress = false;
+        for _ in 0..4 {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.asm.extend(&scratch[..n]);
+                    progress = true;
+                    if n < scratch.len() {
+                        break; // socket drained, don't burn a syscall
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.read_closed = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Flush buffered responses; a partial write leaves a cursor on the
+    /// front frame and resumes next sweep. Returns true on any
+    /// progress. A write error kills the connection and discards the
+    /// outbox — those responses were already accounted when enqueued.
+    pub fn flush_writes(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progress = false;
+        while let Some(front) = self.outbox.front() {
+            match self.stream.write(&front[self.out_pos..]) {
+                Ok(0) => {
+                    self.kill();
+                    break;
+                }
+                Ok(n) => {
+                    progress = true;
+                    self.out_pos += n;
+                    if self.out_pos == front.len() {
+                        self.outbox.pop_front();
+                        self.out_pos = 0;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.kill();
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Hard-close both directions and discard any unflushed output.
+    pub fn kill(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        self.dead = true;
+        self.read_closed = true;
+        self.outbox.clear();
+        self.out_pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::proto::{read_frame, Status};
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn resp(id: u64, n_scores: usize) -> ResponseFrame {
+        ResponseFrame {
+            id,
+            status: Status::Ok,
+            admitted_us: 1,
+            completed_us: 2,
+            scores: vec![id as i32; n_scores],
+        }
+    }
+
+    #[test]
+    fn outbox_cap_drops_with_a_trace_never_grows() {
+        let (_peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let fault = FaultPlan::none();
+        let mut answered = 0;
+        let mut dropped = 0;
+        for i in 0..10u64 {
+            match io.enqueue_response(&resp(i, 1), &fault, 3) {
+                Enqueue::Answered => answered += 1,
+                Enqueue::Dropped => dropped += 1,
+            }
+        }
+        assert_eq!(answered, 3, "exactly the cap is buffered");
+        assert_eq!(dropped, 7, "overflow is dropped, not queued");
+    }
+
+    #[test]
+    fn stall_fault_consumes_without_buffering() {
+        let (_peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let fault = FaultPlan { stall_responses: true, ..FaultPlan::none() };
+        assert_eq!(io.enqueue_response(&resp(1, 4), &fault, 8), Enqueue::Answered);
+        assert!(io.outbox_is_empty(), "stalled responses never reach the wire");
+    }
+
+    #[test]
+    fn corrupt_fault_breaks_the_peer_decoder() {
+        let (peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let fault = FaultPlan { corrupt_frames: true, ..FaultPlan::none() };
+        assert_eq!(io.enqueue_response(&resp(1, 2), &fault, 8), Enqueue::Answered);
+        while !io.outbox_is_empty() {
+            io.flush_writes();
+        }
+        let mut r = std::io::BufReader::new(peer);
+        assert!(read_frame(&mut r).is_err(), "corrupted magic must be rejected");
+    }
+
+    #[test]
+    fn dead_connection_drops_enqueues() {
+        let (_peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        io.kill();
+        assert_eq!(io.enqueue_response(&resp(1, 1), &FaultPlan::none(), 8), Enqueue::Dropped);
+    }
+
+    #[test]
+    fn big_outbox_flushes_across_partial_writes_in_order() {
+        // ~16 KiB frames: far past one nonblocking write() quantum once
+        // the socket buffer tightens, so the partial-write cursor is
+        // genuinely exercised while a slow peer drains concurrently.
+        let (peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let n = 64u64;
+        for i in 0..n {
+            assert_eq!(
+                io.enqueue_response(&resp(i, 4096), &FaultPlan::none(), 1024),
+                Enqueue::Answered
+            );
+        }
+        let reader = std::thread::spawn(move || {
+            let mut r = std::io::BufReader::new(peer);
+            let mut got = Vec::new();
+            for _ in 0..n {
+                match read_frame(&mut r).unwrap().unwrap() {
+                    Frame::Response(rf) => {
+                        assert_eq!(rf.scores.len(), 4096);
+                        assert_eq!(rf.scores[0] as u64, rf.id);
+                        got.push(rf.id);
+                    }
+                    other => panic!("unexpected frame {other:?}"),
+                }
+            }
+            got
+        });
+        while !io.outbox_is_empty() {
+            if !io.flush_writes() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert!(!io.dead, "flush must not error against a live peer");
+        }
+        let got = reader.join().unwrap();
+        assert_eq!(got, (0..n).collect::<Vec<u64>>(), "frames arrive intact and in order");
+    }
+}

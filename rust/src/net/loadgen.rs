@@ -5,6 +5,18 @@
 //! optional deadline budgets and low-priority fractions, deterministic
 //! per-connection schedules from [`Rng64`], and per-model
 //! p50/p99/throughput rows for `BENCH_serve.json`.
+//!
+//! Open-loop pacing is drift-free: send `i` is scheduled against the
+//! absolute deadline `t0 + i/qps` (never against "now + interval", so
+//! per-iteration scheduling error cannot accumulate) and the tail of
+//! each wait is taken in short naps so one oversleep cannot push the
+//! whole schedule late. The report carries `target_qps` next to
+//! `achieved_qps` so an undershooting run is visible in the BENCH rows.
+//!
+//! [`run_conn_scale`] is the connection-scale scenario: park thousands
+//! of mostly-idle connections on the server, drive a hot subset with
+//! [`run_load`], then sweep every idle connection with a ping — proving
+//! the front-end holds N connections without starving any of them.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
@@ -15,7 +27,9 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::Priority;
 use crate::coordinator::metrics::Histogram;
 use crate::net::client::{Client, NetTimeouts, ReconnectPolicy};
-use crate::net::proto::{read_frame, write_frame, Frame, RequestFrame, ResponseFrame, Status};
+use crate::net::proto::{
+    read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status, RESERVED_ID,
+};
 use crate::report::bench::BenchResult;
 use crate::util::{Rng64, TinError};
 use crate::Result;
@@ -131,6 +145,12 @@ pub struct LoadReport {
     pub lost: u64,
     pub wall_s: f64,
     pub throughput_per_s: f64,
+    /// The `--qps` target of an open-loop run (`None` closed-loop).
+    pub target_qps: Option<f64>,
+    /// Send rate actually delivered: `sent` over the sending window
+    /// (the slowest connection's send wall, excluding the response
+    /// drain tail). On a drift-free pacer this sits at the target.
+    pub achieved_qps: f64,
 }
 
 impl LoadReport {
@@ -181,6 +201,12 @@ impl LoadReport {
         rows.push(row("net_load_busy".into(), 1, self.busy as f64));
         rows.push(row("net_load_rejected".into(), 1, self.rejected as f64));
         rows.push(row("net_load_expired".into(), 1, self.expired as f64));
+        // achieved-vs-target pacing rows (open loop only; both store
+        // raw QPS in mean_s, like count rows store counts)
+        if let Some(target) = self.target_qps {
+            rows.push(row("net_load_target_qps".into(), 1, target));
+            rows.push(row("net_load_achieved_qps".into(), 1, self.achieved_qps));
+        }
         rows
     }
 }
@@ -232,6 +258,10 @@ impl Counts {
             Status::UnknownModel => self.unknown += 1,
             Status::Busy => self.busy += 1,
             Status::Unavailable => self.unavailable += 1,
+            // the generator's ids count up from 0 and never reach the
+            // reserved id, so this arm only fires against a buggy peer;
+            // it still balances the ledger as a rejection
+            Status::ReservedId => self.rejected += 1,
         }
     }
 }
@@ -239,6 +269,9 @@ impl Counts {
 struct ConnResult {
     per_mix: Vec<Counts>,
     lost: u64,
+    /// Seconds from `t0` until this connection's last send hit the
+    /// wire (the pacing denominator — excludes the drain tail).
+    send_wall_s: f64,
 }
 
 /// Deterministic per-connection schedule: mix choice by normalized
@@ -275,6 +308,23 @@ fn request_frame(cfg: &LoadConfig, plan: &PlanItem, id: u64, model: &str, image:
 /// How long a receiver waits for one response before declaring the rest
 /// of its requests lost.
 const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Sleep until `t0 + target_us`, drift-free. The bulk of the gap is one
+/// sleep stopping ~100µs short; the tail is taken in 50µs naps, so the
+/// OS oversleeping one `sleep()` call costs that nap, not the whole
+/// schedule (the old `sleep(remaining)` pacer accumulated every
+/// oversleep into delivered-QPS undershoot).
+fn pace_until(t0: Instant, target_us: u64) {
+    loop {
+        let now = t0.elapsed().as_micros() as u64;
+        if now >= target_us {
+            return;
+        }
+        let gap = target_us - now;
+        let nap = if gap > 200 { gap - 100 } else { gap.min(50).max(1) };
+        std::thread::sleep(Duration::from_micros(nap));
+    }
+}
 
 /// Closed loop: one thread, `inflight` requests outstanding, send-next
 /// on every response.
@@ -356,7 +406,9 @@ fn run_conn_closed(
             outstanding += 1;
         }
     }
-    Ok(ConnResult { per_mix, lost })
+    // closed-loop sends interleave with receives to the end: the whole
+    // run is the sending window
+    Ok(ConnResult { per_mix, lost, send_wall_s: t0.elapsed().as_secs_f64() })
 }
 
 /// Open loop: a sender thread pacing arrivals at the target rate and a
@@ -381,7 +433,7 @@ fn run_conn_open(
 
     let plan_ref = &plan;
     let send_ref = &send_us;
-    let recv_result = std::thread::scope(|s| -> Result<(Vec<Counts>, u64)> {
+    let recv_result = std::thread::scope(|s| -> Result<(Vec<Counts>, u64, f64)> {
         let cfg_ref = &cfg;
         let receiver = s.spawn(move || {
             let mut r = BufReader::new(rstream);
@@ -411,11 +463,9 @@ fn run_conn_open(
         let mut w = BufWriter::new(stream);
         let mut sent_per_mix = vec![0u64; cfg.mix.len()];
         for (j, item) in plan.iter().enumerate() {
-            let target_us = (j as f64 * interval_us) as u64;
-            let now = t0.elapsed().as_micros() as u64;
-            if now < target_us {
-                std::thread::sleep(Duration::from_micros(target_us - now));
-            }
+            // absolute deadline t0 + j/qps: pacing error cannot
+            // accumulate across iterations
+            pace_until(t0, (j as f64 * interval_us) as u64);
             let model = &cfg.mix[item.mix_idx].model;
             let pool = &images[model];
             let img = pool[j % pool.len()].clone();
@@ -424,14 +474,15 @@ fn run_conn_open(
             w.flush()?;
             sent_per_mix[item.mix_idx] += 1;
         }
+        let send_wall_s = t0.elapsed().as_secs_f64();
         let (mut per_mix, lost) = receiver.join().expect("open-loop receiver panicked");
         for (c, &sent) in per_mix.iter_mut().zip(&sent_per_mix) {
             c.sent = sent;
         }
-        Ok((per_mix, lost))
+        Ok((per_mix, lost, send_wall_s))
     })?;
-    let (per_mix, lost) = recv_result;
-    Ok(ConnResult { per_mix, lost })
+    let (per_mix, lost, send_wall_s) = recv_result;
+    Ok(ConnResult { per_mix, lost, send_wall_s })
 }
 
 /// Run one load-generation campaign against `addr`. `images` supplies
@@ -462,6 +513,7 @@ pub fn run_load(
                     return Ok(ConnResult {
                         per_mix: cfg.mix.iter().map(|_| Counts::new()).collect(),
                         lost: 0,
+                        send_wall_s: 0.0,
                     });
                 }
                 match cfg.mode {
@@ -481,9 +533,11 @@ pub fn run_load(
 
     let mut merged: Vec<Counts> = cfg.mix.iter().map(|_| Counts::new()).collect();
     let mut lost = 0u64;
+    let mut send_wall_s: f64 = 0.0;
     for cr in conn_results {
         let cr = cr?;
         lost += cr.lost;
+        send_wall_s = send_wall_s.max(cr.send_wall_s);
         for (a, b) in merged.iter_mut().zip(cr.per_mix.iter()) {
             a.sent += b.sent;
             a.ok += b.ok;
@@ -509,6 +563,11 @@ pub fn run_load(
         lost,
         wall_s,
         throughput_per_s: 0.0,
+        target_qps: match cfg.mode {
+            LoadMode::Open { qps } => Some(qps),
+            LoadMode::Closed { .. } => None,
+        },
+        achieved_qps: 0.0,
     };
     for (m, c) in cfg.mix.iter().zip(merged.into_iter()) {
         report.sent += c.sent;
@@ -533,6 +592,7 @@ pub fn run_load(
         });
     }
     report.throughput_per_s = report.ok as f64 / wall_s.max(1e-9);
+    report.achieved_qps = report.sent as f64 / send_wall_s.max(1e-9);
     Ok(report)
 }
 
@@ -577,6 +637,121 @@ pub fn run_cluster_load(
             let _ = k.join();
         }
         report
+    })
+}
+
+/// The connection-scale scenario (`bench-load --conn-scale`): park
+/// `idle_conns` connections that send nothing while a hot subset runs
+/// a full [`run_load`] campaign, then prove none of the idles starved.
+#[derive(Clone, Debug)]
+pub struct ConnScaleConfig {
+    /// Mostly-idle connections parked on the server for the whole run.
+    pub idle_conns: usize,
+    /// The hot subset's load campaign.
+    pub hot: LoadConfig,
+    /// BENCH row prefix, e.g. `conn_scale_evloop_1000`.
+    pub label: String,
+}
+
+/// Result of one [`run_conn_scale`] run. The acceptance bar is
+/// `idle_unanswered == 0 && hot.lost == 0` with every idle connection
+/// established.
+#[derive(Clone, Debug)]
+pub struct ConnScaleReport {
+    pub label: String,
+    pub idle_target: usize,
+    /// Idle connections actually established (the server's `max_conns`
+    /// cap closes the rest at accept).
+    pub idle_established: usize,
+    /// Hot connections the campaign drove.
+    pub hot_conns: usize,
+    /// Idle connections that failed a ping sweep (one sweep before the
+    /// hot run, one after) — 0 means no idle connection starved.
+    pub idle_unanswered: u64,
+    pub hot: LoadReport,
+}
+
+impl ConnScaleReport {
+    /// `conn_scale_*` rows for `BENCH_serve.json`: hot-subset client
+    /// and gateway p99 (`*_us` rows, raw microseconds in `mean_s`),
+    /// hot throughput (seconds-per-frame), and the count rows the CI
+    /// gate asserts zero on.
+    pub fn bench_rows(&self) -> Vec<BenchResult> {
+        fn row(name: String, iters: u32, v: f64) -> BenchResult {
+            BenchResult { name, iters, mean_s: v, stddev_s: 0.0, min_s: v }
+        }
+        let mut lat = Histogram::new();
+        let mut gw = Histogram::new();
+        for m in &self.hot.models {
+            lat.merge(&m.latency);
+            gw.merge(&m.gateway_latency);
+        }
+        let l = &self.label;
+        let spf = 1.0 / self.hot.throughput_per_s.max(1e-12);
+        vec![
+            row(format!("{l}_p99_us"), self.hot.ok as u32, lat.p99_us() as f64),
+            row(format!("{l}_gateway_p99_us"), self.hot.ok as u32, gw.p99_us() as f64),
+            row(format!("{l}_throughput"), self.hot.ok as u32, spf),
+            row(format!("{l}_conns"), 1, (self.idle_established + self.hot_conns) as f64),
+            row(format!("{l}_idle_unanswered"), 1, self.idle_unanswered as f64),
+            row(format!("{l}_unanswered"), 1, self.hot.lost as f64),
+        ]
+    }
+}
+
+/// Ping every parked connection (pipelined: all pings out, then all
+/// pongs in) and count the ones that never answered correctly.
+fn ping_sweep(idles: &mut [TcpStream]) -> u64 {
+    let mut failed = 0u64;
+    let mut sent_ok: Vec<bool> = Vec::with_capacity(idles.len());
+    for s in idles.iter_mut() {
+        sent_ok.push(write_frame(s, &Frame::Control(ControlOp::Ping)).is_ok());
+    }
+    for (s, sent) in idles.iter_mut().zip(sent_ok) {
+        let pong = sent
+            && matches!(
+                read_frame(s),
+                Ok(Some(Frame::Response(r)))
+                    if r.id == RESERVED_ID && r.status == Status::Ok && r.scores.is_empty()
+            );
+        if !pong {
+            failed += 1;
+        }
+    }
+    failed
+}
+
+/// Run the connection-scale scenario: establish the idle fleet, sweep
+/// it once (every connection must answer a ping), run the hot campaign,
+/// sweep again (the hot load must not have starved or killed any idle
+/// connection), and fold both into the report.
+pub fn run_conn_scale(
+    addr: &str,
+    cfg: &ConnScaleConfig,
+    images: &HashMap<String, Vec<Vec<u8>>>,
+) -> Result<ConnScaleReport> {
+    let mut idles: Vec<TcpStream> = Vec::with_capacity(cfg.idle_conns);
+    for _ in 0..cfg.idle_conns {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                let _ = s.set_read_timeout(Some(RECV_TIMEOUT));
+                idles.push(s);
+            }
+            Err(_) => break, // the server's max_conns cap (or fd limit)
+        }
+    }
+    let idle_established = idles.len();
+    let mut idle_unanswered = ping_sweep(&mut idles);
+    let hot = run_load(addr, &cfg.hot, images)?;
+    idle_unanswered += ping_sweep(&mut idles);
+    Ok(ConnScaleReport {
+        label: cfg.label.clone(),
+        idle_target: cfg.idle_conns,
+        idle_established,
+        hot_conns: cfg.hot.conns,
+        idle_unanswered,
+        hot,
     })
 }
 
@@ -698,6 +873,89 @@ mod tests {
         assert!(report.ok > 0);
         let gw = srv.shutdown().unwrap();
         assert!(gw.conserved());
+    }
+
+    #[test]
+    fn pacing_holds_the_absolute_schedule_without_drift() {
+        // pure pacer check, no sockets: 100 ticks at 2 kHz must take
+        // ~50ms — the old incremental pacer accumulated oversleep and
+        // ran long (undershooting delivered QPS)
+        let t0 = Instant::now();
+        let interval_us = 500.0;
+        let n = 100u64;
+        for j in 0..n {
+            pace_until(t0, (j as f64 * interval_us) as u64);
+        }
+        let took_us = t0.elapsed().as_micros() as u64;
+        let ideal_us = ((n - 1) as f64 * interval_us) as u64;
+        assert!(took_us >= ideal_us, "the pacer may not run ahead of the schedule");
+        // generous bound for loaded CI machines; the drift bug was ~2x
+        assert!(
+            took_us < ideal_us + 20_000,
+            "pacer drifted: {took_us}µs for an ideal {ideal_us}µs schedule"
+        );
+    }
+
+    #[test]
+    fn open_loop_reports_achieved_vs_target_qps() {
+        let srv = mock_server(&["a"]);
+        let addr = srv.local_addr().to_string();
+        let cfg = LoadConfig {
+            conns: 1,
+            requests: 100,
+            mix: parse_mix("a").unwrap(),
+            mode: LoadMode::Open { qps: 2000.0 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 9,
+            reconnect: None,
+        };
+        let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.target_qps, Some(2000.0));
+        assert!(
+            report.achieved_qps > 1000.0,
+            "achieved {} QPS against a 2000 QPS target",
+            report.achieved_qps
+        );
+        let rows = report.bench_rows();
+        assert!(rows.iter().any(|r| r.name == "net_load_target_qps" && r.mean_s == 2000.0));
+        assert!(rows.iter().any(|r| r.name == "net_load_achieved_qps" && r.mean_s > 0.0));
+        srv.shutdown().unwrap();
+    }
+
+    #[test]
+    fn conn_scale_idle_fleet_survives_a_hot_subset() {
+        let srv = mock_server(&["a"]);
+        let addr = srv.local_addr().to_string();
+        let cfg = ConnScaleConfig {
+            idle_conns: 64,
+            hot: LoadConfig {
+                conns: 4,
+                requests: 64,
+                mix: parse_mix("a").unwrap(),
+                mode: LoadMode::Closed { inflight: 4 },
+                deadline_us: None,
+                low_frac: 0.0,
+                seed: 13,
+                reconnect: None,
+            },
+            label: "conn_scale_test_64".into(),
+        };
+        let report = run_conn_scale(&addr, &cfg, &image_map(&["a"])).unwrap();
+        assert_eq!(report.idle_established, 64);
+        assert_eq!(report.idle_unanswered, 0, "no idle connection may starve");
+        assert_eq!(report.hot.lost, 0);
+        assert!(report.hot.conserved());
+        assert_eq!(report.hot.ok, 64);
+        let rows = report.bench_rows();
+        assert!(rows.iter().any(|r| r.name == "conn_scale_test_64_p99_us"));
+        assert!(rows.iter().any(|r| r.name == "conn_scale_test_64_idle_unanswered" && r.mean_s == 0.0));
+        assert!(rows.iter().any(|r| r.name == "conn_scale_test_64_conns" && r.mean_s == 68.0));
+        let gw = srv.shutdown().unwrap();
+        assert!(gw.conserved(), "{gw:?}");
+        assert_eq!(gw.completed, 64);
+        assert_eq!(gw.dropped_responses, 0);
     }
 
     #[test]

@@ -1,17 +1,26 @@
 //! S12: the wire-protocol serving front-end — the network layer that
 //! makes the multi-model gateway reachable from other processes.
 //!
-//! Five pieces, all std-only:
+//! Six pieces, all std-only:
 //!
 //! * [`proto`] — TBNP/1, a versioned length-prefixed binary protocol
 //!   (requests with model tag / priority / deadline budget / image;
-//!   responses with status, server timestamps and scores).
+//!   responses with status, server timestamps and scores), plus the
+//!   incremental [`FrameAssembler`](proto::FrameAssembler) the event
+//!   loops decode partial reads with.
+//! * [`evloop`] — the shared non-blocking connection primitive
+//!   (`ConnIo`): incremental reassembly on the read side, a bounded
+//!   outbox with a partial-write cursor on the write side. Both the
+//!   server shards and the cluster router front drive it.
 //! * [`server`] — a `TcpListener` front-end bridging connections into
-//!   the gateway [`Router`](crate::coordinator::gateway::Router):
-//!   per-connection reader/writer threads, one dispatcher owning the
-//!   router, per-(model, worker) engine threads, connection-level
-//!   backpressure (`Busy`), graceful drain with exact accounting, and
-//!   a deterministic [`FaultPlan`] fault-injection layer.
+//!   the gateway [`Router`](crate::coordinator::gateway::Router): N
+//!   sharded event loops (default; `shards: 0` keeps the legacy
+//!   two-threads-per-connection mode as a baseline), one dispatcher
+//!   owning the router, per-(model, worker) engine threads,
+//!   connection-level backpressure (`Busy`), a conserved wire ledger
+//!   (`settled == answered + dropped`), graceful drain with exact
+//!   accounting, and a deterministic [`FaultPlan`] fault-injection
+//!   layer.
 //! * [`cluster`] — the fault-tolerant router tier: consistent-hash
 //!   model placement over N replica servers, ping health probes with
 //!   ejection/probation, retry-on-another-replica with capped backoff,
@@ -19,11 +28,14 @@
 //! * [`client`] — a small blocking client with pipelining, typed
 //!   timeouts, and reconnect-with-backoff.
 //! * [`loadgen`] — open-/closed-loop load generators producing the
-//!   per-model p50/p99/throughput rows in `BENCH_serve.json`, plus the
-//!   kill-a-replica cluster scenario (`bench-load --cluster`).
+//!   per-model p50/p99/throughput rows in `BENCH_serve.json`, the
+//!   kill-a-replica cluster scenario (`bench-load --cluster`), and the
+//!   connection-scale scenario (`bench-load --conn-scale`): thousands
+//!   of mostly-idle connections plus a hot subset.
 
 pub mod client;
 pub mod cluster;
+pub(crate) mod evloop;
 pub mod loadgen;
 pub mod proto;
 pub mod server;
@@ -33,10 +45,12 @@ pub use cluster::{
     ClusterConfig, ClusterReport, ClusterRouter, ProbeConfig, ReplicaHealth, RetryConfig, Ring,
 };
 pub use loadgen::{
-    parse_mix, run_cluster_load, run_load, ClusterScenario, LoadConfig, LoadMode, LoadReport,
-    MixEntry,
+    parse_mix, run_cluster_load, run_conn_scale, run_load, ClusterScenario, ConnScaleConfig,
+    ConnScaleReport, LoadConfig, LoadMode, LoadReport, MixEntry,
 };
-pub use proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status};
+pub use proto::{
+    ControlOp, Frame, FrameAssembler, RequestFrame, ResponseFrame, Status, RESERVED_ID,
+};
 pub use server::{
     Clock, DrainTrigger, FaultPlan, ManualClock, MonotonicClock, NetServer, ServerConfig,
 };

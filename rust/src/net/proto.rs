@@ -14,11 +14,20 @@
 //! |          | n_scores:u16 + n_scores x i32                                  |
 //! | control  | op:u8 (0 = shutdown-and-drain, 1 = ping)                       |
 //!
+//! Request id `u64::MAX` ([`RESERVED_ID`]) is **reserved**: the server
+//! answers ping control frames with a response carrying that id, so a
+//! client request claiming it would be indistinguishable from a pong.
+//! Servers reject such requests at admission with
+//! [`Status::ReservedId`] instead of processing them.
+//!
 //! Declared lengths are capped ([`MAX_NAME`], [`MAX_IMAGE`],
 //! [`MAX_SCORES`]) so a malicious length prefix cannot make the peer
 //! allocate unboundedly, and every decode path returns a
 //! [`TinError::Format`] on truncation instead of panicking — the
-//! roundtrip/truncation properties in this module pin both.
+//! roundtrip/truncation properties in this module pin both. For
+//! non-blocking readers that receive arbitrary partial chunks, the
+//! [`FrameAssembler`] reassembles the same frames incrementally with
+//! identical validation.
 
 use std::io::{Read, Write};
 
@@ -40,6 +49,9 @@ pub const MAX_SCORES: usize = 4096;
 /// Hard cap on a declared frame-body length (anti-DoS bound for the
 /// length prefix itself).
 pub const MAX_BODY: usize = MAX_IMAGE + MAX_NAME + 64;
+/// The request id reserved for ping replies (pongs). Client requests
+/// carrying it are rejected at admission with [`Status::ReservedId`].
+pub const RESERVED_ID: u64 = u64::MAX;
 
 /// Terminal outcome of one request, as carried on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +72,9 @@ pub enum Status {
     /// (or was ejected) and the per-request retry budget is spent. A
     /// typed terminal answer — the router never hangs a request.
     Unavailable,
+    /// The request used the reserved ping id ([`RESERVED_ID`],
+    /// `u64::MAX`); rejected at admission so pongs stay unambiguous.
+    ReservedId,
 }
 
 impl Status {
@@ -71,6 +86,7 @@ impl Status {
             Status::UnknownModel => 3,
             Status::Busy => 4,
             Status::Unavailable => 5,
+            Status::ReservedId => 6,
         }
     }
 
@@ -82,6 +98,7 @@ impl Status {
             3 => Status::UnknownModel,
             4 => Status::Busy,
             5 => Status::Unavailable,
+            6 => Status::ReservedId,
             other => return Err(TinError::Format(format!("bad status byte {other}"))),
         })
     }
@@ -94,6 +111,7 @@ impl Status {
             Status::UnknownModel => "unknown-model",
             Status::Busy => "busy",
             Status::Unavailable => "unavailable",
+            Status::ReservedId => "reserved-id",
         }
     }
 }
@@ -416,6 +434,82 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
     Some(decode_frame(&body)).transpose()
 }
 
+// ---- incremental reassembly ---------------------------------------------
+
+/// Incremental TBNP/1 frame reassembler for non-blocking readers.
+///
+/// [`read_frame`] assumes a blocking stream it can pull whole frames
+/// from; an event loop instead receives arbitrary partial chunks as the
+/// socket becomes readable. `FrameAssembler` buffers those chunks and
+/// yields complete frames with exactly the same validation (length cap
+/// before buffering the body, full [`decode_frame`] checks per frame).
+/// Once a frame is malformed the assembler is poisoned: every later
+/// call returns the error again, since a corrupt stream has no reliable
+/// resynchronization point.
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf`; compacted once it outgrows the tail.
+    pos: usize,
+    poisoned: bool,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append freshly-read bytes from the socket.
+    pub fn extend(&mut self, chunk: &[u8]) {
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// Bytes buffered but not yet consumed as complete frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame, or `Ok(None)` if more bytes are
+    /// needed. Errors are sticky (see the type docs).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.poisoned {
+            return Err(TinError::Format("frame stream already failed to decode".into()));
+        }
+        let avail = self.buf.len() - self.pos;
+        if avail < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([
+            self.buf[self.pos],
+            self.buf[self.pos + 1],
+            self.buf[self.pos + 2],
+            self.buf[self.pos + 3],
+        ]) as usize;
+        if len > MAX_BODY {
+            self.poisoned = true;
+            return Err(TinError::Format(format!("frame body length {len} over cap {MAX_BODY}")));
+        }
+        if avail < 4 + len {
+            return Ok(None);
+        }
+        let body = &self.buf[self.pos + 4..self.pos + 4 + len];
+        let frame = match decode_frame(body) {
+            Ok(f) => f,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
+        self.pos += 4 + len;
+        // reclaim the consumed prefix once it dominates the buffer
+        if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(frame))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -495,6 +589,17 @@ mod tests {
     }
 
     #[test]
+    fn reserved_id_status_roundtrips_on_the_wire() {
+        assert_eq!(Status::ReservedId.as_u8(), 6);
+        assert_eq!(Status::from_u8(6).unwrap(), Status::ReservedId);
+        assert_eq!(Status::ReservedId.name(), "reserved-id");
+        let f = Frame::Response(ResponseFrame::status_only(9, Status::ReservedId, 5));
+        let body = encode_frame(&f).unwrap();
+        assert_eq!(decode_frame(&body).unwrap(), f);
+        assert!(Status::from_u8(7).is_err(), "7 is still unassigned");
+    }
+
+    #[test]
     fn rejects_trailing_garbage() {
         let mut body = encode_frame(&Frame::Control(ControlOp::Ping)).unwrap();
         body.push(0);
@@ -564,7 +669,7 @@ mod tests {
                 let n = rng.below(32) as usize;
                 Frame::Response(ResponseFrame {
                     id: rng.next_u64(),
-                    status: Status::from_u8(rng.below(6) as u8).unwrap(),
+                    status: Status::from_u8(rng.below(7) as u8).unwrap(),
                     admitted_us: rng.next_u64(),
                     completed_us: rng.next_u64(),
                     scores: (0..n).map(|_| rng.next_u32() as i32).collect(),
@@ -631,6 +736,70 @@ mod tests {
                 assert_eq!(read_frame(&mut r).unwrap().unwrap(), *f);
             }
             assert!(read_frame(&mut r).unwrap().is_none());
+        });
+    }
+
+    #[test]
+    fn assembler_yields_nothing_until_a_frame_completes() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &sample_request()).unwrap();
+        let mut asm = FrameAssembler::new();
+        for k in 0..buf.len() - 1 {
+            asm.extend(&buf[k..k + 1]);
+            assert!(asm.next_frame().unwrap().is_none(), "frame incomplete at byte {k}");
+        }
+        asm.extend(&buf[buf.len() - 1..]);
+        assert_eq!(asm.next_frame().unwrap().unwrap(), sample_request());
+        assert!(asm.next_frame().unwrap().is_none());
+        assert_eq!(asm.pending(), 0);
+    }
+
+    #[test]
+    fn assembler_rejects_over_cap_length_and_stays_poisoned() {
+        let mut asm = FrameAssembler::new();
+        asm.extend(&(u32::MAX).to_le_bytes());
+        assert!(asm.next_frame().is_err(), "absurd length prefix must not buffer");
+        // sticky: even a valid frame afterwards cannot resynchronize
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Control(ControlOp::Ping)).unwrap();
+        asm.extend(&buf);
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn assembler_rejects_a_corrupt_body() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &sample_response()).unwrap();
+        buf[4] ^= 0xFF; // flip the first magic byte inside the body
+        let mut asm = FrameAssembler::new();
+        asm.extend(&buf);
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn prop_assembler_matches_read_frame_across_arbitrary_chunking() {
+        // random frames, random chunk boundaries: the incremental
+        // assembler must reproduce the exact frame sequence
+        crate::testkit::check(30, |rng| {
+            let frames: Vec<Frame> = (0..1 + rng.below(5)).map(|_| random_frame(rng)).collect();
+            let mut buf = Vec::new();
+            for f in &frames {
+                write_frame(&mut buf, f).unwrap();
+            }
+            let mut asm = FrameAssembler::new();
+            let mut out = Vec::new();
+            let mut off = 0usize;
+            while off < buf.len() {
+                let chunk = 1 + rng.below(64) as usize;
+                let end = (off + chunk).min(buf.len());
+                asm.extend(&buf[off..end]);
+                off = end;
+                while let Some(f) = asm.next_frame().unwrap() {
+                    out.push(f);
+                }
+            }
+            assert_eq!(out, frames);
+            assert_eq!(asm.pending(), 0);
         });
     }
 }

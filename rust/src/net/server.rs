@@ -1,36 +1,54 @@
 //! The TCP serving front-end: TBNP/1 connections bridged into the
 //! multi-model gateway [`Router`].
 //!
-//! Thread topology (all std, no async runtime):
+//! Thread topology (all std, no async runtime), with
+//! [`ServerConfig::shards`] ≥ 1 (the default):
 //!
 //! * an **accept loop** (non-blocking + stop-flag poll) hands each
-//!   connection a reader thread and a writer thread;
-//! * each **reader** decodes request frames and feeds the dispatcher,
-//!   enforcing connection-level backpressure: once
-//!   [`ServerConfig::max_inflight_per_conn`] requests are outstanding,
-//!   further frames are answered [`Status::Busy`] immediately instead of
-//!   growing an unbounded queue;
+//!   accepted stream to one of N **event-loop shards** round-robin —
+//!   no per-connection threads;
+//! * each **shard** owns a slab of non-blocking connections
+//!   ([`crate::net::evloop::ConnIo`]): readiness-polled reads feed an
+//!   incremental [`crate::net::proto::FrameAssembler`], complete request frames go to the
+//!   dispatcher, and responses are written backpressure-aware from a
+//!   bounded per-connection outbox with a partial-write cursor. A
+//!   connection over [`ServerConfig::max_inflight_per_conn`] is
+//!   answered [`Status::Busy`] on the spot; a connection whose outbox
+//!   is full *drops* further responses into the `dropped_responses`
+//!   ledger instead of blocking the shard — a stalled client can never
+//!   stall its shard siblings;
 //! * the **dispatcher** owns the [`Router`] — it admits at the injected
 //!   [`Clock`]'s time (deadline stamping), polls batches onto bounded
 //!   per-model channels, answers rejected/expired/unknown-model
-//!   requests, and routes completions back to each connection's writer
-//!   by request id;
+//!   requests, and routes completions back to the owning shard by
+//!   connection id;
 //! * one **worker thread per (model, worker)** owns its backend and a
 //!   reusable score buffer (`infer_batch_into`), exactly like
 //!   [`serve_gateway`](crate::coordinator::gateway::serve_gateway).
 //!
+//! `shards: 0` keeps the legacy two-threads-per-connection topology
+//! (one reader + one writer per accepted socket) — retained as the
+//! baseline the `conn_scale_*` BENCH rows compare against.
+//!
+//! Request id `u64::MAX` is reserved for pongs; a client request
+//! claiming it is rejected at admission with [`Status::ReservedId`]
+//! (see [`crate::net::proto::RESERVED_ID`]).
+//!
 //! Shutdown is a graceful drain: stop admitting, flush the queues,
 //! answer every request already on the books, then return a
-//! [`GatewayReport`] whose `conserved()` invariant still holds — pinned
-//! by the loopback tests here and in the integration suite.
+//! [`GatewayReport`] whose `conserved()` invariant still holds — now
+//! including the wire-layer response ledger
+//! (`settled_responses == answered_responses + dropped_responses`) —
+//! pinned by the loopback tests here and in the integration suite.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::collections::VecDeque;
 use std::sync::mpsc::{
-    channel, sync_channel, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -43,8 +61,10 @@ use crate::coordinator::gateway::{
 };
 use crate::coordinator::metrics::{Histogram, Meter};
 use crate::coordinator::pipeline::HistogramSummary;
+use crate::net::evloop::{ConnIo, Enqueue};
 use crate::net::proto::{
     encode_frame, read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status,
+    RESERVED_ID,
 };
 use crate::util::TinError;
 use crate::Result;
@@ -161,13 +181,29 @@ pub struct ServerConfig {
     /// Requests a single connection may have outstanding before the
     /// server answers [`Status::Busy`] instead of admitting more.
     pub max_inflight_per_conn: usize,
-    /// Dispatcher wake-up interval: an idle dispatcher still polls the
-    /// router this often so batching waits and deadline expiry fire
-    /// without traffic.
+    /// Dispatcher/shard wake-up interval: an idle dispatcher still
+    /// polls the router this often so batching waits and deadline
+    /// expiry fire without traffic; an idle shard sleeps this long
+    /// between sweeps.
     pub poll_interval_us: u64,
-    /// Concurrent-connection cap (two threads + a bounded response
-    /// queue per connection): accepts beyond it are closed immediately.
+    /// Concurrent-connection cap: accepts beyond it are closed
+    /// immediately.
     pub max_conns: usize,
+    /// Event-loop shard count. `0` keeps the legacy topology of two
+    /// threads per connection (the `conn_scale_*` BENCH baseline);
+    /// `N ≥ 1` serves every connection from N shard threads with
+    /// non-blocking reads and buffered partial writes.
+    pub shards: usize,
+    /// Per-connection outbound frame-queue cap in shard mode; once a
+    /// stalled client fills it, further responses are dropped into the
+    /// `dropped_responses` ledger. `0` = auto
+    /// (`4 * max_inflight_per_conn + 64`, matching the legacy writer
+    /// queue).
+    pub outbox_cap: usize,
+    /// Drain flush budget: after the dispatcher settles the ledger,
+    /// shards keep flushing outboxes at most this long before exiting
+    /// (bounds a drain against a peer that stopped reading).
+    pub drain_linger_ms: u64,
     /// Injected socket faults (tests and the fault-tolerance harness).
     pub fault: FaultPlan,
 }
@@ -178,8 +214,44 @@ impl Default for ServerConfig {
             max_inflight_per_conn: 64,
             poll_interval_us: 200,
             max_conns: 1024,
+            shards: 4,
+            outbox_cap: 0,
+            drain_linger_ms: 5000,
             fault: FaultPlan::none(),
         }
+    }
+}
+
+impl ServerConfig {
+    pub(crate) fn effective_outbox_cap(&self) -> usize {
+        if self.outbox_cap > 0 {
+            self.outbox_cap
+        } else {
+            self.max_inflight_per_conn.max(1) * 4 + 64
+        }
+    }
+}
+
+/// The wire-layer response ledger, shared by the dispatcher, shards,
+/// and per-connection threads. Every server-originated response counts
+/// `settled` exactly once at creation and then exactly one of
+/// `answered` (handed to a connection's outbox/writer queue, including
+/// stall-fault consumption) or `dropped` (outbox full, or the
+/// connection was already gone). [`GatewayReport::conserved`] checks
+/// `settled == answered + dropped`.
+#[derive(Debug, Default)]
+pub(crate) struct WireStats {
+    pub settled: AtomicU64,
+    pub answered: AtomicU64,
+    pub dropped: AtomicU64,
+}
+
+impl WireStats {
+    fn note(&self, outcome: Enqueue) {
+        match outcome {
+            Enqueue::Answered => self.answered.fetch_add(1, Ordering::Relaxed),
+            Enqueue::Dropped => self.dropped.fetch_add(1, Ordering::Relaxed),
+        };
     }
 }
 
@@ -198,7 +270,9 @@ impl DrainTrigger {
     /// and exit. Idempotent. The accept loop re-checks the flag after
     /// registering a freshly accepted connection, so a connection racing
     /// this call still gets its read half shut down by one side or the
-    /// other.
+    /// other. In shard mode the stream registry is empty — each shard
+    /// shuts its own connections' read halves on its next sweep after
+    /// seeing the stop flag.
     pub fn trigger(&self) {
         self.stop.drain();
         for (_, s) in self.conn_streams.lock().unwrap().iter() {
@@ -207,9 +281,17 @@ impl DrainTrigger {
     }
 }
 
-/// What a reader/worker tells the dispatcher.
+/// Where the dispatcher delivers a connection's responses: the legacy
+/// per-connection writer thread, or the event-loop shard that owns the
+/// connection (the conn id travels with each response).
+enum RespSink {
+    Thread(SyncSender<ResponseFrame>),
+    Shard(Sender<(u64, ResponseFrame)>),
+}
+
+/// What a reader/shard/worker tells the dispatcher.
 enum Event {
-    ConnOpen { conn: u64, writer: SyncSender<ResponseFrame>, inflight: Arc<AtomicU64> },
+    ConnOpen { conn: u64, sink: RespSink, inflight: Arc<AtomicU64> },
     ConnClosed { conn: u64 },
     Submit { conn: u64, frame: RequestFrame },
     Done { lane: usize, ok: Vec<(u64, Vec<i32>)>, failed: Vec<u64>, err: Option<TinError> },
@@ -217,11 +299,11 @@ enum Event {
 }
 
 /// Per-connection dispatcher-side state. `closed` marks a connection
-/// whose reader hit EOF; its writer stays registered until every
+/// whose reader hit EOF; its sink stays registered until every
 /// outstanding request is answered (a half-closing client that sent
 /// requests and then shut its write side is still owed its responses).
 struct ConnState {
-    writer: SyncSender<ResponseFrame>,
+    sink: RespSink,
     inflight: Arc<AtomicU64>,
     closed: bool,
 }
@@ -245,16 +327,34 @@ struct LaneTally {
 /// connection-level backpressure slot. A closed connection is dropped
 /// from the map once its last outstanding request is answered.
 ///
-/// `try_send`: the per-connection writer queue is bounded, so a client
-/// that stopped reading its socket can never stall the dispatcher or
-/// grow server memory — it just forfeits responses it isn't reading
-/// (accounting is unaffected; the ledger was settled above).
-fn finish(conns: &mut HashMap<u64, ConnState>, conn: u64, resp: ResponseFrame) {
+/// Never blocks: the legacy writer queue and the shard outboxes are
+/// bounded, so a client that stopped reading its socket can never stall
+/// the dispatcher or grow server memory — its responses land in the
+/// `dropped_responses` ledger instead of vanishing silently. The send
+/// happens *before* the in-flight decrement so a shard observing
+/// `inflight == 0` knows every response for the connection is already
+/// in its channel.
+fn finish(conns: &mut HashMap<u64, ConnState>, conn: u64, resp: ResponseFrame, wire: &WireStats) {
+    wire.settled.fetch_add(1, Ordering::Relaxed);
     let remove = if let Some(cs) = conns.get(&conn) {
+        match &cs.sink {
+            RespSink::Thread(tx) => wire.note(match tx.try_send(resp) {
+                Ok(()) => Enqueue::Answered,
+                Err(_) => Enqueue::Dropped,
+            }),
+            RespSink::Shard(tx) => {
+                // the owning shard decides answered vs dropped at
+                // outbox-enqueue time; only a dead shard drops here
+                if tx.send((conn, resp)).is_err() {
+                    wire.note(Enqueue::Dropped);
+                }
+            }
+        }
         let prev = cs.inflight.fetch_sub(1, Ordering::AcqRel);
-        let _ = cs.writer.try_send(resp);
         cs.closed && prev <= 1
     } else {
+        // connection already unregistered: the response is undeliverable
+        wire.note(Enqueue::Dropped);
         false
     };
     if remove {
@@ -268,6 +368,7 @@ fn answer_expired(
     meta: &mut HashMap<u64, Meta>,
     conns: &mut HashMap<u64, ConnState>,
     now: u64,
+    wire: &WireStats,
 ) {
     for (_li, rid) in router.take_expired() {
         if let Some(m) = meta.remove(&rid) {
@@ -281,6 +382,7 @@ fn answer_expired(
                     completed_us: now,
                     scores: Vec::new(),
                 },
+                wire,
             );
         }
     }
@@ -297,11 +399,19 @@ pub struct NetServer {
     accept_join: JoinHandle<()>,
     dispatcher_join: JoinHandle<GatewayReport>,
     worker_joins: Vec<JoinHandle<()>>,
-    /// Reader/writer threads of every accepted connection — joined on
-    /// [`NetServer::wait`] so drain-settled responses are actually
-    /// flushed to the wire before the process can exit.
+    /// Reader/writer threads of every accepted connection (legacy
+    /// `shards: 0` mode) — joined on [`NetServer::wait`] so
+    /// drain-settled responses are actually flushed to the wire before
+    /// the process can exit.
     conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    // kept alive so readers/workers can always enqueue events
+    /// Event-loop shard threads (`shards ≥ 1` mode); they exit once the
+    /// dispatcher settles the ledger and their outboxes flush (bounded
+    /// by [`ServerConfig::drain_linger_ms`]).
+    shard_joins: Vec<JoinHandle<()>>,
+    /// The wire-layer response ledger, folded into the report on
+    /// [`NetServer::wait`].
+    wire: Arc<WireStats>,
+    // kept alive so readers/shards/workers can always enqueue events
     _event_tx: Sender<Event>,
 }
 
@@ -335,6 +445,9 @@ impl NetServer {
         let conn_streams: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
         let conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let (event_tx, event_rx) = channel::<Event>();
+        let wire = Arc::new(WireStats::default());
+        let done = Arc::new(AtomicBool::new(false));
+        let live_conns = Arc::new(AtomicU64::new(0));
 
         // lane metadata captured before the backends move into threads
         let n_lanes = lanes.len();
@@ -417,6 +530,28 @@ impl NetServer {
             }
         }
 
+        // event-loop shards (cfg.shards >= 1): each owns a slab of
+        // non-blocking connections; the accept loop hands streams over
+        // round-robin instead of spawning per-connection threads
+        let nshards = cfg.shards;
+        let mut shard_joins = Vec::with_capacity(nshards);
+        let mut shard_conn_txs: Vec<Sender<(u64, TcpStream)>> = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let (conn_tx, conn_rx) = channel::<(u64, TcpStream)>();
+            shard_conn_txs.push(conn_tx);
+            let (resp_tx, resp_rx) = channel::<(u64, ResponseFrame)>();
+            let event_tx = event_tx.clone();
+            let stop = stop.clone();
+            let done = Arc::clone(&done);
+            let clock = Arc::clone(&clock);
+            let live_conns = Arc::clone(&live_conns);
+            let wire = Arc::clone(&wire);
+            let cfg = cfg;
+            shard_joins.push(std::thread::spawn(move || {
+                run_shard(conn_rx, resp_tx, resp_rx, event_tx, stop, done, clock, cfg, live_conns, wire)
+            }));
+        }
+
         // the accept loop: non-blocking so the stop flag is honored
         let accept_join = {
             let stop = stop.clone();
@@ -424,10 +559,11 @@ impl NetServer {
             let conn_joins = Arc::clone(&conn_joins);
             let event_tx = event_tx.clone();
             let clock = Arc::clone(&clock);
+            let wire = Arc::clone(&wire);
+            let live_conns = Arc::clone(&live_conns);
             let max_inflight = cfg.max_inflight_per_conn.max(1) as u64;
             let max_conns = cfg.max_conns.max(1);
             let fault = cfg.fault;
-            let live_conns = Arc::new(AtomicU64::new(0));
             let listener2 = listener;
             std::thread::spawn(move || {
                 let mut next_conn: u64 = 1;
@@ -444,14 +580,26 @@ impl NetServer {
                             }
                             if live_conns.load(Ordering::Acquire) >= max_conns as u64 {
                                 // connection-count backpressure: close
-                                // immediately rather than grow threads and
+                                // immediately rather than grow slabs and
                                 // queues without bound
                                 drop(stream);
                                 continue;
                             }
-                            let _ = stream.set_nodelay(true);
                             let conn = next_conn;
                             next_conn += 1;
+                            live_conns.fetch_add(1, Ordering::AcqRel);
+                            if nshards > 0 {
+                                // event-loop mode: hand the raw stream to
+                                // its shard; the shard sets non-blocking,
+                                // registers with the dispatcher, and honors
+                                // the drain flag on its next sweep
+                                let si = (conn as usize) % nshards;
+                                if shard_conn_txs[si].send((conn, stream)).is_err() {
+                                    live_conns.fetch_sub(1, Ordering::AcqRel);
+                                }
+                                continue;
+                            }
+                            let _ = stream.set_nodelay(true);
                             if let Ok(clone) = stream.try_clone() {
                                 conn_streams.lock().unwrap().push((conn, clone));
                             }
@@ -462,7 +610,6 @@ impl NetServer {
                             if stop.is_draining() {
                                 let _ = stream.shutdown(std::net::Shutdown::Read);
                             }
-                            live_conns.fetch_add(1, Ordering::AcqRel);
                             let handles = spawn_connection(
                                 conn,
                                 stream,
@@ -471,6 +618,7 @@ impl NetServer {
                                 max_inflight,
                                 Arc::clone(&live_conns),
                                 fault,
+                                Arc::clone(&wire),
                             );
                             // prune handles of connections that already
                             // ended, so a long-running server's join list
@@ -497,6 +645,8 @@ impl NetServer {
         let dispatcher_join = {
             let stop = stop.clone();
             let clock = Arc::clone(&clock);
+            let wire = Arc::clone(&wire);
+            let done = Arc::clone(&done);
             let trigger_d =
                 DrainTrigger { stop: stop.clone(), conn_streams: Arc::clone(&conn_streams) };
             let poll_iv = Duration::from_micros(cfg.poll_interval_us.max(50));
@@ -529,8 +679,8 @@ impl NetServer {
 
                 loop {
                     match event_rx.recv_timeout(poll_iv) {
-                        Ok(Event::ConnOpen { conn, writer, inflight }) => {
-                            conn_map.insert(conn, ConnState { writer, inflight, closed: false });
+                        Ok(Event::ConnOpen { conn, sink, inflight }) => {
+                            conn_map.insert(conn, ConnState { sink, inflight, closed: false });
                         }
                         Ok(Event::ConnClosed { conn }) => {
                             // the reader is done, but responses for this
@@ -564,6 +714,7 @@ impl NetServer {
                                     &mut conn_map,
                                     conn,
                                     ResponseFrame::status_only(frame.id, Status::Rejected, now),
+                                    &wire,
                                 );
                             } else {
                                 let rid = next_rid;
@@ -584,6 +735,7 @@ impl NetServer {
                                         &mut conn_map,
                                         conn,
                                         ResponseFrame::status_only(client_id, Status::Rejected, now),
+                                        &wire,
                                     ),
                                     Admit::UnknownModel => finish(
                                         &mut conn_map,
@@ -593,6 +745,7 @@ impl NetServer {
                                             Status::UnknownModel,
                                             now,
                                         ),
+                                        &wire,
                                     ),
                                 }
                             }
@@ -620,6 +773,7 @@ impl NetServer {
                                             completed_us: now,
                                             scores,
                                         },
+                                        &wire,
                                     );
                                 }
                             }
@@ -640,6 +794,7 @@ impl NetServer {
                                                 Status::Rejected,
                                                 now,
                                             ),
+                                            &wire,
                                         );
                                     }
                                 }
@@ -660,14 +815,14 @@ impl NetServer {
                             backlog[li].push_back(batch);
                         }
                     }
-                    answer_expired(&mut router, &mut meta, &mut conn_map, now);
+                    answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire);
 
                     if stop.is_draining() && !draining {
                         draining = true;
                         for (li, batch) in router.flush(now) {
                             backlog[li].push_back(batch);
                         }
-                        answer_expired(&mut router, &mut meta, &mut conn_map, now);
+                        answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire);
                     }
 
                     // feed the lanes without ever blocking: whatever a
@@ -702,6 +857,7 @@ impl NetServer {
                                                         Status::Rejected,
                                                         now,
                                                     ),
+                                                    &wire,
                                                 );
                                             }
                                         }
@@ -735,6 +891,7 @@ impl NetServer {
                             &mut conn_map,
                             conn,
                             ResponseFrame::status_only(frame.id, Status::Rejected, now),
+                            &wire,
                         );
                     }
                 }
@@ -773,7 +930,7 @@ impl NetServer {
                         scores: Vec::new(),
                     });
                 }
-                GatewayReport {
+                let report = GatewayReport {
                     models,
                     submitted,
                     completed,
@@ -783,7 +940,16 @@ impl NetServer {
                     latency: HistogramSummary::from(&fleet_latency),
                     throughput_per_s: completed as f64 / wall_s.max(1e-9),
                     wall_s,
-                }
+                    // the wire ledger is still moving (shards keep
+                    // flushing); wait() folds the final counters in
+                    settled_responses: 0,
+                    answered_responses: 0,
+                    dropped_responses: 0,
+                };
+                // every response is settled and in its sink's channel:
+                // release the shards (they drain, flush, and exit)
+                done.store(true, Ordering::SeqCst);
+                report
             })
         };
 
@@ -795,6 +961,8 @@ impl NetServer {
             dispatcher_join,
             worker_joins,
             conn_joins,
+            shard_joins,
+            wire,
             _event_tx: event_tx,
         })
     }
@@ -818,7 +986,7 @@ impl NetServer {
     /// Block until the server drains (a client control frame or a
     /// [`DrainTrigger`] elsewhere), then return the final fleet report.
     pub fn wait(self) -> Result<GatewayReport> {
-        let report = self
+        let mut report = self
             .dispatcher_join
             .join()
             .map_err(|_| TinError::Runtime("net dispatcher panicked".into()))?;
@@ -838,12 +1006,247 @@ impl NetServer {
         for h in conn_handles {
             let _ = h.join();
         }
+        // shard mode: the dispatcher's `done` flag released the shards;
+        // each flushes its outboxes (bounded by drain_linger_ms) and
+        // exits, after which the wire ledger is final
+        for h in self.shard_joins {
+            let _ = h.join();
+        }
+        report.settled_responses = self.wire.settled.load(Ordering::Acquire);
+        report.answered_responses = self.wire.answered.load(Ordering::Acquire);
+        report.dropped_responses = self.wire.dropped.load(Ordering::Acquire);
         Ok(report)
+    }
+}
+
+/// One shard-local connection: the I/O state plus the in-flight counter
+/// shared with the dispatcher and the bookkeeping for safe removal.
+struct ShardConn {
+    io: ConnIo,
+    inflight: Arc<AtomicU64>,
+    /// Consecutive sweeps the connection has been removable. Removal
+    /// needs two: `finish` sends a response *before* decrementing
+    /// `inflight`, so a sweep that observes `inflight == 0` still has
+    /// to collect the response channel once more before dropping the
+    /// slab entry (otherwise a settled response could race into a
+    /// just-removed connection and be miscounted).
+    doomed_sweeps: u8,
+    closed_sent: bool,
+}
+
+/// One event-loop shard: adopts connections from the accept loop,
+/// readiness-polls reads through the incremental frame assembler,
+/// forwards requests to the dispatcher, and flushes per-connection
+/// outboxes with partial-write resume. Exits once the dispatcher has
+/// settled the ledger (`done`) and every outbox is flushed or the
+/// drain linger expires.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    conn_rx: Receiver<(u64, TcpStream)>,
+    resp_tx: Sender<(u64, ResponseFrame)>,
+    resp_rx: Receiver<(u64, ResponseFrame)>,
+    event_tx: Sender<Event>,
+    stop: DrainHandle,
+    done: Arc<AtomicBool>,
+    clock: Arc<dyn Clock>,
+    cfg: ServerConfig,
+    live_conns: Arc<AtomicU64>,
+    wire: Arc<WireStats>,
+) {
+    let max_inflight = cfg.max_inflight_per_conn.max(1) as u64;
+    let cap = cfg.effective_outbox_cap();
+    let fault = cfg.fault;
+    let poll = Duration::from_micros(cfg.poll_interval_us.max(50));
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut conns: HashMap<u64, ShardConn> = HashMap::new();
+    let mut to_remove: Vec<u64> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+
+    // settle one shard-local response (busy / pong / reserved-id) that
+    // never touches the dispatcher
+    let settle_local = |io: &mut ConnIo, resp: &ResponseFrame, wire: &WireStats| {
+        wire.settled.fetch_add(1, Ordering::Relaxed);
+        wire.note(io.enqueue_response(resp, &fault, cap));
+    };
+
+    loop {
+        // observed BEFORE draining resp_rx: if `finishing` is true here,
+        // every response the dispatcher ever sent is already visible to
+        // this sweep's collection below
+        let finishing = done.load(Ordering::Acquire);
+        let mut progress = false;
+
+        // adopt freshly accepted connections
+        while let Ok((conn, stream)) = conn_rx.try_recv() {
+            progress = true;
+            let io = match ConnIo::new(stream) {
+                Ok(io) => io,
+                Err(_) => {
+                    live_conns.fetch_sub(1, Ordering::AcqRel);
+                    continue;
+                }
+            };
+            let inflight = Arc::new(AtomicU64::new(0));
+            if event_tx
+                .send(Event::ConnOpen {
+                    conn,
+                    sink: RespSink::Shard(resp_tx.clone()),
+                    inflight: Arc::clone(&inflight),
+                })
+                .is_err()
+            {
+                live_conns.fetch_sub(1, Ordering::AcqRel);
+                continue;
+            }
+            conns.insert(conn, ShardConn { io, inflight, doomed_sweeps: 0, closed_sent: false });
+        }
+
+        // collect responses the dispatcher settled for our connections
+        let mut got_resp = false;
+        while let Ok((conn, resp)) = resp_rx.try_recv() {
+            progress = true;
+            got_resp = true;
+            match conns.get_mut(&conn) {
+                Some(sc) => wire.note(sc.io.enqueue_response(&resp, &fault, cap)),
+                // the connection is gone; the response is undeliverable
+                None => wire.note(Enqueue::Dropped),
+            }
+        }
+
+        let draining = stop.is_draining();
+        for (&conn, sc) in conns.iter_mut() {
+            if draining && !sc.io.shut_for_drain {
+                // stop admitting: the peer sees EOF on our read side
+                // while buffered responses keep flushing
+                sc.io.shut_for_drain = true;
+                let _ = sc.io.stream.shutdown(std::net::Shutdown::Read);
+            }
+            if sc.io.fill(&mut scratch) {
+                progress = true;
+            }
+            // parse every frame the assembler completed
+            loop {
+                let frame = match sc.io.asm.next_frame() {
+                    Ok(Some(f)) => f,
+                    Ok(None) => break,
+                    Err(_) => {
+                        // malformed stream: no resynchronization point
+                        sc.io.kill();
+                        break;
+                    }
+                };
+                progress = true;
+                sc.io.frames_read += 1;
+                match frame {
+                    Frame::Request(req) => {
+                        if req.id == RESERVED_ID {
+                            // the pong id: reject at admission so pongs
+                            // stay unambiguous
+                            let resp = ResponseFrame::status_only(
+                                RESERVED_ID,
+                                Status::ReservedId,
+                                clock.now_us(),
+                            );
+                            settle_local(&mut sc.io, &resp, &wire);
+                        } else if sc.inflight.load(Ordering::Acquire) >= max_inflight {
+                            // connection-level backpressure: answer Busy
+                            // now, never grow an unbounded queue
+                            let resp = ResponseFrame::status_only(
+                                req.id,
+                                Status::Busy,
+                                clock.now_us(),
+                            );
+                            settle_local(&mut sc.io, &resp, &wire);
+                        } else {
+                            sc.inflight.fetch_add(1, Ordering::AcqRel);
+                            if event_tx.send(Event::Submit { conn, frame: req }).is_err() {
+                                sc.io.kill();
+                            }
+                        }
+                    }
+                    Frame::Control(ControlOp::Ping) => {
+                        let resp = ResponseFrame::status_only(
+                            RESERVED_ID,
+                            Status::Ok,
+                            clock.now_us(),
+                        );
+                        settle_local(&mut sc.io, &resp, &wire);
+                    }
+                    Frame::Control(ControlOp::Shutdown) => {
+                        let _ = event_tx.send(Event::Shutdown);
+                    }
+                    Frame::Response(_) => {
+                        sc.io.kill(); // protocol violation
+                    }
+                }
+                if sc.io.dead {
+                    break;
+                }
+                if let Some(k) = fault.drop_after_frames {
+                    if sc.io.frames_read >= k {
+                        // injected fault: hard-kill the socket mid-stream;
+                        // the dispatcher still settles everything admitted
+                        // (those responses land in the dropped ledger)
+                        sc.io.kill();
+                        break;
+                    }
+                }
+            }
+            if sc.io.flush_writes() {
+                progress = true;
+            }
+            if sc.io.read_closed && !sc.closed_sent {
+                sc.closed_sent = true;
+                let _ = event_tx.send(Event::ConnClosed { conn });
+            }
+            // removal: everything owed is answered (inflight == 0) and
+            // flushed (or the socket died) — held two sweeps, see
+            // ShardConn::doomed_sweeps
+            let removable = sc.inflight.load(Ordering::Acquire) == 0
+                && sc.closed_sent
+                && (sc.io.dead || (sc.io.read_closed && sc.io.outbox_is_empty()));
+            if removable {
+                sc.doomed_sweeps = sc.doomed_sweeps.saturating_add(1);
+                if sc.doomed_sweeps >= 2 {
+                    to_remove.push(conn);
+                }
+            } else {
+                sc.doomed_sweeps = 0;
+            }
+        }
+        for conn in to_remove.drain(..) {
+            conns.remove(&conn);
+            live_conns.fetch_sub(1, Ordering::AcqRel);
+            progress = true;
+        }
+
+        if finishing {
+            let deadline = *drain_deadline.get_or_insert_with(|| {
+                Instant::now() + Duration::from_millis(cfg.drain_linger_ms.max(1))
+            });
+            let flushed = conns.values().all(|sc| sc.io.outbox_is_empty());
+            if !got_resp && (flushed || Instant::now() >= deadline) {
+                break;
+            }
+        }
+        if !progress {
+            std::thread::sleep(poll);
+        }
+    }
+
+    // any response that never made it out of the channel (linger
+    // expiry racing a send) is still accounted
+    while resp_rx.try_recv().is_ok() {
+        wire.note(Enqueue::Dropped);
+    }
+    for (_, _sc) in conns.drain() {
+        live_conns.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
 /// Spawn the reader + writer threads for one accepted connection,
 /// returning their handles so the server can join them at drain time.
+#[allow(clippy::too_many_arguments)]
 fn spawn_connection(
     conn: u64,
     stream: TcpStream,
@@ -852,6 +1255,7 @@ fn spawn_connection(
     max_inflight: u64,
     live_conns: Arc<AtomicU64>,
     fault: FaultPlan,
+    wire: Arc<WireStats>,
 ) -> Vec<JoinHandle<()>> {
     let wstream = match stream.try_clone() {
         Ok(s) => s,
@@ -904,9 +1308,24 @@ fn spawn_connection(
 
     // reader: frames in, backpressure enforced here
     let reader_join = std::thread::spawn(move || {
+        // settle a reader-originated response (busy / pong /
+        // reserved-id): try_send because the response queue is bounded —
+        // a client flooding without reading forfeits these into the
+        // dropped ledger rather than growing server memory
+        let settle_to_writer = |resp: ResponseFrame| {
+            wire.settled.fetch_add(1, Ordering::Relaxed);
+            wire.note(match wtx.try_send(resp) {
+                Ok(()) => Enqueue::Answered,
+                Err(_) => Enqueue::Dropped,
+            });
+        };
         let inflight = Arc::new(AtomicU64::new(0));
         if event_tx
-            .send(Event::ConnOpen { conn, writer: wtx.clone(), inflight: Arc::clone(&inflight) })
+            .send(Event::ConnOpen {
+                conn,
+                sink: RespSink::Thread(wtx.clone()),
+                inflight: Arc::clone(&inflight),
+            })
             .is_err()
         {
             return;
@@ -921,12 +1340,17 @@ fn spawn_connection(
             };
             match frame {
                 Frame::Request(req) => {
-                    if inflight.load(Ordering::Acquire) >= max_inflight {
-                        // connection-level backpressure: answer Busy now.
-                        // try_send: if even the bounded response queue is
-                        // full the client is flooding without reading —
-                        // drop the Busy rather than queue unboundedly
-                        let _ = wtx.try_send(ResponseFrame::status_only(
+                    if req.id == RESERVED_ID {
+                        // the pong id: reject at admission so pongs stay
+                        // unambiguous
+                        settle_to_writer(ResponseFrame::status_only(
+                            RESERVED_ID,
+                            Status::ReservedId,
+                            clock.now_us(),
+                        ));
+                    } else if inflight.load(Ordering::Acquire) >= max_inflight {
+                        // connection-level backpressure: answer Busy now
+                        settle_to_writer(ResponseFrame::status_only(
                             req.id,
                             Status::Busy,
                             clock.now_us(),
@@ -939,9 +1363,9 @@ fn spawn_connection(
                     }
                 }
                 Frame::Control(ControlOp::Ping) => {
-                    // pong id u64::MAX: never collides with a request id
-                    let _ = wtx.try_send(ResponseFrame::status_only(
-                        u64::MAX,
+                    // pong id u64::MAX: reserved, never a request id
+                    settle_to_writer(ResponseFrame::status_only(
+                        RESERVED_ID,
                         Status::Ok,
                         clock.now_us(),
                     ));
@@ -1290,5 +1714,152 @@ mod tests {
             let report = srv.shutdown().unwrap();
             assert!(report.conserved(), "{fault:?} broke the ledger");
         }
+    }
+
+    #[test]
+    fn reserved_id_request_is_rejected_at_admission_with_typed_status() {
+        use crate::net::proto::{write_frame, RequestFrame, RESERVED_ID};
+        use crate::coordinator::batcher::Priority;
+        // both topologies must reject the pong id before it can ever
+        // reach the router (a response carrying it would be
+        // indistinguishable from a pong)
+        for shards in [0usize, 2] {
+            let cfg = ServerConfig { shards, ..ServerConfig::default() };
+            let srv = start_mock(vec![lane("m", 1, fast_policy())], cfg);
+            let mut s = std::net::TcpStream::connect(srv.local_addr()).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let req = |id: u64| {
+                Frame::Request(RequestFrame {
+                    id,
+                    model: "m".into(),
+                    priority: Priority::Normal,
+                    deadline_budget_us: None,
+                    image: vec![1; 8],
+                })
+            };
+            write_frame(&mut s, &req(RESERVED_ID)).unwrap();
+            let resp = match read_frame(&mut s).unwrap().unwrap() {
+                Frame::Response(r) => r,
+                other => panic!("expected a response, got {other:?}"),
+            };
+            assert_eq!(resp.status, Status::ReservedId, "shards={shards}");
+            assert_eq!(resp.id, RESERVED_ID);
+            assert!(resp.scores.is_empty());
+            // the connection survives and still serves real ids
+            write_frame(&mut s, &req(7)).unwrap();
+            let ok = match read_frame(&mut s).unwrap().unwrap() {
+                Frame::Response(r) => r,
+                other => panic!("expected a response, got {other:?}"),
+            };
+            assert_eq!(ok.status, Status::Ok);
+            assert_eq!(ok.id, 7);
+            let report = srv.shutdown().unwrap();
+            assert!(report.conserved(), "shards={shards}");
+            assert_eq!(
+                report.submitted, 1,
+                "the reserved-id frame never reaches the router (shards={shards})"
+            );
+            assert!(report.settled_responses >= 2);
+            assert_eq!(report.dropped_responses, 0);
+        }
+    }
+
+    #[test]
+    fn legacy_thread_per_conn_mode_still_serves_and_ledgers() {
+        let cfg = ServerConfig { shards: 0, ..ServerConfig::default() };
+        let srv = start_mock(vec![lane("m", 2, fast_policy())], cfg);
+        let mut c = Client::connect(srv.local_addr()).unwrap();
+        c.ping().unwrap();
+        let r = c.infer("m", &[1, 2, 3]).unwrap();
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.scores, vec![6]);
+        let report = srv.shutdown().unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.completed, 1);
+        assert!(report.settled_responses >= 2, "pong and the answer are wire-settled");
+        assert_eq!(report.answered_responses, report.settled_responses);
+    }
+
+    #[test]
+    fn many_connections_across_shards_conserve_and_score() {
+        let cfg = ServerConfig { shards: 3, ..ServerConfig::default() };
+        let srv = start_mock(vec![lane("m", 2, fast_policy())], cfg);
+        let addr = srv.local_addr();
+        let mut joins = Vec::new();
+        for t in 0..8i32 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let imgs: Vec<Vec<u8>> = (0..12).map(|i| vec![(t * 16 + i) as u8; 4]).collect();
+                let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+                let resps = c.infer_pipelined("m", &refs).unwrap();
+                for (i, r) in resps.iter().enumerate() {
+                    assert_eq!(r.status, Status::Ok);
+                    assert_eq!(r.scores, vec![(t * 16 + i as i32) * 4]);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let report = srv.shutdown().unwrap();
+        assert!(report.conserved());
+        assert_eq!(report.completed, 96);
+        assert_eq!(report.dropped_responses, 0, "healthy clients never lose responses");
+    }
+
+    #[test]
+    fn stalled_reader_drops_are_ledgered_and_never_block_shard_siblings() {
+        use crate::coordinator::batcher::Priority;
+        // ~16 KiB responses so a client that never reads overwhelms the
+        // kernel buffers quickly, then its capped outbox, then drops
+        struct Fat;
+        impl Backend for Fat {
+            fn infer_batch(&mut self, images: &[&[u8]]) -> Result<Vec<Vec<i32>>> {
+                Ok(images.iter().map(|_| vec![7; crate::net::proto::MAX_SCORES]).collect())
+            }
+            fn name(&self) -> &'static str {
+                "fat"
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+        }
+        let cfg = ServerConfig {
+            shards: 1, // both connections share one shard: isolation is the point
+            max_inflight_per_conn: 1024,
+            outbox_cap: 4,
+            drain_linger_ms: 200,
+            ..ServerConfig::default()
+        };
+        let lanes = vec![GatewayLane {
+            name: "fat".to_string(),
+            policy: BatchPolicy { max_batch: 8, max_wait_us: 100, queue_cap: 4096 },
+            workers: vec![Fat],
+        }];
+        let srv =
+            NetServer::start("127.0.0.1:0", lanes, cfg, Arc::new(MonotonicClock::new())).unwrap();
+        // connection A floods and never reads a byte back
+        let mut flood = Client::connect(srv.local_addr()).unwrap();
+        for _ in 0..2048 {
+            flood.send("fat", vec![1; 8], Priority::Normal, None).unwrap();
+        }
+        flood.flush().unwrap();
+        // connection B on the same shard must keep round-tripping
+        let mut c = Client::connect(srv.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..10 {
+            let r = c.infer("fat", &[i as u8; 8]).unwrap();
+            assert_eq!(r.status, Status::Ok, "shard sibling starved at round {i}");
+            assert_eq!(r.scores.len(), crate::net::proto::MAX_SCORES);
+        }
+        let report = srv.shutdown().unwrap();
+        assert!(
+            report.conserved(),
+            "ledger must balance with drops: {} settled != {} answered + {} dropped",
+            report.settled_responses,
+            report.answered_responses,
+            report.dropped_responses
+        );
+        assert!(report.dropped_responses > 0, "the flooded outbox must drop with a trace");
     }
 }
