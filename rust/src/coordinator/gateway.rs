@@ -11,8 +11,9 @@
 //! [`serve_gateway`] drives one sharded worker pool per model — the
 //! same scoped-thread, per-worker-scratch, zero-steady-state-allocation
 //! scheme as [`crate::coordinator::pipeline::serve_parallel`] — with
-//! per-model [`Histogram`]/[`Meter`] metrics merged into a fleet
-//! report.
+//! per-model latency recorded into named `e2e.*` series on a
+//! [`crate::obs::MetricsHub`] (injectable via [`GatewayConfig::hub`])
+//! and merged into a fleet report.
 //!
 //! Exact accounting is the contract: for every model and for the fleet,
 //! `submitted == completed + rejected + expired` once serving ends
@@ -266,7 +267,7 @@ pub struct GatewayLane<B> {
 }
 
 /// Gateway serving knobs.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Default)]
 pub struct GatewayConfig {
     /// Collect `(request id, scores)` pairs per model — the hook the
     /// differential tests use to pin gateway results against serial
@@ -276,6 +277,11 @@ pub struct GatewayConfig {
     /// the rest of the workload (never-admitted requests are simply not
     /// counted), flushes the queues, and the report stays conserved.
     pub drain: Option<DrainHandle>,
+    /// Optional telemetry hub: when set, the gateway registers its
+    /// per-model series (`model.*` counters, `e2e.*` histograms) there
+    /// so an embedding caller can snapshot them live; otherwise a
+    /// private hub backs the same series for the report alone.
+    pub hub: Option<Arc<crate::obs::MetricsHub>>,
 }
 
 /// Per-model serving results.
@@ -342,6 +348,12 @@ pub struct GatewayReport {
     /// a client flooded past its backpressure budget — accounted, never
     /// silent.
     pub dropped_responses: u64,
+    /// The worst-N end-to-end requests with full per-stage stamps
+    /// (admitted → enqueued → dispatched → infer → serialized → flushed),
+    /// slowest first — dumped from the network server's slow-request
+    /// ring at drain. Empty for in-process serving, which has no wire
+    /// stages to stamp.
+    pub slow_traces: Vec<crate::obs::StageTrace>,
 }
 
 impl GatewayReport {
@@ -421,11 +433,17 @@ pub fn serve_gateway<B: Backend + Send>(
         .collect();
     let mut router = Router::new(&routes);
 
+    // every latency sample lands in a named hub series (shared with the
+    // caller's hub when one is injected), not a per-worker Histogram —
+    // the report below reads the same cells a live snapshot would
+    let hub = cfg.hub.clone().unwrap_or_else(|| Arc::new(crate::obs::MetricsHub::new()));
+    let lane_e2e: Vec<crate::obs::HistHandle> =
+        lanes.iter().map(|l| hub.hist(&format!("e2e.{}", l.name))).collect();
+
     struct WorkerTally {
         completed: u64,
         batches: u64,
         batch_sizes: u64,
-        latency: Histogram,
         meter: Meter,
         scores: Vec<(u64, Vec<i32>)>,
     }
@@ -446,6 +464,7 @@ pub fn serve_gateway<B: Backend + Send>(
         let mut handles = Vec::new();
         for (li, lane) in lanes.iter_mut().enumerate() {
             for be in lane.workers.iter_mut() {
+                let e2e = lane_e2e[li].clone();
                 handles.push((
                     li,
                     s.spawn(move || -> Result<WorkerTally> {
@@ -453,7 +472,6 @@ pub fn serve_gateway<B: Backend + Send>(
                             completed: 0,
                             batches: 0,
                             batch_sizes: 0,
-                            latency: Histogram::new(),
                             meter: Meter::default(),
                             scores: Vec::new(),
                         };
@@ -474,7 +492,7 @@ pub fn serve_gateway<B: Backend + Send>(
                                 Ok(()) => {
                                     let t = t_start.elapsed().as_micros() as u64;
                                     for (req, sc) in batch.iter().zip(scores_buf.iter()) {
-                                        tally.latency.record(t.saturating_sub(req.enqueue_us));
+                                        e2e.record(t.saturating_sub(req.enqueue_us));
                                         tally.completed += 1;
                                         if collect_scores {
                                             tally.scores.push((req.id, sc.clone()));
@@ -526,7 +544,6 @@ pub fn serve_gateway<B: Backend + Send>(
         completed: u64,
         batches: u64,
         batch_sizes: u64,
-        latency: Histogram,
         meter: Meter,
         scores: Vec<(u64, Vec<i32>)>,
     }
@@ -535,7 +552,6 @@ pub fn serve_gateway<B: Backend + Send>(
             completed: 0,
             batches: 0,
             batch_sizes: 0,
-            latency: Histogram::new(),
             meter: Meter::default(),
             scores: Vec::new(),
         })
@@ -546,7 +562,6 @@ pub fn serve_gateway<B: Backend + Send>(
         agg.completed += t.completed;
         agg.batches += t.batches;
         agg.batch_sizes += t.batch_sizes;
-        agg.latency.merge(&t.latency);
         agg.meter.merge(&t.meter);
         agg.scores.extend(t.scores);
     }
@@ -565,7 +580,14 @@ pub fn serve_gateway<B: Backend + Send>(
         completed += c.completed;
         rejected += c.rejected;
         expired += c.expired;
-        fleet_latency.merge(&agg.latency);
+        // mirror the settled ledger into the hub's per-model counters so
+        // an injected hub can be snapshotted by the embedding caller
+        hub.counter(&format!("model.{}.submitted", lane.name)).add(c.submitted);
+        hub.counter(&format!("model.{}.completed", lane.name)).add(c.completed);
+        hub.counter(&format!("model.{}.rejected", lane.name)).add(c.rejected);
+        hub.counter(&format!("model.{}.expired", lane.name)).add(c.expired);
+        let lane_hist = lane_e2e[li].snap().to_histogram();
+        fleet_latency.merge(&lane_hist);
         models.push(ModelReport {
             name: lane.name.clone(),
             backend: lane.workers[0].name(),
@@ -580,7 +602,7 @@ pub fn serve_gateway<B: Backend + Send>(
             } else {
                 0.0
             },
-            latency: HistogramSummary::from(&agg.latency),
+            latency: HistogramSummary::from(&lane_hist),
             throughput_per_s: agg.meter.per_second(),
             scores: agg.scores,
         });
@@ -599,6 +621,7 @@ pub fn serve_gateway<B: Backend + Send>(
         settled_responses: 0,
         answered_responses: 0,
         dropped_responses: 0,
+        slow_traces: Vec::new(),
     };
     Ok((report, lanes))
 }
@@ -662,7 +685,12 @@ mod tests {
             },
         ];
         let (report, _lanes) =
-            serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
+            serve_gateway(
+                requests,
+                lanes,
+                &GatewayConfig { collect_scores: true, ..Default::default() },
+            )
+            .unwrap();
         assert!(report.conserved(), "accounting broken");
         assert_eq!(report.completed, 24);
         assert_eq!(report.rejected, 0);
@@ -825,7 +853,8 @@ mod tests {
         }];
         let handle = DrainHandle::new();
         assert!(!handle.is_draining());
-        let cfg = GatewayConfig { collect_scores: false, drain: Some(handle.clone()) };
+        let cfg =
+            GatewayConfig { collect_scores: false, drain: Some(handle.clone()), hub: None };
         let trigger = handle.clone();
         let t = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(10));
@@ -846,7 +875,7 @@ mod tests {
         let requests: Vec<GatewayRequest> =
             (0..16).map(|id| GatewayRequest::new(id, "m", vec![1; 8])).collect();
         let lanes = vec![mock_lane("m", 1, wide_policy())];
-        let cfg = GatewayConfig { collect_scores: false, drain: Some(handle) };
+        let cfg = GatewayConfig { collect_scores: false, drain: Some(handle), hub: None };
         let (report, _lanes) = serve_gateway(requests, lanes, &cfg).unwrap();
         assert_eq!(report.submitted, 0);
         assert_eq!(report.completed, 0);

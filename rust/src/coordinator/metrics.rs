@@ -47,30 +47,52 @@ impl Histogram {
         self.max_us = self.max_us.max(other.max_us);
     }
 
-    /// Median latency bucket bound (shorthand used by report rows).
+    /// Median latency estimate (shorthand used by report rows).
     pub fn p50_us(&self) -> u64 {
         self.quantile_us(0.5)
     }
 
-    /// Tail latency bucket bound (shorthand used by report rows).
+    /// Tail latency estimate (shorthand used by report rows).
     pub fn p99_us(&self) -> u64 {
         self.quantile_us(0.99)
     }
 
-    /// Upper bound of the bucket containing quantile `q` (0..1).
+    /// Quantile estimate for `q` (0..=1): linear interpolation inside
+    /// the winning log bucket, clamped to the observed maximum. The old
+    /// bucket-upper-bound answer overstated p99 by up to 2x; the clamp
+    /// only ever bites in the top non-empty bucket (every lower bucket's
+    /// upper bound is <= max_us), which keeps the result monotone in `q`
+    /// and makes `quantile_us(1.0) == max_us` exact.
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
         }
-        let target = (q * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        let target = ((q * self.count as f64).ceil().max(1.0) as u64).min(self.count);
+        let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lo = 1u64 << i;
+                let hi = if i == 29 { self.max_us.max(lo + 1) } else { 1u64 << (i + 1) };
+                let frac = (target - seen) as f64 / c as f64;
+                let v = (lo as f64 + frac * hi.saturating_sub(lo) as f64).round() as u64;
+                return v.min(self.max_us);
+            }
+            seen += c;
         }
         self.max_us
+    }
+
+    /// Raw log-bucket counts: bucket `i` holds samples in [2^i, 2^(i+1)) us.
+    pub fn buckets(&self) -> &[u64; 30] {
+        &self.buckets
+    }
+
+    /// Rebuild a histogram from raw parts (snapshot materialization).
+    pub fn from_parts(buckets: [u64; 30], count: u64, sum_us: u64, max_us: u64) -> Self {
+        Histogram { buckets, count, sum_us, max_us }
     }
 }
 
@@ -152,6 +174,27 @@ mod tests {
         assert_eq!(a.max_us, all.max_us);
         assert_eq!(a.quantile_us(0.5), all.quantile_us(0.5));
         assert_eq!(a.quantile_us(0.99), all.quantile_us(0.99));
+    }
+
+    #[test]
+    fn quantile_interpolates_within_the_winning_bucket() {
+        // 100 identical samples at 1000us live in bucket [512, 1024);
+        // the old code answered 1024 (bucket upper bound) for every q.
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(1000);
+        }
+        assert_eq!(h.quantile_us(1.0), 1000, "p100 is the exact max");
+        assert!(h.quantile_us(0.99) <= 1000, "p99 never exceeds the max sample");
+        let p50 = h.quantile_us(0.5);
+        assert!((512..=1000).contains(&p50), "p50 interpolates inside the bucket: {p50}");
+        assert!(h.p99_us() < 1024, "no more bucket-upper-bound overstatement");
+        // raw bucket exposition for snapshot rendering
+        assert_eq!(h.buckets()[9], 100);
+        assert_eq!(h.buckets().iter().sum::<u64>(), h.count);
+        // parts round-trip
+        let back = Histogram::from_parts(*h.buckets(), h.count, h.sum_us, h.max_us);
+        assert_eq!(back.quantile_us(0.99), h.quantile_us(0.99));
     }
 
     #[test]

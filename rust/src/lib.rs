@@ -23,6 +23,7 @@ pub mod coordinator;
 pub mod lve;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod power;
 pub mod resources;
 pub mod runtime;

@@ -9,6 +9,10 @@
 //!              --listen, the TBNP/1 TCP gateway front-end
 //!   bench-load open-/closed-loop load generation against a --listen
 //!              server; writes BENCH_serve.json
+//!   stats      fetch one live TBNS/1 telemetry snapshot from a serving
+//!              endpoint (server or router)
+//!   top        live terminal view over the stats frame (QPS, stage
+//!              p99s, replica health)
 //!   desktop    E7 desktop-baseline timing via PJRT
 //!   train      native BinaryConnect training -> TBW1 + cross-engine gate
 //!
@@ -63,7 +67,7 @@ fn usage() -> ! {
            bench-load --connect ADDR [--requests N] [--conns C]\n\
                    [--qps Q | --inflight K] [--mix name[:backend]=w,...]\n\
                    [--deadline-us D] [--low-frac F] [--seed S] [--reconnect]\n\
-                   [--bench-out path] [--shutdown]\n\
+                   [--bench-out path] [--shutdown] [--stage-rows]\n\
                    [--cluster --replicas A1,A2,... [--kill ADDR] [--kill-after-ms T]]\n\
                    [--conn-scale [--scales N1,N2,...] [--baseline ADDR2]]\n\
                    (load-generate against a --listen server: open loop at Q qps\n\
@@ -77,7 +81,17 @@ fn usage() -> ! {
                     --conn-scale parks N1,N2,... mostly-idle conns around the\n\
                     hot load and ping-sweeps them [--baseline: same against a\n\
                     serve --shards 0 endpoint] — conn_scale_* rows land in\n\
-                    BENCH_serve.json)\n\
+                    BENCH_serve.json; --stage-rows fetches the server's\n\
+                    telemetry snapshot after the run and adds per-stage\n\
+                    stage_{{queue,infer,outbox}}_<model>_{{p50,p99}}_us rows)\n\
+           stats   ADDR [--shutdown]  fetch one TBNS/1 telemetry snapshot\n\
+                   (counters, gauges, stage histograms, replica health on\n\
+                   a router) from a serve --listen or serve --router\n\
+                   endpoint; --shutdown then drains it on the same\n\
+                   connection, so the drain report equals the snapshot\n\
+           top     ADDR [--interval-ms M] [--iters N]  refreshing terminal\n\
+                   view over the stats frame: per-model QPS and verdict\n\
+                   rates, stage p99s, replica health (N=0 runs forever)\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
            train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
                    [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
@@ -230,6 +244,40 @@ fn real_main() -> tinbinn::Result<()> {
         }
         "info" => {
             println!("{}", tinbinn::nn::simd::describe_host());
+            println!("{}", tinbinn::obs::describe_build());
+        }
+        "stats" => {
+            let addr = args.command().unwrap_or_else(|| {
+                eprintln!("stats needs a server address (a serve --listen or --router endpoint)");
+                usage();
+            });
+            let shutdown = args.flag("--shutdown");
+            let mut c = tinbinn::net::Client::connect_with(
+                addr.as_str(),
+                tinbinn::net::NetTimeouts::all(std::time::Duration::from_secs(3)),
+            )?;
+            let text = c.stats()?;
+            // validate before printing: a truncated or corrupt snapshot
+            // must exit nonzero, not land in a CI artifact
+            tinbinn::obs::Snapshot::parse(&text)?;
+            print!("{text}");
+            if shutdown {
+                // snapshot-then-drain on one connection: neither frame
+                // touches the request ledger, so the drain report must
+                // equal the snapshot just printed (CI asserts exactly
+                // this in the stats-smoke lane)
+                c.shutdown_server()?;
+                eprintln!("sent shutdown control to {addr}");
+            }
+        }
+        "top" => {
+            let addr = args.command().unwrap_or_else(|| {
+                eprintln!("top needs a server address (a serve --listen or --router endpoint)");
+                usage();
+            });
+            let interval_ms = args.opt_u64_strict("--interval-ms", 1000).max(50);
+            let iters = args.opt_u64_strict("--iters", 0);
+            return top_cli(&addr, interval_ms, iters);
         }
         "sim" => {
             let task = args.opt("--task").unwrap_or_else(|| "10cat".into());
@@ -439,6 +487,36 @@ fn real_main() -> tinbinn::Result<()> {
         _ => usage(),
     }
     Ok(())
+}
+
+/// `tinbinn top ADDR` — a refreshing terminal view over the server's
+/// `Stats` frame: per-model request/verdict rates over the interval,
+/// per-stage p99s, live connections, and (against a router) per-replica
+/// health and probe RTT. `iters == 0` runs until the connection dies or
+/// the process is interrupted.
+fn top_cli(addr: &str, interval_ms: u64, iters: u64) -> tinbinn::Result<()> {
+    use std::io::Write;
+    use tinbinn::net::{Client, NetTimeouts};
+    use tinbinn::obs::{render_top, Snapshot};
+
+    let mut c = Client::connect_with(
+        addr,
+        NetTimeouts::all(std::time::Duration::from_secs(3)),
+    )?;
+    let mut prev = Snapshot::parse(&c.stats()?)?;
+    let mut shown = 0u64;
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+        let cur = Snapshot::parse(&c.stats()?)?;
+        // ANSI clear + home, like any terminal top
+        print!("\x1b[2J\x1b[H{}", render_top(&prev, &cur, interval_ms as f64 / 1e3));
+        std::io::stdout().flush()?;
+        prev = cur;
+        shown += 1;
+        if iters > 0 && shown >= iters {
+            return Ok(());
+        }
+    }
 }
 
 /// `tinbinn train` — BinaryConnect + QAT on the seeded synthetic task
@@ -756,6 +834,7 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     let seed = args.opt_u64_strict("--seed", 1);
     let bench_out = args.opt("--bench-out");
     let do_shutdown = args.flag("--shutdown");
+    let stage_rows = args.flag("--stage-rows");
     let reconnect = args.flag("--reconnect").then(ReconnectPolicy::default);
     let cluster = args.flag("--cluster");
     let replicas_spec = args.opt("--replicas");
@@ -862,8 +941,20 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         );
     }
 
+    let mut rows = report.bench_rows();
+    if stage_rows {
+        // one Stats frame from the server turns its per-stage
+        // histograms into stage_{queue,infer,outbox}_<model>_* rows
+        let mut c = Client::connect_with(
+            addr.as_str(),
+            NetTimeouts::all(std::time::Duration::from_secs(3)),
+        )?;
+        let snap = tinbinn::obs::Snapshot::parse(&c.stats()?)?;
+        let srows = tinbinn::net::stage_bench_rows(&snap);
+        println!("stage rows: {} across {} models", srows.len(), snap.model_names().len());
+        rows.extend(srows);
+    }
     if let Some(path) = bench_out {
-        let rows = report.bench_rows();
         tinbinn::report::bench::write_json(&path, "bench_load", &rows)?;
         println!("wrote {path} ({} rows)", rows.len());
     }
@@ -1104,8 +1195,8 @@ fn bench_cluster_cli(
     );
 
     let mut rows = b.bench_rows();
-    rows.push(row("cluster_1replica", a.ok as u32, 1.0 / a.throughput_per_s.max(1e-12)));
-    rows.push(row("cluster_nreplica", b.ok as u32, 1.0 / b.throughput_per_s.max(1e-12)));
+    tinbinn::report::bench::push_rate_row(&mut rows, "cluster_1replica", a.ok as u32, a.throughput_per_s);
+    tinbinn::report::bench::push_rate_row(&mut rows, "cluster_nreplica", b.ok as u32, b.throughput_per_s);
     rows.push(row("cluster_kill_p99_us", c.ok as u32, kill_p99 as f64));
     rows.push(row("cluster_kill_unanswered", 1, c.lost as f64));
     rows.push(row("cluster_kill_unavailable", 1, c.unavailable as f64));

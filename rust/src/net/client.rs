@@ -369,6 +369,29 @@ impl Client {
         }
     }
 
+    /// Fetch a live telemetry snapshot: a `Stats` control frame,
+    /// answered with a TBNS/1 text frame (parse it with
+    /// [`Snapshot::parse`](crate::obs::Snapshot::parse)). Safe with
+    /// requests in flight — data responses that arrive before the
+    /// snapshot are buffered for subsequent [`Client::recv`] calls,
+    /// same as [`Client::ping`].
+    pub fn stats(&mut self) -> Result<String> {
+        write_frame(&mut self.writer, &Frame::Control(ControlOp::Stats))?;
+        self.flush()?;
+        loop {
+            match read_frame(&mut self.reader)? {
+                Some(Frame::Stats(text)) => return Ok(text),
+                Some(Frame::Response(r)) => self.pending.push_back(r),
+                Some(_) => {
+                    return Err(TinError::Format(
+                        "server sent a non-stats, non-response frame".into(),
+                    ))
+                }
+                None => return Err(TinError::Io("connection closed by server".into())),
+            }
+        }
+    }
+
     /// Ask the server to drain gracefully and exit.
     pub fn shutdown_server(&mut self) -> Result<()> {
         write_frame(&mut self.writer, &Frame::Control(ControlOp::Shutdown))?;

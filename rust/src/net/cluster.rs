@@ -69,6 +69,7 @@ use crate::net::client::{Client, NetTimeouts};
 use crate::net::evloop::{ConnIo, Enqueue};
 use crate::net::proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status, RESERVED_ID};
 use crate::net::server::{Clock, FaultPlan};
+use crate::obs::{Counter, MetricsHub, ReplicaSnap, Snapshot};
 use crate::util::TinError;
 use crate::Result;
 
@@ -335,17 +336,36 @@ impl ClusterConfig {
 // ---------------------------------------------------------------------------
 // ledger
 
-#[derive(Default)]
+/// The router ledger. Each field is a named `cluster.*` series on the
+/// router's [`MetricsHub`], so a `Stats` frame and the shutdown
+/// [`ClusterReport`] read the *same* atomics — agreement between the
+/// two is by construction.
 struct ClusterStats {
-    received: AtomicU64,
-    forwarded: AtomicU64,
-    answered: AtomicU64,
-    retried_away: AtomicU64,
-    failed: AtomicU64,
-    probes_ok: AtomicU64,
-    probes_failed: AtomicU64,
-    rejected_reserved: AtomicU64,
-    dropped_responses: AtomicU64,
+    received: Counter,
+    forwarded: Counter,
+    answered: Counter,
+    retried_away: Counter,
+    failed: Counter,
+    probes_ok: Counter,
+    probes_failed: Counter,
+    rejected_reserved: Counter,
+    dropped_responses: Counter,
+}
+
+impl ClusterStats {
+    fn from_hub(hub: &MetricsHub) -> ClusterStats {
+        ClusterStats {
+            received: hub.counter("cluster.received"),
+            forwarded: hub.counter("cluster.forwarded"),
+            answered: hub.counter("cluster.answered"),
+            retried_away: hub.counter("cluster.retried_away"),
+            failed: hub.counter("cluster.failed"),
+            probes_ok: hub.counter("cluster.probes_ok"),
+            probes_failed: hub.counter("cluster.probes_failed"),
+            rejected_reserved: hub.counter("cluster.rejected_reserved"),
+            dropped_responses: hub.counter("cluster.dropped_responses"),
+        }
+    }
 }
 
 /// The router's conserved ledger. Per attempt:
@@ -416,6 +436,12 @@ struct Shared {
     ring: Ring,
     health: Mutex<Vec<ReplicaHealth>>,
     stats: ClusterStats,
+    /// Backs the `cluster.*` counters in `stats` and serves `Stats`
+    /// control frames.
+    hub: Arc<MetricsHub>,
+    /// Last successful probe round-trip per replica, µs (0 = no
+    /// successful probe yet).
+    probe_rtt_us: Vec<AtomicU64>,
     clock: Arc<dyn Clock>,
     stop: AtomicBool,
 }
@@ -432,18 +458,41 @@ impl Shared {
         };
         ClusterReport {
             replicas: self.cfg.replicas.len(),
-            received: self.stats.received.load(Ordering::Relaxed),
-            forwarded: self.stats.forwarded.load(Ordering::Relaxed),
-            answered: self.stats.answered.load(Ordering::Relaxed),
-            retried_away: self.stats.retried_away.load(Ordering::Relaxed),
-            failed: self.stats.failed.load(Ordering::Relaxed),
-            probes_ok: self.stats.probes_ok.load(Ordering::Relaxed),
-            probes_failed: self.stats.probes_failed.load(Ordering::Relaxed),
+            received: self.stats.received.get(),
+            forwarded: self.stats.forwarded.get(),
+            answered: self.stats.answered.get(),
+            retried_away: self.stats.retried_away.get(),
+            failed: self.stats.failed.get(),
+            probes_ok: self.stats.probes_ok.get(),
+            probes_failed: self.stats.probes_failed.get(),
             ejections,
             reinstatements,
-            rejected_reserved: self.stats.rejected_reserved.load(Ordering::Relaxed),
-            dropped_responses: self.stats.dropped_responses.load(Ordering::Relaxed),
+            rejected_reserved: self.stats.rejected_reserved.get(),
+            dropped_responses: self.stats.dropped_responses.get(),
         }
+    }
+
+    /// Point-in-time snapshot for a `Stats` frame: every `cluster.*`
+    /// series plus one `replica` row per configured replica, carrying
+    /// its health state, last probe RTT, and ejection history.
+    fn stats_snapshot(&self) -> Snapshot {
+        let mut snap = self.hub.snapshot();
+        let h = self.health.lock().unwrap();
+        for (i, addr) in self.cfg.replicas.iter().enumerate() {
+            let state = match h[i].state() {
+                HealthState::Up => "up",
+                HealthState::Ejected { .. } => "ejected",
+                HealthState::Probation => "probation",
+            };
+            snap.replicas.push(ReplicaSnap {
+                addr: addr.to_string(),
+                state: state.to_string(),
+                rtt_us: self.probe_rtt_us[i].load(Ordering::Relaxed),
+                ejections: h[i].ejections,
+                reinstatements: h[i].reinstatements,
+            });
+        }
+        snap
     }
 }
 
@@ -488,10 +537,15 @@ impl ClusterRouter {
         let n = cfg.replicas.len();
         let nshards = cfg.front_shards.max(1);
         let nfwd = cfg.forwarders.max(1);
+        let hub = Arc::new(MetricsHub::new());
+        let stats = ClusterStats::from_hub(&hub);
+        hub.counter("obs.stats_served"); // pre-register so every snapshot lists it
         let shared = Arc::new(Shared {
             ring,
             health: Mutex::new(vec![ReplicaHealth::new(); n]),
-            stats: ClusterStats::default(),
+            stats,
+            hub,
+            probe_rtt_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             clock,
             stop: AtomicBool::new(false),
             cfg,
@@ -630,14 +684,16 @@ fn probe_loop(shared: &Arc<Shared>) {
             if !wants {
                 continue;
             }
+            let t0 = shared.clock.now_us();
             let ok = probe_once(&shared.cfg.replicas[idx], &t);
             let now = shared.clock.now_us();
             let mut h = shared.health.lock().unwrap();
             if ok {
-                shared.stats.probes_ok.fetch_add(1, Ordering::Relaxed);
+                shared.stats.probes_ok.inc();
+                shared.probe_rtt_us[idx].store(now.saturating_sub(t0), Ordering::Relaxed);
                 h[idx].on_success();
             } else {
-                shared.stats.probes_failed.fetch_add(1, Ordering::Relaxed);
+                shared.stats.probes_failed.inc();
                 h[idx].on_failure(now, &shared.cfg.probe);
             }
         }
@@ -706,11 +762,11 @@ fn run_front_shard(
                 Some(fc) => {
                     fc.pending = fc.pending.saturating_sub(1);
                     if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
-                        shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                        shared.stats.dropped_responses.inc();
                     }
                 }
                 None => {
-                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.dropped_responses.inc();
                 }
             }
         }
@@ -740,7 +796,7 @@ fn run_front_shard(
                     }
                 }
             }
-            if fc.io.flush_writes() {
+            if fc.io.flush_writes(shared.clock.now_us()) {
                 progress = true;
             }
             if fc.pending == 0 {
@@ -781,32 +837,32 @@ fn handle_front_frame(
             if req.id == RESERVED_ID {
                 // the pong id: admitting it would make the response
                 // indistinguishable from a ping reply
-                shared.stats.rejected_reserved.fetch_add(1, Ordering::Relaxed);
+                shared.stats.rejected_reserved.inc();
                 let resp = ResponseFrame::status_only(
                     RESERVED_ID,
                     Status::ReservedId,
                     shared.clock.now_us(),
                 );
                 if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
-                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.dropped_responses.inc();
                 }
                 return;
             }
-            shared.stats.received.fetch_add(1, Ordering::Relaxed);
+            shared.stats.received.inc();
             fc.pending += 1;
             let job = FwdJob { conn, req, resp_tx: resp_tx.clone() };
             let fwd = (conn as usize) % fwd_txs.len();
             if let Err(mpsc::SendError(job)) = fwd_txs[fwd].send(job) {
                 // forwarders are gone (shutdown): answer terminally here
                 fc.pending -= 1;
-                shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                shared.stats.failed.inc();
                 let resp = ResponseFrame::status_only(
                     job.req.id,
                     Status::Unavailable,
                     shared.clock.now_us(),
                 );
                 if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
-                    shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.dropped_responses.inc();
                 }
             }
         }
@@ -814,7 +870,14 @@ fn handle_front_frame(
             let pong =
                 ResponseFrame::status_only(RESERVED_ID, Status::Ok, shared.clock.now_us());
             if fc.io.enqueue_response(&pong, &fault, cap) == Enqueue::Dropped {
-                shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+                shared.stats.dropped_responses.inc();
+            }
+        }
+        Frame::Control(ControlOp::Stats) => {
+            // a live snapshot; outside the request ledger by design —
+            // only `obs.stats_served` moves, never `received`
+            if fc.io.enqueue_stats(shared.stats_snapshot().render(), cap) {
+                shared.hub.counter("obs.stats_served").inc();
             }
         }
         Frame::Control(ControlOp::Shutdown) => {
@@ -827,8 +890,8 @@ fn handle_front_frame(
             }
             shared.stop.store(true, Ordering::SeqCst);
         }
-        // clients don't send responses
-        Frame::Response(_) => fc.io.kill(),
+        // clients don't send responses or snapshots
+        Frame::Response(_) | Frame::Stats(_) => fc.io.kill(),
     }
 }
 
@@ -842,7 +905,7 @@ fn forwarder_loop(rx: Receiver<FwdJob>, shared: Arc<Shared>) {
         if job.resp_tx.send((job.conn, resp)).is_err() {
             // the owning shard exited first; the answer was produced
             // and counted, only delivery is lost
-            shared.stats.dropped_responses.fetch_add(1, Ordering::Relaxed);
+            shared.stats.dropped_responses.inc();
         }
     }
 }
@@ -864,11 +927,11 @@ fn forward_with_retries(
         let live: Vec<usize> = owners.iter().copied().filter(|&i| shared.is_live(i)).collect();
         let pick = if live.is_empty() { &owners } else { &live };
         let idx = pick[(req.id as usize).wrapping_add(attempt as usize) % pick.len()];
-        shared.stats.forwarded.fetch_add(1, Ordering::Relaxed);
+        shared.stats.forwarded.inc();
         match try_one(shared, pool, idx, req) {
             Ok(mut resp) => {
                 shared.health.lock().unwrap()[idx].on_success();
-                shared.stats.answered.fetch_add(1, Ordering::Relaxed);
+                shared.stats.answered.inc();
                 resp.id = req.id;
                 return resp;
             }
@@ -877,10 +940,10 @@ fn forward_with_retries(
                 let now = shared.clock.now_us();
                 shared.health.lock().unwrap()[idx].on_failure(now, &shared.cfg.probe);
                 if attempt >= budget {
-                    shared.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.failed.inc();
                     return ResponseFrame::status_only(req.id, Status::Unavailable, now);
                 }
-                shared.stats.retried_away.fetch_add(1, Ordering::Relaxed);
+                shared.stats.retried_away.inc();
                 attempt += 1;
                 thread::sleep(Duration::from_micros(shared.cfg.retry.backoff_us(attempt)));
             }

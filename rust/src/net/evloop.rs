@@ -19,6 +19,7 @@ use std::net::TcpStream;
 
 use crate::net::proto::{encode_frame, Frame, FrameAssembler, ResponseFrame};
 use crate::net::server::FaultPlan;
+use crate::obs::FlushStamp;
 
 /// What happened to a response handed to [`ConnIo::enqueue_response`].
 /// `Answered` includes the stall fault (the response was consumed, the
@@ -30,13 +31,20 @@ pub(crate) enum Enqueue {
     Dropped,
 }
 
+/// One buffered outbound frame; the optional stamp completes the
+/// request's stage trace when the last byte is handed to the kernel.
+struct OutFrame {
+    bytes: Vec<u8>,
+    stamp: Option<FlushStamp>,
+}
+
 /// One event-loop connection: non-blocking stream, incremental frame
 /// reassembly, and a bounded outbound frame queue with partial-write
 /// resume.
 pub(crate) struct ConnIo {
     pub stream: TcpStream,
     pub asm: FrameAssembler,
-    outbox: VecDeque<Vec<u8>>,
+    outbox: VecDeque<OutFrame>,
     /// Bytes of `outbox.front()` already written to the socket.
     out_pos: usize,
     /// The peer's request stream is finished (EOF, read error, or drain
@@ -76,6 +84,21 @@ impl ConnIo {
         fault: &FaultPlan,
         cap: usize,
     ) -> Enqueue {
+        self.enqueue_response_stamped(resp, fault, cap, None)
+    }
+
+    /// Like [`Self::enqueue_response`], carrying an optional flush
+    /// stamp that fires when the frame's last byte reaches the kernel.
+    /// A dropped/stalled/killed response never fires its stamp — the
+    /// request was not flushed, so it must not enter the flush-stage
+    /// histograms or the slow ring.
+    pub fn enqueue_response_stamped(
+        &mut self,
+        resp: &ResponseFrame,
+        fault: &FaultPlan,
+        cap: usize,
+        stamp: Option<FlushStamp>,
+    ) -> Enqueue {
         if self.dead {
             return Enqueue::Dropped;
         }
@@ -96,8 +119,27 @@ impl ConnIo {
         if fault.corrupt_frames {
             bytes[4] ^= 0xFF; // first magic byte: the peer must reject it
         }
-        self.outbox.push_back(bytes);
+        self.outbox.push_back(OutFrame { bytes, stamp });
         Enqueue::Answered
+    }
+
+    /// Buffer a TBNS stats frame. Telemetry bypasses the fault plan
+    /// (diagnostics must stay honest during fault injection) but still
+    /// respects the outbox cap so a non-reading peer cannot grow server
+    /// memory by spamming stats requests. Returns false if dropped.
+    pub fn enqueue_stats(&mut self, text: String, cap: usize) -> bool {
+        if self.dead || self.outbox.len() >= cap.max(1) {
+            return false;
+        }
+        let body = match encode_frame(&Frame::Stats(text)) {
+            Ok(b) => b,
+            Err(_) => return false, // over-cap snapshot text
+        };
+        let mut bytes = Vec::with_capacity(4 + body.len());
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&body);
+        self.outbox.push_back(OutFrame { bytes, stamp: None });
+        true
     }
 
     /// Pull whatever the socket has ready into the assembler, bounded
@@ -136,13 +178,15 @@ impl ConnIo {
     /// front frame and resumes next sweep. Returns true on any
     /// progress. A write error kills the connection and discards the
     /// outbox — those responses were already accounted when enqueued.
-    pub fn flush_writes(&mut self) -> bool {
+    /// `now_us` (from the shard's injected clock) stamps the flush
+    /// stage of every frame whose last byte is handed to the kernel.
+    pub fn flush_writes(&mut self, now_us: u64) -> bool {
         if self.dead {
             return false;
         }
         let mut progress = false;
         while let Some(front) = self.outbox.front() {
-            match self.stream.write(&front[self.out_pos..]) {
+            match self.stream.write(&front.bytes[self.out_pos..]) {
                 Ok(0) => {
                     self.kill();
                     break;
@@ -150,8 +194,11 @@ impl ConnIo {
                 Ok(n) => {
                     progress = true;
                     self.out_pos += n;
-                    if self.out_pos == front.len() {
-                        self.outbox.pop_front();
+                    if self.out_pos == front.bytes.len() {
+                        let done = self.outbox.pop_front().expect("front exists");
+                        if let Some(stamp) = done.stamp {
+                            stamp.flushed(now_us);
+                        }
                         self.out_pos = 0;
                     }
                 }
@@ -233,7 +280,7 @@ mod tests {
         let fault = FaultPlan { corrupt_frames: true, ..FaultPlan::none() };
         assert_eq!(io.enqueue_response(&resp(1, 2), &fault, 8), Enqueue::Answered);
         while !io.outbox_is_empty() {
-            io.flush_writes();
+            io.flush_writes(0);
         }
         let mut r = std::io::BufReader::new(peer);
         assert!(read_frame(&mut r).is_err(), "corrupted magic must be rejected");
@@ -277,12 +324,70 @@ mod tests {
             got
         });
         while !io.outbox_is_empty() {
-            if !io.flush_writes() {
+            if !io.flush_writes(0) {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
             assert!(!io.dead, "flush must not error against a live peer");
         }
         let got = reader.join().unwrap();
         assert_eq!(got, (0..n).collect::<Vec<u64>>(), "frames arrive intact and in order");
+    }
+
+    #[test]
+    fn flush_stamp_fires_exactly_when_the_frame_finishes() {
+        use crate::obs::{FlushStamp, HistHandle, SlowRing, StageTrace};
+        use std::sync::Arc;
+        let (peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let hist = HistHandle::default();
+        let ring = Arc::new(SlowRing::new(4));
+        let trace = StageTrace {
+            model: "m".into(),
+            id: 9,
+            admitted_us: 100,
+            enqueued_us: 101,
+            dispatched_us: 110,
+            infer_start_us: 112,
+            infer_end_us: 150,
+            serialized_us: 155,
+            flushed_us: 0,
+        };
+        let stamp =
+            FlushStamp { trace, outbox_hist: hist.clone(), ring: Arc::clone(&ring) };
+        assert_eq!(
+            io.enqueue_response_stamped(&resp(9, 1), &FaultPlan::none(), 8, Some(stamp)),
+            Enqueue::Answered
+        );
+        assert_eq!(hist.snap().count, 0, "stamp must not fire before the flush");
+        while !io.outbox_is_empty() {
+            io.flush_writes(200);
+        }
+        assert_eq!(hist.snap().count, 1);
+        assert_eq!(hist.snap().sum_us, 45, "outbox stage = flushed(200) - serialized(155)");
+        let kept = ring.dump();
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].flushed_us, 200);
+        assert_eq!(kept[0].e2e_us(), 100);
+        assert!(kept[0].queue_us() + kept[0].infer_us() + kept[0].outbox_us() <= kept[0].e2e_us());
+        drop(peer);
+    }
+
+    #[test]
+    fn stats_frames_respect_the_cap_and_bypass_faults() {
+        let (peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        // fill the outbox to its cap with responses, then stats must drop
+        for i in 0..3u64 {
+            assert_eq!(io.enqueue_response(&resp(i, 1), &FaultPlan::none(), 3), Enqueue::Answered);
+        }
+        assert!(!io.enqueue_stats("tbns 1\nend tbns\n".into(), 3), "cap applies to stats too");
+        let (peer2, srv2) = pair();
+        drop(peer);
+        drop(peer2);
+        let mut io2 = ConnIo::new(srv2).unwrap();
+        // corrupt fault must not touch telemetry frames: enqueue succeeds
+        // and the bytes decode cleanly on the peer side
+        assert!(io2.enqueue_stats("tbns 1\nend tbns\n".into(), 8));
+        assert!(!io2.outbox_is_empty());
     }
 }

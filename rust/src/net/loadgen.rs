@@ -171,15 +171,11 @@ impl LoadReport {
     /// (queueing + inference), `net_load_*_us` from the client's clock
     /// (adds the wire and client-side queueing).
     pub fn bench_rows(&self) -> Vec<BenchResult> {
-        fn row(name: String, iters: u32, v: f64) -> BenchResult {
-            BenchResult { name, iters, mean_s: v, stddev_s: 0.0, min_s: v }
-        }
+        use crate::report::bench::{push_rate_row, value_row as row};
         let mut rows = Vec::new();
-        let spf = 1.0 / self.throughput_per_s.max(1e-12);
-        rows.push(row("net_load_fleet".into(), self.ok as u32, spf));
+        push_rate_row(&mut rows, "net_load_fleet", self.ok as u32, self.throughput_per_s);
         for m in &self.models {
-            let m_spf = 1.0 / m.throughput_per_s.max(1e-12);
-            rows.push(row(format!("net_load_{}", m.name), m.ok as u32, m_spf));
+            push_rate_row(&mut rows, format!("net_load_{}", m.name), m.ok as u32, m.throughput_per_s);
             rows.push(row(
                 format!("gateway_{}_p50_us", m.name),
                 m.ok as u32,
@@ -196,19 +192,46 @@ impl LoadReport {
                 m.latency.p99_us() as f64,
             ));
         }
-        rows.push(row("net_load_unanswered".into(), 1, self.lost as f64));
-        rows.push(row("net_load_unavailable".into(), 1, self.unavailable as f64));
-        rows.push(row("net_load_busy".into(), 1, self.busy as f64));
-        rows.push(row("net_load_rejected".into(), 1, self.rejected as f64));
-        rows.push(row("net_load_expired".into(), 1, self.expired as f64));
+        rows.push(row("net_load_unanswered", 1, self.lost as f64));
+        rows.push(row("net_load_unavailable", 1, self.unavailable as f64));
+        rows.push(row("net_load_busy", 1, self.busy as f64));
+        rows.push(row("net_load_rejected", 1, self.rejected as f64));
+        rows.push(row("net_load_expired", 1, self.expired as f64));
         // achieved-vs-target pacing rows (open loop only; both store
         // raw QPS in mean_s, like count rows store counts)
         if let Some(target) = self.target_qps {
-            rows.push(row("net_load_target_qps".into(), 1, target));
-            rows.push(row("net_load_achieved_qps".into(), 1, self.achieved_qps));
+            rows.push(row("net_load_target_qps", 1, target));
+            rows.push(row("net_load_achieved_qps", 1, self.achieved_qps));
         }
         rows
     }
+}
+
+/// Per-stage BENCH rows (`bench-load --stage-rows`) from a server's
+/// TBNS snapshot: `stage_{queue,infer,outbox}_{model}_{p50,p99}_us`
+/// per served model, raw microseconds in `mean_s` like the other
+/// `*_us` rows. Missing stage series (a snapshot from an old server)
+/// simply contribute no rows.
+pub fn stage_bench_rows(snap: &crate::obs::Snapshot) -> Vec<BenchResult> {
+    use crate::report::bench::value_row as row;
+    let mut rows = Vec::new();
+    for model in snap.model_names() {
+        for stage in ["queue", "infer", "outbox"] {
+            if let Some(h) = snap.hist(&format!("stage_{stage}.{model}")) {
+                rows.push(row(
+                    format!("stage_{stage}_{model}_p50_us"),
+                    h.count as u32,
+                    h.p50_us() as f64,
+                ));
+                rows.push(row(
+                    format!("stage_{stage}_{model}_p99_us"),
+                    h.count as u32,
+                    h.p99_us() as f64,
+                ));
+            }
+        }
+    }
+    rows
 }
 
 /// One request in a connection's precomputed schedule.
@@ -677,9 +700,7 @@ impl ConnScaleReport {
     /// hot throughput (seconds-per-frame), and the count rows the CI
     /// gate asserts zero on.
     pub fn bench_rows(&self) -> Vec<BenchResult> {
-        fn row(name: String, iters: u32, v: f64) -> BenchResult {
-            BenchResult { name, iters, mean_s: v, stddev_s: 0.0, min_s: v }
-        }
+        use crate::report::bench::{push_rate_row, value_row as row};
         let mut lat = Histogram::new();
         let mut gw = Histogram::new();
         for m in &self.hot.models {
@@ -687,15 +708,15 @@ impl ConnScaleReport {
             gw.merge(&m.gateway_latency);
         }
         let l = &self.label;
-        let spf = 1.0 / self.hot.throughput_per_s.max(1e-12);
-        vec![
+        let mut rows = vec![
             row(format!("{l}_p99_us"), self.hot.ok as u32, lat.p99_us() as f64),
             row(format!("{l}_gateway_p99_us"), self.hot.ok as u32, gw.p99_us() as f64),
-            row(format!("{l}_throughput"), self.hot.ok as u32, spf),
-            row(format!("{l}_conns"), 1, (self.idle_established + self.hot_conns) as f64),
-            row(format!("{l}_idle_unanswered"), 1, self.idle_unanswered as f64),
-            row(format!("{l}_unanswered"), 1, self.hot.lost as f64),
-        ]
+        ];
+        push_rate_row(&mut rows, format!("{l}_throughput"), self.hot.ok as u32, self.hot.throughput_per_s);
+        rows.push(row(format!("{l}_conns"), 1, (self.idle_established + self.hot_conns) as f64));
+        rows.push(row(format!("{l}_idle_unanswered"), 1, self.idle_unanswered as f64));
+        rows.push(row(format!("{l}_unanswered"), 1, self.hot.lost as f64));
+        rows
     }
 }
 
@@ -820,6 +841,49 @@ mod tests {
         assert!(p1.iter().zip(&p2).all(|(a, b)| a.mix_idx == b.mix_idx && a.low == b.low));
         let a_count = p1.iter().filter(|p| p.mix_idx == 0).count();
         assert!(a_count > 350, "weight 0.9 should dominate (got {a_count}/512)");
+    }
+
+    #[test]
+    fn zero_ok_runs_emit_zero_rows_with_degenerate_markers() {
+        // a run where nothing completed (all rejected): throughput is 0
+        // and the old 1/max(tp,1e-12) writer emitted a silent 1e12
+        // seconds-per-frame outlier
+        let report = LoadReport {
+            models: vec![ModelLoad {
+                name: "a".into(),
+                sent: 4,
+                ok: 0,
+                rejected: 4,
+                expired: 0,
+                unknown: 0,
+                busy: 0,
+                unavailable: 0,
+                latency: Histogram::new(),
+                gateway_latency: Histogram::new(),
+                throughput_per_s: 0.0,
+            }],
+            sent: 4,
+            ok: 0,
+            rejected: 4,
+            expired: 0,
+            unknown: 0,
+            busy: 0,
+            unavailable: 0,
+            lost: 0,
+            wall_s: 0.0,
+            throughput_per_s: 0.0,
+            target_qps: None,
+            achieved_qps: 0.0,
+        };
+        assert!(report.conserved());
+        let rows = report.bench_rows();
+        for r in &rows {
+            assert!(r.mean_s.is_finite(), "row {} holds a non-finite value", r.name);
+            assert!(r.mean_s < 1e9, "row {} holds a degenerate outlier: {}", r.name, r.mean_s);
+        }
+        assert!(rows.iter().any(|r| r.name == "net_load_fleet" && r.mean_s == 0.0));
+        assert!(rows.iter().any(|r| r.name == "net_load_fleet_degenerate" && r.mean_s == 1.0));
+        assert!(rows.iter().any(|r| r.name == "net_load_a_degenerate"));
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //!   ejection/probation, retry-on-another-replica with capped backoff,
 //!   and its own conserved ledger (`serve --router`).
 //! * [`client`] — a small blocking client with pipelining, typed
-//!   timeouts, and reconnect-with-backoff.
+//!   timeouts, reconnect-with-backoff, and live telemetry fetches
+//!   ([`Client::stats`] sends the `Stats` control frame; the TBNS/1
+//!   text reply parses back with
+//!   [`Snapshot::parse`](crate::obs::Snapshot::parse) — `tinbinn
+//!   stats` / `tinbinn top` ride on it).
 //! * [`loadgen`] — open-/closed-loop load generators producing the
 //!   per-model p50/p99/throughput rows in `BENCH_serve.json`, the
 //!   kill-a-replica cluster scenario (`bench-load --cluster`), and the
@@ -45,11 +49,12 @@ pub use cluster::{
     ClusterConfig, ClusterReport, ClusterRouter, ProbeConfig, ReplicaHealth, RetryConfig, Ring,
 };
 pub use loadgen::{
-    parse_mix, run_cluster_load, run_conn_scale, run_load, ClusterScenario, ConnScaleConfig,
-    ConnScaleReport, LoadConfig, LoadMode, LoadReport, MixEntry,
+    parse_mix, run_cluster_load, run_conn_scale, run_load, stage_bench_rows, ClusterScenario,
+    ConnScaleConfig, ConnScaleReport, LoadConfig, LoadMode, LoadReport, MixEntry,
 };
 pub use proto::{
-    ControlOp, Frame, FrameAssembler, RequestFrame, ResponseFrame, Status, RESERVED_ID,
+    ControlOp, Frame, FrameAssembler, RequestFrame, ResponseFrame, Status, MAX_STATS_TEXT,
+    RESERVED_ID,
 };
 pub use server::{
     Clock, DrainTrigger, FaultPlan, ManualClock, MonotonicClock, NetServer, ServerConfig,

@@ -12,7 +12,8 @@
 //! |          | name_len:u16 + name bytes, image_len:u32 + image bytes         |
 //! | response | id:u64, status:u8, admitted_us:u64, completed_us:u64,          |
 //! |          | n_scores:u16 + n_scores x i32                                  |
-//! | control  | op:u8 (0 = shutdown-and-drain, 1 = ping)                       |
+//! | control  | op:u8 (0 = shutdown-and-drain, 1 = ping, 2 = stats)            |
+//! | stats    | text_len:u32 + UTF-8 TBNS snapshot text (see `crate::obs`)     |
 //!
 //! Request id `u64::MAX` ([`RESERVED_ID`]) is **reserved**: the server
 //! answers ping control frames with a response carrying that id, so a
@@ -52,6 +53,9 @@ pub const MAX_BODY: usize = MAX_IMAGE + MAX_NAME + 64;
 /// The request id reserved for ping replies (pongs). Client requests
 /// carrying it are rejected at admission with [`Status::ReservedId`].
 pub const RESERVED_ID: u64 = u64::MAX;
+/// Largest TBNS snapshot text a stats frame may carry (256 KiB — far
+/// above any realistic hub, well under [`MAX_BODY`]).
+pub const MAX_STATS_TEXT: usize = 256 << 10;
 
 /// Terminal outcome of one request, as carried on the wire.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -158,6 +162,9 @@ pub enum ControlOp {
     /// Liveness probe; answered with an empty `Ok` response carrying
     /// id `u64::MAX` (never collides with a request id).
     Ping,
+    /// Telemetry snapshot request; answered with a [`Frame::Stats`]
+    /// frame carrying TBNS text. Never touches the request ledgers.
+    Stats,
 }
 
 impl ControlOp {
@@ -165,6 +172,7 @@ impl ControlOp {
         match self {
             ControlOp::Shutdown => 0,
             ControlOp::Ping => 1,
+            ControlOp::Stats => 2,
         }
     }
 
@@ -172,6 +180,7 @@ impl ControlOp {
         Ok(match v {
             0 => ControlOp::Shutdown,
             1 => ControlOp::Ping,
+            2 => ControlOp::Stats,
             other => return Err(TinError::Format(format!("bad control op {other}"))),
         })
     }
@@ -183,11 +192,15 @@ pub enum Frame {
     Request(RequestFrame),
     Response(ResponseFrame),
     Control(ControlOp),
+    /// A TBNS telemetry snapshot (reply to `Control(Stats)`); the text
+    /// is versioned and parsed by `crate::obs::Snapshot::parse`.
+    Stats(String),
 }
 
 const KIND_REQUEST: u8 = 1;
 const KIND_RESPONSE: u8 = 2;
 const KIND_CONTROL: u8 = 3;
+const KIND_STATS: u8 = 4;
 
 fn priority_to_u8(p: Priority) -> u8 {
     match p {
@@ -270,6 +283,17 @@ pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
         Frame::Control(op) => {
             out.push(KIND_CONTROL);
             out.push(op.as_u8());
+        }
+        Frame::Stats(text) => {
+            if text.len() > MAX_STATS_TEXT {
+                return Err(TinError::Format(format!(
+                    "stats text too large for the wire ({} > {MAX_STATS_TEXT})",
+                    text.len()
+                )));
+            }
+            out.push(KIND_STATS);
+            put_u32(&mut out, text.len() as u32);
+            out.extend_from_slice(text.as_bytes());
         }
     }
     Ok(out)
@@ -384,6 +408,17 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             Frame::Response(ResponseFrame { id, status, admitted_us, completed_us, scores })
         }
         KIND_CONTROL => Frame::Control(ControlOp::from_u8(c.u8()?)?),
+        KIND_STATS => {
+            let text_len = c.u32()? as usize;
+            if text_len > MAX_STATS_TEXT {
+                return Err(TinError::Format(format!("stats text length {text_len} over cap")));
+            }
+            let bytes = c.take(text_len)?;
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| TinError::Format("stats text is not UTF-8".into()))?
+                .to_string();
+            Frame::Stats(text)
+        }
         other => return Err(TinError::Format(format!("bad frame kind {other}"))),
     };
     if !c.done() {
@@ -537,10 +572,32 @@ mod tests {
 
     #[test]
     fn roundtrips_all_kinds() {
-        for f in [sample_request(), sample_response(), Frame::Control(ControlOp::Shutdown), Frame::Control(ControlOp::Ping)] {
+        for f in [
+            sample_request(),
+            sample_response(),
+            Frame::Control(ControlOp::Shutdown),
+            Frame::Control(ControlOp::Ping),
+            Frame::Control(ControlOp::Stats),
+            Frame::Stats("tbns 1\ncounter a 1\nend tbns\n".into()),
+            Frame::Stats(String::new()),
+        ] {
             let body = encode_frame(&f).unwrap();
             assert_eq!(decode_frame(&body).unwrap(), f);
         }
+    }
+
+    #[test]
+    fn stats_text_is_capped_and_must_be_utf8() {
+        let over = "x".repeat(MAX_STATS_TEXT + 1);
+        assert!(encode_frame(&Frame::Stats(over)).is_err(), "over-cap stats must not encode");
+        let exact = "y".repeat(MAX_STATS_TEXT);
+        let body = encode_frame(&Frame::Stats(exact.clone())).unwrap();
+        assert_eq!(decode_frame(&body).unwrap(), Frame::Stats(exact));
+        // corrupt the text bytes into invalid UTF-8
+        let mut body = encode_frame(&Frame::Stats("abcd".into())).unwrap();
+        let n = body.len();
+        body[n - 2] = 0xFF;
+        assert!(decode_frame(&body).is_err(), "non-UTF-8 stats text must not decode");
     }
 
     #[test]
@@ -640,7 +697,7 @@ mod tests {
     }
 
     fn random_frame(rng: &mut Rng64) -> Frame {
-        match rng.below(3) {
+        match rng.below(4) {
             0 => {
                 let name_len = rng.below(12) as usize;
                 let img_len = match rng.below(4) {
@@ -675,11 +732,22 @@ mod tests {
                     scores: (0..n).map(|_| rng.next_u32() as i32).collect(),
                 })
             }
-            _ => Frame::Control(if rng.below(2) == 0 {
-                ControlOp::Shutdown
-            } else {
-                ControlOp::Ping
+            2 => Frame::Control(match rng.below(3) {
+                0 => ControlOp::Shutdown,
+                1 => ControlOp::Ping,
+                _ => ControlOp::Stats,
             }),
+            _ => {
+                let n = rng.below(200) as usize;
+                let text: String = (0..n)
+                    .map(|_| {
+                        // printable ascii plus newlines, like real TBNS text
+                        let c = rng.below(96);
+                        if c == 95 { '\n' } else { (b' ' + c as u8) as char }
+                    })
+                    .collect();
+                Frame::Stats(text)
+            }
         }
     }
 

@@ -66,6 +66,7 @@ use crate::net::proto::{
     encode_frame, read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status,
     RESERVED_ID,
 };
+use crate::obs::{Counter, FlushStamp, HistHandle, MetricsHub, StageTrace};
 use crate::util::TinError;
 use crate::Result;
 
@@ -239,19 +240,61 @@ impl ServerConfig {
 /// stall-fault consumption) or `dropped` (outbox full, or the
 /// connection was already gone). [`GatewayReport::conserved`] checks
 /// `settled == answered + dropped`.
-#[derive(Debug, Default)]
+///
+/// The counters are the hub's own `wire.*` series, so a `Stats`
+/// snapshot and the drain report read the *same* atomics — equality
+/// between the two is by construction, not by parallel bookkeeping.
+#[derive(Clone, Debug, Default)]
 pub(crate) struct WireStats {
-    pub settled: AtomicU64,
-    pub answered: AtomicU64,
-    pub dropped: AtomicU64,
+    pub settled: Counter,
+    pub answered: Counter,
+    pub dropped: Counter,
 }
 
 impl WireStats {
+    pub(crate) fn from_hub(hub: &MetricsHub) -> Self {
+        WireStats {
+            settled: hub.counter("wire.settled"),
+            answered: hub.counter("wire.answered"),
+            dropped: hub.counter("wire.dropped"),
+        }
+    }
+
     fn note(&self, outcome: Enqueue) {
         match outcome {
-            Enqueue::Answered => self.answered.fetch_add(1, Ordering::Relaxed),
-            Enqueue::Dropped => self.dropped.fetch_add(1, Ordering::Relaxed),
+            Enqueue::Answered => self.answered.inc(),
+            Enqueue::Dropped => self.dropped.inc(),
         };
+    }
+}
+
+/// Telemetry handles for one model lane: the hub series every serving
+/// layer records into. The counters mirror the router's `LaneCounts` at
+/// the exact sites the router itself counts, so the `Stats` frame and
+/// the drain report agree per model.
+struct LaneObs {
+    submitted: Counter,
+    completed: Counter,
+    rejected: Counter,
+    expired: Counter,
+    e2e: HistHandle,
+    stage_queue: HistHandle,
+    stage_infer: HistHandle,
+    stage_outbox: HistHandle,
+}
+
+impl LaneObs {
+    fn register(hub: &MetricsHub, model: &str) -> LaneObs {
+        LaneObs {
+            submitted: hub.counter(&format!("model.{model}.submitted")),
+            completed: hub.counter(&format!("model.{model}.completed")),
+            rejected: hub.counter(&format!("model.{model}.rejected")),
+            expired: hub.counter(&format!("model.{model}.expired")),
+            e2e: hub.hist(&format!("e2e.{model}")),
+            stage_queue: hub.hist(&format!("stage_queue.{model}")),
+            stage_infer: hub.hist(&format!("stage_infer.{model}")),
+            stage_outbox: hub.hist(&format!("stage_outbox.{model}")),
+        }
     }
 }
 
@@ -281,20 +324,46 @@ impl DrainTrigger {
     }
 }
 
+/// One item on a legacy connection's writer queue: a response frame, or
+/// a TBNS stats frame answering a `Control(Stats)` on that connection.
+enum WriteItem {
+    Resp(ResponseFrame),
+    Stats(String),
+}
+
 /// Where the dispatcher delivers a connection's responses: the legacy
 /// per-connection writer thread, or the event-loop shard that owns the
-/// connection (the conn id travels with each response).
+/// connection (the conn id travels with each response, alongside the
+/// optional flush stamp that times the outbox stage).
 enum RespSink {
-    Thread(SyncSender<ResponseFrame>),
-    Shard(Sender<(u64, ResponseFrame)>),
+    Thread(SyncSender<WriteItem>),
+    Shard(Sender<(u64, ResponseFrame, Option<FlushStamp>)>),
 }
 
 /// What a reader/shard/worker tells the dispatcher.
 enum Event {
-    ConnOpen { conn: u64, sink: RespSink, inflight: Arc<AtomicU64> },
-    ConnClosed { conn: u64 },
-    Submit { conn: u64, frame: RequestFrame },
-    Done { lane: usize, ok: Vec<(u64, Vec<i32>)>, failed: Vec<u64>, err: Option<TinError> },
+    ConnOpen {
+        conn: u64,
+        sink: RespSink,
+        inflight: Arc<AtomicU64>,
+    },
+    ConnClosed {
+        conn: u64,
+    },
+    Submit {
+        conn: u64,
+        frame: RequestFrame,
+    },
+    Done {
+        lane: usize,
+        ok: Vec<(u64, Vec<i32>)>,
+        failed: Vec<u64>,
+        err: Option<TinError>,
+        /// Worker-side engine stamps around the batch call, from the
+        /// same injected clock as every other stage stamp.
+        infer_start_us: u64,
+        infer_end_us: u64,
+    },
     Shutdown,
 }
 
@@ -308,16 +377,23 @@ struct ConnState {
     closed: bool,
 }
 
-/// Routing metadata for one admitted request (router id -> origin).
+/// Routing metadata for one admitted request (router id -> origin),
+/// carrying the stage stamps accumulated before the worker takes over.
 struct Meta {
     conn: u64,
     client_id: u64,
+    lane: usize,
     admitted_us: u64,
+    /// When the request entered its lane's batch queue.
+    enqueued_us: u64,
+    /// When its batch was handed to a worker channel (0 until then).
+    dispatched_us: u64,
 }
 
-/// Per-lane serving tallies (latency recorded at completion time).
+/// Per-lane serving tallies. Latency lives in the hub's per-model
+/// `e2e.*` series (shared with the `Stats` frame); only the
+/// batching-shape accounting stays dispatcher-local.
 struct LaneTally {
-    latency: Histogram,
     meter: Meter,
     batches: u64,
     batch_sizes: u64,
@@ -334,18 +410,26 @@ struct LaneTally {
 /// happens *before* the in-flight decrement so a shard observing
 /// `inflight == 0` knows every response for the connection is already
 /// in its channel.
-fn finish(conns: &mut HashMap<u64, ConnState>, conn: u64, resp: ResponseFrame, wire: &WireStats) {
-    wire.settled.fetch_add(1, Ordering::Relaxed);
+fn finish(
+    conns: &mut HashMap<u64, ConnState>,
+    conn: u64,
+    resp: ResponseFrame,
+    wire: &WireStats,
+    stamp: Option<FlushStamp>,
+) {
+    wire.settled.inc();
     let remove = if let Some(cs) = conns.get(&conn) {
         match &cs.sink {
-            RespSink::Thread(tx) => wire.note(match tx.try_send(resp) {
+            // legacy writer threads don't time their socket flushes;
+            // the stamp is dropped (no outbox stage in shards:0 mode)
+            RespSink::Thread(tx) => wire.note(match tx.try_send(WriteItem::Resp(resp)) {
                 Ok(()) => Enqueue::Answered,
                 Err(_) => Enqueue::Dropped,
             }),
             RespSink::Shard(tx) => {
                 // the owning shard decides answered vs dropped at
                 // outbox-enqueue time; only a dead shard drops here
-                if tx.send((conn, resp)).is_err() {
+                if tx.send((conn, resp, stamp)).is_err() {
                     wire.note(Enqueue::Dropped);
                 }
             }
@@ -362,15 +446,19 @@ fn finish(conns: &mut HashMap<u64, ConnState>, conn: u64, resp: ResponseFrame, w
     }
 }
 
-/// Answer everything the router just expired.
+/// Answer everything the router just expired, mirroring each expiry
+/// into its lane's hub counter (the router counted it internally at the
+/// same poll/flush that produced this log entry).
 fn answer_expired(
     router: &mut Router,
     meta: &mut HashMap<u64, Meta>,
     conns: &mut HashMap<u64, ConnState>,
     now: u64,
     wire: &WireStats,
+    lane_obs: &[LaneObs],
 ) {
-    for (_li, rid) in router.take_expired() {
+    for (li, rid) in router.take_expired() {
+        lane_obs[li].expired.inc();
         if let Some(m) = meta.remove(&rid) {
             finish(
                 conns,
@@ -383,6 +471,7 @@ fn answer_expired(
                     scores: Vec::new(),
                 },
                 wire,
+                None,
             );
         }
     }
@@ -410,7 +499,10 @@ pub struct NetServer {
     shard_joins: Vec<JoinHandle<()>>,
     /// The wire-layer response ledger, folded into the report on
     /// [`NetServer::wait`].
-    wire: Arc<WireStats>,
+    wire: WireStats,
+    /// The telemetry hub every layer records into; `Stats` frames and
+    /// the drain report both read it.
+    hub: Arc<MetricsHub>,
     // kept alive so readers/shards/workers can always enqueue events
     _event_tx: Sender<Event>,
 }
@@ -445,7 +537,11 @@ impl NetServer {
         let conn_streams: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
         let conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let (event_tx, event_rx) = channel::<Event>();
-        let wire = Arc::new(WireStats::default());
+        let hub = Arc::new(MetricsHub::new());
+        let wire = WireStats::from_hub(&hub);
+        let unknown_model_ctr = hub.counter("gateway.unknown_model");
+        hub.counter("obs.stats_served");
+        hub.gauge("conns");
         let done = Arc::new(AtomicBool::new(false));
         let live_conns = Arc::new(AtomicU64::new(0));
 
@@ -469,6 +565,10 @@ impl NetServer {
         }
         let mut router = Router::new(&routes);
         router.log_expired = true;
+        let lane_obs: Vec<LaneObs> =
+            lane_names.iter().map(|n| LaneObs::register(&hub, n)).collect();
+        let lane_index: HashMap<String, usize> =
+            lane_names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
 
         // one bounded batch channel + one thread per (model, worker)
         let mut worker_joins = Vec::new();
@@ -480,6 +580,7 @@ impl NetServer {
             for mut be in lane.workers {
                 let rx = Arc::clone(&rx);
                 let etx = event_tx.clone();
+                let wclock = Arc::clone(&clock);
                 worker_joins.push(std::thread::spawn(move || {
                     let mut scores_buf: Vec<Vec<i32>> = Vec::new();
                     loop {
@@ -489,6 +590,9 @@ impl NetServer {
                             Err(_) => break, // dispatcher dropped the lane
                         };
                         let imgs: Vec<&[u8]> = batch.iter().map(|r| r.image.as_slice()).collect();
+                        // engine stamps bracket exactly the backend call,
+                        // so stage_infer is engine time and nothing else
+                        let infer_start_us = wclock.now_us();
                         // catch_unwind: a panicking backend must still
                         // settle its batch, or the drain's
                         // inflight-batch ledger never reaches zero and
@@ -496,6 +600,7 @@ impl NetServer {
                         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                             || be.infer_batch_into(&imgs, &mut scores_buf),
                         ));
+                        let infer_end_us = wclock.now_us();
                         let ev = match result {
                             Ok(Ok(())) => Event::Done {
                                 lane: li,
@@ -506,12 +611,16 @@ impl NetServer {
                                     .collect(),
                                 failed: Vec::new(),
                                 err: None,
+                                infer_start_us,
+                                infer_end_us,
                             },
                             Ok(Err(e)) => Event::Done {
                                 lane: li,
                                 ok: Vec::new(),
                                 failed: batch.iter().map(|r| r.id).collect(),
                                 err: Some(e),
+                                infer_start_us,
+                                infer_end_us,
                             },
                             Err(_) => Event::Done {
                                 lane: li,
@@ -520,6 +629,8 @@ impl NetServer {
                                 err: Some(TinError::Runtime(format!(
                                     "worker panicked on lane {li}"
                                 ))),
+                                infer_start_us,
+                                infer_end_us,
                             },
                         };
                         if etx.send(ev).is_err() {
@@ -539,16 +650,20 @@ impl NetServer {
         for _ in 0..nshards {
             let (conn_tx, conn_rx) = channel::<(u64, TcpStream)>();
             shard_conn_txs.push(conn_tx);
-            let (resp_tx, resp_rx) = channel::<(u64, ResponseFrame)>();
+            let (resp_tx, resp_rx) = channel::<(u64, ResponseFrame, Option<FlushStamp>)>();
             let event_tx = event_tx.clone();
             let stop = stop.clone();
             let done = Arc::clone(&done);
             let clock = Arc::clone(&clock);
             let live_conns = Arc::clone(&live_conns);
-            let wire = Arc::clone(&wire);
+            let wire = wire.clone();
+            let hub = Arc::clone(&hub);
             let cfg = cfg;
             shard_joins.push(std::thread::spawn(move || {
-                run_shard(conn_rx, resp_tx, resp_rx, event_tx, stop, done, clock, cfg, live_conns, wire)
+                run_shard(
+                    conn_rx, resp_tx, resp_rx, event_tx, stop, done, clock, cfg, live_conns,
+                    wire, hub,
+                )
             }));
         }
 
@@ -559,7 +674,8 @@ impl NetServer {
             let conn_joins = Arc::clone(&conn_joins);
             let event_tx = event_tx.clone();
             let clock = Arc::clone(&clock);
-            let wire = Arc::clone(&wire);
+            let wire = wire.clone();
+            let hub = Arc::clone(&hub);
             let live_conns = Arc::clone(&live_conns);
             let max_inflight = cfg.max_inflight_per_conn.max(1) as u64;
             let max_conns = cfg.max_conns.max(1);
@@ -618,7 +734,8 @@ impl NetServer {
                                 max_inflight,
                                 Arc::clone(&live_conns),
                                 fault,
-                                Arc::clone(&wire),
+                                wire.clone(),
+                                Arc::clone(&hub),
                             );
                             // prune handles of connections that already
                             // ended, so a long-running server's join list
@@ -645,7 +762,8 @@ impl NetServer {
         let dispatcher_join = {
             let stop = stop.clone();
             let clock = Arc::clone(&clock);
-            let wire = Arc::clone(&wire);
+            let wire = wire.clone();
+            let hub = Arc::clone(&hub);
             let done = Arc::clone(&done);
             let trigger_d =
                 DrainTrigger { stop: stop.clone(), conn_streams: Arc::clone(&conn_streams) };
@@ -669,7 +787,6 @@ impl NetServer {
                 let mut draining = false;
                 let mut tallies: Vec<LaneTally> = (0..n_lanes)
                     .map(|_| LaneTally {
-                        latency: Histogram::new(),
                         meter: Meter::default(),
                         batches: 0,
                         batch_sizes: 0,
@@ -715,11 +832,15 @@ impl NetServer {
                                     conn,
                                     ResponseFrame::status_only(frame.id, Status::Rejected, now),
                                     &wire,
+                                    None,
                                 );
                             } else {
                                 let rid = next_rid;
                                 next_rid += 1;
                                 let client_id = frame.id;
+                                // the model name moves into the gateway
+                                // request; resolve its lane index first
+                                let li = lane_index.get(&frame.model).copied();
                                 let gr = GatewayRequest {
                                     id: rid,
                                     model: frame.model,
@@ -729,40 +850,100 @@ impl NetServer {
                                 };
                                 match router.admit(gr, now) {
                                     Admit::Queued => {
-                                        meta.insert(rid, Meta { conn, client_id, admitted_us: now });
+                                        let li = li.expect("queued implies a known lane");
+                                        lane_obs[li].submitted.inc();
+                                        meta.insert(
+                                            rid,
+                                            Meta {
+                                                conn,
+                                                client_id,
+                                                lane: li,
+                                                admitted_us: now,
+                                                enqueued_us: now,
+                                                dispatched_us: 0,
+                                            },
+                                        );
                                     }
-                                    Admit::Rejected => finish(
-                                        &mut conn_map,
-                                        conn,
-                                        ResponseFrame::status_only(client_id, Status::Rejected, now),
-                                        &wire,
-                                    ),
-                                    Admit::UnknownModel => finish(
-                                        &mut conn_map,
-                                        conn,
-                                        ResponseFrame::status_only(
-                                            client_id,
-                                            Status::UnknownModel,
-                                            now,
-                                        ),
-                                        &wire,
-                                    ),
+                                    Admit::Rejected => {
+                                        // queue-cap shedding: the router
+                                        // counted submitted+rejected; mirror
+                                        // both so the per-model ledgers match
+                                        let li = li.expect("rejected implies a known lane");
+                                        lane_obs[li].submitted.inc();
+                                        lane_obs[li].rejected.inc();
+                                        finish(
+                                            &mut conn_map,
+                                            conn,
+                                            ResponseFrame::status_only(
+                                                client_id,
+                                                Status::Rejected,
+                                                now,
+                                            ),
+                                            &wire,
+                                            None,
+                                        )
+                                    }
+                                    Admit::UnknownModel => {
+                                        unknown_model_ctr.inc();
+                                        finish(
+                                            &mut conn_map,
+                                            conn,
+                                            ResponseFrame::status_only(
+                                                client_id,
+                                                Status::UnknownModel,
+                                                now,
+                                            ),
+                                            &wire,
+                                            None,
+                                        )
+                                    }
                                 }
                             }
                         }
-                        Ok(Event::Done { lane, ok, failed, err }) => {
+                        Ok(Event::Done {
+                            lane,
+                            ok,
+                            failed,
+                            err,
+                            infer_start_us,
+                            infer_end_us,
+                        }) => {
                             inflight_batches -= 1;
                             let now = clock.now_us();
                             let t = &mut tallies[lane];
+                            let lo = &lane_obs[lane];
                             if !ok.is_empty() {
                                 router.note_completed(lane, ok.len() as u64);
+                                lo.completed.add(ok.len() as u64);
                                 t.meter.record(now, ok.len() as u64);
                                 t.batches += 1;
                                 t.batch_sizes += ok.len() as u64;
                             }
                             for (rid, scores) in ok {
                                 if let Some(m) = meta.remove(&rid) {
-                                    t.latency.record(now.saturating_sub(m.admitted_us));
+                                    // `now` is when this event serialized the
+                                    // response; the flush stamp closes the
+                                    // trace when the shard writes it out
+                                    lo.e2e.record(now.saturating_sub(m.admitted_us));
+                                    lo.stage_queue
+                                        .record(infer_start_us.saturating_sub(m.enqueued_us));
+                                    lo.stage_infer
+                                        .record(infer_end_us.saturating_sub(infer_start_us));
+                                    let stamp = FlushStamp {
+                                        trace: StageTrace {
+                                            model: lane_names[lane].clone(),
+                                            id: m.client_id,
+                                            admitted_us: m.admitted_us,
+                                            enqueued_us: m.enqueued_us,
+                                            dispatched_us: m.dispatched_us,
+                                            infer_start_us,
+                                            infer_end_us,
+                                            serialized_us: now,
+                                            flushed_us: 0,
+                                        },
+                                        outbox_hist: lo.stage_outbox.clone(),
+                                        ring: Arc::clone(&hub.slow),
+                                    };
                                     finish(
                                         &mut conn_map,
                                         m.conn,
@@ -774,6 +955,7 @@ impl NetServer {
                                             scores,
                                         },
                                         &wire,
+                                        Some(stamp),
                                     );
                                 }
                             }
@@ -781,6 +963,7 @@ impl NetServer {
                                 // a worker refused the batch: every admitted
                                 // request must still leave the ledger once
                                 router.note_rejected(lane, failed.len() as u64);
+                                lo.rejected.add(failed.len() as u64);
                                 if let Some(e) = err {
                                     eprintln!("net: worker error on lane {lane}: {e}");
                                 }
@@ -795,6 +978,7 @@ impl NetServer {
                                                 now,
                                             ),
                                             &wire,
+                                            None,
                                         );
                                     }
                                 }
@@ -815,14 +999,14 @@ impl NetServer {
                             backlog[li].push_back(batch);
                         }
                     }
-                    answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire);
+                    answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire, &lane_obs);
 
                     if stop.is_draining() && !draining {
                         draining = true;
                         for (li, batch) in router.flush(now) {
                             backlog[li].push_back(batch);
                         }
-                        answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire);
+                        answer_expired(&mut router, &mut meta, &mut conn_map, now, &wire, &lane_obs);
                     }
 
                     // feed the lanes without ever blocking: whatever a
@@ -832,8 +1016,18 @@ impl NetServer {
                         loop {
                             let Some(tx) = &lane_txs[li] else { break };
                             let Some(batch) = backlog[li].pop_front() else { break };
+                            // ids survive the move of `batch` into the
+                            // channel so the dispatch stamp lands after
+                            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
                             match tx.try_send(batch) {
-                                Ok(()) => inflight_batches += 1,
+                                Ok(()) => {
+                                    inflight_batches += 1;
+                                    for id in ids {
+                                        if let Some(m) = meta.get_mut(&id) {
+                                            m.dispatched_us = now;
+                                        }
+                                    }
+                                }
                                 Err(TrySendError::Full(batch)) => {
                                     backlog[li].push_front(batch);
                                     break;
@@ -847,6 +1041,7 @@ impl NetServer {
                                     doomed.extend(backlog[li].drain(..));
                                     for b in doomed {
                                         router.note_rejected(li, b.len() as u64);
+                                        lane_obs[li].rejected.add(b.len() as u64);
                                         for r in &b {
                                             if let Some(m) = meta.remove(&r.id) {
                                                 finish(
@@ -858,6 +1053,7 @@ impl NetServer {
                                                         now,
                                                     ),
                                                     &wire,
+                                                    None,
                                                 );
                                             }
                                         }
@@ -892,6 +1088,7 @@ impl NetServer {
                             conn,
                             ResponseFrame::status_only(frame.id, Status::Rejected, now),
                             &wire,
+                            None,
                         );
                     }
                 }
@@ -910,7 +1107,10 @@ impl NetServer {
                     completed += c.completed;
                     rejected += c.rejected;
                     expired += c.expired;
-                    fleet_latency.merge(&t.latency);
+                    // the report's latency IS the hub's e2e series — one
+                    // set of cells feeds both the Stats frame and here
+                    let lane_hist = lane_obs[li].e2e.snap().to_histogram();
+                    fleet_latency.merge(&lane_hist);
                     models.push(ModelReport {
                         name: lane_names[li].clone(),
                         backend: lane_backends[li],
@@ -925,7 +1125,7 @@ impl NetServer {
                         } else {
                             0.0
                         },
-                        latency: HistogramSummary::from(&t.latency),
+                        latency: HistogramSummary::from(&lane_hist),
                         throughput_per_s: t.meter.per_second(),
                         scores: Vec::new(),
                     });
@@ -941,10 +1141,12 @@ impl NetServer {
                     throughput_per_s: completed as f64 / wall_s.max(1e-9),
                     wall_s,
                     // the wire ledger is still moving (shards keep
-                    // flushing); wait() folds the final counters in
+                    // flushing); wait() folds the final counters in,
+                    // along with the slow-ring traces
                     settled_responses: 0,
                     answered_responses: 0,
                     dropped_responses: 0,
+                    slow_traces: Vec::new(),
                 };
                 // every response is settled and in its sink's channel:
                 // release the shards (they drain, flush, and exit)
@@ -963,6 +1165,7 @@ impl NetServer {
             conn_joins,
             shard_joins,
             wire,
+            hub,
             _event_tx: event_tx,
         })
     }
@@ -1012,9 +1215,11 @@ impl NetServer {
         for h in self.shard_joins {
             let _ = h.join();
         }
-        report.settled_responses = self.wire.settled.load(Ordering::Acquire);
-        report.answered_responses = self.wire.answered.load(Ordering::Acquire);
-        report.dropped_responses = self.wire.dropped.load(Ordering::Acquire);
+        report.settled_responses = self.wire.settled.get();
+        report.answered_responses = self.wire.answered.get();
+        report.dropped_responses = self.wire.dropped.get();
+        // the shards flushed their last frames, so the slow ring is final
+        report.slow_traces = self.hub.slow.dump();
         Ok(report)
     }
 }
@@ -1043,20 +1248,23 @@ struct ShardConn {
 #[allow(clippy::too_many_arguments)]
 fn run_shard(
     conn_rx: Receiver<(u64, TcpStream)>,
-    resp_tx: Sender<(u64, ResponseFrame)>,
-    resp_rx: Receiver<(u64, ResponseFrame)>,
+    resp_tx: Sender<(u64, ResponseFrame, Option<FlushStamp>)>,
+    resp_rx: Receiver<(u64, ResponseFrame, Option<FlushStamp>)>,
     event_tx: Sender<Event>,
     stop: DrainHandle,
     done: Arc<AtomicBool>,
     clock: Arc<dyn Clock>,
     cfg: ServerConfig,
     live_conns: Arc<AtomicU64>,
-    wire: Arc<WireStats>,
+    wire: WireStats,
+    hub: Arc<MetricsHub>,
 ) {
     let max_inflight = cfg.max_inflight_per_conn.max(1) as u64;
     let cap = cfg.effective_outbox_cap();
     let fault = cfg.fault;
     let poll = Duration::from_micros(cfg.poll_interval_us.max(50));
+    let stats_served = hub.counter("obs.stats_served");
+    let conns_gauge = hub.gauge("conns");
     let mut scratch = vec![0u8; 64 * 1024];
     let mut conns: HashMap<u64, ShardConn> = HashMap::new();
     let mut to_remove: Vec<u64> = Vec::new();
@@ -1065,7 +1273,7 @@ fn run_shard(
     // settle one shard-local response (busy / pong / reserved-id) that
     // never touches the dispatcher
     let settle_local = |io: &mut ConnIo, resp: &ResponseFrame, wire: &WireStats| {
-        wire.settled.fetch_add(1, Ordering::Relaxed);
+        wire.settled.inc();
         wire.note(io.enqueue_response(resp, &fault, cap));
     };
 
@@ -1103,11 +1311,13 @@ fn run_shard(
 
         // collect responses the dispatcher settled for our connections
         let mut got_resp = false;
-        while let Ok((conn, resp)) = resp_rx.try_recv() {
+        while let Ok((conn, resp, stamp)) = resp_rx.try_recv() {
             progress = true;
             got_resp = true;
             match conns.get_mut(&conn) {
-                Some(sc) => wire.note(sc.io.enqueue_response(&resp, &fault, cap)),
+                Some(sc) => {
+                    wire.note(sc.io.enqueue_response_stamped(&resp, &fault, cap, stamp))
+                }
                 // the connection is gone; the response is undeliverable
                 None => wire.note(Enqueue::Dropped),
             }
@@ -1175,7 +1385,16 @@ fn run_shard(
                     Frame::Control(ControlOp::Shutdown) => {
                         let _ = event_tx.send(Event::Shutdown);
                     }
-                    Frame::Response(_) => {
+                    Frame::Control(ControlOp::Stats) => {
+                        // answer with a point-in-time TBNS snapshot; a
+                        // stats reply is telemetry, not a response — it
+                        // never touches the settled/answered ledger
+                        conns_gauge.set(live_conns.load(Ordering::Acquire) as i64);
+                        if sc.io.enqueue_stats(hub.snapshot().render(), cap) {
+                            stats_served.inc();
+                        }
+                    }
+                    Frame::Response(_) | Frame::Stats(_) => {
                         sc.io.kill(); // protocol violation
                     }
                 }
@@ -1192,7 +1411,7 @@ fn run_shard(
                     }
                 }
             }
-            if sc.io.flush_writes() {
+            if sc.io.flush_writes(clock.now_us()) {
                 progress = true;
             }
             if sc.io.read_closed && !sc.closed_sent {
@@ -1255,7 +1474,8 @@ fn spawn_connection(
     max_inflight: u64,
     live_conns: Arc<AtomicU64>,
     fault: FaultPlan,
-    wire: Arc<WireStats>,
+    wire: WireStats,
+    hub: Arc<MetricsHub>,
 ) -> Vec<JoinHandle<()>> {
     let wstream = match stream.try_clone() {
         Ok(s) => s,
@@ -1273,24 +1493,34 @@ fn spawn_connection(
     // fills it, small enough that a client which stops reading its
     // socket cannot grow server memory — see `finish`
     let writer_cap = (max_inflight as usize).saturating_mul(4) + 64;
-    let (wtx, wrx) = sync_channel::<ResponseFrame>(writer_cap);
+    let (wtx, wrx) = sync_channel::<WriteItem>(writer_cap);
 
     // writer: drains the response channel, coalescing flushes
     let writer_join = std::thread::spawn(move || {
         let mut w = BufWriter::new(wstream);
-        let mut pending: Option<ResponseFrame> = None;
+        let mut pending: Option<WriteItem> = None;
         loop {
-            let resp = match pending.take() {
+            let item = match pending.take() {
                 Some(r) => r,
                 None => match wrx.recv() {
                     Ok(r) => r,
                     Err(_) => break,
                 },
             };
-            // injected stall: consume and discard, the peer sees silence
-            if !fault.stall_responses
-                && write_response_frame(&mut w, &resp, fault.corrupt_frames).is_err()
-            {
+            let write_failed = match item {
+                // injected stall: consume and discard, the peer sees
+                // silence (stats frames stall too — the fault models a
+                // wedged socket, which starves every frame kind)
+                WriteItem::Resp(resp) => {
+                    !fault.stall_responses
+                        && write_response_frame(&mut w, &resp, fault.corrupt_frames).is_err()
+                }
+                WriteItem::Stats(text) => {
+                    !fault.stall_responses
+                        && write_frame(&mut w, &Frame::Stats(text)).is_err()
+                }
+            };
+            if write_failed {
                 break;
             }
             match wrx.try_recv() {
@@ -1313,12 +1543,14 @@ fn spawn_connection(
         // a client flooding without reading forfeits these into the
         // dropped ledger rather than growing server memory
         let settle_to_writer = |resp: ResponseFrame| {
-            wire.settled.fetch_add(1, Ordering::Relaxed);
-            wire.note(match wtx.try_send(resp) {
+            wire.settled.inc();
+            wire.note(match wtx.try_send(WriteItem::Resp(resp)) {
                 Ok(()) => Enqueue::Answered,
                 Err(_) => Enqueue::Dropped,
             });
         };
+        let stats_served = hub.counter("obs.stats_served");
+        let conns_gauge = hub.gauge("conns");
         let inflight = Arc::new(AtomicU64::new(0));
         if event_tx
             .send(Event::ConnOpen {
@@ -1373,7 +1605,15 @@ fn spawn_connection(
                 Frame::Control(ControlOp::Shutdown) => {
                     let _ = event_tx.send(Event::Shutdown);
                 }
-                Frame::Response(_) => break, // protocol violation
+                Frame::Control(ControlOp::Stats) => {
+                    // stats replies are telemetry, never part of the
+                    // settled/answered response ledger
+                    conns_gauge.set(live_conns.load(Ordering::Acquire) as i64);
+                    if wtx.try_send(WriteItem::Stats(hub.snapshot().render())).is_ok() {
+                        stats_served.inc();
+                    }
+                }
+                Frame::Response(_) | Frame::Stats(_) => break, // protocol violation
             }
             frames_read += 1;
             if let Some(k) = fault.drop_after_frames {

@@ -1,0 +1,928 @@
+//! obs — the live telemetry plane.
+//!
+//! A [`MetricsHub`] is a registry of named, typed series — monotone
+//! [`Counter`]s, signed [`Gauge`]s, and lock-free log-bucketed
+//! [`HistHandle`] histograms — that the serving layers (gateway lanes,
+//! event-loop shards, the cluster router) register once at startup and
+//! then record into without locks or allocation. A point-in-time
+//! [`Snapshot`] can be taken at any moment without disturbing serving;
+//! snapshots subtract ([`Snapshot::delta`]) so that for any interleaving
+//! of recordings and snapshots, the final snapshot equals the sum of the
+//! deltas on every series (the conservation property the proptests pin).
+//!
+//! Snapshots render to and parse from **TBNS/1**, a versioned
+//! line-oriented text format carried by the TBNP/1 `Stats` frame:
+//!
+//! ```text
+//! tbns 1
+//! counter model.mnist.submitted 128
+//! gauge conns 3
+//! hist e2e.mnist count 128 sum_us 51200 max_us 900 p50_us 310 p99_us 840 buckets 0,0,...
+//! replica 127.0.0.1:9100 state up rtt_us 180 ejections 0 reinstatements 0
+//! end tbns
+//! ```
+//!
+//! Versioning rule: parsers reject a major version they don't know and
+//! skip line keywords they don't know, so fields can be added without a
+//! version bump; removing or re-typing a field bumps the major.
+//!
+//! Per-request **stage stamps** (admitted → enqueued → dispatched →
+//! infer start/end → serialized → flushed, all from the injected
+//! `Clock`) land in [`StageTrace`]; the worst-N traces by end-to-end
+//! latency are kept in a [`SlowRing`] and dumped at drain. Stage
+//! histograms record `stage_queue = infer_start − enqueued`,
+//! `stage_infer = infer_end − infer_start`, and
+//! `stage_outbox = flushed − serialized`, so by construction
+//! `stage_queue + stage_infer + stage_outbox ≤ e2e` for every trace.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Histogram;
+use crate::{Result, TinError};
+
+/// TBNS text-snapshot major version carried on the wire.
+pub const TBNS_VERSION: u32 = 1;
+/// Worst-N slow-request ring capacity used by the servers.
+pub const SLOW_RING_CAP: usize = 32;
+/// Series registered per served model: 4 counters
+/// (submitted/completed/rejected/expired) + 4 histograms
+/// (e2e, stage_queue, stage_infer, stage_outbox).
+pub const SERIES_PER_MODEL: usize = 8;
+/// Global (non-per-model) series on a standalone server: wire
+/// settled/answered/dropped + unknown_model + stats_served counters
+/// and the live connection gauge.
+pub const GLOBAL_SERIES: usize = 6;
+
+/// One line for `tinbinn info`: pins the telemetry build so bug
+/// reports carry the exact observability configuration.
+pub fn describe_build() -> String {
+    format!(
+        "obs: tbns v{TBNS_VERSION}, {SERIES_PER_MODEL} series/model + {GLOBAL_SERIES} global, \
+         slow-ring cap {SLOW_RING_CAP}, stamps from the injected Clock \
+         (serve default: monotonic std::time::Instant)"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// series handles
+// ---------------------------------------------------------------------------
+
+/// Monotone event counter. Cloning shares the underlying atomic, so a
+/// handle can live on the hot path while the hub snapshots the same cell.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Signed instantaneous value (live connections, inflight batches).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug)]
+struct HistCells {
+    /// Same layout as `coordinator::metrics::Histogram`: bucket i counts
+    /// samples in [2^i, 2^(i+1)) us.
+    buckets: [AtomicU64; 30],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for HistCells {
+    fn default() -> Self {
+        HistCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free log-bucketed latency histogram handle. Recording is a few
+/// relaxed atomic RMWs — no locks, no allocation — so concurrent
+/// recorders (workers, shards) share one named series.
+#[derive(Clone, Debug, Default)]
+pub struct HistHandle(Arc<HistCells>);
+
+impl HistHandle {
+    pub fn record(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(29);
+        self.0.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.0.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Materialize the current cells. Concurrent recording may land
+    /// between field loads, so `count` is loaded last and the bucket sum
+    /// can trail it by in-flight recordings — snapshot consumers treat
+    /// `count` as authoritative.
+    pub fn snap(&self) -> HistSnap {
+        let mut buckets = [0u64; 30];
+        for (b, cell) in buckets.iter_mut().zip(self.0.buckets.iter()) {
+            *b = cell.load(Ordering::Relaxed);
+        }
+        HistSnap {
+            buckets,
+            sum_us: self.0.sum_us.load(Ordering::Relaxed),
+            max_us: self.0.max_us.load(Ordering::Relaxed),
+            count: buckets.iter().sum(),
+        }
+    }
+}
+
+/// Frozen histogram state inside a [`Snapshot`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnap {
+    pub buckets: [u64; 30],
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnap {
+    pub fn to_histogram(&self) -> Histogram {
+        Histogram::from_parts(self.buckets, self.count, self.sum_us, self.max_us)
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.to_histogram().quantile_us(0.5)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.to_histogram().quantile_us(0.99)
+    }
+
+    /// Bucket-wise difference vs an earlier snap of the same series.
+    /// `max_us` is not subtractable; the delta keeps the later max as an
+    /// upper bound on the window's max.
+    fn delta(&self, earlier: &HistSnap) -> HistSnap {
+        let mut buckets = [0u64; 30];
+        for (i, b) in buckets.iter_mut().enumerate() {
+            *b = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistSnap {
+            buckets,
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+        }
+    }
+
+    fn add(&mut self, other: &HistSnap) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the hub
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct HubInner {
+    counters: Vec<(String, Counter)>,
+    gauges: Vec<(String, Gauge)>,
+    hists: Vec<(String, HistHandle)>,
+}
+
+/// Registry of named series. Registration (startup only) takes the
+/// lock; the returned handles record lock-free. Registering the same
+/// name twice returns the existing handle, so layers can share a series
+/// without coordinating.
+#[derive(Default)]
+pub struct MetricsHub {
+    inner: Mutex<HubInner>,
+    /// Worst-N end-to-end stage traces, dumped at drain. Shared so
+    /// [`FlushStamp`]s riding connection outboxes can offer traces.
+    pub slow: Arc<SlowRing>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub {
+            inner: Mutex::new(HubInner::default()),
+            slow: Arc::new(SlowRing::new(SLOW_RING_CAP)),
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Counter::default();
+        inner.counters.push((name.to_string(), c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, g)) = inner.gauges.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        let g = Gauge::default();
+        inner.gauges.push((name.to_string(), g.clone()));
+        g
+    }
+
+    pub fn hist(&self, name: &str) -> HistHandle {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, h)) = inner.hists.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = HistHandle::default();
+        inner.hists.push((name.to_string(), h.clone()));
+        h
+    }
+
+    pub fn series_count(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.counters.len() + inner.gauges.len() + inner.hists.len()
+    }
+
+    /// Point-in-time snapshot of every registered series. Replica rows
+    /// start empty; the cluster router appends its probe state before
+    /// rendering.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        Snapshot {
+            counters: inner.counters.iter().map(|(n, c)| (n.clone(), c.get())).collect(),
+            gauges: inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect(),
+            hists: inner.hists.iter().map(|(n, h)| (n.clone(), h.snap())).collect(),
+            replicas: Vec::new(),
+        }
+    }
+}
+
+/// Per-replica probe state appended by the cluster router.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaSnap {
+    pub addr: String,
+    /// "up" | "ejected" | "probation"
+    pub state: String,
+    /// Last successful probe round-trip time.
+    pub rtt_us: u64,
+    pub ejections: u64,
+    pub reinstatements: u64,
+}
+
+/// Frozen, renderable view of a hub (plus optional replica rows).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<(String, HistSnap)>,
+    pub replicas: Vec<ReplicaSnap>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnap> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Model names mentioned by `model.<name>.<counter>` series, in
+    /// registration order.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for (n, _) in &self.counters {
+            if let Some(rest) = n.strip_prefix("model.") {
+                if let Some(model) = rest.strip_suffix(".submitted") {
+                    if !out.iter().any(|m| m == model) {
+                        out.push(model.to_string());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Window between an earlier snapshot and this one: counters and
+    /// histogram cells subtract (saturating — a restarted series reads
+    /// as a fresh window), gauges and replica rows keep the later value.
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(n, v)| {
+                    (n.clone(), v.saturating_sub(earlier.counter(n).unwrap_or(0)))
+                })
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(n, h)| match earlier.hist(n) {
+                    Some(e) => (n.clone(), h.delta(e)),
+                    None => (n.clone(), h.clone()),
+                })
+                .collect(),
+            replicas: self.replicas.clone(),
+        }
+    }
+
+    /// Accumulate a delta (conservation checks: `final == Σ deltas`).
+    pub fn accumulate(&mut self, delta: &Snapshot) {
+        for (n, v) in &delta.counters {
+            match self.counters.iter_mut().find(|(m, _)| m == n) {
+                Some((_, acc)) => *acc += *v,
+                None => self.counters.push((n.clone(), *v)),
+            }
+        }
+        for (n, g) in &delta.gauges {
+            match self.gauges.iter_mut().find(|(m, _)| m == n) {
+                Some((_, acc)) => *acc = *g,
+                None => self.gauges.push((n.clone(), *g)),
+            }
+        }
+        for (n, h) in &delta.hists {
+            match self.hists.iter_mut().find(|(m, _)| m == n) {
+                Some((_, acc)) => acc.add(h),
+                None => self.hists.push((n.clone(), h.clone())),
+            }
+        }
+    }
+
+    /// Render as TBNS/1 text (the payload of a TBNP `Stats` frame).
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(256 + 96 * self.hists.len());
+        out.push_str(&format!("tbns {TBNS_VERSION}\n"));
+        for (n, v) in &self.counters {
+            out.push_str(&format!("counter {n} {v}\n"));
+        }
+        for (n, v) in &self.gauges {
+            out.push_str(&format!("gauge {n} {v}\n"));
+        }
+        for (n, h) in &self.hists {
+            let csv: Vec<String> = h.buckets.iter().map(|b| b.to_string()).collect();
+            out.push_str(&format!(
+                "hist {n} count {} sum_us {} max_us {} p50_us {} p99_us {} buckets {}\n",
+                h.count,
+                h.sum_us,
+                h.max_us,
+                h.p50_us(),
+                h.p99_us(),
+                csv.join(",")
+            ));
+        }
+        for r in &self.replicas {
+            out.push_str(&format!(
+                "replica {} state {} rtt_us {} ejections {} reinstatements {}\n",
+                r.addr, r.state, r.rtt_us, r.ejections, r.reinstatements
+            ));
+        }
+        out.push_str("end tbns\n");
+        out
+    }
+
+    /// Parse TBNS text. Rejects an unknown major version or a missing
+    /// terminator (truncation); skips unknown line keywords so newer
+    /// servers stay readable by older clients.
+    pub fn parse(text: &str) -> Result<Snapshot> {
+        let mut lines = text.lines();
+        let head = lines.next().unwrap_or("");
+        let version = head
+            .strip_prefix("tbns ")
+            .and_then(|v| v.trim().parse::<u32>().ok())
+            .ok_or_else(|| TinError::Format(format!("not a tbns snapshot: {head:?}")))?;
+        if version != TBNS_VERSION {
+            return Err(TinError::Format(format!(
+                "tbns major version {version} (this build reads {TBNS_VERSION})"
+            )));
+        }
+        let mut snap = Snapshot::default();
+        let mut terminated = false;
+        for line in lines {
+            let line = line.trim_end();
+            if line == "end tbns" {
+                terminated = true;
+                break;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("counter") => {
+                    let (n, v) = (it.next(), it.next());
+                    if let (Some(n), Some(Ok(v))) = (n, v.map(|v| v.parse::<u64>())) {
+                        snap.counters.push((n.to_string(), v));
+                    } else {
+                        return Err(TinError::Format(format!("bad counter line: {line:?}")));
+                    }
+                }
+                Some("gauge") => {
+                    let (n, v) = (it.next(), it.next());
+                    if let (Some(n), Some(Ok(v))) = (n, v.map(|v| v.parse::<i64>())) {
+                        snap.gauges.push((n.to_string(), v));
+                    } else {
+                        return Err(TinError::Format(format!("bad gauge line: {line:?}")));
+                    }
+                }
+                Some("hist") => {
+                    let name = it
+                        .next()
+                        .ok_or_else(|| TinError::Format(format!("bad hist line: {line:?}")))?;
+                    let mut h = HistSnap::default();
+                    let rest: Vec<&str> = it.collect();
+                    // key/value pairs; unknown keys skipped
+                    let mut i = 0;
+                    while i < rest.len() {
+                        let val = *rest.get(i + 1).unwrap_or(&"");
+                        match rest[i] {
+                            "count" => h.count = parse_u64(val, line)?,
+                            "sum_us" => h.sum_us = parse_u64(val, line)?,
+                            "max_us" => h.max_us = parse_u64(val, line)?,
+                            "buckets" => {
+                                for (bi, tok) in val.split(',').enumerate() {
+                                    if bi >= 30 {
+                                        break;
+                                    }
+                                    h.buckets[bi] = parse_u64(tok, line)?;
+                                }
+                            }
+                            _ => {} // p50_us/p99_us are derived; future keys skipped
+                        }
+                        i += 2;
+                    }
+                    snap.hists.push((name.to_string(), h));
+                }
+                Some("replica") => {
+                    let addr = it
+                        .next()
+                        .ok_or_else(|| TinError::Format(format!("bad replica line: {line:?}")))?;
+                    let mut r = ReplicaSnap {
+                        addr: addr.to_string(),
+                        state: "up".to_string(),
+                        rtt_us: 0,
+                        ejections: 0,
+                        reinstatements: 0,
+                    };
+                    let rest: Vec<&str> = it.collect();
+                    let mut i = 0;
+                    while i < rest.len() {
+                        let val = *rest.get(i + 1).unwrap_or(&"");
+                        match rest[i] {
+                            "state" => r.state = val.to_string(),
+                            "rtt_us" => r.rtt_us = parse_u64(val, line)?,
+                            "ejections" => r.ejections = parse_u64(val, line)?,
+                            "reinstatements" => r.reinstatements = parse_u64(val, line)?,
+                            _ => {}
+                        }
+                        i += 2;
+                    }
+                    snap.replicas.push(r);
+                }
+                _ => {} // forward compatibility: unknown keywords skipped
+            }
+        }
+        if !terminated {
+            return Err(TinError::Format("tbns snapshot truncated (no terminator)".into()));
+        }
+        Ok(snap)
+    }
+}
+
+fn parse_u64(tok: &str, line: &str) -> Result<u64> {
+    tok.parse::<u64>()
+        .map_err(|_| TinError::Format(format!("bad number {tok:?} in tbns line {line:?}")))
+}
+
+// ---------------------------------------------------------------------------
+// stage traces + the slow ring
+// ---------------------------------------------------------------------------
+
+/// Full per-request stage stamps (microseconds from the injected clock).
+///
+/// Stage glossary — what each stamp bounds:
+/// - `admitted_us`: request frame decoded and admission-checked
+/// - `enqueued_us`: pushed into the model lane's batch queue
+/// - `dispatched_us`: batch formed and handed to a worker
+/// - `infer_start_us` / `infer_end_us`: around the engine's batch call
+/// - `serialized_us`: response encoded and queued on the conn outbox
+/// - `flushed_us`: last response byte handed to the kernel
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageTrace {
+    pub model: String,
+    pub id: u64,
+    pub admitted_us: u64,
+    pub enqueued_us: u64,
+    pub dispatched_us: u64,
+    pub infer_start_us: u64,
+    pub infer_end_us: u64,
+    pub serialized_us: u64,
+    pub flushed_us: u64,
+}
+
+impl StageTrace {
+    pub fn e2e_us(&self) -> u64 {
+        self.flushed_us.saturating_sub(self.admitted_us)
+    }
+
+    /// Batching wait + dispatch channel time.
+    pub fn queue_us(&self) -> u64 {
+        self.infer_start_us.saturating_sub(self.enqueued_us)
+    }
+
+    /// Engine time for the batch carrying this request.
+    pub fn infer_us(&self) -> u64 {
+        self.infer_end_us.saturating_sub(self.infer_start_us)
+    }
+
+    /// Outbox + socket flush time.
+    pub fn outbox_us(&self) -> u64 {
+        self.flushed_us.saturating_sub(self.serialized_us)
+    }
+
+    /// One summary line for the drain-time dump.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "slow: model={} id={} e2e={}us queue={}us infer={}us outbox={}us \
+             (admitted={} flushed={})",
+            self.model,
+            self.id,
+            self.e2e_us(),
+            self.queue_us(),
+            self.infer_us(),
+            self.outbox_us(),
+            self.admitted_us,
+            self.flushed_us
+        )
+    }
+}
+
+/// Everything a buffered response frame needs to finish its stage trace
+/// the instant its last byte reaches the kernel: the partially-filled
+/// trace, the model's `stage_outbox` histogram, and the slow ring.
+#[derive(Debug)]
+pub struct FlushStamp {
+    pub trace: StageTrace,
+    pub outbox_hist: HistHandle,
+    pub ring: Arc<SlowRing>,
+}
+
+impl FlushStamp {
+    /// Record the outbox stage and offer the completed trace.
+    pub fn flushed(self, now_us: u64) {
+        self.outbox_hist.record(now_us.saturating_sub(self.trace.serialized_us));
+        let mut t = self.trace;
+        t.flushed_us = now_us;
+        self.ring.offer(t);
+    }
+}
+
+/// Worst-N requests by end-to-end latency. The fast path is a single
+/// relaxed load: once the ring is full, a candidate below the smallest
+/// kept e2e returns without touching the lock.
+#[derive(Debug)]
+pub struct SlowRing {
+    cap: usize,
+    /// Admission threshold: the smallest e2e currently kept once full.
+    floor_us: AtomicU64,
+    inner: Mutex<Vec<StageTrace>>,
+}
+
+impl Default for SlowRing {
+    fn default() -> Self {
+        SlowRing::new(SLOW_RING_CAP)
+    }
+}
+
+impl SlowRing {
+    pub fn new(cap: usize) -> Self {
+        SlowRing { cap, floor_us: AtomicU64::new(0), inner: Mutex::new(Vec::new()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn offer(&self, t: StageTrace) {
+        if self.cap == 0 {
+            return;
+        }
+        let e2e = t.e2e_us();
+        if e2e <= self.floor_us.load(Ordering::Relaxed) {
+            return; // ring is full and this request is faster than everything kept
+        }
+        let mut v = self.inner.lock().unwrap();
+        if v.len() < self.cap {
+            v.push(t);
+            if v.len() == self.cap {
+                let min = v.iter().map(|x| x.e2e_us()).min().unwrap_or(0);
+                self.floor_us.store(min, Ordering::Relaxed);
+            }
+            return;
+        }
+        // full: replace the current minimum if we beat it
+        let (mi, min_e2e) = v
+            .iter()
+            .enumerate()
+            .map(|(i, x)| (i, x.e2e_us()))
+            .min_by_key(|&(_, e)| e)
+            .unwrap();
+        if e2e > min_e2e {
+            v[mi] = t;
+            let new_min = v.iter().map(|x| x.e2e_us()).min().unwrap_or(0);
+            self.floor_us.store(new_min, Ordering::Relaxed);
+        }
+    }
+
+    /// Kept traces, slowest first (drain-time dump).
+    pub fn dump(&self) -> Vec<StageTrace> {
+        let mut v = self.inner.lock().unwrap().clone();
+        v.sort_by(|a, b| b.e2e_us().cmp(&a.e2e_us()));
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `tinbinn top` rendering
+// ---------------------------------------------------------------------------
+
+/// Render one `tinbinn top` refresh from two snapshots `interval_s`
+/// apart. Pure function of its inputs so it is unit-testable; rates come
+/// from counter deltas, latencies from the cumulative histograms.
+pub fn render_top(prev: &Snapshot, cur: &Snapshot, interval_s: f64) -> String {
+    let d = cur.delta(prev);
+    let sum = |snap: &Snapshot, suffix: &str| -> u64 {
+        snap.counters
+            .iter()
+            .filter(|(n, _)| n.starts_with("model.") && n.ends_with(suffix))
+            .map(|(_, v)| *v)
+            .sum()
+    };
+    let (sub, comp, rej, exp) =
+        (sum(cur, ".submitted"), sum(cur, ".completed"), sum(cur, ".rejected"), sum(cur, ".expired"));
+    let inflight = sub.saturating_sub(comp + rej + exp);
+    let qps = if interval_s > 0.0 { sum(&d, ".completed") as f64 / interval_s } else { 0.0 };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "tinbinn top — {:.1}s window   qps {:.1}   inflight {}   conns {}\n",
+        interval_s,
+        qps,
+        inflight,
+        cur.gauge("conns").unwrap_or(0)
+    ));
+    out.push_str(&format!(
+        "ledger Δ: submitted {} completed {} rejected {} expired {}   wire Δ: settled {} answered {} dropped {}\n",
+        sum(&d, ".submitted"),
+        sum(&d, ".completed"),
+        sum(&d, ".rejected"),
+        sum(&d, ".expired"),
+        d.counter("wire.settled").unwrap_or(0),
+        d.counter("wire.answered").unwrap_or(0),
+        d.counter("wire.dropped").unwrap_or(0)
+    ));
+    for model in cur.model_names() {
+        let h = |kind: &str| cur.hist(&format!("{kind}.{model}")).cloned().unwrap_or_default();
+        let e2e = h("e2e");
+        out.push_str(&format!(
+            "model {model:<16} p50 {:>6}us  p99 {:>6}us  | queue p99 {:>6}us  infer p99 {:>6}us  outbox p99 {:>6}us  ({} served)\n",
+            e2e.p50_us(),
+            e2e.p99_us(),
+            h("stage_queue").p99_us(),
+            h("stage_infer").p99_us(),
+            h("stage_outbox").p99_us(),
+            e2e.count
+        ));
+    }
+    for r in &cur.replicas {
+        out.push_str(&format!(
+            "replica {:<21} {:<9} rtt {:>6}us  ejections {}  reinstatements {}\n",
+            r.addr, r.state, r.rtt_us, r.ejections, r.reinstatements
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_registration_is_idempotent_and_counts_series() {
+        let hub = MetricsHub::new();
+        let a = hub.counter("model.m.submitted");
+        let b = hub.counter("model.m.submitted");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same name shares one cell");
+        hub.gauge("conns").set(5);
+        hub.hist("e2e.m").record(100);
+        assert_eq!(hub.series_count(), 3);
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter("model.m.submitted"), Some(3));
+        assert_eq!(snap.gauge("conns"), Some(5));
+        assert_eq!(snap.hist("e2e.m").unwrap().count, 1);
+        assert_eq!(snap.model_names(), vec!["m".to_string()]);
+    }
+
+    #[test]
+    fn render_parse_roundtrip_preserves_every_series() {
+        let hub = MetricsHub::new();
+        hub.counter("model.mnist.submitted").add(17);
+        hub.counter("model.mnist.completed").add(16);
+        hub.gauge("conns").set(-2);
+        let h = hub.hist("e2e.mnist");
+        for us in [3u64, 900, 70_000, 5_000_000] {
+            h.record(us);
+        }
+        let mut snap = hub.snapshot();
+        snap.replicas.push(ReplicaSnap {
+            addr: "127.0.0.1:9100".into(),
+            state: "probation".into(),
+            rtt_us: 88,
+            ejections: 2,
+            reinstatements: 1,
+        });
+        let text = snap.render();
+        assert!(text.starts_with("tbns 1\n"));
+        assert!(text.ends_with("end tbns\n"));
+        let back = Snapshot::parse(&text).unwrap();
+        assert_eq!(back.counter("model.mnist.submitted"), Some(17));
+        assert_eq!(back.gauge("conns"), Some(-2));
+        let hb = back.hist("e2e.mnist").unwrap();
+        assert_eq!(hb, snap.hist("e2e.mnist").unwrap());
+        assert_eq!(hb.p99_us(), snap.hist("e2e.mnist").unwrap().p99_us());
+        assert_eq!(back.replicas, snap.replicas);
+    }
+
+    #[test]
+    fn parse_rejects_bad_version_and_truncation_but_skips_unknown_lines() {
+        assert!(Snapshot::parse("tbns 2\nend tbns\n").is_err(), "unknown major rejected");
+        assert!(Snapshot::parse("nope\n").is_err());
+        assert!(
+            Snapshot::parse("tbns 1\ncounter a 1\n").is_err(),
+            "missing terminator means truncation"
+        );
+        let s = Snapshot::parse("tbns 1\nfuture_keyword x y z\ncounter a 1\nend tbns\n").unwrap();
+        assert_eq!(s.counter("a"), Some(1), "unknown keywords are skipped, known ones kept");
+        assert!(Snapshot::parse("tbns 1\ncounter a NaN\nend tbns\n").is_err());
+    }
+
+    #[test]
+    fn prop_snapshot_conservation_final_equals_sum_of_deltas() {
+        // For any interleaving of recordings and snapshot points, the
+        // final snapshot equals the accumulated deltas on every series.
+        crate::testkit::check(40, |rng| {
+            let hub = MetricsHub::new();
+            let counters: Vec<Counter> =
+                (0..3).map(|i| hub.counter(&format!("model.m{i}.submitted"))).collect();
+            let hists: Vec<HistHandle> =
+                (0..2).map(|i| hub.hist(&format!("e2e.m{i}"))).collect();
+            let mut acc = Snapshot::default();
+            let mut last = hub.snapshot();
+            let base = last.clone();
+            let ops = 20 + rng.below(200);
+            for _ in 0..ops {
+                match rng.below(5) {
+                    0 => counters[rng.below(3) as usize].inc(),
+                    1 => counters[rng.below(3) as usize].add(rng.below(10) as u64),
+                    2 | 3 => hists[rng.below(2) as usize].record(1 + rng.below(1_000_000) as u64),
+                    _ => {
+                        let now = hub.snapshot();
+                        acc.accumulate(&now.delta(&last));
+                        last = now;
+                    }
+                }
+            }
+            let fin = hub.snapshot();
+            acc.accumulate(&fin.delta(&last));
+            let total = fin.delta(&base);
+            for (n, v) in &total.counters {
+                assert_eq!(acc.counter(n), Some(*v), "counter {n} not conserved");
+            }
+            for (n, h) in &total.hists {
+                let a = acc.hist(n).expect("series present");
+                assert_eq!(a.count, h.count, "hist {n} count not conserved");
+                assert_eq!(a.sum_us, h.sum_us, "hist {n} sum not conserved");
+                assert_eq!(a.buckets, h.buckets, "hist {n} buckets not conserved");
+            }
+        });
+    }
+
+    #[test]
+    fn slow_ring_keeps_the_worst_n_by_e2e() {
+        let ring = SlowRing::new(4);
+        let t = |id: u64, e2e: u64| StageTrace {
+            model: "m".into(),
+            id,
+            admitted_us: 1000,
+            enqueued_us: 1001,
+            dispatched_us: 1002,
+            infer_start_us: 1003,
+            infer_end_us: 1004,
+            serialized_us: 1005,
+            flushed_us: 1000 + e2e,
+        };
+        for (id, e2e) in [(1, 50), (2, 10), (3, 99), (4, 70), (5, 60), (6, 5), (7, 80)] {
+            ring.offer(t(id, e2e));
+        }
+        let kept = ring.dump();
+        assert_eq!(kept.len(), 4);
+        let e2es: Vec<u64> = kept.iter().map(|x| x.e2e_us()).collect();
+        assert_eq!(e2es, vec![99, 80, 70, 60], "worst 4, slowest first");
+        // every kept trace satisfies the stage-sum inequality
+        for k in &kept {
+            assert!(k.queue_us() + k.infer_us() + k.outbox_us() <= k.e2e_us());
+            assert!(k.summary_line().starts_with("slow: model=m"));
+        }
+    }
+
+    #[test]
+    fn prop_slow_ring_matches_a_sorted_oracle() {
+        crate::testkit::check(40, |rng| {
+            let cap = 1 + rng.below(8) as usize;
+            let ring = SlowRing::new(cap);
+            let n = rng.below(100);
+            let mut e2es: Vec<u64> = Vec::new();
+            for id in 0..n {
+                let e2e = 1 + rng.below(10_000) as u64;
+                e2es.push(e2e);
+                ring.offer(StageTrace {
+                    id: id as u64,
+                    flushed_us: e2e,
+                    ..Default::default()
+                });
+            }
+            e2es.sort_unstable_by(|a, b| b.cmp(a));
+            e2es.truncate(cap);
+            let kept: Vec<u64> = ring.dump().iter().map(|t| t.e2e_us()).collect();
+            assert_eq!(kept, e2es, "ring must equal the top-{cap} oracle");
+        });
+    }
+
+    #[test]
+    fn top_rendering_reports_rates_inflight_and_stage_quantiles() {
+        let hub = MetricsHub::new();
+        hub.counter("model.m.submitted").add(10);
+        hub.counter("model.m.completed").add(4);
+        hub.counter("model.m.rejected").add(1);
+        hub.counter("model.m.expired").add(0);
+        hub.counter("wire.settled").add(5);
+        hub.counter("wire.answered").add(5);
+        hub.gauge("conns").set(2);
+        hub.hist("e2e.m").record(800);
+        hub.hist("stage_queue.m").record(100);
+        hub.hist("stage_infer.m").record(600);
+        hub.hist("stage_outbox.m").record(50);
+        let prev = Snapshot::default();
+        let cur = hub.snapshot();
+        let view = render_top(&prev, &cur, 2.0);
+        assert!(view.contains("qps 2.0"), "4 completions over 2s: {view}");
+        assert!(view.contains("inflight 5"), "10 - 4 - 1 - 0 = 5: {view}");
+        assert!(view.contains("conns 2"));
+        assert!(view.contains("model m"));
+        assert!(view.contains("settled 5 answered 5 dropped 0"));
+        // zero-interval never divides by zero
+        let z = render_top(&cur, &cur, 0.0);
+        assert!(z.contains("qps 0.0"));
+    }
+
+    #[test]
+    fn describe_build_pins_the_telemetry_configuration() {
+        let d = describe_build();
+        assert!(d.contains("tbns v1"));
+        assert!(d.contains(&format!("slow-ring cap {SLOW_RING_CAP}")));
+        assert!(d.contains("Clock"));
+    }
+}

@@ -24,15 +24,44 @@ impl BenchResult {
         self.mean_s * 1e3
     }
 
-    /// Machine-readable JSON value for one result row.
+    /// Machine-readable JSON value for one result row. Non-finite
+    /// values are clamped to 0 — `util_json` would render them as
+    /// `null`, and a `null` in a numeric field breaks every downstream
+    /// `as_f64()` reader of the perf-trajectory artifacts.
     pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            Json::Num(if v.is_finite() { v } else { 0.0 })
+        }
         let mut m = HashMap::new();
         m.insert("name".to_string(), Json::Str(self.name.clone()));
         m.insert("iters".to_string(), Json::Num(self.iters as f64));
-        m.insert("mean_s".to_string(), Json::Num(self.mean_s));
-        m.insert("stddev_s".to_string(), Json::Num(self.stddev_s));
-        m.insert("min_s".to_string(), Json::Num(self.min_s));
+        m.insert("mean_s".to_string(), num(self.mean_s));
+        m.insert("stddev_s".to_string(), num(self.stddev_s));
+        m.insert("min_s".to_string(), num(self.min_s));
         Json::Obj(m)
+    }
+}
+
+/// One value row (count rows, `*_us` quantile rows, QPS rows): the
+/// value lives in `mean_s`/`min_s` per the BENCH conventions.
+pub fn value_row(name: impl Into<String>, iters: u32, v: f64) -> BenchResult {
+    let v = if v.is_finite() { v } else { 0.0 };
+    BenchResult { name: name.into(), iters, mean_s: v, stddev_s: 0.0, min_s: v }
+}
+
+/// A throughput row guarded against degenerate inputs. A healthy run
+/// stores seconds-per-frame (`1/per_s`); a zero-count or zero-duration
+/// run (`per_s` zero or non-finite) stores `0` and appends a
+/// `{name}_degenerate` marker row (value 1) so the degeneracy stays
+/// visible in the artifact instead of poisoning it with NaN/inf (or a
+/// silent 1e12-seconds-per-frame outlier).
+pub fn push_rate_row(rows: &mut Vec<BenchResult>, name: impl Into<String>, iters: u32, per_s: f64) {
+    let name = name.into();
+    if per_s > 0.0 && per_s.is_finite() {
+        rows.push(value_row(name, iters, 1.0 / per_s));
+    } else {
+        rows.push(value_row(name.clone(), iters, 0.0));
+        rows.push(value_row(format!("{name}_degenerate"), 1, 1.0));
     }
 }
 
@@ -118,6 +147,42 @@ mod tests {
         assert!(r.mean_s > 0.0);
         assert!(r.min_s <= r.mean_s);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn degenerate_rows_store_zero_plus_a_marker_never_nan() {
+        // healthy: plain seconds-per-frame, no marker
+        let mut rows = Vec::new();
+        push_rate_row(&mut rows, "tp", 10, 200.0);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].mean_s, 1.0 / 200.0);
+
+        // zero-count / zero-duration inputs: 0 + marker row
+        for bad in [0.0, f64::NAN, f64::INFINITY, -1.0] {
+            let mut rows = Vec::new();
+            push_rate_row(&mut rows, "tp", 0, bad);
+            assert_eq!(rows.len(), 2, "per_s={bad}");
+            assert_eq!(rows[0].name, "tp");
+            assert_eq!(rows[0].mean_s, 0.0, "per_s={bad}");
+            assert_eq!(rows[1].name, "tp_degenerate");
+            assert_eq!(rows[1].mean_s, 1.0);
+        }
+
+        // a non-finite value reaching to_json is clamped, not nulled:
+        // the artifact must stay parseable by as_f64 readers
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: f64::NAN,
+            stddev_s: f64::INFINITY,
+            min_s: 0.5,
+        };
+        let text = suite_json("s", &[r]);
+        let j = crate::util_json::parse(&text).unwrap();
+        let row = &j.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("mean_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(row.get("stddev_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(row.get("min_s").unwrap().as_f64(), Some(0.5));
     }
 
     #[test]

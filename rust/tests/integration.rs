@@ -110,8 +110,12 @@ fn gateway_serves_both_tasks_bit_exact() {
                 .collect(),
         },
     ];
-    let (report, _lanes) =
-        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
+    let (report, _lanes) = serve_gateway(
+        requests,
+        lanes,
+        &GatewayConfig { collect_scores: true, ..GatewayConfig::default() },
+    )
+    .unwrap();
     assert!(report.conserved());
     assert_eq!(report.completed, 16);
     for m in &report.models {
@@ -189,8 +193,12 @@ fn gateway_hot_swaps_a_freshly_trained_model() {
             GatewayRequest::new(i as u64, model, ds.image(i % ds.len()).to_vec())
         })
         .collect();
-    let (report, _lanes) =
-        serve_gateway(requests, lanes, &GatewayConfig { collect_scores: true, drain: None }).unwrap();
+    let (report, _lanes) = serve_gateway(
+        requests,
+        lanes,
+        &GatewayConfig { collect_scores: true, ..GatewayConfig::default() },
+    )
+    .unwrap();
     assert!(report.conserved(), "submitted != completed + rejected + expired");
     assert_eq!(report.submitted, 24);
     assert_eq!(report.unknown_model, 8);
@@ -604,4 +612,121 @@ fn cluster_router_over_real_replicas_is_bit_exact_and_survives_a_kill() {
     assert!(vrep.conserved(), "victim ledger broken by the mid-run kill");
     let srep = survivor.shutdown().unwrap();
     assert!(srep.conserved(), "survivor ledger broken under failover load");
+}
+
+#[test]
+fn stats_frame_agrees_exactly_with_the_drain_ledger() {
+    // the PR-9 acceptance criterion: a live TBNS/1 snapshot fetched
+    // over the wire reads the same atomics the drain report settles
+    // from. After traffic quiesces (every response read back by the
+    // client) a snapshot and the subsequent drain report must agree
+    // EXACTLY — per-model ledgers, the wire response ledger — and the
+    // per-stage histograms must have counted every request, with each
+    // slow-ring trace's stage split fitting inside its end-to-end time.
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::net::{Client, MonotonicClock, NetServer, ServerConfig, Status};
+    use tinbinn::obs::Snapshot;
+
+    let (np1, ds1, _) = task_data("1cat");
+    let (np10, ds10, _) = task_data("10cat");
+    let mut reg = ModelRegistry::new();
+    reg.register(
+        ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 2 },
+        np1,
+    )
+    .unwrap();
+    reg.register(ModelSpec { name: "10cat".into(), backend: BackendKind::Opt, workers: 1 }, np10)
+        .unwrap();
+    let mut lanes = Vec::new();
+    for entry in reg.entries() {
+        lanes.push(GatewayLane {
+            name: entry.spec.name.clone(),
+            policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 },
+            workers: reg.build_pool(entry).unwrap(),
+        });
+    }
+    let srv = NetServer::start(
+        "127.0.0.1:0",
+        lanes,
+        ServerConfig::default(),
+        std::sync::Arc::new(MonotonicClock::new()),
+    )
+    .unwrap();
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+
+    // a pre-traffic snapshot parses and shows zeroed, pre-registered
+    // wire series — and proves the Stats frame itself stays off the
+    // request ledger
+    let early = Snapshot::parse(&client.stats().unwrap()).unwrap();
+    assert_eq!(early.counter("wire.settled"), Some(0), "stats frames must not settle responses");
+    // rendered before its own fetch is counted, so the first reads 0
+    assert_eq!(early.counter("obs.stats_served"), Some(0));
+
+    let n = 6usize;
+    let imgs1: Vec<&[u8]> = (0..n).map(|i| ds1.image(i)).collect();
+    let imgs10: Vec<&[u8]> = (0..n).map(|i| ds10.image(i)).collect();
+    for r in client.infer_pipelined("1cat", &imgs1).unwrap() {
+        assert_eq!(r.status, Status::Ok);
+    }
+    for r in client.infer_pipelined("10cat", &imgs10).unwrap() {
+        assert_eq!(r.status, Status::Ok);
+    }
+
+    // every response has been read back, so the shard that owns this
+    // connection already flushed (and stage-stamped) all of them before
+    // it can see the Stats frame: this snapshot is final
+    let snap = Snapshot::parse(&client.stats().unwrap()).unwrap();
+    drop(client);
+    let report = srv.shutdown().unwrap();
+    assert!(report.conserved(), "drain ledger broken");
+
+    // exact agreement, per model and on the wire ledger — the snapshot
+    // and the report read the same atomics, so any drift is a bug
+    assert_eq!(report.models.len(), 2);
+    for m in &report.models {
+        for (field, want) in [
+            ("submitted", m.submitted),
+            ("completed", m.completed),
+            ("rejected", m.rejected),
+            ("expired", m.expired),
+        ] {
+            assert_eq!(
+                snap.counter(&format!("model.{}.{field}", m.name)),
+                Some(want),
+                "stats frame disagrees with the drain ledger on model.{}.{field}",
+                m.name
+            );
+        }
+        assert_eq!(m.completed, n as u64, "model {}", m.name);
+    }
+    assert_eq!(snap.counter("wire.settled"), Some(report.settled_responses));
+    assert_eq!(snap.counter("wire.answered"), Some(report.answered_responses));
+    assert_eq!(snap.counter("wire.dropped"), Some(report.dropped_responses));
+    assert_eq!(snap.counter("gateway.unknown_model"), Some(report.unknown_model));
+    assert_eq!(snap.counter("obs.stats_served"), Some(1), "the earlier fetch was counted");
+
+    // per-stage histograms exist per served model and saw every request
+    let mut models = snap.model_names();
+    models.sort();
+    assert_eq!(models, vec!["10cat".to_string(), "1cat".to_string()]);
+    for model in ["1cat", "10cat"] {
+        for series in ["e2e", "stage_queue", "stage_infer", "stage_outbox"] {
+            let h = snap
+                .hist(&format!("{series}.{model}"))
+                .unwrap_or_else(|| panic!("missing histogram {series}.{model}"));
+            assert_eq!(h.count, n as u64, "{series}.{model} counted every request");
+        }
+    }
+
+    // the slow ring captured stage traces, and no trace's stage split
+    // exceeds its end-to-end time
+    assert!(!report.slow_traces.is_empty(), "slow ring empty after {n} requests per model");
+    for t in &report.slow_traces {
+        assert!(
+            t.queue_us() + t.infer_us() + t.outbox_us() <= t.e2e_us(),
+            "stage split exceeds e2e: {}",
+            t.summary_line()
+        );
+    }
 }
