@@ -12,7 +12,9 @@
 //!   stats      fetch one live TBNS/1 telemetry snapshot from a serving
 //!              endpoint (server or router)
 //!   top        live terminal view over the stats frame (QPS, stage
-//!              p99s, replica health)
+//!              p99s, replica health, slowest traced requests)
+//!   trace      export the endpoint's stitched request traces as
+//!              Chrome trace-event JSON (load in Perfetto)
 //!   desktop    E7 desktop-baseline timing via PJRT
 //!   train      native BinaryConnect training -> TBW1 + cross-engine gate
 //!
@@ -68,6 +70,7 @@ fn usage() -> ! {
                    [--qps Q | --inflight K] [--mix name[:backend]=w,...]\n\
                    [--deadline-us D] [--low-frac F] [--seed S] [--reconnect]\n\
                    [--bench-out path] [--shutdown] [--stage-rows]\n\
+                   [--trace-sample N] [--trace-out FILE]\n\
                    [--cluster --replicas A1,A2,... [--kill ADDR] [--kill-after-ms T]]\n\
                    [--conn-scale [--scales N1,N2,...] [--baseline ADDR2]]\n\
                    (load-generate against a --listen server: open loop at Q qps\n\
@@ -83,7 +86,12 @@ fn usage() -> ! {
                     serve --shards 0 endpoint] — conn_scale_* rows land in\n\
                     BENCH_serve.json; --stage-rows fetches the server's\n\
                     telemetry snapshot after the run and adds per-stage\n\
-                    stage_{{queue,infer,outbox}}_<model>_{{p50,p99}}_us rows)\n\
+                    stage_{{queue,infer,outbox}}_<model>_{{p50,p99}}_us rows;\n\
+                    --trace-sample N traces 1-in-N requests by id — with\n\
+                    --cluster the router's stitched timelines become\n\
+                    cluster_stage_{{front,forward,replica_e2e,overhead}}\n\
+                    _{{p50,p99}}_us rows, and --trace-out FILE exports the\n\
+                    trace ring as Chrome trace-event JSON)\n\
            stats   ADDR [--shutdown]  fetch one TBNS/1 telemetry snapshot\n\
                    (counters, gauges, stage histograms, replica health on\n\
                    a router) from a serve --listen or serve --router\n\
@@ -91,7 +99,14 @@ fn usage() -> ! {
                    connection, so the drain report equals the snapshot\n\
            top     ADDR [--interval-ms M] [--iters N]  refreshing terminal\n\
                    view over the stats frame: per-model QPS and verdict\n\
-                   rates, stage p99s, replica health (N=0 runs forever)\n\
+                   rates, stage p99s, replica health, slowest traced\n\
+                   requests (N=0 runs forever)\n\
+           trace   ADDR [--out FILE]  export the endpoint's stitched\n\
+                   request traces (the TBNS trace ring, populated by\n\
+                   --trace-sample load) as Chrome trace-event JSON on\n\
+                   stdout or to FILE — load in Perfetto or\n\
+                   chrome://tracing; pid 1 = router spans, pid 2 =\n\
+                   replica spans shifted by the clock-offset estimate\n\
            desktop [--task T] [--iters N]  E7 PJRT timing\n\
            train   [--net 1cat|10cat|micro] [--images N] [--epochs E] [--batch B]\n\
                    [--lr F] [--seed S] [--conv-lr-mul F] [--min-acc F] [--stop-acc F]\n\
@@ -245,6 +260,28 @@ fn real_main() -> tinbinn::Result<()> {
         "info" => {
             println!("{}", tinbinn::nn::simd::describe_host());
             println!("{}", tinbinn::obs::describe_build());
+            println!(
+                "{}",
+                tinbinn::obs::describe_trace_build(tinbinn::net::proto::VERSION as u32)
+            );
+        }
+        "trace" => {
+            let addr = args.command().unwrap_or_else(|| {
+                eprintln!("trace needs a server address (a serve --listen or --router endpoint)");
+                usage();
+            });
+            let out = args.opt("--out");
+            let snap = fetch_snapshot(&addr)?;
+            if snap.traces.is_empty() {
+                eprintln!(
+                    "(the trace ring at {addr} is empty — send load with --trace-sample N \
+                     to populate it)"
+                );
+            }
+            match out {
+                Some(path) => write_trace_json(&path, &snap.traces)?,
+                None => print!("{}", tinbinn::obs::chrome_trace_json(&snap.traces)),
+            }
         }
         "stats" => {
             let addr = args.command().unwrap_or_else(|| {
@@ -517,6 +554,23 @@ fn top_cli(addr: &str, interval_ms: u64, iters: u64) -> tinbinn::Result<()> {
             return Ok(());
         }
     }
+}
+
+/// One TBNS/1 snapshot from a serving endpoint, parsed and validated.
+fn fetch_snapshot(addr: &str) -> tinbinn::Result<tinbinn::obs::Snapshot> {
+    let mut c = tinbinn::net::Client::connect_with(
+        addr,
+        tinbinn::net::NetTimeouts::all(std::time::Duration::from_secs(3)),
+    )?;
+    tinbinn::obs::Snapshot::parse(&c.stats()?)
+}
+
+/// Write stitched traces as a Chrome trace-event JSON file
+/// (Perfetto / chrome://tracing loadable).
+fn write_trace_json(path: &str, traces: &[tinbinn::obs::ReqTrace]) -> tinbinn::Result<()> {
+    std::fs::write(path, tinbinn::obs::chrome_trace_json(traces))?;
+    println!("wrote {path} ({} stitched traces)", traces.len());
+    Ok(())
 }
 
 /// `tinbinn train` — BinaryConnect + QAT on the seeded synthetic task
@@ -835,6 +889,8 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
     let bench_out = args.opt("--bench-out");
     let do_shutdown = args.flag("--shutdown");
     let stage_rows = args.flag("--stage-rows");
+    let trace_sample = args.opt_usize_strict("--trace-sample", 0);
+    let trace_out = args.opt("--trace-out");
     let reconnect = args.flag("--reconnect").then(ReconnectPolicy::default);
     let cluster = args.flag("--cluster");
     let replicas_spec = args.opt("--replicas");
@@ -870,7 +926,8 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         images.insert(m.model.clone(), imgs);
     }
 
-    let cfg = LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed, reconnect };
+    let cfg =
+        LoadConfig { conns, requests, mix, mode, deadline_us, low_frac, seed, reconnect, trace_sample };
     if conn_scale {
         let scales: Vec<usize> = scales_spec
             .split(',')
@@ -894,6 +951,7 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
             kill,
             kill_after_ms,
             bench_out,
+            trace_out,
             do_shutdown,
         );
     }
@@ -953,6 +1011,18 @@ fn bench_load_cli(args: &mut Args, dir: &std::path::Path) -> tinbinn::Result<()>
         let srows = tinbinn::net::stage_bench_rows(&snap);
         println!("stage rows: {} across {} models", srows.len(), snap.model_names().len());
         rows.extend(srows);
+    }
+    if report.traced_sent > 0 {
+        println!(
+            "tracing: {} sampled (1-in-{}), {} answers carried stage stamps",
+            report.traced_sent,
+            cfg.trace_sample.max(1),
+            report.traced_answered
+        );
+    }
+    if let Some(path) = &trace_out {
+        let snap = fetch_snapshot(&addr)?;
+        write_trace_json(path, &snap.traces)?;
     }
     if let Some(path) = bench_out {
         tinbinn::report::bench::write_json(&path, "bench_load", &rows)?;
@@ -1131,7 +1201,11 @@ fn serve_router_cli(args: &mut Args, listen: &str) -> tinbinn::Result<()> {
 /// (A) direct load on one replica, (B) the same load through the
 /// router over all replicas, (C) through the router again while
 /// `--kill` dies mid-run. Scaling and kill-window rows land next to
-/// the phase-B load rows in `--bench-out`.
+/// the phase-B load rows in `--bench-out`. With `--trace-sample N` the
+/// router's trace ring is fetched right after phase B (before the kill
+/// phase overwrites it): stitched timelines become the
+/// `cluster_stage_*` per-stage and router-overhead rows, and
+/// `--trace-out` exports them as Chrome trace-event JSON.
 #[allow(clippy::too_many_arguments)]
 fn bench_cluster_cli(
     addr: &str,
@@ -1141,6 +1215,7 @@ fn bench_cluster_cli(
     kill: Option<String>,
     kill_after_ms: u64,
     bench_out: Option<String>,
+    trace_out: Option<String>,
     do_shutdown: bool,
 ) -> tinbinn::Result<()> {
     use tinbinn::net::{run_cluster_load, run_load, Client, ClusterScenario};
@@ -1173,6 +1248,29 @@ fn bench_cluster_cli(
     let b = run_load(addr, cfg, images)?;
     println!("  {:.0} fps, lost {}", b.throughput_per_s, b.lost);
 
+    // the router's trace ring belongs to phase B: fetch it now, before
+    // phase C's kill-window traffic cycles the ring
+    let mut trace_rows = Vec::new();
+    if cfg.trace_sample > 0 {
+        let snap = fetch_snapshot(addr)?;
+        println!(
+            "  tracing: {} sampled client-side, {} stamped answers, {} stitched in the ring",
+            b.traced_sent,
+            b.traced_answered,
+            snap.traces.len()
+        );
+        trace_rows = tinbinn::net::cluster_stage_rows(&b, &snap.traces);
+        if let Some(o) = trace_rows.iter().find(|r| r.name == "cluster_stage_overhead_p99_us") {
+            println!(
+                "  router overhead p99: {:.0}us (client p99 minus replica-service p99)",
+                o.mean_s
+            );
+        }
+        if let Some(path) = &trace_out {
+            write_trace_json(path, &snap.traces)?;
+        }
+    }
+
     // phase C: through the router again while a replica dies mid-run
     match &kill {
         Some(v) => println!("cluster phase C: killing {v} after {kill_after_ms}ms mid-run"),
@@ -1195,6 +1293,7 @@ fn bench_cluster_cli(
     );
 
     let mut rows = b.bench_rows();
+    rows.extend(trace_rows);
     tinbinn::report::bench::push_rate_row(&mut rows, "cluster_1replica", a.ok as u32, a.throughput_per_s);
     tinbinn::report::bench::push_rate_row(&mut rows, "cluster_nreplica", b.ok as u32, b.throughput_per_s);
     rows.push(row("cluster_kill_p99_us", c.ok as u32, kill_p99 as f64));

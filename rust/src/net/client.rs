@@ -181,6 +181,21 @@ impl Client {
         priority: Priority,
         deadline_budget_us: Option<u64>,
     ) -> Result<u64> {
+        self.send_with(model, image, priority, deadline_budget_us, false)
+    }
+
+    /// [`Client::send`] with the wire trace flag: a `trace: true`
+    /// request asks the server to embed its stage stamps
+    /// ([`WireTrace`](crate::net::proto::WireTrace)) in the response,
+    /// and asks a router in the path to collect a stitched trace.
+    pub fn send_with(
+        &mut self,
+        model: &str,
+        image: Vec<u8>,
+        priority: Priority,
+        deadline_budget_us: Option<u64>,
+        trace: bool,
+    ) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
         write_frame(
@@ -190,6 +205,7 @@ impl Client {
                 model: model.to_string(),
                 priority,
                 deadline_budget_us,
+                trace,
                 image,
             }),
         )?;

@@ -69,7 +69,7 @@ use crate::net::client::{Client, NetTimeouts};
 use crate::net::evloop::{ConnIo, Enqueue};
 use crate::net::proto::{ControlOp, Frame, RequestFrame, ResponseFrame, Status, RESERVED_ID};
 use crate::net::server::{Clock, FaultPlan};
-use crate::obs::{Counter, MetricsHub, ReplicaSnap, Snapshot};
+use crate::obs::{AttemptSpan, Counter, MetricsHub, ReplicaSnap, ReqTrace, Snapshot};
 use crate::util::TinError;
 use crate::Result;
 
@@ -350,6 +350,7 @@ struct ClusterStats {
     probes_failed: Counter,
     rejected_reserved: Counter,
     dropped_responses: Counter,
+    traced: Counter,
 }
 
 impl ClusterStats {
@@ -364,6 +365,7 @@ impl ClusterStats {
             probes_failed: hub.counter("cluster.probes_failed"),
             rejected_reserved: hub.counter("cluster.rejected_reserved"),
             dropped_responses: hub.counter("cluster.dropped_responses"),
+            traced: hub.counter("cluster.traced"),
         }
     }
 }
@@ -398,6 +400,11 @@ pub struct ClusterReport {
     /// (outbox full / connection gone). The answer was still produced
     /// and counted, so this too stays outside the equations.
     pub dropped_responses: u64,
+    /// Stitched traces collected for sampled requests. Every *received*
+    /// request that carried the trace flag produces exactly one trace at
+    /// its terminal answer (`Unavailable` included), so with sampling
+    /// 1-in-1 a clean run has `traced == received`.
+    pub traced: u64,
 }
 
 impl ClusterReport {
@@ -411,7 +418,7 @@ impl ClusterReport {
         format!(
             "cluster ledger: replicas={} received={} forwarded={} answered={} \
              retried_away={} failed={} probes_ok={} probes_failed={} ejections={} \
-             reinstatements={} rejected_reserved={} dropped_responses={}",
+             reinstatements={} rejected_reserved={} dropped_responses={} traced={}",
             self.replicas,
             self.received,
             self.forwarded,
@@ -424,6 +431,7 @@ impl ClusterReport {
             self.reinstatements,
             self.rejected_reserved,
             self.dropped_responses,
+            self.traced,
         )
     }
 }
@@ -442,8 +450,30 @@ struct Shared {
     /// Last successful probe round-trip per replica, µs (0 = no
     /// successful probe yet).
     probe_rtt_us: Vec<AtomicU64>,
+    /// EWMA (α = 1/8) over successful probe RTTs, µs (0 = none yet).
+    /// The last sample alone lets one fast probe mask a degrading
+    /// replica; the EWMA plus the min/max spread below keep the history
+    /// visible in the replica health rows.
+    probe_rtt_ewma_us: Vec<AtomicU64>,
+    /// Fastest successful probe RTT, µs (0 = none yet).
+    probe_rtt_min_us: Vec<AtomicU64>,
+    /// Slowest successful probe RTT, µs.
+    probe_rtt_max_us: Vec<AtomicU64>,
     clock: Arc<dyn Clock>,
     stop: AtomicBool,
+}
+
+/// Integer EWMA step with α = 1/8. `prev == 0` means "no sample yet";
+/// samples clamp to ≥ 1µs so a genuinely instant probe cannot be
+/// mistaken for the sentinel.
+fn ewma_update(prev: u64, sample: u64) -> u64 {
+    let sample = sample.max(1);
+    if prev == 0 {
+        sample
+    } else {
+        let step = (sample as i64 - prev as i64) / 8;
+        (prev as i64 + step).max(1) as u64
+    }
 }
 
 impl Shared {
@@ -469,6 +499,7 @@ impl Shared {
             reinstatements,
             rejected_reserved: self.stats.rejected_reserved.get(),
             dropped_responses: self.stats.dropped_responses.get(),
+            traced: self.stats.traced.get(),
         }
     }
 
@@ -488,6 +519,9 @@ impl Shared {
                 addr: addr.to_string(),
                 state: state.to_string(),
                 rtt_us: self.probe_rtt_us[i].load(Ordering::Relaxed),
+                rtt_ewma_us: self.probe_rtt_ewma_us[i].load(Ordering::Relaxed),
+                rtt_min_us: self.probe_rtt_min_us[i].load(Ordering::Relaxed),
+                rtt_max_us: self.probe_rtt_max_us[i].load(Ordering::Relaxed),
                 ejections: h[i].ejections,
                 reinstatements: h[i].reinstatements,
             });
@@ -517,8 +551,17 @@ pub struct ClusterRouter {
 struct FwdJob {
     conn: u64,
     req: RequestFrame,
-    resp_tx: Sender<(u64, ResponseFrame)>,
+    /// Stamp taken when the front shard decoded the frame; the
+    /// forwarder-queue wait (`fwd − admit`) is the front span of a
+    /// stitched trace.
+    admit_us: u64,
+    resp_tx: Sender<ShardResp>,
 }
+
+/// A terminal response travelling forwarder → shard, with the stitched
+/// trace of a sampled request riding along (boxed: the common untraced
+/// case should stay one pointer wide).
+type ShardResp = (u64, ResponseFrame, Option<Box<ReqTrace>>);
 
 impl ClusterRouter {
     pub fn start(
@@ -546,6 +589,9 @@ impl ClusterRouter {
             stats,
             hub,
             probe_rtt_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            probe_rtt_ewma_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            probe_rtt_min_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            probe_rtt_max_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             clock,
             stop: AtomicBool::new(false),
             cfg,
@@ -690,7 +736,16 @@ fn probe_loop(shared: &Arc<Shared>) {
             let mut h = shared.health.lock().unwrap();
             if ok {
                 shared.stats.probes_ok.inc();
-                shared.probe_rtt_us[idx].store(now.saturating_sub(t0), Ordering::Relaxed);
+                let rtt = now.saturating_sub(t0);
+                // this thread is the only writer, so load/store suffices
+                shared.probe_rtt_us[idx].store(rtt, Ordering::Relaxed);
+                let prev = shared.probe_rtt_ewma_us[idx].load(Ordering::Relaxed);
+                shared.probe_rtt_ewma_us[idx].store(ewma_update(prev, rtt), Ordering::Relaxed);
+                let min = shared.probe_rtt_min_us[idx].load(Ordering::Relaxed);
+                if min == 0 || rtt.max(1) < min {
+                    shared.probe_rtt_min_us[idx].store(rtt.max(1), Ordering::Relaxed);
+                }
+                shared.probe_rtt_max_us[idx].fetch_max(rtt.max(1), Ordering::Relaxed);
                 h[idx].on_success();
             } else {
                 shared.stats.probes_failed.inc();
@@ -740,7 +795,7 @@ fn run_front_shard(
 ) {
     let fault = shared.cfg.fault;
     let cap = shared.cfg.front_outbox_cap.max(1);
-    let (resp_tx, resp_rx) = mpsc::channel::<(u64, ResponseFrame)>();
+    let (resp_tx, resp_rx) = mpsc::channel::<ShardResp>();
     let mut conns: HashMap<u64, FrontConn> = HashMap::new();
     let mut scratch = vec![0u8; 64 * 1024];
     loop {
@@ -756,8 +811,15 @@ fn run_front_shard(
             }
         }
 
-        while let Ok((conn, resp)) = resp_rx.try_recv() {
+        while let Ok((conn, resp, trace)) = resp_rx.try_recv() {
             progress = true;
+            if let Some(mut t) = trace {
+                // relay: the response reached its front shard and is
+                // being serialized into the outbox this sweep
+                t.relay_us = shared.clock.now_us();
+                shared.stats.traced.inc();
+                shared.hub.traces.offer(*t);
+            }
             match conns.get_mut(&conn) {
                 Some(fc) => {
                     fc.pending = fc.pending.saturating_sub(1);
@@ -827,7 +889,7 @@ fn handle_front_frame(
     conn: u64,
     fc: &mut FrontConn,
     fwd_txs: &[Sender<FwdJob>],
-    resp_tx: &Sender<(u64, ResponseFrame)>,
+    resp_tx: &Sender<ShardResp>,
     shared: &Arc<Shared>,
     cap: usize,
 ) {
@@ -850,17 +912,32 @@ fn handle_front_frame(
             }
             shared.stats.received.inc();
             fc.pending += 1;
-            let job = FwdJob { conn, req, resp_tx: resp_tx.clone() };
+            let admit_us = shared.clock.now_us();
+            let job = FwdJob { conn, req, admit_us, resp_tx: resp_tx.clone() };
             let fwd = (conn as usize) % fwd_txs.len();
             if let Err(mpsc::SendError(job)) = fwd_txs[fwd].send(job) {
                 // forwarders are gone (shutdown): answer terminally here
                 fc.pending -= 1;
                 shared.stats.failed.inc();
-                let resp = ResponseFrame::status_only(
-                    job.req.id,
-                    Status::Unavailable,
-                    shared.clock.now_us(),
-                );
+                let now = shared.clock.now_us();
+                if job.req.trace {
+                    // sampled requests trace every terminal answer, even
+                    // this one, so `traced` reconciles with `received`
+                    shared.stats.traced.inc();
+                    shared.hub.traces.offer(ReqTrace {
+                        id: job.req.id,
+                        model: job.req.model.clone(),
+                        status: Status::Unavailable.as_u8(),
+                        admit_us: job.admit_us,
+                        fwd_us: now,
+                        relay_us: now,
+                        attempts: Vec::new(),
+                        replica: None,
+                        replica_addr: String::new(),
+                        offset_us: 0,
+                    });
+                }
+                let resp = ResponseFrame::status_only(job.req.id, Status::Unavailable, now);
                 if fc.io.enqueue_response(&resp, &fault, cap) == Enqueue::Dropped {
                     shared.stats.dropped_responses.inc();
                 }
@@ -901,8 +978,9 @@ fn handle_front_frame(
 fn forwarder_loop(rx: Receiver<FwdJob>, shared: Arc<Shared>) {
     let mut pool: HashMap<usize, Client> = HashMap::new();
     while let Ok(job) = rx.recv() {
-        let resp = forward_with_retries(&shared, &mut pool, &job.req);
-        if job.resp_tx.send((job.conn, resp)).is_err() {
+        let fwd_us = shared.clock.now_us();
+        let (resp, trace) = forward_with_retries(&shared, &mut pool, &job.req, job.admit_us, fwd_us);
+        if job.resp_tx.send((job.conn, resp, trace)).is_err() {
             // the owning shard exited first; the answer was produced
             // and counted, only delivery is lost
             shared.stats.dropped_responses.inc();
@@ -912,36 +990,104 @@ fn forwarder_loop(rx: Receiver<FwdJob>, shared: Arc<Shared>) {
 
 /// Forward one request, rotating over the model's owners (live ones
 /// preferred, any owner as a last resort) until a replica answers or
-/// the retry budget is spent. Always returns a terminal response.
+/// the retry budget is spent. Always returns a terminal response; for a
+/// sampled request (`req.trace`) also a stitched [`ReqTrace`] — every
+/// attempt (including failures and their backoff gaps) as a span, plus
+/// the answering replica's wire-embedded stamps with an NTP-style
+/// midpoint clock-offset estimate. `relay_us` is left 0 for the front
+/// shard to stamp when it picks the response up.
 fn forward_with_retries(
     shared: &Shared,
     pool: &mut HashMap<usize, Client>,
     req: &RequestFrame,
-) -> ResponseFrame {
+    admit_us: u64,
+    fwd_us: u64,
+) -> (ResponseFrame, Option<Box<ReqTrace>>) {
     let want = shared.cfg.replication.max(1);
     let owners = shared.ring.owners(&req.model, want);
     debug_assert!(!owners.is_empty(), "start() guarantees >= 1 replica");
     let budget = shared.cfg.retry.max_retries;
     let mut attempt: u32 = 0;
+    let mut attempts: Vec<AttemptSpan> = Vec::new();
+    let mk_trace = |status: u8,
+                        attempts: &mut Vec<AttemptSpan>,
+                        replica: Option<crate::net::proto::WireTrace>,
+                        replica_addr: String| {
+        if !req.trace {
+            return None;
+        }
+        // midpoint stitch off the answering attempt: replica_mid on the
+        // replica clock vs the send→recv mid on the router clock
+        let offset_us = match (replica, attempts.last()) {
+            (Some(w), Some(a)) => {
+                let replica_mid = (w.admitted_us as i64 + w.serialized_us as i64) / 2;
+                let router_mid = (a.sent_us as i64 + a.end_us as i64) / 2;
+                replica_mid - router_mid
+            }
+            _ => 0,
+        };
+        Some(Box::new(ReqTrace {
+            id: req.id,
+            model: req.model.clone(),
+            status,
+            admit_us,
+            fwd_us,
+            relay_us: 0,
+            attempts: std::mem::take(attempts),
+            replica,
+            replica_addr,
+            offset_us,
+        }))
+    };
     loop {
         let live: Vec<usize> = owners.iter().copied().filter(|&i| shared.is_live(i)).collect();
         let pick = if live.is_empty() { &owners } else { &live };
         let idx = pick[(req.id as usize).wrapping_add(attempt as usize) % pick.len()];
         shared.stats.forwarded.inc();
-        match try_one(shared, pool, idx, req) {
+        let start_us = shared.clock.now_us();
+        let mut sent_us = start_us;
+        match try_one(shared, pool, idx, req, &mut sent_us) {
             Ok(mut resp) => {
+                let end_us = shared.clock.now_us();
                 shared.health.lock().unwrap()[idx].on_success();
                 shared.stats.answered.inc();
                 resp.id = req.id;
-                return resp;
+                if req.trace {
+                    attempts.push(AttemptSpan {
+                        replica: shared.cfg.replicas[idx].to_string(),
+                        start_us,
+                        sent_us,
+                        end_us,
+                        ok: true,
+                    });
+                }
+                let trace = mk_trace(
+                    resp.status.as_u8(),
+                    &mut attempts,
+                    resp.trace,
+                    shared.cfg.replicas[idx].to_string(),
+                );
+                return (resp, trace);
             }
             Err(_) => {
+                let end_us = shared.clock.now_us();
+                if req.trace {
+                    attempts.push(AttemptSpan {
+                        replica: shared.cfg.replicas[idx].to_string(),
+                        start_us,
+                        sent_us,
+                        end_us,
+                        ok: false,
+                    });
+                }
                 pool.remove(&idx); // the connection is poisoned
                 let now = shared.clock.now_us();
                 shared.health.lock().unwrap()[idx].on_failure(now, &shared.cfg.probe);
                 if attempt >= budget {
                     shared.stats.failed.inc();
-                    return ResponseFrame::status_only(req.id, Status::Unavailable, now);
+                    let trace =
+                        mk_trace(Status::Unavailable.as_u8(), &mut attempts, None, String::new());
+                    return (ResponseFrame::status_only(req.id, Status::Unavailable, now), trace);
                 }
                 shared.stats.retried_away.inc();
                 attempt += 1;
@@ -953,20 +1099,30 @@ fn forward_with_retries(
 
 /// One synchronous attempt against replica `idx` over its pooled
 /// connection (dialed on demand). Any transport or protocol fault is an
-/// `Err` (→ retry path); a decoded response is an answer.
+/// `Err` (→ retry path); a decoded response is an answer. `sent_us` is
+/// stamped once the request bytes are flushed to the replica socket —
+/// the left edge of the clock-stitch window.
 fn try_one(
     shared: &Shared,
     pool: &mut HashMap<usize, Client>,
     idx: usize,
     req: &RequestFrame,
+    sent_us: &mut u64,
 ) -> Result<ResponseFrame> {
     if !pool.contains_key(&idx) {
         let c = Client::connect_with(shared.cfg.replicas[idx], shared.cfg.timeouts)?;
         pool.insert(idx, c);
     }
     let c = pool.get_mut(&idx).expect("just inserted");
-    let sent_id = c.send(&req.model, req.image.clone(), req.priority, req.deadline_budget_us)?;
+    let sent_id = c.send_with(
+        &req.model,
+        req.image.clone(),
+        req.priority,
+        req.deadline_budget_us,
+        req.trace,
+    )?;
     c.flush()?;
+    *sent_us = shared.clock.now_us();
     let resp = c.recv()?;
     if resp.id != sent_id {
         return Err(TinError::Format(format!(
@@ -1238,6 +1394,7 @@ mod tests {
             model: "m".into(),
             priority: Priority::Normal,
             deadline_budget_us: None,
+            trace: false,
             image: vec![1, 2, 3],
         };
         write_frame(&mut s, &Frame::Request(req)).unwrap();
@@ -1255,6 +1412,7 @@ mod tests {
             model: "m".into(),
             priority: Priority::Normal,
             deadline_budget_us: None,
+            trace: false,
             image: vec![1, 2, 3],
         };
         write_frame(&mut s, &Frame::Request(req)).unwrap();
@@ -1313,5 +1471,82 @@ mod tests {
         let rep = router.shutdown().unwrap();
         assert!(rep.conserved(), "{rep:?}");
         r1.shutdown().unwrap();
+    }
+
+    // -- probe rtt smoothing -----------------------------------------------
+
+    #[test]
+    fn ewma_update_smooths_and_one_fast_probe_cannot_mask_history() {
+        assert_eq!(ewma_update(0, 100), 100, "first sample seeds the ewma");
+        assert_eq!(ewma_update(0, 0), 1, "zero samples clamp above the no-sample sentinel");
+        assert_eq!(ewma_update(100, 100), 100);
+        assert_eq!(ewma_update(100, 900), 200, "steps by 1/8 of the gap");
+        assert_eq!(ewma_update(200, 100), 188, "(100-200)/8 truncates toward zero");
+        // the satellite's point: after a degraded stretch, one fast
+        // probe barely moves the smoothed value (the raw last-sample
+        // signal would have snapped straight back to "fast")
+        let mut e = 0;
+        for _ in 0..50 {
+            e = ewma_update(e, 5_000);
+        }
+        assert_eq!(e, 5_000);
+        let masked = ewma_update(e, 50);
+        assert!(masked > 4_000, "ewma {masked} must still reflect the slow history");
+    }
+
+    // -- distributed tracing -----------------------------------------------
+
+    #[test]
+    fn sampled_requests_produce_stitched_traces_with_conserved_spans() {
+        use crate::coordinator::batcher::Priority;
+
+        let r1 = mock_replica(&["m"]);
+        let r2 = mock_replica(&["m"]);
+        let cfg = fast_cfg(vec![r1.local_addr(), r2.local_addr()]);
+        let router =
+            ClusterRouter::start("127.0.0.1:0", cfg, Arc::new(MonotonicClock::new())).unwrap();
+
+        let mut c = Client::connect(router.local_addr()).unwrap();
+        c.set_recv_timeout(Some(Duration::from_secs(10))).unwrap();
+        for i in 0..5u8 {
+            let id = c.send_with("m", vec![i, 1], Priority::Normal, None, true).unwrap();
+            c.flush().unwrap();
+            let resp = c.recv().unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.status, Status::Ok);
+            let w = resp.trace.expect("sampled responses carry the wire trace block");
+            assert!(w.serialized_us >= w.admitted_us, "{w:?}");
+        }
+        let resp = c.infer("m", &[9, 9]).unwrap();
+        assert!(resp.trace.is_none(), "unsampled responses must not carry a block");
+
+        let snap = Snapshot::parse(&c.stats().unwrap()).unwrap();
+        assert_eq!(snap.counter("cluster.traced"), Some(5));
+        assert_eq!(snap.traces.len(), 5, "all five sampled traces in the ring");
+        for t in &snap.traces {
+            assert_eq!(t.status, Status::Ok.as_u8());
+            assert_eq!(t.model, "m");
+            let w = t.replica.expect("answered traces embed the replica stamps");
+            assert_eq!(t.replica_addr.parse::<SocketAddr>().unwrap().ip().to_string(), "127.0.0.1");
+            assert!(!t.attempts.is_empty());
+            for a in &t.attempts {
+                assert!(a.start_us <= a.sent_us && a.sent_us <= a.end_us, "{a:?}");
+            }
+            assert!(t.attempts.last().unwrap().ok);
+            assert!(t.admit_us <= t.fwd_us && t.fwd_us <= t.relay_us, "{t:?}");
+            assert!(w.e2e_us() > 0 || w.serialized_us == w.admitted_us);
+            assert!(
+                t.front_us() + t.forward_us() + t.replica_e2e_us() <= t.total_us(),
+                "span sum exceeds the router-observed e2e: {t:?}"
+            );
+        }
+        drop(c);
+
+        let rep = router.shutdown().unwrap();
+        assert!(rep.conserved(), "{rep:?}");
+        assert_eq!(rep.traced, 5, "{rep:?}");
+        assert_eq!(rep.received, 6);
+        r1.shutdown().unwrap();
+        r2.shutdown().unwrap();
     }
 }

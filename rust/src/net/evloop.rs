@@ -243,7 +243,37 @@ mod tests {
             status: Status::Ok,
             admitted_us: 1,
             completed_us: 2,
+            trace: None,
             scores: vec![id as i32; n_scores],
+        }
+    }
+
+    #[test]
+    fn traced_response_survives_the_outbox_roundtrip() {
+        use crate::net::proto::WireTrace;
+        let (peer, srv) = pair();
+        let mut io = ConnIo::new(srv).unwrap();
+        let mut r = resp(5, 3);
+        r.trace = Some(WireTrace {
+            admitted_us: 10,
+            enqueued_us: 11,
+            dispatched_us: 20,
+            infer_start_us: 21,
+            infer_end_us: 90,
+            serialized_us: 95,
+        });
+        assert_eq!(io.enqueue_response(&r, &FaultPlan::none(), 8), Enqueue::Answered);
+        while !io.outbox_is_empty() {
+            io.flush_writes(0);
+        }
+        let mut rd = std::io::BufReader::new(peer);
+        match read_frame(&mut rd).unwrap().unwrap() {
+            Frame::Response(rf) => {
+                assert_eq!(rf.trace, r.trace, "wire trace block must survive the outbox");
+                assert_eq!(rf.trace.unwrap().e2e_us(), 85);
+                assert_eq!(rf.scores, r.scores);
+            }
+            other => panic!("unexpected frame {other:?}"),
         }
     }
 

@@ -104,6 +104,18 @@ pub struct LoadConfig {
     /// outage swallowed still land in `lost` (never resent — the server
     /// may have scored them). `None` = legacy give-up-on-error.
     pub reconnect: Option<ReconnectPolicy>,
+    /// Trace 1-in-N requests (`--trace-sample N`): a request whose
+    /// per-connection id is a multiple of N carries the TBNP trace
+    /// flag, so the replica embeds its stage stamps in the response and
+    /// a cluster router stitches the full timeline into its trace
+    /// ring. `0` = tracing off. Sampling is deterministic — the same
+    /// config traces the same requests on every run.
+    pub trace_sample: usize,
+}
+
+/// Deterministic 1-in-N sampling decision for a request id.
+fn is_traced(cfg: &LoadConfig, id: u64) -> bool {
+    cfg.trace_sample > 0 && id % cfg.trace_sample as u64 == 0
 }
 
 /// Per-model client-observed results.
@@ -143,6 +155,12 @@ pub struct LoadReport {
     /// Requests that never got a response (receive timeout or the
     /// connection dying) — always 0 on a healthy server.
     pub lost: u64,
+    /// Requests sent with the TBNP trace flag (`trace_sample` 1-in-N
+    /// sampling) and answers that carried a trace block back. On a
+    /// clean run with a trace-aware server the two reconcile (lost or
+    /// error-status answers legitimately come back unstamped).
+    pub traced_sent: u64,
+    pub traced_answered: u64,
     pub wall_s: f64,
     pub throughput_per_s: f64,
     /// The `--qps` target of an open-loop run (`None` closed-loop).
@@ -203,8 +221,74 @@ impl LoadReport {
             rows.push(row("net_load_target_qps", 1, target));
             rows.push(row("net_load_achieved_qps", 1, self.achieved_qps));
         }
+        // trace-sampling reconciliation rows (only when sampling ran)
+        if self.traced_sent > 0 {
+            rows.push(row("net_load_traced_sent", 1, self.traced_sent as f64));
+            rows.push(row("net_load_traced_answered", 1, self.traced_answered as f64));
+        }
         rows
     }
+}
+
+/// Per-stage cluster rows (`bench-load --cluster --trace-sample N`)
+/// from the router's trace ring: exact nearest-rank percentiles over
+/// the stitched spans of every fully-traced request —
+/// `cluster_stage_{front,forward,replica_e2e}_{p50,p99}_us` — plus the
+/// router-overhead rows `cluster_stage_overhead_{p50,p99}_us`, defined
+/// as the client-observed quantile minus the replica-service quantile
+/// at the same rank (clamped at 0). Overhead is a distribution-level
+/// subtraction, not a per-request one: the load generator's ids are
+/// per-connection, so client samples and ring samples cannot be joined
+/// by id. Traces without a replica block (e.g. `Unavailable` answers)
+/// carry no stage timings and are skipped; no traces → no rows.
+pub fn cluster_stage_rows(
+    report: &LoadReport,
+    traces: &[crate::obs::ReqTrace],
+) -> Vec<BenchResult> {
+    use crate::report::bench::{percentile_us, value_row as row};
+    let mut front = Vec::new();
+    let mut forward = Vec::new();
+    let mut replica = Vec::new();
+    for t in traces {
+        if t.replica.is_none() {
+            continue;
+        }
+        front.push(t.front_us());
+        forward.push(t.forward_us());
+        replica.push(t.replica_e2e_us());
+    }
+    if front.is_empty() {
+        return Vec::new();
+    }
+    let mut lat = Histogram::new();
+    for m in &report.models {
+        lat.merge(&m.latency);
+    }
+    let n = front.len() as u32;
+    let mut rows = Vec::new();
+    let push_pair = |rows: &mut Vec<BenchResult>, name: &str, samples: &mut [u64]| -> (u64, u64) {
+        let p50 = percentile_us(samples, 0.50);
+        let p99 = percentile_us(samples, 0.99);
+        rows.push(row(format!("cluster_stage_{name}_p50_us"), n, p50 as f64));
+        rows.push(row(format!("cluster_stage_{name}_p99_us"), n, p99 as f64));
+        (p50, p99)
+    };
+    push_pair(&mut rows, "front", &mut front);
+    push_pair(&mut rows, "forward", &mut forward);
+    let (rep_p50, rep_p99) = push_pair(&mut rows, "replica_e2e", &mut replica);
+    let client_p50 = lat.p50_us() as f64;
+    let client_p99 = lat.p99_us() as f64;
+    rows.push(row(
+        "cluster_stage_overhead_p50_us",
+        report.ok as u32,
+        (client_p50 - rep_p50 as f64).max(0.0),
+    ));
+    rows.push(row(
+        "cluster_stage_overhead_p99_us",
+        report.ok as u32,
+        (client_p99 - rep_p99 as f64).max(0.0),
+    ));
+    rows
 }
 
 /// Per-stage BENCH rows (`bench-load --stage-rows`) from a server's
@@ -250,6 +334,9 @@ struct Counts {
     unknown: u64,
     busy: u64,
     unavailable: u64,
+    /// Answers that came back carrying a TBNP trace block — on a clean
+    /// run this reconciles with the sender-side `traced_sent` tally.
+    traced_answered: u64,
     latency: Histogram,
     gateway_latency: Histogram,
 }
@@ -264,12 +351,16 @@ impl Counts {
             unknown: 0,
             busy: 0,
             unavailable: 0,
+            traced_answered: 0,
             latency: Histogram::new(),
             gateway_latency: Histogram::new(),
         }
     }
 
     fn record(&mut self, resp: &ResponseFrame, client_latency_us: u64) {
+        if resp.trace.is_some() {
+            self.traced_answered += 1;
+        }
         match resp.status {
             Status::Ok => {
                 self.ok += 1;
@@ -292,6 +383,8 @@ impl Counts {
 struct ConnResult {
     per_mix: Vec<Counts>,
     lost: u64,
+    /// Requests this connection sent with the trace flag set.
+    traced_sent: u64,
     /// Seconds from `t0` until this connection's last send hit the
     /// wire (the pacing denominator — excludes the drain tail).
     send_wall_s: f64,
@@ -324,6 +417,7 @@ fn request_frame(cfg: &LoadConfig, plan: &PlanItem, id: u64, model: &str, image:
         model: model.to_string(),
         priority: if plan.low { Priority::Low } else { Priority::Normal },
         deadline_budget_us: cfg.deadline_us,
+        trace: is_traced(cfg, id),
         image,
     }
 }
@@ -369,28 +463,37 @@ fn run_conn_closed(
 
     let window = inflight.max(1).min(n.max(1));
     let mut next = 0usize;
-    let send_one = |next: &mut usize, client: &mut Client, per_mix: &mut Vec<Counts>, send_us: &mut Vec<u64>| -> Result<()> {
+    let mut traced_sent = 0u64;
+    let send_one = |next: &mut usize,
+                    traced_sent: &mut u64,
+                    client: &mut Client,
+                    per_mix: &mut Vec<Counts>,
+                    send_us: &mut Vec<u64>|
+     -> Result<()> {
         let j = *next;
         *next += 1;
         let item = &plan[j];
         let model = &cfg.mix[item.mix_idx].model;
         let pool = &images[model];
         let img = pool[j % pool.len()].clone();
+        let trace = is_traced(cfg, j as u64);
         send_us[j] = t0.elapsed().as_micros() as u64;
-        let id = client.send(
+        let id = client.send_with(
             model,
             img,
             if item.low { Priority::Low } else { Priority::Normal },
             cfg.deadline_us,
+            trace,
         )?;
         debug_assert_eq!(id as usize, j);
         client.flush()?;
         per_mix[item.mix_idx].sent += 1;
+        *traced_sent += u64::from(trace);
         Ok(())
     };
 
     for _ in 0..window {
-        send_one(&mut next, &mut client, &mut per_mix, &mut send_us)?;
+        send_one(&mut next, &mut traced_sent, &mut client, &mut per_mix, &mut send_us)?;
     }
     let mut lost = 0u64;
     let mut outstanding = window as u64;
@@ -410,7 +513,9 @@ fn run_conn_closed(
                     break; // unsent tail stays unsent: conserved either way
                 }
                 while next < n && (outstanding as usize) < window {
-                    if send_one(&mut next, &mut client, &mut per_mix, &mut send_us).is_err() {
+                    if send_one(&mut next, &mut traced_sent, &mut client, &mut per_mix, &mut send_us)
+                        .is_err()
+                    {
                         break;
                     }
                     outstanding += 1;
@@ -425,13 +530,13 @@ fn run_conn_closed(
             per_mix[plan[j].mix_idx].record(&resp, now.saturating_sub(send_us[j]));
         }
         if next < n {
-            send_one(&mut next, &mut client, &mut per_mix, &mut send_us)?;
+            send_one(&mut next, &mut traced_sent, &mut client, &mut per_mix, &mut send_us)?;
             outstanding += 1;
         }
     }
     // closed-loop sends interleave with receives to the end: the whole
     // run is the sending window
-    Ok(ConnResult { per_mix, lost, send_wall_s: t0.elapsed().as_secs_f64() })
+    Ok(ConnResult { per_mix, lost, traced_sent, send_wall_s: t0.elapsed().as_secs_f64() })
 }
 
 /// Open loop: a sender thread pacing arrivals at the target rate and a
@@ -456,7 +561,7 @@ fn run_conn_open(
 
     let plan_ref = &plan;
     let send_ref = &send_us;
-    let recv_result = std::thread::scope(|s| -> Result<(Vec<Counts>, u64, f64)> {
+    let recv_result = std::thread::scope(|s| -> Result<(Vec<Counts>, u64, u64, f64)> {
         let cfg_ref = &cfg;
         let receiver = s.spawn(move || {
             let mut r = BufReader::new(rstream);
@@ -485,6 +590,7 @@ fn run_conn_open(
         // sender: fixed arrival schedule, independent of completions
         let mut w = BufWriter::new(stream);
         let mut sent_per_mix = vec![0u64; cfg.mix.len()];
+        let mut traced_sent = 0u64;
         for (j, item) in plan.iter().enumerate() {
             // absolute deadline t0 + j/qps: pacing error cannot
             // accumulate across iterations
@@ -493,7 +599,9 @@ fn run_conn_open(
             let pool = &images[model];
             let img = pool[j % pool.len()].clone();
             send_us[j].store(t0.elapsed().as_micros() as u64, Ordering::Release);
-            write_frame(&mut w, &Frame::Request(request_frame(cfg, item, j as u64, model, img)))?;
+            let req = request_frame(cfg, item, j as u64, model, img);
+            traced_sent += u64::from(req.trace);
+            write_frame(&mut w, &Frame::Request(req))?;
             w.flush()?;
             sent_per_mix[item.mix_idx] += 1;
         }
@@ -502,10 +610,10 @@ fn run_conn_open(
         for (c, &sent) in per_mix.iter_mut().zip(&sent_per_mix) {
             c.sent = sent;
         }
-        Ok((per_mix, lost, send_wall_s))
+        Ok((per_mix, lost, traced_sent, send_wall_s))
     })?;
-    let (per_mix, lost, send_wall_s) = recv_result;
-    Ok(ConnResult { per_mix, lost, send_wall_s })
+    let (per_mix, lost, traced_sent, send_wall_s) = recv_result;
+    Ok(ConnResult { per_mix, lost, traced_sent, send_wall_s })
 }
 
 /// Run one load-generation campaign against `addr`. `images` supplies
@@ -536,6 +644,7 @@ pub fn run_load(
                     return Ok(ConnResult {
                         per_mix: cfg.mix.iter().map(|_| Counts::new()).collect(),
                         lost: 0,
+                        traced_sent: 0,
                         send_wall_s: 0.0,
                     });
                 }
@@ -556,10 +665,12 @@ pub fn run_load(
 
     let mut merged: Vec<Counts> = cfg.mix.iter().map(|_| Counts::new()).collect();
     let mut lost = 0u64;
+    let mut traced_sent = 0u64;
     let mut send_wall_s: f64 = 0.0;
     for cr in conn_results {
         let cr = cr?;
         lost += cr.lost;
+        traced_sent += cr.traced_sent;
         send_wall_s = send_wall_s.max(cr.send_wall_s);
         for (a, b) in merged.iter_mut().zip(cr.per_mix.iter()) {
             a.sent += b.sent;
@@ -569,6 +680,7 @@ pub fn run_load(
             a.unknown += b.unknown;
             a.busy += b.busy;
             a.unavailable += b.unavailable;
+            a.traced_answered += b.traced_answered;
             a.latency.merge(&b.latency);
             a.gateway_latency.merge(&b.gateway_latency);
         }
@@ -584,6 +696,8 @@ pub fn run_load(
         busy: 0,
         unavailable: 0,
         lost,
+        traced_sent,
+        traced_answered: 0,
         wall_s,
         throughput_per_s: 0.0,
         target_qps: match cfg.mode {
@@ -594,6 +708,7 @@ pub fn run_load(
     };
     for (m, c) in cfg.mix.iter().zip(merged.into_iter()) {
         report.sent += c.sent;
+        report.traced_answered += c.traced_answered;
         report.ok += c.ok;
         report.rejected += c.rejected;
         report.expired += c.expired;
@@ -833,6 +948,7 @@ mod tests {
             low_frac: 0.0,
             seed: 7,
             reconnect: None,
+            trace_sample: 0,
         };
         let mut r1 = Rng64::new(1);
         let mut r2 = Rng64::new(1);
@@ -870,6 +986,8 @@ mod tests {
             busy: 0,
             unavailable: 0,
             lost: 0,
+            traced_sent: 0,
+            traced_answered: 0,
             wall_s: 0.0,
             throughput_per_s: 0.0,
             target_qps: None,
@@ -899,6 +1017,7 @@ mod tests {
             low_frac: 0.0,
             seed: 11,
             reconnect: None,
+            trace_sample: 0,
         };
         let report = run_load(&addr, &cfg, &image_map(&["a", "b"])).unwrap();
         assert_eq!(report.sent, 48);
@@ -927,6 +1046,7 @@ mod tests {
             low_frac: 0.25,
             seed: 5,
             reconnect: None,
+            trace_sample: 0,
         };
         let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
         assert_eq!(report.sent, 32);
@@ -973,6 +1093,7 @@ mod tests {
             low_frac: 0.0,
             seed: 9,
             reconnect: None,
+            trace_sample: 0,
         };
         let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
         assert!(report.conserved());
@@ -1003,6 +1124,7 @@ mod tests {
                 low_frac: 0.0,
                 seed: 13,
                 reconnect: None,
+                trace_sample: 0,
             },
             label: "conn_scale_test_64".into(),
         };
@@ -1053,6 +1175,7 @@ mod tests {
             low_frac: 0.0,
             seed: 3,
             reconnect: None,
+            trace_sample: 0,
         };
         let scenario = ClusterScenario {
             victim: Some(victim_addr.to_string()),
@@ -1072,5 +1195,140 @@ mod tests {
         assert!(vrep.conserved(), "victim ledger broken: drain mid-load must still balance");
         let srep = survivor.shutdown().unwrap();
         assert!(srep.conserved(), "survivor ledger broken");
+    }
+
+    #[test]
+    fn trace_sampling_marks_one_in_n_and_the_report_reconciles() {
+        let srv = mock_server(&["a"]);
+        let addr = srv.local_addr().to_string();
+        let cfg = LoadConfig {
+            conns: 1,
+            requests: 32,
+            mix: parse_mix("a").unwrap(),
+            mode: LoadMode::Closed { inflight: 4 },
+            deadline_us: None,
+            low_frac: 0.0,
+            seed: 21,
+            reconnect: None,
+            trace_sample: 2,
+        };
+        let report = run_load(&addr, &cfg, &image_map(&["a"])).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.ok, 32);
+        assert!(report.conserved());
+        // ids 0..32, every even id flagged: exactly half the run
+        assert_eq!(report.traced_sent, 16);
+        assert_eq!(
+            report.traced_answered, 16,
+            "a trace-aware server must stamp every sampled request"
+        );
+        let rows = report.bench_rows();
+        assert!(rows.iter().any(|r| r.name == "net_load_traced_sent" && r.mean_s == 16.0));
+        assert!(rows.iter().any(|r| r.name == "net_load_traced_answered" && r.mean_s == 16.0));
+        // sampling off: the reconciliation rows stay out of the artifact
+        let srv_snap = srv.shutdown().unwrap();
+        assert!(srv_snap.conserved());
+        let mut quiet = report.clone();
+        quiet.traced_sent = 0;
+        assert!(!quiet.bench_rows().iter().any(|r| r.name.starts_with("net_load_traced")));
+    }
+
+    #[test]
+    fn cluster_stage_rows_subtract_replica_time_at_matching_ranks() {
+        use crate::net::proto::WireTrace;
+        use crate::obs::{AttemptSpan, ReqTrace};
+
+        // four stitched traces with identical spans: front 50µs,
+        // forward 1300−760 = 540µs, replica_e2e 760µs
+        let wire = WireTrace {
+            admitted_us: 10,
+            enqueued_us: 20,
+            dispatched_us: 100,
+            infer_start_us: 120,
+            infer_end_us: 700,
+            serialized_us: 770,
+        };
+        let mk = |k: u64| {
+            let admit = 1000 * k;
+            ReqTrace {
+                id: k,
+                model: "a".into(),
+                status: Status::Ok.as_u8(),
+                admit_us: admit,
+                fwd_us: admit + 50,
+                relay_us: admit + 1400,
+                attempts: vec![AttemptSpan {
+                    replica: "127.0.0.1:9100".into(),
+                    start_us: admit + 60,
+                    sent_us: admit + 80,
+                    end_us: admit + 1350,
+                    ok: true,
+                }],
+                replica: Some(wire),
+                replica_addr: "127.0.0.1:9100".into(),
+                offset_us: 0,
+            }
+        };
+        let mut traces: Vec<ReqTrace> = (0..4).map(mk).collect();
+        // an unstitched trace (no replica block) must be skipped
+        traces.push(ReqTrace { id: 99, model: "a".into(), ..ReqTrace::default() });
+
+        let mut lat = Histogram::new();
+        for _ in 0..4 {
+            lat.record(2000);
+        }
+        let report = LoadReport {
+            models: vec![ModelLoad {
+                name: "a".into(),
+                sent: 4,
+                ok: 4,
+                rejected: 0,
+                expired: 0,
+                unknown: 0,
+                busy: 0,
+                unavailable: 0,
+                latency: lat,
+                gateway_latency: Histogram::new(),
+                throughput_per_s: 4.0,
+            }],
+            sent: 4,
+            ok: 4,
+            rejected: 0,
+            expired: 0,
+            unknown: 0,
+            busy: 0,
+            unavailable: 0,
+            lost: 0,
+            traced_sent: 4,
+            traced_answered: 4,
+            wall_s: 1.0,
+            throughput_per_s: 4.0,
+            target_qps: None,
+            achieved_qps: 4.0,
+        };
+
+        let rows = cluster_stage_rows(&report, &traces);
+        let get = |name: &str| {
+            rows.iter()
+                .find(|r| r.name == name)
+                .unwrap_or_else(|| panic!("missing row {name}"))
+                .mean_s
+        };
+        assert_eq!(get("cluster_stage_front_p50_us"), 50.0);
+        assert_eq!(get("cluster_stage_front_p99_us"), 50.0);
+        assert_eq!(get("cluster_stage_forward_p50_us"), 540.0);
+        assert_eq!(get("cluster_stage_replica_e2e_p99_us"), 760.0);
+        // overhead = client quantile − replica quantile at the same
+        // rank: 4 samples of 2000µs give a log-bucket p50 of 1536µs
+        // and a max-clamped p99 of 2000µs
+        assert_eq!(get("cluster_stage_overhead_p50_us"), 776.0);
+        assert_eq!(get("cluster_stage_overhead_p99_us"), 1240.0);
+        // the exact-percentile rows carry the stitched sample count
+        assert!(rows
+            .iter()
+            .filter(|r| !r.name.starts_with("cluster_stage_overhead"))
+            .all(|r| r.iters == 4));
+
+        assert!(cluster_stage_rows(&report, &[]).is_empty(), "no traces, no rows");
     }
 }

@@ -36,6 +36,16 @@
 //!   kill-a-replica cluster scenario (`bench-load --cluster`), and the
 //!   connection-scale scenario (`bench-load --conn-scale`): thousands
 //!   of mostly-idle connections plus a hot subset.
+//!
+//! Cross-tier tracing rides the same wire: TBNP v2 requests carry an
+//! optional trace flag (`--trace-sample N` samples 1-in-N by id), the
+//! replica embeds its stage stamps in the response
+//! ([`proto::WireTrace`]), and the cluster router stitches the full
+//! timeline — front shard, forwarder attempts with retries, relay —
+//! into [`crate::obs::ReqTrace`] entries, exported as Chrome
+//! trace-event JSON (`tinbinn trace`) and distilled into the
+//! `cluster_stage_*` router-overhead rows
+//! ([`loadgen::cluster_stage_rows`]).
 
 pub mod client;
 pub mod cluster;
@@ -49,12 +59,12 @@ pub use cluster::{
     ClusterConfig, ClusterReport, ClusterRouter, ProbeConfig, ReplicaHealth, RetryConfig, Ring,
 };
 pub use loadgen::{
-    parse_mix, run_cluster_load, run_conn_scale, run_load, stage_bench_rows, ClusterScenario,
-    ConnScaleConfig, ConnScaleReport, LoadConfig, LoadMode, LoadReport, MixEntry,
+    cluster_stage_rows, parse_mix, run_cluster_load, run_conn_scale, run_load, stage_bench_rows,
+    ClusterScenario, ConnScaleConfig, ConnScaleReport, LoadConfig, LoadMode, LoadReport, MixEntry,
 };
 pub use proto::{
-    ControlOp, Frame, FrameAssembler, RequestFrame, ResponseFrame, Status, MAX_STATS_TEXT,
-    RESERVED_ID,
+    ControlOp, Frame, FrameAssembler, RequestFrame, ResponseFrame, Status, WireTrace,
+    MAX_STATS_TEXT, RESERVED_ID,
 };
 pub use server::{
     Clock, DrainTrigger, FaultPlan, ManualClock, MonotonicClock, NetServer, ServerConfig,

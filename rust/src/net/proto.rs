@@ -8,12 +8,19 @@
 //!
 //! | kind     | payload                                                        |
 //! |----------|----------------------------------------------------------------|
-//! | request  | id:u64, priority:u8, has_deadline:u8, deadline_budget_us:u64,  |
-//! |          | name_len:u16 + name bytes, image_len:u32 + image bytes         |
-//! | response | id:u64, status:u8, admitted_us:u64, completed_us:u64,          |
-//! |          | n_scores:u16 + n_scores x i32                                  |
+//! | request  | id:u64, priority:u8, has_deadline:u8, flags:u8,                |
+//! |          | deadline_budget_us:u64, name_len:u16 + name bytes,             |
+//! |          | image_len:u32 + image bytes                                    |
+//! | response | id:u64, status:u8, flags:u8, admitted_us:u64, completed_us:u64,|
+//! |          | [flags&TRACE: 6 x u64 stage stamps], n_scores:u16 + n x i32    |
 //! | control  | op:u8 (0 = shutdown-and-drain, 1 = ping, 2 = stats)            |
 //! | stats    | text_len:u32 + UTF-8 TBNS snapshot text (see `crate::obs`)     |
+//!
+//! The `flags` byte (v2) carries [`FLAG_TRACE`]: a client sets it on a
+//! sampled request to ask the server to embed its stage stamps
+//! ([`WireTrace`]) in the response; a server sets it on a response that
+//! carries those stamps. Unknown flag bits are a decode error — v2
+//! peers agree on the full bit vocabulary.
 //!
 //! Request id `u64::MAX` ([`RESERVED_ID`]) is **reserved**: the server
 //! answers ping control frames with a response carrying that id, so a
@@ -38,8 +45,12 @@ use crate::Result;
 
 /// Frame-body magic: `b"TBNP"` little-endian.
 pub const MAGIC: u32 = 0x504e_4254;
-/// Protocol version; bumped on any wire-format change.
-pub const VERSION: u8 = 1;
+/// Protocol version; bumped on any wire-format change. v2 added the
+/// request/response `flags` byte and the optional response trace block.
+pub const VERSION: u8 = 2;
+/// Flags bit 0: this request asks for (or this response carries) the
+/// server-side stage stamps of a sampled request.
+pub const FLAG_TRACE: u8 = 0b0000_0001;
 /// Longest model name accepted on the wire.
 pub const MAX_NAME: usize = 256;
 /// Largest image payload accepted on the wire (1 MiB; a 32x32x3 frame
@@ -132,6 +143,33 @@ pub struct RequestFrame {
     /// never expires.
     pub deadline_budget_us: Option<u64>,
     pub image: Vec<u8>,
+    /// This request is sampled for distributed tracing: the server
+    /// should embed its [`WireTrace`] stage stamps in the response.
+    pub trace: bool,
+}
+
+/// The six server-side stage stamps of one sampled request, embedded in
+/// its response when the request carried [`FLAG_TRACE`]. All stamps are
+/// microseconds on the *answering server's* monotonic clock — a reader
+/// on another clock domain may only trust durations, or must estimate
+/// the offset (see the cluster router's NTP-style stitching). The
+/// flush-to-kernel stamp cannot appear here: the response bytes are
+/// encoded when the frame is enqueued, before the socket write happens.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireTrace {
+    pub admitted_us: u64,
+    pub enqueued_us: u64,
+    pub dispatched_us: u64,
+    pub infer_start_us: u64,
+    pub infer_end_us: u64,
+    pub serialized_us: u64,
+}
+
+impl WireTrace {
+    /// Server-side end-to-end time: admission to response serialization.
+    pub fn e2e_us(&self) -> u64 {
+        self.serialized_us.saturating_sub(self.admitted_us)
+    }
 }
 
 /// One response. `admitted_us`/`completed_us` are server-side monotonic
@@ -144,12 +182,22 @@ pub struct ResponseFrame {
     pub admitted_us: u64,
     pub completed_us: u64,
     pub scores: Vec<i32>,
+    /// Stage stamps of a sampled request (the request carried
+    /// [`FLAG_TRACE`] and the server filled them in).
+    pub trace: Option<WireTrace>,
 }
 
 impl ResponseFrame {
     /// A scoreless response carrying only a status (rejection paths).
     pub fn status_only(id: u64, status: Status, now_us: u64) -> Self {
-        ResponseFrame { id, status, admitted_us: now_us, completed_us: now_us, scores: Vec::new() }
+        ResponseFrame {
+            id,
+            status,
+            admitted_us: now_us,
+            completed_us: now_us,
+            scores: Vec::new(),
+            trace: None,
+        }
     }
 }
 
@@ -257,6 +305,7 @@ pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
             put_u64(&mut out, r.id);
             out.push(priority_to_u8(r.priority));
             out.push(r.deadline_budget_us.is_some() as u8);
+            out.push(if r.trace { FLAG_TRACE } else { 0 });
             put_u64(&mut out, r.deadline_budget_us.unwrap_or(0));
             put_u16(&mut out, r.model.len() as u16);
             out.extend_from_slice(r.model.as_bytes());
@@ -273,8 +322,17 @@ pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
             out.push(KIND_RESPONSE);
             put_u64(&mut out, r.id);
             out.push(r.status.as_u8());
+            out.push(if r.trace.is_some() { FLAG_TRACE } else { 0 });
             put_u64(&mut out, r.admitted_us);
             put_u64(&mut out, r.completed_us);
+            if let Some(t) = &r.trace {
+                put_u64(&mut out, t.admitted_us);
+                put_u64(&mut out, t.enqueued_us);
+                put_u64(&mut out, t.dispatched_us);
+                put_u64(&mut out, t.infer_start_us);
+                put_u64(&mut out, t.infer_end_us);
+                put_u64(&mut out, t.serialized_us);
+            }
             put_u16(&mut out, r.scores.len() as u16);
             for s in &r.scores {
                 out.extend_from_slice(&s.to_le_bytes());
@@ -369,6 +427,10 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             let id = c.u64()?;
             let priority = priority_from_u8(c.u8()?)?;
             let has_deadline = c.u8()?;
+            let flags = c.u8()?;
+            if flags & !FLAG_TRACE != 0 {
+                return Err(TinError::Format(format!("unknown request flags {flags:#04x}")));
+            }
             let deadline_raw = c.u64()?;
             let deadline_budget_us = match has_deadline {
                 0 => None,
@@ -390,13 +452,36 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
                 return Err(TinError::Format(format!("image length {image_len} over cap")));
             }
             let image = c.take(image_len)?.to_vec();
-            Frame::Request(RequestFrame { id, model, priority, deadline_budget_us, image })
+            Frame::Request(RequestFrame {
+                id,
+                model,
+                priority,
+                deadline_budget_us,
+                image,
+                trace: flags & FLAG_TRACE != 0,
+            })
         }
         KIND_RESPONSE => {
             let id = c.u64()?;
             let status = Status::from_u8(c.u8()?)?;
+            let flags = c.u8()?;
+            if flags & !FLAG_TRACE != 0 {
+                return Err(TinError::Format(format!("unknown response flags {flags:#04x}")));
+            }
             let admitted_us = c.u64()?;
             let completed_us = c.u64()?;
+            let trace = if flags & FLAG_TRACE != 0 {
+                Some(WireTrace {
+                    admitted_us: c.u64()?,
+                    enqueued_us: c.u64()?,
+                    dispatched_us: c.u64()?,
+                    infer_start_us: c.u64()?,
+                    infer_end_us: c.u64()?,
+                    serialized_us: c.u64()?,
+                })
+            } else {
+                None
+            };
             let n = c.u16()? as usize;
             if n > MAX_SCORES {
                 return Err(TinError::Format(format!("score count {n} over cap")));
@@ -405,7 +490,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame> {
             for _ in 0..n {
                 scores.push(c.i32()?);
             }
-            Frame::Response(ResponseFrame { id, status, admitted_us, completed_us, scores })
+            Frame::Response(ResponseFrame { id, status, admitted_us, completed_us, scores, trace })
         }
         KIND_CONTROL => Frame::Control(ControlOp::from_u8(c.u8()?)?),
         KIND_STATS => {
@@ -557,6 +642,18 @@ mod tests {
             priority: Priority::High,
             deadline_budget_us: Some(1500),
             image: vec![7u8; 3072],
+            trace: false,
+        })
+    }
+
+    fn sample_traced_request() -> Frame {
+        Frame::Request(RequestFrame {
+            id: 43,
+            model: "1cat".into(),
+            priority: Priority::Normal,
+            deadline_budget_us: None,
+            image: vec![9u8; 64],
+            trace: true,
         })
     }
 
@@ -567,6 +664,25 @@ mod tests {
             admitted_us: 10,
             completed_us: 250,
             scores: vec![-5, 0, 123456, i32::MIN, i32::MAX],
+            trace: None,
+        })
+    }
+
+    fn sample_traced_response() -> Frame {
+        Frame::Response(ResponseFrame {
+            id: 43,
+            status: Status::Ok,
+            admitted_us: 10,
+            completed_us: 250,
+            scores: vec![1, 2, 3],
+            trace: Some(WireTrace {
+                admitted_us: 10,
+                enqueued_us: 11,
+                dispatched_us: 40,
+                infer_start_us: 41,
+                infer_end_us: 200,
+                serialized_us: 250,
+            }),
         })
     }
 
@@ -574,7 +690,9 @@ mod tests {
     fn roundtrips_all_kinds() {
         for f in [
             sample_request(),
+            sample_traced_request(),
             sample_response(),
+            sample_traced_response(),
             Frame::Control(ControlOp::Shutdown),
             Frame::Control(ControlOp::Ping),
             Frame::Control(ControlOp::Stats),
@@ -622,6 +740,7 @@ mod tests {
             priority: Priority::Normal,
             deadline_budget_us: None,
             image: vec![0xAB; MAX_IMAGE],
+            trace: false,
         };
         let body = encode_frame(&Frame::Request(r.clone())).unwrap();
         assert_eq!(decode_frame(&body).unwrap(), Frame::Request(r.clone()));
@@ -646,6 +765,38 @@ mod tests {
     }
 
     #[test]
+    fn rejects_unknown_flag_bits_on_both_kinds() {
+        // request flags byte sits at offset 6+8+1+1 = 16 (magic 4,
+        // version 1, kind 1, id 8, priority 1, has_deadline 1)
+        let mut bad = encode_frame(&sample_request()).unwrap();
+        bad[16] = 0x80;
+        assert!(decode_frame(&bad).is_err(), "unknown request flag bit must not decode");
+        let mut ok = encode_frame(&sample_traced_request()).unwrap();
+        assert_eq!(ok[16], FLAG_TRACE, "trace flag lands in the request flags byte");
+        ok[16] |= 0x02;
+        assert!(decode_frame(&ok).is_err(), "trace plus an unknown bit must not decode");
+        // response flags byte sits at offset 6+8+1 = 15 (id 8, status 1)
+        let mut bad = encode_frame(&sample_response()).unwrap();
+        bad[15] = 0x40;
+        assert!(decode_frame(&bad).is_err(), "unknown response flag bit must not decode");
+    }
+
+    #[test]
+    fn traced_response_block_is_exactly_48_bytes() {
+        let plain = encode_frame(&Frame::Response(ResponseFrame {
+            scores: vec![1, 2, 3],
+            trace: None,
+            ..match sample_traced_response() {
+                Frame::Response(r) => r,
+                _ => unreachable!(),
+            }
+        }))
+        .unwrap();
+        let traced = encode_frame(&sample_traced_response()).unwrap();
+        assert_eq!(traced.len(), plain.len() + 48, "six u64 stamps, nothing else");
+    }
+
+    #[test]
     fn reserved_id_status_roundtrips_on_the_wire() {
         assert_eq!(Status::ReservedId.as_u8(), 6);
         assert_eq!(Status::from_u8(6).unwrap(), Status::ReservedId);
@@ -665,7 +816,13 @@ mod tests {
 
     #[test]
     fn every_truncation_of_a_valid_body_errors_cleanly() {
-        for f in [sample_request(), sample_response(), Frame::Control(ControlOp::Shutdown)] {
+        for f in [
+            sample_request(),
+            sample_traced_request(),
+            sample_response(),
+            sample_traced_response(),
+            Frame::Control(ControlOp::Shutdown),
+        ] {
             let body = encode_frame(&f).unwrap();
             for k in 0..body.len() {
                 assert!(
@@ -720,6 +877,7 @@ mod tests {
                         Some(rng.next_u64())
                     },
                     image: (0..img_len).map(|_| rng.next_u8()).collect(),
+                    trace: rng.below(2) == 1,
                 })
             }
             1 => {
@@ -730,6 +888,18 @@ mod tests {
                     admitted_us: rng.next_u64(),
                     completed_us: rng.next_u64(),
                     scores: (0..n).map(|_| rng.next_u32() as i32).collect(),
+                    trace: if rng.below(2) == 1 {
+                        Some(WireTrace {
+                            admitted_us: rng.next_u64(),
+                            enqueued_us: rng.next_u64(),
+                            dispatched_us: rng.next_u64(),
+                            infer_start_us: rng.next_u64(),
+                            infer_end_us: rng.next_u64(),
+                            serialized_us: rng.next_u64(),
+                        })
+                    } else {
+                        None
+                    },
                 })
             }
             2 => Frame::Control(match rng.below(3) {

@@ -64,9 +64,9 @@ use crate::coordinator::pipeline::HistogramSummary;
 use crate::net::evloop::{ConnIo, Enqueue};
 use crate::net::proto::{
     encode_frame, read_frame, write_frame, ControlOp, Frame, RequestFrame, ResponseFrame, Status,
-    RESERVED_ID,
+    WireTrace, RESERVED_ID,
 };
-use crate::obs::{Counter, FlushStamp, HistHandle, MetricsHub, StageTrace};
+use crate::obs::{Counter, FlushStamp, HistHandle, MetricsHub, ReqTrace, StageTrace};
 use crate::util::TinError;
 use crate::Result;
 
@@ -388,6 +388,9 @@ struct Meta {
     enqueued_us: u64,
     /// When its batch was handed to a worker channel (0 until then).
     dispatched_us: u64,
+    /// The request carried the wire trace flag: embed the stage stamps
+    /// in its response and record it in the process trace ring.
+    traced: bool,
 }
 
 /// Per-lane serving tallies. Latency lives in the hub's per-model
@@ -469,6 +472,7 @@ fn answer_expired(
                     admitted_us: m.admitted_us,
                     completed_us: now,
                     scores: Vec::new(),
+                    trace: None,
                 },
                 wire,
                 None,
@@ -541,6 +545,7 @@ impl NetServer {
         let wire = WireStats::from_hub(&hub);
         let unknown_model_ctr = hub.counter("gateway.unknown_model");
         hub.counter("obs.stats_served");
+        hub.counter("obs.traced");
         hub.gauge("conns");
         let done = Arc::new(AtomicBool::new(false));
         let live_conns = Arc::new(AtomicU64::new(0));
@@ -792,6 +797,7 @@ impl NetServer {
                         batch_sizes: 0,
                     })
                     .collect();
+                let traced_ctr = hub.counter("obs.traced");
                 let t0_us = clock.now_us();
 
                 loop {
@@ -838,6 +844,7 @@ impl NetServer {
                                 let rid = next_rid;
                                 next_rid += 1;
                                 let client_id = frame.id;
+                                let traced = frame.trace;
                                 // the model name moves into the gateway
                                 // request; resolve its lane index first
                                 let li = lane_index.get(&frame.model).copied();
@@ -861,6 +868,7 @@ impl NetServer {
                                                 admitted_us: now,
                                                 enqueued_us: now,
                                                 dispatched_us: 0,
+                                                traced,
                                             },
                                         );
                                     }
@@ -944,6 +952,37 @@ impl NetServer {
                                         outbox_hist: lo.stage_outbox.clone(),
                                         ring: Arc::clone(&hub.slow),
                                     };
+                                    // sampled request: embed the stamps in
+                                    // the response (so the tier above can
+                                    // stitch its own spans around them) and
+                                    // keep a copy in the process trace ring
+                                    let wire_trace = if m.traced {
+                                        Some(WireTrace {
+                                            admitted_us: m.admitted_us,
+                                            enqueued_us: m.enqueued_us,
+                                            dispatched_us: m.dispatched_us,
+                                            infer_start_us,
+                                            infer_end_us,
+                                            serialized_us: now,
+                                        })
+                                    } else {
+                                        None
+                                    };
+                                    if let Some(wt) = wire_trace {
+                                        traced_ctr.inc();
+                                        hub.traces.offer(ReqTrace {
+                                            id: m.client_id,
+                                            model: lane_names[lane].clone(),
+                                            status: Status::Ok.as_u8(),
+                                            admit_us: 0,
+                                            fwd_us: 0,
+                                            relay_us: 0,
+                                            attempts: Vec::new(),
+                                            replica: Some(wt),
+                                            replica_addr: "local".to_string(),
+                                            offset_us: 0,
+                                        });
+                                    }
                                     finish(
                                         &mut conn_map,
                                         m.conn,
@@ -953,6 +992,7 @@ impl NetServer {
                                             admitted_us: m.admitted_us,
                                             completed_us: now,
                                             scores,
+                                            trace: wire_trace,
                                         },
                                         &wire,
                                         Some(stamp),
@@ -1975,6 +2015,7 @@ mod tests {
                     priority: Priority::Normal,
                     deadline_budget_us: None,
                     image: vec![1; 8],
+                    trace: false,
                 })
             };
             write_frame(&mut s, &req(RESERVED_ID)).unwrap();

@@ -34,17 +34,34 @@
 //! `stage_infer = infer_end − infer_start`, and
 //! `stage_outbox = flushed − serialized`, so by construction
 //! `stage_queue + stage_infer + stage_outbox ≤ e2e` for every trace.
+//!
+//! **Cross-tier traces.** Sampled requests (TBNP `FLAG_TRACE`) produce a
+//! stitched [`ReqTrace`]: the answering replica's wire-embedded
+//! [`WireTrace`] wrapped in the router's own spans (front admit,
+//! forwarder queue, per-attempt dial/send/recv, relay). The most recent
+//! [`TRACE_RING_CAP`] land in the hub's [`TraceRing`], ride the TBNS
+//! `trace` section, and export as Chrome trace-event JSON
+//! ([`chrome_trace_json`]) loadable in Perfetto / `chrome://tracing`.
+//! Replica stamps are on the replica's clock; [`ReqTrace::offset_us`]
+//! is an NTP-style midpoint estimate from the answering attempt's
+//! send/recv stamps — an *estimate*, good to about half the network
+//! round-trip, never a measured clock difference.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::metrics::Histogram;
+use crate::net::proto::WireTrace;
+use crate::util_json::Json;
 use crate::{Result, TinError};
 
 /// TBNS text-snapshot major version carried on the wire.
 pub const TBNS_VERSION: u32 = 1;
 /// Worst-N slow-request ring capacity used by the servers.
 pub const SLOW_RING_CAP: usize = 32;
+/// Most-recent-N stitched cross-tier traces kept per process.
+pub const TRACE_RING_CAP: usize = 256;
 /// Series registered per served model: 4 counters
 /// (submitted/completed/rejected/expired) + 4 histograms
 /// (e2e, stage_queue, stage_infer, stage_outbox).
@@ -61,6 +78,16 @@ pub fn describe_build() -> String {
         "obs: tbns v{TBNS_VERSION}, {SERIES_PER_MODEL} series/model + {GLOBAL_SERIES} global, \
          slow-ring cap {SLOW_RING_CAP}, stamps from the injected Clock \
          (serve default: monotonic std::time::Instant)"
+    )
+}
+
+/// One line for `tinbinn info`: pins the trace-plane build facts.
+/// `proto_version` is passed in (rather than imported) so this module
+/// states exactly what the caller links against.
+pub fn describe_trace_build(proto_version: u32) -> String {
+    format!(
+        "trace: tbnp v{proto_version} wire trace block, trace-ring cap {TRACE_RING_CAP}, \
+         sampling default off (--trace-sample N traces 1-in-N by request id)"
     )
 }
 
@@ -228,6 +255,8 @@ pub struct MetricsHub {
     /// Worst-N end-to-end stage traces, dumped at drain. Shared so
     /// [`FlushStamp`]s riding connection outboxes can offer traces.
     pub slow: Arc<SlowRing>,
+    /// Most-recent-N stitched cross-tier traces for sampled requests.
+    pub traces: Arc<TraceRing>,
 }
 
 impl MetricsHub {
@@ -235,6 +264,7 @@ impl MetricsHub {
         MetricsHub {
             inner: Mutex::new(HubInner::default()),
             slow: Arc::new(SlowRing::new(SLOW_RING_CAP)),
+            traces: Arc::new(TraceRing::new(TRACE_RING_CAP)),
         }
     }
 
@@ -283,6 +313,8 @@ impl MetricsHub {
             gauges: inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect(),
             hists: inner.hists.iter().map(|(n, h)| (n.clone(), h.snap())).collect(),
             replicas: Vec::new(),
+            slow: self.slow.dump(),
+            traces: self.traces.dump(),
         }
     }
 }
@@ -295,6 +327,13 @@ pub struct ReplicaSnap {
     pub state: String,
     /// Last successful probe round-trip time.
     pub rtt_us: u64,
+    /// EWMA (α = 1/8) over successful probe RTTs — smooths the one-fast-
+    /// probe-masks-a-degrading-replica failure mode of `rtt_us` alone.
+    pub rtt_ewma_us: u64,
+    /// Fastest successful probe RTT seen so far.
+    pub rtt_min_us: u64,
+    /// Slowest successful probe RTT seen so far.
+    pub rtt_max_us: u64,
     pub ejections: u64,
     pub reinstatements: u64,
 }
@@ -306,6 +345,10 @@ pub struct Snapshot {
     pub gauges: Vec<(String, i64)>,
     pub hists: Vec<(String, HistSnap)>,
     pub replicas: Vec<ReplicaSnap>,
+    /// Worst-N stage traces from the slow ring at snapshot time.
+    pub slow: Vec<StageTrace>,
+    /// Most recent stitched cross-tier traces at snapshot time.
+    pub traces: Vec<ReqTrace>,
 }
 
 impl Snapshot {
@@ -359,6 +402,10 @@ impl Snapshot {
                 })
                 .collect(),
             replicas: self.replicas.clone(),
+            // Rings are point-in-time views, not monotone series: the
+            // window keeps the later state, like gauges and replica rows.
+            slow: self.slow.clone(),
+            traces: self.traces.clone(),
         }
     }
 
@@ -382,6 +429,9 @@ impl Snapshot {
                 None => self.hists.push((n.clone(), h.clone())),
             }
         }
+        // Point-in-time sections: latest wins, like gauges.
+        self.slow = delta.slow.clone();
+        self.traces = delta.traces.clone();
     }
 
     /// Render as TBNS/1 text (the payload of a TBNP `Stats` frame).
@@ -408,9 +458,35 @@ impl Snapshot {
         }
         for r in &self.replicas {
             out.push_str(&format!(
-                "replica {} state {} rtt_us {} ejections {} reinstatements {}\n",
-                r.addr, r.state, r.rtt_us, r.ejections, r.reinstatements
+                "replica {} state {} rtt_us {} rtt_ewma_us {} rtt_min_us {} rtt_max_us {} \
+                 ejections {} reinstatements {}\n",
+                r.addr,
+                r.state,
+                r.rtt_us,
+                r.rtt_ewma_us,
+                r.rtt_min_us,
+                r.rtt_max_us,
+                r.ejections,
+                r.reinstatements
             ));
+        }
+        for t in &self.slow {
+            out.push_str(&format!(
+                "slow {} id {} stamps {},{},{},{},{},{},{}\n",
+                token(&t.model),
+                t.id,
+                t.admitted_us,
+                t.enqueued_us,
+                t.dispatched_us,
+                t.infer_start_us,
+                t.infer_end_us,
+                t.serialized_us,
+                t.flushed_us
+            ));
+        }
+        for t in &self.traces {
+            out.push_str(&t.render_line());
+            out.push('\n');
         }
         out.push_str("end tbns\n");
         out
@@ -493,6 +569,9 @@ impl Snapshot {
                         addr: addr.to_string(),
                         state: "up".to_string(),
                         rtt_us: 0,
+                        rtt_ewma_us: 0,
+                        rtt_min_us: 0,
+                        rtt_max_us: 0,
                         ejections: 0,
                         reinstatements: 0,
                     };
@@ -503,6 +582,9 @@ impl Snapshot {
                         match rest[i] {
                             "state" => r.state = val.to_string(),
                             "rtt_us" => r.rtt_us = parse_u64(val, line)?,
+                            "rtt_ewma_us" => r.rtt_ewma_us = parse_u64(val, line)?,
+                            "rtt_min_us" => r.rtt_min_us = parse_u64(val, line)?,
+                            "rtt_max_us" => r.rtt_max_us = parse_u64(val, line)?,
                             "ejections" => r.ejections = parse_u64(val, line)?,
                             "reinstatements" => r.reinstatements = parse_u64(val, line)?,
                             _ => {}
@@ -510,6 +592,42 @@ impl Snapshot {
                         i += 2;
                     }
                     snap.replicas.push(r);
+                }
+                Some("slow") => {
+                    let model = it
+                        .next()
+                        .ok_or_else(|| TinError::Format(format!("bad slow line: {line:?}")))?;
+                    let mut t = StageTrace { model: untoken(model), ..Default::default() };
+                    let rest: Vec<&str> = it.collect();
+                    let mut i = 0;
+                    while i < rest.len() {
+                        let val = *rest.get(i + 1).unwrap_or(&"");
+                        match rest[i] {
+                            "id" => t.id = parse_u64(val, line)?,
+                            "stamps" => {
+                                let mut stamps = [0u64; 7];
+                                for (si, tok) in val.split(',').enumerate() {
+                                    if si >= 7 {
+                                        break;
+                                    }
+                                    stamps[si] = parse_u64(tok, line)?;
+                                }
+                                t.admitted_us = stamps[0];
+                                t.enqueued_us = stamps[1];
+                                t.dispatched_us = stamps[2];
+                                t.infer_start_us = stamps[3];
+                                t.infer_end_us = stamps[4];
+                                t.serialized_us = stamps[5];
+                                t.flushed_us = stamps[6];
+                            }
+                            _ => {}
+                        }
+                        i += 2;
+                    }
+                    snap.slow.push(t);
+                }
+                Some("trace") => {
+                    snap.traces.push(ReqTrace::parse_line(line)?);
                 }
                 _ => {} // forward compatibility: unknown keywords skipped
             }
@@ -524,6 +642,413 @@ impl Snapshot {
 fn parse_u64(tok: &str, line: &str) -> Result<u64> {
     tok.parse::<u64>()
         .map_err(|_| TinError::Format(format!("bad number {tok:?} in tbns line {line:?}")))
+}
+
+fn parse_i64(tok: &str, line: &str) -> Result<i64> {
+    tok.parse::<i64>()
+        .map_err(|_| TinError::Format(format!("bad number {tok:?} in tbns line {line:?}")))
+}
+
+/// TBNS tokens are whitespace-delimited; an empty string would shift
+/// every following key/value pair, so empties render as "-".
+fn token(s: &str) -> &str {
+    if s.is_empty() {
+        "-"
+    } else {
+        s
+    }
+}
+
+fn untoken(s: &str) -> String {
+    if s == "-" {
+        String::new()
+    } else {
+        s.to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stitched cross-tier traces + the trace ring
+// ---------------------------------------------------------------------------
+
+/// One forwarding attempt by the router, stamped on the router's clock.
+/// Retries and their backoff gaps become visible as sibling spans.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AttemptSpan {
+    /// Replica address this attempt dialed.
+    pub replica: String,
+    /// Attempt picked up (dial starts here on a cold pool).
+    pub start_us: u64,
+    /// Request bytes flushed to the replica socket.
+    pub sent_us: u64,
+    /// Response received (or the attempt failed) — end of the span.
+    pub end_us: u64,
+    pub ok: bool,
+}
+
+/// A stitched cross-tier request timeline: the router's own spans
+/// (`admit_us` → `fwd_us` → attempts → `relay_us`, all on the router
+/// clock) wrapping the answering replica's wire-embedded [`WireTrace`]
+/// (replica clock). `offset_us` bridges the two domains:
+/// `router_time ≈ replica_time − offset_us`, estimated NTP-style from
+/// the answering attempt's send/recv midpoint — an estimate good to
+/// about half the network round-trip, not a measured clock difference.
+///
+/// A standalone replica offers its own traces with the router fields
+/// zeroed (`attempts` empty, `replica_addr` = "local", offset 0).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReqTrace {
+    pub id: u64,
+    pub model: String,
+    /// Final `proto::Status` byte relayed to the client.
+    pub status: u8,
+    /// Request frame decoded by the front shard.
+    pub admit_us: u64,
+    /// Forwarder dequeued the job (front queue wait = fwd − admit).
+    pub fwd_us: u64,
+    /// Response handed back to the front shard for serialize + flush.
+    pub relay_us: u64,
+    pub attempts: Vec<AttemptSpan>,
+    /// The answering replica's stage stamps (replica clock domain).
+    pub replica: Option<WireTrace>,
+    /// Address of the replica that answered ("" if none did).
+    pub replica_addr: String,
+    /// Clock-stitch estimate: `replica_clock − router_clock`.
+    pub offset_us: i64,
+}
+
+impl ReqTrace {
+    /// Front-shard span: decode + admission + forwarder queue wait.
+    pub fn front_us(&self) -> u64 {
+        self.fwd_us.saturating_sub(self.admit_us)
+    }
+
+    /// The answering replica's own end-to-end service time.
+    pub fn replica_e2e_us(&self) -> u64 {
+        self.replica.map(|r| r.e2e_us()).unwrap_or(0)
+    }
+
+    /// Forwarding overhead on the router clock: dial + send + recv +
+    /// retries + backoff, *excluding* the replica's own service time so
+    /// `front + forward + replica_e2e` never double-counts.
+    pub fn forward_us(&self) -> u64 {
+        let end = self.attempts.last().map(|a| a.end_us).unwrap_or(self.relay_us);
+        end.saturating_sub(self.fwd_us).saturating_sub(self.replica_e2e_us())
+    }
+
+    /// Router-observed end-to-end time (admit → relay). The client sees
+    /// this plus both wire transits, so for every stitched trace
+    /// `front + forward + replica_e2e ≤ total ≤ client e2e`.
+    pub fn total_us(&self) -> u64 {
+        self.relay_us.saturating_sub(self.admit_us)
+    }
+
+    /// Router overhead: everything the cluster tier adds on top of the
+    /// replica's own service time.
+    pub fn overhead_us(&self) -> u64 {
+        self.total_us().saturating_sub(self.replica_e2e_us())
+    }
+
+    /// Render as one TBNS `trace` line. Attempts pack as
+    /// `addr~start~sent~end~ok` joined by `;`; the wire block as six
+    /// comma-separated stamps, or `none`.
+    pub fn render_line(&self) -> String {
+        let wire = match &self.replica {
+            Some(w) => format!(
+                "{},{},{},{},{},{}",
+                w.admitted_us,
+                w.enqueued_us,
+                w.dispatched_us,
+                w.infer_start_us,
+                w.infer_end_us,
+                w.serialized_us
+            ),
+            None => "none".to_string(),
+        };
+        let attempts = if self.attempts.is_empty() {
+            "none".to_string()
+        } else {
+            let specs: Vec<String> = self
+                .attempts
+                .iter()
+                .map(|a| {
+                    format!(
+                        "{}~{}~{}~{}~{}",
+                        token(&a.replica),
+                        a.start_us,
+                        a.sent_us,
+                        a.end_us,
+                        u8::from(a.ok)
+                    )
+                })
+                .collect();
+            specs.join(";")
+        };
+        format!(
+            "trace {} model {} status {} admit_us {} fwd_us {} relay_us {} offset_us {} \
+             replica_addr {} wire {} attempts {}",
+            self.id,
+            token(&self.model),
+            self.status,
+            self.admit_us,
+            self.fwd_us,
+            self.relay_us,
+            self.offset_us,
+            token(&self.replica_addr),
+            wire,
+            attempts
+        )
+    }
+
+    /// Parse a TBNS `trace` line (the inverse of [`Self::render_line`]).
+    /// Unknown keys are skipped, like every other TBNS line.
+    pub fn parse_line(line: &str) -> Result<ReqTrace> {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("trace") => {}
+            _ => return Err(TinError::Format(format!("not a trace line: {line:?}"))),
+        }
+        let id = it
+            .next()
+            .ok_or_else(|| TinError::Format(format!("bad trace line: {line:?}")))?;
+        let mut t = ReqTrace { id: parse_u64(id, line)?, ..Default::default() };
+        let rest: Vec<&str> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let val = *rest.get(i + 1).unwrap_or(&"");
+            match rest[i] {
+                "model" => t.model = untoken(val),
+                "status" => t.status = parse_u64(val, line)? as u8,
+                "admit_us" => t.admit_us = parse_u64(val, line)?,
+                "fwd_us" => t.fwd_us = parse_u64(val, line)?,
+                "relay_us" => t.relay_us = parse_u64(val, line)?,
+                "offset_us" => t.offset_us = parse_i64(val, line)?,
+                "replica_addr" => t.replica_addr = untoken(val),
+                "wire" if val != "none" => {
+                    let mut s = [0u64; 6];
+                    for (si, tok) in val.split(',').enumerate() {
+                        if si >= 6 {
+                            break;
+                        }
+                        s[si] = parse_u64(tok, line)?;
+                    }
+                    t.replica = Some(WireTrace {
+                        admitted_us: s[0],
+                        enqueued_us: s[1],
+                        dispatched_us: s[2],
+                        infer_start_us: s[3],
+                        infer_end_us: s[4],
+                        serialized_us: s[5],
+                    });
+                }
+                "attempts" if val != "none" => {
+                    for spec in val.split(';') {
+                        let f: Vec<&str> = spec.split('~').collect();
+                        if f.len() != 5 {
+                            return Err(TinError::Format(format!(
+                                "bad attempt spec {spec:?} in {line:?}"
+                            )));
+                        }
+                        t.attempts.push(AttemptSpan {
+                            replica: untoken(f[0]),
+                            start_us: parse_u64(f[1], line)?,
+                            sent_us: parse_u64(f[2], line)?,
+                            end_us: parse_u64(f[3], line)?,
+                            ok: f[4] == "1",
+                        });
+                    }
+                }
+                _ => {}
+            }
+            i += 2;
+        }
+        Ok(t)
+    }
+}
+
+/// Most-recent-N ring of stitched traces plus a monotone total, so
+/// ledger reconciliation works even after the ring wraps: the counter
+/// holds the true number of traces ever offered, the ring the last
+/// `cap` of them.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    total: AtomicU64,
+    inner: Mutex<VecDeque<ReqTrace>>,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new(TRACE_RING_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { cap, total: AtomicU64::new(0), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Traces ever offered (monotone; survives ring wrap).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn offer(&self, t: ReqTrace) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        if self.cap == 0 {
+            return;
+        }
+        let mut v = self.inner.lock().unwrap();
+        if v.len() == self.cap {
+            v.pop_front();
+        }
+        v.push_back(t);
+    }
+
+    /// Kept traces, oldest first.
+    pub fn dump(&self) -> Vec<ReqTrace> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Export stitched traces as Chrome trace-event JSON (the object form,
+/// `{"traceEvents": [...]}`), loadable in Perfetto or `chrome://tracing`.
+///
+/// Layout: each trace gets its own lane (`tid` = index, so colliding
+/// request ids from different connections never stack), router spans
+/// under pid 1 ("router") and replica spans under pid 2 ("replica").
+/// Replica stamps are shifted into the router clock domain by
+/// `offset_us` — an estimate (see [`ReqTrace`]), which is why replica
+/// spans live in their own process row rather than nested inside the
+/// attempt span: a drifted estimate must not produce malformed nesting.
+/// Within each row, spans nest by construction.
+pub fn chrome_trace_json(traces: &[ReqTrace]) -> String {
+    use std::collections::HashMap;
+    let ev = |name: &str, pid: u64, tid: u64, ts: u64, dur: u64, args: Json| {
+        let mut m = HashMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("pid".to_string(), Json::Num(pid as f64));
+        m.insert("tid".to_string(), Json::Num(tid as f64));
+        m.insert("ts".to_string(), Json::Num(ts as f64));
+        m.insert("dur".to_string(), Json::Num(dur as f64));
+        m.insert("args".to_string(), args);
+        Json::Obj(m)
+    };
+    let meta = |name: &str, pid: u64, label: &str| {
+        let mut args = HashMap::new();
+        args.insert("name".to_string(), Json::Str(label.to_string()));
+        let mut m = HashMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("ph".to_string(), Json::Str("M".to_string()));
+        m.insert("pid".to_string(), Json::Num(pid as f64));
+        m.insert("tid".to_string(), Json::Num(0.0));
+        m.insert("args".to_string(), Json::Obj(args));
+        Json::Obj(m)
+    };
+    let mut events = vec![
+        meta("process_name", 1, "tinbinn router"),
+        meta("process_name", 2, "tinbinn replica"),
+    ];
+    for (i, t) in traces.iter().enumerate() {
+        let tid = i as u64;
+        let label = |what: &str| format!("{what} (id {} {})", t.id, t.model);
+        let mut args = HashMap::new();
+        args.insert("status".to_string(), Json::Num(t.status as f64));
+        args.insert("replica".to_string(), Json::Str(t.replica_addr.clone()));
+        args.insert("offset_us".to_string(), Json::Num(t.offset_us as f64));
+        // Router spans (router clock). A standalone replica's own trace
+        // has no router tier: admit == relay == 0 and no attempts.
+        if t.relay_us > t.admit_us || !t.attempts.is_empty() {
+            events.push(ev(&label("request"), 1, tid, t.admit_us, t.total_us(), Json::Obj(args)));
+            events.push(ev("front", 1, tid, t.admit_us, t.front_us(), Json::Obj(HashMap::new())));
+            for (ai, a) in t.attempts.iter().enumerate() {
+                let mut aa = HashMap::new();
+                aa.insert("replica".to_string(), Json::Str(a.replica.clone()));
+                aa.insert("ok".to_string(), Json::Bool(a.ok));
+                aa.insert(
+                    "send_us".to_string(),
+                    Json::Num(a.sent_us.saturating_sub(a.start_us) as f64),
+                );
+                events.push(ev(
+                    &format!("attempt {ai}"),
+                    1,
+                    tid,
+                    a.start_us,
+                    a.end_us.saturating_sub(a.start_us),
+                    Json::Obj(aa),
+                ));
+            }
+            if let Some(last) = t.attempts.last() {
+                events.push(ev(
+                    "relay",
+                    1,
+                    tid,
+                    last.end_us,
+                    t.relay_us.saturating_sub(last.end_us),
+                    Json::Obj(HashMap::new()),
+                ));
+            }
+        }
+        // Replica spans, shifted into the router clock domain.
+        if let Some(w) = &t.replica {
+            let shift = |us: u64| (us as i64).saturating_sub(t.offset_us).max(0) as u64;
+            let mut wa = HashMap::new();
+            wa.insert("clock".to_string(), Json::Str("replica, offset-stitched".to_string()));
+            events.push(ev(
+                &label("replica_e2e"),
+                2,
+                tid,
+                shift(w.admitted_us),
+                w.e2e_us(),
+                Json::Obj(wa),
+            ));
+            events.push(ev(
+                "queue",
+                2,
+                tid,
+                shift(w.enqueued_us),
+                w.infer_start_us.saturating_sub(w.enqueued_us),
+                Json::Obj(HashMap::new()),
+            ));
+            events.push(ev(
+                "infer",
+                2,
+                tid,
+                shift(w.infer_start_us),
+                w.infer_end_us.saturating_sub(w.infer_start_us),
+                Json::Obj(HashMap::new()),
+            ));
+            events.push(ev(
+                "serialize",
+                2,
+                tid,
+                shift(w.infer_end_us),
+                w.serialized_us.saturating_sub(w.infer_end_us),
+                Json::Obj(HashMap::new()),
+            ));
+        }
+    }
+    let mut doc = HashMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc).render()
 }
 
 // ---------------------------------------------------------------------------
@@ -727,8 +1252,26 @@ pub fn render_top(prev: &Snapshot, cur: &Snapshot, interval_s: f64) -> String {
     }
     for r in &cur.replicas {
         out.push_str(&format!(
-            "replica {:<21} {:<9} rtt {:>6}us  ejections {}  reinstatements {}\n",
-            r.addr, r.state, r.rtt_us, r.ejections, r.reinstatements
+            "replica {:<21} {:<9} rtt {:>6}us ewma {:>6}us min {:>6}us max {:>6}us  \
+             ejections {}  reinstatements {}\n",
+            r.addr, r.state, r.rtt_us, r.rtt_ewma_us, r.rtt_min_us, r.rtt_max_us,
+            r.ejections, r.reinstatements
+        ));
+    }
+    if !cur.slow.is_empty() {
+        out.push_str("slow requests (worst kept by the ring):\n");
+        for t in cur.slow.iter().take(5) {
+            out.push_str(&format!("  {}\n", t.summary_line()));
+        }
+    }
+    if !cur.traces.is_empty() {
+        out.push_str(&format!(
+            "traces: {} stitched in ring; latest overhead {}us (front {}us forward {}us replica {}us)\n",
+            cur.traces.len(),
+            cur.traces.last().map(|t| t.overhead_us()).unwrap_or(0),
+            cur.traces.last().map(|t| t.front_us()).unwrap_or(0),
+            cur.traces.last().map(|t| t.forward_us()).unwrap_or(0),
+            cur.traces.last().map(|t| t.replica_e2e_us()).unwrap_or(0)
         ));
     }
     out
@@ -771,6 +1314,9 @@ mod tests {
             addr: "127.0.0.1:9100".into(),
             state: "probation".into(),
             rtt_us: 88,
+            rtt_ewma_us: 104,
+            rtt_min_us: 61,
+            rtt_max_us: 240,
             ejections: 2,
             reinstatements: 1,
         });
@@ -924,5 +1470,213 @@ mod tests {
         assert!(d.contains("tbns v1"));
         assert!(d.contains(&format!("slow-ring cap {SLOW_RING_CAP}")));
         assert!(d.contains("Clock"));
+        let t = describe_trace_build(2);
+        assert!(t.contains("tbnp v2"));
+        assert!(t.contains(&format!("trace-ring cap {TRACE_RING_CAP}")));
+        assert!(t.contains("--trace-sample"));
+    }
+
+    fn sample_req_trace() -> ReqTrace {
+        ReqTrace {
+            id: 42,
+            model: "mnist".into(),
+            status: 0,
+            admit_us: 1_000,
+            fwd_us: 1_050,
+            relay_us: 2_400,
+            attempts: vec![
+                AttemptSpan {
+                    replica: "127.0.0.1:9100".into(),
+                    start_us: 1_060,
+                    sent_us: 1_070,
+                    end_us: 1_200,
+                    ok: false,
+                },
+                AttemptSpan {
+                    replica: "127.0.0.1:9101".into(),
+                    start_us: 1_400,
+                    sent_us: 1_410,
+                    end_us: 2_350,
+                    ok: true,
+                },
+            ],
+            replica: Some(WireTrace {
+                admitted_us: 500_020,
+                enqueued_us: 500_030,
+                dispatched_us: 500_100,
+                infer_start_us: 500_120,
+                infer_end_us: 500_700,
+                serialized_us: 500_780,
+            }),
+            replica_addr: "127.0.0.1:9101".into(),
+            // replica_mid − router_mid = 500_400 − 1_880
+            offset_us: 498_520,
+        }
+    }
+
+    #[test]
+    fn req_trace_span_math_is_consistent_and_conserving() {
+        let t = sample_req_trace();
+        assert_eq!(t.front_us(), 50);
+        assert_eq!(t.replica_e2e_us(), 760);
+        // forward = (2350 − 1050) − 760: retries + backoff + both transits
+        assert_eq!(t.forward_us(), 540);
+        assert_eq!(t.total_us(), 1_400);
+        assert_eq!(t.overhead_us(), 640);
+        assert!(
+            t.front_us() + t.forward_us() + t.replica_e2e_us() <= t.total_us(),
+            "span sum must never exceed the router-observed e2e"
+        );
+    }
+
+    #[test]
+    fn trace_line_roundtrips_through_tbns_including_edge_tokens() {
+        let full = sample_req_trace();
+        let unanswered = ReqTrace {
+            id: 7,
+            model: String::new(), // empty model must survive tokenization
+            status: 5,
+            admit_us: 10,
+            fwd_us: 20,
+            relay_us: 90,
+            attempts: vec![AttemptSpan {
+                replica: "127.0.0.1:9100".into(),
+                start_us: 25,
+                sent_us: 30,
+                end_us: 80,
+                ok: false,
+            }],
+            replica: None,
+            replica_addr: String::new(),
+            offset_us: -15,
+        };
+        let local = ReqTrace {
+            id: 3,
+            model: "cifar".into(),
+            replica: Some(WireTrace::default()),
+            replica_addr: "local".into(),
+            ..Default::default()
+        };
+        for t in [full, unanswered, local] {
+            let line = t.render_line();
+            assert!(!line.contains('\n'));
+            let back = ReqTrace::parse_line(&line).unwrap();
+            assert_eq!(back, t, "trace line failed to roundtrip: {line}");
+        }
+        // and through a full snapshot render/parse
+        let mut snap = Snapshot::default();
+        snap.traces.push(sample_req_trace());
+        snap.slow.push(StageTrace {
+            model: "mnist".into(),
+            id: 9,
+            admitted_us: 1,
+            enqueued_us: 2,
+            dispatched_us: 3,
+            infer_start_us: 4,
+            infer_end_us: 5,
+            serialized_us: 6,
+            flushed_us: 7,
+        });
+        let back = Snapshot::parse(&snap.render()).unwrap();
+        assert_eq!(back.traces, snap.traces);
+        assert_eq!(back.slow, snap.slow);
+        assert!(ReqTrace::parse_line("counter a 1").is_err());
+        assert!(ReqTrace::parse_line("trace 1 attempts a~b").is_err());
+    }
+
+    #[test]
+    fn trace_ring_keeps_most_recent_cap_and_a_monotone_total() {
+        let ring = TraceRing::new(4);
+        assert!(ring.is_empty());
+        for id in 0..10u64 {
+            ring.offer(ReqTrace { id, ..Default::default() });
+        }
+        assert_eq!(ring.total(), 10, "total survives ring wrap");
+        assert_eq!(ring.len(), 4);
+        let ids: Vec<u64> = ring.dump().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "most recent, oldest first");
+        assert_eq!(ring.capacity(), 4);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_nesting_spans() {
+        let text = chrome_trace_json(&[sample_req_trace()]);
+        let doc = crate::util_json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process_name metadata + request/front/2 attempts/relay +
+        // replica_e2e/queue/infer/serialize
+        assert_eq!(events.len(), 11);
+        // every X span nests inside its row's enclosing span
+        let span = |e: &Json| -> (u64, u64, u64, u64) {
+            let num = |k: &str| e.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            (num("pid"), num("tid"), num("ts"), num("dur"))
+        };
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        for pid in [1u64, 2] {
+            let rows: Vec<(u64, u64, u64, u64)> =
+                xs.iter().map(|e| span(e)).filter(|s| s.0 == pid).collect();
+            let (root_ts, root_end) = rows
+                .iter()
+                .fold((u64::MAX, 0), |(lo, hi), s| (lo.min(s.2), hi.max(s.2 + s.3)));
+            for s in &rows {
+                assert!(
+                    s.2 >= root_ts && s.2 + s.3 <= root_end,
+                    "span {s:?} escapes pid {pid} envelope [{root_ts}, {root_end}]"
+                );
+            }
+        }
+        // replica spans were shifted into the router clock domain
+        let replica_rows: Vec<(u64, u64, u64, u64)> =
+            xs.iter().map(|e| span(e)).filter(|s| s.0 == 2).collect();
+        assert!(!replica_rows.is_empty());
+        for s in &replica_rows {
+            assert!(s.2 < 10_000, "replica ts {s:?} should be near router time after stitching");
+        }
+        // a local (router-less) trace exports only replica spans
+        let local = ReqTrace {
+            id: 3,
+            replica: Some(WireTrace::default()),
+            replica_addr: "local".into(),
+            ..Default::default()
+        };
+        let text = chrome_trace_json(&[local]);
+        let doc = crate::util_json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .all(|e| e.get("pid").and_then(|v| v.as_f64()) == Some(2.0)));
+    }
+
+    #[test]
+    fn top_rendering_includes_slow_panel_and_replica_ewma() {
+        let hub = MetricsHub::new();
+        hub.slow.offer(StageTrace {
+            model: "m".into(),
+            id: 77,
+            admitted_us: 0,
+            flushed_us: 9_000,
+            ..Default::default()
+        });
+        hub.traces.offer(sample_req_trace());
+        let mut cur = hub.snapshot();
+        cur.replicas.push(ReplicaSnap {
+            addr: "127.0.0.1:9100".into(),
+            state: "up".into(),
+            rtt_us: 80,
+            rtt_ewma_us: 120,
+            rtt_min_us: 60,
+            rtt_max_us: 900,
+            ejections: 0,
+            reinstatements: 0,
+        });
+        let view = render_top(&Snapshot::default(), &cur, 1.0);
+        assert!(view.contains("slow requests"), "{view}");
+        assert!(view.contains("id=77"), "{view}");
+        assert!(view.contains("ewma    120us"), "{view}");
+        assert!(view.contains("traces: 1 stitched"), "{view}");
     }
 }

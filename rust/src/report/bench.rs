@@ -65,6 +65,22 @@ pub fn push_rate_row(rows: &mut Vec<BenchResult>, name: impl Into<String>, iters
     }
 }
 
+/// Exact nearest-rank percentile over raw microsecond samples (sorts
+/// in place). Unlike [`crate::coordinator::metrics::Histogram`] — a
+/// log-bucketed estimator — this is exact, which is what the
+/// `cluster_stage_*` rows want: they are computed from the trace ring's
+/// few hundred raw samples, so there is no reason to pay bucketing
+/// error. Empty input returns 0.
+pub fn percentile_us(samples: &mut [u64], q: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((samples.len() as f64 * q).ceil() as usize).max(1) - 1;
+    samples[idx.min(samples.len() - 1)]
+}
+
 /// Serialize a whole bench suite as one JSON document (schema v1:
 /// `{"suite": .., "schema": 1, "results": [row, ..]}`), parseable back
 /// with [`crate::util_json::parse`].
@@ -183,6 +199,21 @@ mod tests {
         assert_eq!(row.get("mean_s").unwrap().as_f64(), Some(0.0));
         assert_eq!(row.get("stddev_s").unwrap().as_f64(), Some(0.0));
         assert_eq!(row.get("min_s").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn percentile_is_exact_nearest_rank() {
+        let mut empty: Vec<u64> = Vec::new();
+        assert_eq!(percentile_us(&mut empty, 0.5), 0);
+        let mut one = vec![42];
+        assert_eq!(percentile_us(&mut one, 0.5), 42);
+        assert_eq!(percentile_us(&mut one, 0.99), 42);
+        // 1..=100 shuffled: nearest-rank pXX is exactly XX
+        let mut v: Vec<u64> = (1..=100).rev().collect();
+        assert_eq!(percentile_us(&mut v, 0.50), 50);
+        assert_eq!(percentile_us(&mut v, 0.99), 99);
+        assert_eq!(percentile_us(&mut v, 1.0), 100);
+        assert_eq!(percentile_us(&mut v, 0.0), 1);
     }
 
     #[test]

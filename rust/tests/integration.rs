@@ -495,6 +495,7 @@ fn net_load_generator_over_two_real_models_conserves_and_reports_quantiles() {
         low_frac: 0.0,
         seed: 3,
         reconnect: None,
+        trace_sample: 0,
     };
     let load = run_load(&addr, &cfg, &images).unwrap();
     assert_eq!(load.sent, 16);
@@ -595,6 +596,7 @@ fn cluster_router_over_real_replicas_is_bit_exact_and_survives_a_kill() {
         low_frac: 0.0,
         seed: 9,
         reconnect: None,
+        trace_sample: 0,
     };
     let scenario = ClusterScenario {
         victim: Some(victim.local_addr().to_string()),
@@ -612,6 +614,139 @@ fn cluster_router_over_real_replicas_is_bit_exact_and_survives_a_kill() {
     assert!(vrep.conserved(), "victim ledger broken by the mid-run kill");
     let srep = survivor.shutdown().unwrap();
     assert!(srep.conserved(), "survivor ledger broken under failover load");
+}
+
+#[test]
+fn stitched_cluster_traces_obey_the_span_sum_inequality() {
+    // the tracing acceptance criterion end to end: real-engine replicas
+    // behind the router, every request sampled, and each stitched
+    // timeline must satisfy `front + forward + replica_e2e ≤ router
+    // total ≤ client-observed e2e`, with the sampled-trace count
+    // reconciling against the router's own ledger. One connection,
+    // strictly sequential sends: ids are unique and the client clock
+    // brackets each request end to end.
+    use tinbinn::coordinator::batcher::Priority;
+    use tinbinn::coordinator::gateway::GatewayLane;
+    use tinbinn::coordinator::registry::{BackendKind, ModelRegistry, ModelSpec};
+    use tinbinn::net::{
+        Client, ClusterConfig, ClusterRouter, MonotonicClock, NetServer, ServerConfig, Status,
+    };
+    use tinbinn::obs::Snapshot;
+
+    let (np1, ds1, _) = task_data("1cat");
+    let start_replica = || {
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            ModelSpec { name: "1cat".into(), backend: BackendKind::Bitplane, workers: 2 },
+            np1.clone(),
+        )
+        .unwrap();
+        let mut lanes = Vec::new();
+        for entry in reg.entries() {
+            lanes.push(GatewayLane {
+                name: entry.spec.name.clone(),
+                policy: BatchPolicy { max_batch: 4, max_wait_us: 100, queue_cap: 1024 },
+                workers: reg.build_pool(entry).unwrap(),
+            });
+        }
+        NetServer::start(
+            "127.0.0.1:0",
+            lanes,
+            ServerConfig::default(),
+            std::sync::Arc::new(MonotonicClock::new()),
+        )
+        .unwrap()
+    };
+    let ra = start_replica();
+    let rb = start_replica();
+    let router = ClusterRouter::start(
+        "127.0.0.1:0",
+        ClusterConfig::new(vec![ra.local_addr(), rb.local_addr()]),
+        std::sync::Arc::new(MonotonicClock::new()),
+    )
+    .unwrap();
+
+    let mut cl = Client::connect(router.local_addr()).unwrap();
+    let n = 12usize;
+    let mut client_e2e = std::collections::HashMap::new();
+    for i in 0..n {
+        let img = ds1.image(i % ds1.len()).to_vec();
+        let t0 = std::time::Instant::now();
+        let id = cl.send_with("1cat", img, Priority::Normal, None, true).unwrap();
+        cl.flush().unwrap();
+        let resp = cl.recv().unwrap();
+        let e2e = t0.elapsed().as_micros() as u64;
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.status, Status::Ok, "request {i}");
+        let wire = resp.trace.unwrap_or_else(|| {
+            panic!("sampled request {i} answered without a trace block")
+        });
+        assert!(wire.e2e_us() <= e2e, "replica e2e exceeds the client clock (request {i})");
+        client_e2e.insert(id, e2e);
+    }
+    // the ring travels in the same TBNS frame the stats command reads
+    let snap = Snapshot::parse(&cl.stats().unwrap()).unwrap();
+    drop(cl);
+
+    assert_eq!(snap.counter("cluster.received"), Some(n as u64));
+    assert_eq!(
+        snap.counter("cluster.traced"),
+        Some(n as u64),
+        "at 1-in-1 sampling every received request must stitch a trace"
+    );
+    assert_eq!(snap.traces.len(), n, "all {n} traces fit in the ring");
+    let mut seen_ids: Vec<u64> = snap.traces.iter().map(|t| t.id).collect();
+    seen_ids.sort_unstable();
+    assert_eq!(seen_ids, (0..n as u64).collect::<Vec<_>>(), "one trace per request id");
+    for t in &snap.traces {
+        assert!(t.replica.is_some(), "trace {} missing the replica block", t.id);
+        assert!(
+            t.attempts.last().map_or(false, |a| a.ok && a.start_us <= a.sent_us && a.sent_us <= a.end_us),
+            "trace {} has no ordered successful attempt",
+            t.id
+        );
+        // all stamps are microsecond truncations of monotonic clocks in
+        // three domains (client, router, replica), so physical
+        // containment shows up with up to a few µs of rounding slack
+        let sum = t.front_us() + t.forward_us() + t.replica_e2e_us();
+        assert!(
+            sum <= t.total_us() + 5,
+            "trace {}: front {} + forward {} + replica {} exceeds total {}",
+            t.id,
+            t.front_us(),
+            t.forward_us(),
+            t.replica_e2e_us(),
+            t.total_us()
+        );
+        let e2e = client_e2e[&t.id];
+        assert!(
+            t.total_us() <= e2e + 5,
+            "trace {}: router total {}us exceeds the client-observed {}us",
+            t.id,
+            t.total_us(),
+            e2e
+        );
+    }
+
+    // the exported Chrome trace is valid JSON with one request span per
+    // trace (the CI lane re-checks nesting with a real JSON parser)
+    let chrome = tinbinn::obs::chrome_trace_json(&snap.traces);
+    let doc = tinbinn::util_json::parse(&chrome).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() >= n, "at least one span per stitched trace");
+
+    let rep = router.shutdown().unwrap();
+    assert!(rep.conserved(), "{}", rep.summary_line());
+    assert_eq!(rep.received, n as u64);
+    assert_eq!(rep.traced, n as u64, "ledger and ring disagree on sampled traces");
+    let a_rep = ra.shutdown().unwrap();
+    let b_rep = rb.shutdown().unwrap();
+    assert!(a_rep.conserved() && b_rep.conserved(), "replica ledgers broken under tracing");
+    assert_eq!(
+        a_rep.completed + b_rep.completed,
+        n as u64,
+        "the replicas served exactly the sampled requests"
+    );
 }
 
 #[test]
